@@ -1,0 +1,104 @@
+//! `cargo bench --bench compiler_micro`
+//!
+//! L3 hot-path microbenchmarks (the §Perf targets in DESIGN.md):
+//! planner latency per variant graph, fused-executor throughput, the
+//! online-softmax row update, and logical-grid delinearization.
+
+use flashlight::bench::bench_fn;
+use flashlight::exec::{execute_plan, Tensor};
+use flashlight::fusion::{plan, FusionMode, OnlineRowState, TileConfig};
+use flashlight::grid::{LogicalGrid, TiledDim};
+use flashlight::ir::Op;
+use flashlight::variants::{build, paper_variants, AttnShape};
+
+fn main() {
+    let shape = AttnShape {
+        batch: 1,
+        rows: 1,
+        heads_q: 8,
+        heads_kv: 2,
+        seq: 1024,
+        head_dim: 64,
+    };
+
+    println!("== planner latency (target: < 1 ms per variant graph) ==");
+    for v in paper_variants() {
+        let g = build(v, &shape);
+        let st = bench_fn(3, 20, || {
+            let p = plan(&g, FusionMode::Flashlight);
+            assert!(p.num_pipelines() >= 1);
+        });
+        println!("  {:<16} {:>9.1} us", v.name(), st.mean_us());
+    }
+
+    println!("== fused executor throughput (S=256, B=1, H=4, d=32) ==");
+    let shape = AttnShape {
+        batch: 1,
+        rows: 1,
+        heads_q: 4,
+        heads_kv: 4,
+        seq: 256,
+        head_dim: 32,
+    };
+    let g = build(flashlight::variants::Variant::Causal, &shape);
+    let mut inputs = std::collections::HashMap::new();
+    for (i, &id) in g.inputs.iter().enumerate() {
+        let Op::Input { name } = &g.node(id).op else { unreachable!() };
+        inputs.insert(name.clone(), Tensor::synthetic(&g.node(id).shape, i as u64));
+    }
+    let p = plan(&g, FusionMode::Flashlight);
+    let tile = TileConfig {
+        block_q: 64,
+        block_k: 64,
+        ..Default::default()
+    };
+    let st = bench_fn(2, 10, || {
+        let _ = execute_plan(&g, &p, &inputs, tile);
+    });
+    let (_, c) = execute_plan(&g, &p, &inputs, tile);
+    println!(
+        "  {:>9.2} ms/iter  ({:.1} Mflop/s scalar)",
+        st.mean_s * 1e3,
+        c.flops as f64 / st.mean_s / 1e6
+    );
+
+    println!("== online softmax row update (d=64, 16 kv tiles) ==");
+    let scores: Vec<f32> = (0..1024).map(|i| (i % 97) as f32 * 0.03 - 1.0).collect();
+    let v: Vec<f32> = (0..1024 * 64).map(|i| (i % 31) as f32 * 0.01).collect();
+    let st = bench_fn(3, 30, || {
+        let mut s = OnlineRowState::new(64);
+        for t in 0..16 {
+            s.update(
+                &scores[t * 64..(t + 1) * 64],
+                &v[t * 64 * 64..(t + 1) * 64 * 64],
+            );
+        }
+        std::hint::black_box(s.finish());
+    });
+    println!(
+        "  {:>9.2} us per 1024-kv row  ({:.2} Gelem/s)",
+        st.mean_us(),
+        1024.0 * 64.0 / st.mean_s / 1e9
+    );
+
+    println!("== logical grid delinearize ==");
+    let grid = LogicalGrid::new(vec![
+        TiledDim {
+            size: 1 << 22,
+            tile: 16,
+        },
+        TiledDim {
+            size: 1 << 10,
+            tile: 16,
+        },
+    ]);
+    let n = grid.n_blocks().min(1 << 20);
+    let st = bench_fn(2, 10, || {
+        let mut acc = 0usize;
+        for id in 0..n {
+            acc += grid.delinearize(id)[0];
+        }
+        std::hint::black_box(acc);
+    });
+    println!("  {:>9.2} ns per block id", st.mean_s / n as f64 * 1e9);
+}

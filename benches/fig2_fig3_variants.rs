@@ -1,0 +1,81 @@
+//! `cargo bench --bench fig2_fig3_variants`
+//!
+//! Regenerates Figures 2 and 3 (cost-model series over the compiler's
+//! plans) and wall-clock-benches the fused tiled executor against the
+//! eager reference on scaled-down shapes — the real, measured execution
+//! behind the modeled numbers.
+
+use flashlight::bench::{bench_fn, figures};
+use flashlight::cost::{a100, h100};
+use flashlight::exec::{eval, execute_plan, Tensor};
+use flashlight::fusion::{plan, FusionMode, TileConfig};
+use flashlight::ir::Op;
+use flashlight::variants::{build, paper_variants, AttnShape, Variant};
+
+fn inputs_for(g: &flashlight::ir::Graph) -> std::collections::HashMap<String, Tensor> {
+    let mut m = std::collections::HashMap::new();
+    for (i, &id) in g.inputs.iter().enumerate() {
+        let node = g.node(id);
+        let Op::Input { name } = &node.op else { unreachable!() };
+        let t = if name.starts_with("doc") {
+            let n: usize = node.shape.iter().product();
+            Tensor::from_vec(&node.shape, (0..n).map(|j| (j * 4 / n) as f32).collect())
+        } else {
+            Tensor::synthetic(&node.shape, 7 + i as u64)
+        };
+        m.insert(name.clone(), t);
+    }
+    m
+}
+
+fn main() -> anyhow::Result<()> {
+    // The paper's series (modeled on H100 + A100).
+    figures::fig2_fig3(&h100(), false)?;
+    figures::fig2_fig3(&a100(), false)?;
+
+    // Measured: fused tiled executor vs eager reference, per variant.
+    println!("\n== measured executor wall-clock (S=128, B=1, H=4, d=32) ==");
+    println!(
+        "{:<16} {:>12} {:>12} {:>8}",
+        "variant", "eager(ms)", "fused(ms)", "traffic x"
+    );
+    let shape = AttnShape {
+        batch: 1,
+        rows: 1,
+        heads_q: 4,
+        heads_kv: 2,
+        seq: 128,
+        head_dim: 32,
+    };
+    for v in paper_variants() {
+        let v = match v {
+            Variant::SlidingWindow { .. } => Variant::SlidingWindow { window: 32 },
+            Variant::PrefixLm { .. } => Variant::PrefixLm { prefix: 48 },
+            other => other,
+        };
+        let g = build(v, &shape);
+        let inputs = inputs_for(&g);
+        let p = plan(&g, FusionMode::Flashlight);
+        let tile = TileConfig {
+            block_q: 32,
+            block_k: 32,
+            ..Default::default()
+        };
+        let st_eager = bench_fn(2, 5, || {
+            let _ = eval(&g, &inputs);
+        });
+        let st_fused = bench_fn(2, 5, || {
+            let _ = execute_plan(&g, &p, &inputs, tile);
+        });
+        let (_, ce) = eval(&g, &inputs);
+        let (_, cf) = execute_plan(&g, &p, &inputs, tile);
+        println!(
+            "{:<16} {:>12.3} {:>12.3} {:>8.1}",
+            v.name(),
+            st_eager.mean_s * 1e3,
+            st_fused.mean_s * 1e3,
+            ce.total_traffic() as f64 / cf.total_traffic() as f64
+        );
+    }
+    Ok(())
+}

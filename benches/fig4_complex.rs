@@ -1,0 +1,65 @@
+//! `cargo bench --bench fig4_complex`
+//!
+//! Regenerates Figure 4 (DiffAttn + Evoformer vs torch.compile) and
+//! the §4.4 AlphaFold table, plus a measured run of both complex
+//! variants through the fused tiled executor.
+
+use flashlight::bench::{bench_fn, figures};
+use flashlight::cost::{a100, h100};
+use flashlight::exec::{eval, execute_plan, Tensor};
+use flashlight::fusion::{plan, FusionMode, TileConfig};
+use flashlight::ir::Op;
+use flashlight::variants::{build, AttnShape, Variant};
+
+fn main() -> anyhow::Result<()> {
+    figures::fig4(&[h100(), a100()])?;
+    figures::alphafold(&h100())?;
+
+    println!("\n== measured executor wall-clock: complex variants ==");
+    for (v, shape) in [
+        (
+            Variant::DiffAttn { lambda: 0.5 },
+            AttnShape {
+                batch: 1,
+                rows: 1,
+                heads_q: 4,
+                heads_kv: 4,
+                seq: 64,
+                head_dim: 16,
+            },
+        ),
+        (Variant::Evoformer, AttnShape::evoformer(1, 8, 64, 16)),
+    ] {
+        let g = build(v, &shape);
+        let mut inputs = std::collections::HashMap::new();
+        for (i, &id) in g.inputs.iter().enumerate() {
+            let Op::Input { name } = &g.node(id).op else { unreachable!() };
+            inputs.insert(name.clone(), Tensor::synthetic(&g.node(id).shape, i as u64));
+        }
+        let p = plan(&g, FusionMode::Flashlight);
+        let tc = plan(&g, FusionMode::TorchCompile);
+        let tile = TileConfig {
+            block_q: 32,
+            block_k: 32,
+            ..Default::default()
+        };
+        let st_f = bench_fn(2, 5, || {
+            let _ = execute_plan(&g, &p, &inputs, tile);
+        });
+        let st_e = bench_fn(2, 5, || {
+            let _ = eval(&g, &inputs);
+        });
+        let (_, cf) = execute_plan(&g, &p, &inputs, tile);
+        let (_, ct) = execute_plan(&g, &tc, &inputs, tile);
+        println!(
+            "{:<12} kernels fl={} tc={} | wall eager {:.2} ms fused {:.2} ms | traffic tc/fl {:.1}x",
+            v.name(),
+            p.groups.len(),
+            tc.groups.len(),
+            st_e.mean_s * 1e3,
+            st_f.mean_s * 1e3,
+            ct.total_traffic() as f64 / cf.total_traffic() as f64
+        );
+    }
+    Ok(())
+}

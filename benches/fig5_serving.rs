@@ -1,0 +1,21 @@
+//! `cargo bench --bench fig5_serving`
+//!
+//! Regenerates Figure 5 (Mooncake-like trace, LLaMa-3.2-1B shapes,
+//! Flashlight vs FlexAttention) on the simulated H100, and — when AOT
+//! artifacts are present — a short real PJRT serving run of the tiny
+//! model with fused vs naive attention.
+
+use flashlight::cost::h100;
+use flashlight::serve;
+
+fn main() -> anyhow::Result<()> {
+    serve::bench_fig5(&h100())?;
+
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        println!("\n== real PJRT serving (tiny model, fused vs naive) ==");
+        serve::cli_serve(16, "pjrt")?;
+    } else {
+        println!("artifacts/ missing; skipping real PJRT serving bench");
+    }
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! END-TO-END VALIDATION DRIVER: serve a real (tiny) LLaMa-style model
+//! through the full three-layer stack on a Mooncake-like trace, with
+//! batched continuous decoding, and report latency/throughput —
+//! proving L1 (Pallas flash kernel) -> L2 (JAX model, AOT to HLO text)
+//! -> L3 (rust coordinator + PJRT runtime) compose with Python never on
+//! the request path.
+//!
+//!     cargo run --release --example serve_llm
+//!
+//! The run is recorded in EXPERIMENTS.md §E8.
+
+use flashlight::serve::{run_trace, summarize, PjrtBackend, SchedulerConfig};
+use flashlight::tracegen::{generate, TraceConfig};
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        println!("artifacts/ missing — run `make artifacts` first");
+        return Ok(());
+    }
+    let trace = generate(&TraceConfig {
+        n_requests: 48,
+        rate: 50.0,
+        input_mu: 4.2,
+        input_sigma: 0.7,
+        mean_output: 12.0,
+        max_input: 240,
+        max_output: 24,
+        ..Default::default()
+    });
+    let total_in: usize = trace.iter().map(|r| r.input_tokens).sum();
+    let total_out: usize = trace.iter().map(|r| r.output_tokens).sum();
+    println!(
+        "trace: {} requests, {} prompt tokens, {} tokens to generate",
+        trace.len(),
+        total_in,
+        total_out
+    );
+
+    let mut rows = vec![];
+    for (label, variant, fused) in [
+        ("flashlight/causal", "causal", true),
+        ("naive/causal", "causal", false),
+        ("flashlight/softcap", "softcap", true),
+        ("naive/softcap", "softcap", false),
+    ] {
+        let mut backend = PjrtBackend::new("artifacts", variant, fused)?;
+        let vocab = backend.vocab();
+        let t0 = std::time::Instant::now();
+        let done = run_trace(&mut backend, &trace, SchedulerConfig::default(), vocab)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let s = summarize(&done);
+        anyhow::ensure!(s.n_requests == trace.len(), "requests lost");
+        println!(
+            "{label:<20} wall {wall:6.2}s | TTFT mean {:7.1} ms p99 {:7.1} ms | \
+             ITL mean {:6.2} ms | throughput {:6.1} tok/s",
+            s.ttft_mean_s * 1e3,
+            s.ttft_p99_s * 1e3,
+            s.itl_mean_s * 1e3,
+            s.tokens_per_s
+        );
+        rows.push((label, s.tokens_per_s));
+    }
+
+    // Fused vs naive on this substrate: at the tiny model's S <= 256
+    // prefill, interpret-mode Pallas (which serializes its grid on CPU)
+    // runs close to — typically slightly behind — the naive XLA path;
+    // the GPU-scale advantage is carried by the traffic counters and
+    // cost model (EXPERIMENTS.md E1-E5). What this driver *proves* is
+    // composition: both artifact families serve the full trace through
+    // the rust coordinator with Python never on the request path.
+    let tput = |l: &str| rows.iter().find(|(n, _)| *n == l).unwrap().1;
+    let causal_ratio = tput("flashlight/causal") / tput("naive/causal");
+    let softcap_ratio = tput("flashlight/softcap") / tput("naive/softcap");
+    println!(
+        "fused/naive throughput ratio on CPU substrate: causal {causal_ratio:.2}x, \
+         softcap {softcap_ratio:.2}x (see EXPERIMENTS.md E8 for why CPU \
+         inverts the GPU result at this scale)"
+    );
+    anyhow::ensure!(causal_ratio > 0.5 && softcap_ratio > 0.5);
+    println!("serve_llm OK — three layers compose end-to-end");
+    Ok(())
+}

@@ -1,0 +1,307 @@
+"""AOT lowering: jax entry points -> HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 crate links) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs (``make artifacts``):
+  artifacts/<name>.hlo.txt      one per entry point
+  artifacts/llama_weights.bin   flat little-endian f32 weight blob
+  artifacts/evoformer_weights.bin
+  artifacts/manifest.json       shapes/dtypes for every artifact + weights
+
+Python runs once at build time and never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref
+from .kernels.flash_attention import diff_attention, flash_attention
+
+# Canonical kernel-benchmark shape for the attention-variant artifacts.
+ATTN_SHAPE = dict(B=1, H=4, HKV=4, S=128, D=64)
+GQA_SHAPE = dict(B=1, H=8, HKV=2, S=128, D=64)
+PREFILL_BUCKETS = (64, 256)
+DECODE_BATCH = 8
+
+LLAMA_CFG = M.LlamaConfig(vocab=512, d_model=256, n_layers=4, n_heads=8,
+                          n_kv_heads=4, ffn_hidden=704, max_seq=512)
+EVO_CFG = M.EvoformerConfig(n_rows=8, seq=64, d_model=64, n_heads=4, d_head=16)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}[np.dtype(dt).name]
+
+
+class Emitter:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest: dict = {"artifacts": {}, "weights": {}}
+
+    def emit(self, name: str, fn, arg_specs, meta: dict | None = None):
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_tree = jax.eval_shape(fn, *arg_specs)
+        outs = jax.tree_util.tree_leaves(out_tree)
+        self.manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [
+                {"shape": list(s.shape), "dtype": _dtype_name(s.dtype)}
+                for s in jax.tree_util.tree_leaves(arg_specs)
+            ],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": _dtype_name(o.dtype)}
+                for o in outs
+            ],
+            "meta": meta or {},
+        }
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    def emit_weights(self, name: str, leaves, names):
+        blob = np.concatenate([np.asarray(l, np.float32).ravel() for l in leaves])
+        fname = f"{name}_weights.bin"
+        blob.tofile(os.path.join(self.out_dir, fname))
+        self.manifest["weights"][name] = {
+            "file": fname,
+            "tensors": [
+                {"name": n, "shape": list(np.asarray(l).shape)}
+                for n, l in zip(names, leaves)
+            ],
+        }
+        print(f"  wrote {fname} ({blob.nbytes} bytes)")
+
+    def finish(self):
+        self.manifest["llama_config"] = {
+            "vocab": LLAMA_CFG.vocab, "d_model": LLAMA_CFG.d_model,
+            "n_layers": LLAMA_CFG.n_layers, "n_heads": LLAMA_CFG.n_heads,
+            "n_kv_heads": LLAMA_CFG.n_kv_heads, "head_dim": LLAMA_CFG.head_dim,
+            "max_seq": LLAMA_CFG.max_seq, "prefill_buckets": list(PREFILL_BUCKETS),
+            "decode_batch": DECODE_BATCH,
+        }
+        self.manifest["evoformer_config"] = {
+            "n_rows": EVO_CFG.n_rows, "seq": EVO_CFG.seq,
+            "d_model": EVO_CFG.d_model, "n_heads": EVO_CFG.n_heads,
+        }
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print("  wrote manifest.json")
+        # Line-based manifest for the (serde-less) rust runtime.
+        lines = []
+        for name, e in self.manifest["artifacts"].items():
+            ins = " ".join(
+                f"{t['dtype']}:{'x'.join(map(str, t['shape'])) or '0'}"
+                for t in e["inputs"]
+            )
+            outs = " ".join(
+                f"{t['dtype']}:{'x'.join(map(str, t['shape'])) or '0'}"
+                for t in e["outputs"]
+            )
+            meta = " ".join(f"{k}={v}" for k, v in e["meta"].items())
+            lines.append(f"artifact {name} {e['file']} in {ins} out {outs} meta {meta}")
+        for family, w in self.manifest["weights"].items():
+            tensors = " ".join(
+                f"{t['name'].replace(' ', '')}:{'x'.join(map(str, t['shape']))}"
+                for t in w["tensors"]
+            )
+            lines.append(f"weights {family} {w['file']} {tensors}")
+        lc = self.manifest["llama_config"]
+        lines.append(
+            "config llama "
+            + " ".join(
+                f"{k}={v}"
+                for k, v in lc.items()
+                if k != "prefill_buckets"
+            )
+            + " prefill_buckets="
+            + "/".join(map(str, lc["prefill_buckets"]))
+        )
+        ec = self.manifest["evoformer_config"]
+        lines.append("config evoformer " + " ".join(f"{k}={v}" for k, v in ec.items()))
+        with open(os.path.join(self.out_dir, "manifest.txt"), "w") as f:
+            f.write("\n".join(lines) + "\n")
+        print("  wrote manifest.txt")
+
+
+def _attn_entry(variant: str, fused: bool, shape: dict):
+    """Build an attention entry: (q, k, v[, doc|bias]) -> (out,)."""
+    S = shape["S"]
+
+    def fn(q, k, v, *extra):
+        kw = {}
+        if variant == "sliding_window":
+            kw["window"] = 32
+        if variant == "softcap":
+            kw["softcap"] = 20.0
+        if variant == "prefix_lm":
+            kw["prefix_len"] = 48
+        if variant == "rectified":
+            kw["tau"] = 0.1
+        if variant == "document":
+            kw["doc_ids"] = extra[0]
+        if variant == "bias":
+            kw["bias"] = extra[0]
+        if fused:
+            return (flash_attention(q, k, v, variant=variant,
+                                    block_q=min(64, S), block_k=min(64, S), **kw),)
+        return (ref.attention_ref(q, k, v, variant=variant, **kw),)
+
+    specs = [
+        _spec((shape["B"], shape["H"], S, shape["D"])),
+        _spec((shape["B"], shape["HKV"], S, shape["D"])),
+        _spec((shape["B"], shape["HKV"], S, shape["D"])),
+    ]
+    if variant == "document":
+        specs.append(_spec((shape["B"], S), jnp.int32))
+    if variant == "bias":
+        specs.append(_spec((shape["B"], shape["H"], S, S)))
+    return fn, specs
+
+
+def emit_attention_variants(em: Emitter):
+    print("== attention variant artifacts ==")
+    for variant in ("vanilla", "causal", "sliding_window", "alibi",
+                    "softcap", "prefix_lm", "document", "bias", "rectified"):
+        for fused in (True, False):
+            tag = "fused" if fused else "naive"
+            fn, specs = _attn_entry(variant, fused, ATTN_SHAPE)
+            em.emit(f"attn_{variant}_{tag}", fn, specs,
+                    {"variant": variant, "fused": fused, **ATTN_SHAPE})
+    for fused in (True, False):
+        tag = "fused" if fused else "naive"
+        fn, specs = _attn_entry("causal", fused, GQA_SHAPE)
+        em.emit(f"attn_gqa_causal_{tag}", fn, specs,
+                {"variant": "causal", "fused": fused, **GQA_SHAPE})
+    # Differential attention (Listing 4): beyond the FlexAttention template.
+    s = ATTN_SHAPE
+    for fused in (True, False):
+        tag = "fused" if fused else "naive"
+        if fused:
+            fn = lambda q, k, v: (diff_attention(q, k, v, 0.5, block_q=64,
+                                                 block_k=64),)
+        else:
+            fn = lambda q, k, v: (ref.diff_attention_ref(q, k, v, 0.5),)
+        em.emit(
+            f"diff_attn_{tag}", fn,
+            [
+                _spec((s["B"], 2 * s["H"], s["S"], s["D"])),
+                _spec((s["B"], 2 * s["H"], s["S"], s["D"])),
+                _spec((s["B"], s["H"], s["S"], s["D"])),
+            ],
+            {"variant": "diff", "fused": fused, **s},
+        )
+
+
+def emit_llama(em: Emitter):
+    print("== llama serving artifacts ==")
+    cfg = LLAMA_CFG
+    params = M.init_llama(cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    names = [str(p) for p in
+             jax.tree_util.tree_flatten_with_path(params)[0].__iter__()]
+    names = [jax.tree_util.keystr(kp)
+             for kp, _ in jax.tree_util.tree_flatten_with_path(params)[0]]
+    em.emit_weights("llama", leaves, names)
+
+    weight_specs = [_spec(l.shape) for l in leaves]
+
+    for s in PREFILL_BUCKETS:
+        for variant in ("vanilla", "causal", "softcap"):
+            for fused in (True, False):
+                tag = "fused" if fused else "naive"
+
+                def fn(*args, _s=s, _variant=variant, _fused=fused):
+                    ws, tokens = args[:-1], args[-1]
+                    p = jax.tree_util.tree_unflatten(treedef, ws)
+                    return M.llama_prefill(p, cfg, tokens, variant=_variant,
+                                           fused=_fused)
+
+                em.emit(
+                    f"llama_prefill_{variant}_{tag}_s{s}", fn,
+                    weight_specs + [_spec((1, s), jnp.int32)],
+                    {"kind": "prefill", "variant": variant, "fused": fused,
+                     "seq": s},
+                )
+
+    def decode_fn(*args):
+        ws = args[:-4]
+        tokens, pos, kc, vc = args[-4:]
+        p = jax.tree_util.tree_unflatten(treedef, ws)
+        return M.llama_decode(p, cfg, tokens, pos, kc, vc)
+
+    b = DECODE_BATCH
+    cache = (cfg.n_layers, b, cfg.n_kv_heads, cfg.max_seq, cfg.head_dim)
+    em.emit(
+        f"llama_decode_b{b}", decode_fn,
+        weight_specs
+        + [_spec((b,), jnp.int32), _spec((b,), jnp.int32),
+           _spec(cache), _spec(cache)],
+        {"kind": "decode", "batch": b},
+    )
+
+
+def emit_evoformer(em: Emitter):
+    print("== evoformer artifacts ==")
+    cfg = EVO_CFG
+    params = M.init_evoformer(cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    names = [jax.tree_util.keystr(kp)
+             for kp, _ in jax.tree_util.tree_flatten_with_path(params)[0]]
+    em.emit_weights("evoformer", leaves, names)
+    weight_specs = [_spec(l.shape) for l in leaves]
+    x_spec = _spec((1, cfg.n_rows, cfg.seq, cfg.d_model))
+    bias_spec = _spec((1, cfg.n_heads, cfg.seq, cfg.seq))
+    for fused in (True, False):
+        tag = "fused" if fused else "naive"
+
+        def fn(*args, _fused=fused):
+            ws, x, bias = args[:-2], args[-2], args[-1]
+            p = jax.tree_util.tree_unflatten(treedef, ws)
+            return (M.evoformer_block(p, x, bias, fused=_fused),)
+
+        em.emit(f"evoformer_block_{tag}", fn, weight_specs + [x_spec, bias_spec],
+                {"kind": "evoformer", "fused": fused})
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    em = Emitter(args.out)
+    emit_attention_variants(em)
+    emit_llama(em)
+    emit_evoformer(em)
+    em.finish()
+    print(f"AOT complete: {len(em.manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,306 @@
+"""L1: Pallas flash-attention kernel with fused variant score-mods.
+
+This kernel is the analog of the Triton kernel Flashlight *generates*: a
+single fused pass that computes ``softmax(score_mod(QK^T / sqrt(d))) V``
+tile-by-tile with the online-softmax rewrite (paper §3.3/3.4), never
+materializing the (S, S) score matrix.
+
+Hardware adaptation (paper targets CUDA/Triton; see DESIGN.md §3):
+  * CUDA threadblock over (q-tile) -> Pallas ``grid=(B, H, S/block_q)``;
+    the inner kv loop is a ``lax.fori_loop`` over kv tiles.
+  * Shared-memory staging -> ``BlockSpec`` HBM->VMEM schedule.
+  * Tensor-core WMMA -> MXU-shaped ``jnp.dot`` with fp32 accumulation
+    (``preferred_element_type=jnp.float32``), matching paper §3.7's
+    unconditional FP32 promotion for bf16/fp16 inputs.
+  * ``interpret=True`` everywhere: the CPU PJRT client cannot run Mosaic
+    custom-calls; real-TPU efficiency is estimated in DESIGN.md §Perf.
+
+Supported variants (paper §4.1 benchmarks):
+  vanilla, causal, sliding_window, alibi, softcap, prefix_lm, document,
+  bias (Evoformer-style additive bias). GQA is expressed through the kv
+  ``BlockSpec`` index map (query head h reads kv head ``h // group``).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30  # finite stand-in for -inf: keeps the online rescale NaN-free
+
+VARIANTS = (
+    "vanilla",
+    "causal",
+    "sliding_window",
+    "alibi",
+    "softcap",
+    "prefix_lm",
+    "document",
+    "bias",
+    "rectified",
+)
+
+
+def alibi_slope(h: jax.Array | int, num_heads: int) -> jax.Array:
+    """ALiBi slope for head ``h``: 2^(-8 (h+1) / H) (Press et al., 2022)."""
+    return jnp.exp2(-8.0 * (jnp.float32(h) + 1.0) / jnp.float32(num_heads))
+
+
+def _score_mod(
+    variant: str,
+    s: jax.Array,  # (block_q, block_k) raw scaled scores
+    q_idx: jax.Array,  # (block_q,) absolute query positions
+    k_idx: jax.Array,  # (block_k,) absolute key positions
+    head: jax.Array,  # scalar query-head index
+    num_heads: int,
+    params: dict[str, Any],
+    doc_q: jax.Array | None = None,  # (block_q,) document ids
+    doc_k: jax.Array | None = None,  # (block_k,) document ids
+    bias: jax.Array | None = None,  # (block_q, block_k) additive bias
+) -> tuple[jax.Array, jax.Array]:
+    """Apply the fused score modification. Returns (scores, keep_mask)."""
+    qi = q_idx[:, None]
+    ki = k_idx[None, :]
+    keep = jnp.ones(s.shape, dtype=jnp.bool_)
+    if variant == "vanilla":
+        pass
+    elif variant == "causal":
+        keep = ki <= qi
+    elif variant == "sliding_window":
+        w = params["window"]
+        keep = (ki <= qi) & (qi - ki <= w)
+    elif variant == "alibi":
+        # ALiBi is conventionally causal with a linear distance penalty.
+        keep = ki <= qi
+        s = s - alibi_slope(head, num_heads) * (qi - ki).astype(s.dtype)
+    elif variant == "softcap":
+        cap = params["softcap"]
+        s = cap * jnp.tanh(s / cap)
+        keep = ki <= qi  # paper's Softcap variant (Gemma-2 style) is causal
+    elif variant == "prefix_lm":
+        p = params["prefix_len"]
+        keep = (ki <= qi) | (ki < p)
+    elif variant == "document":
+        keep = doc_q[:, None] == doc_k[None, :]
+    elif variant == "bias":
+        s = s + bias
+    elif variant == "rectified":
+        # RSA-style rectification: drop positions whose score is below
+        # tau — a data-dependent mask (beyond FlexAttention's mask_mod).
+        keep = s >= params["tau"]
+    else:  # pragma: no cover - guarded by VARIANTS
+        raise ValueError(f"unknown variant {variant!r}")
+    return s, keep
+
+
+def _flash_kernel(
+    variant: str,
+    num_heads: int,
+    seq_len: int,
+    block_q: int,
+    block_k: int,
+    sm_scale: float,
+    params: dict[str, Any],
+    *refs,
+):
+    """Fused online-softmax attention over one (batch, head, q-tile)."""
+    has_doc = variant == "document"
+    has_bias = variant == "bias"
+    if has_doc:
+        q_ref, k_ref, v_ref, doc_ref, o_ref = refs
+    elif has_bias:
+        q_ref, k_ref, v_ref, bias_ref, o_ref = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref = refs
+
+    head = pl.program_id(1)
+    q_tile = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32)  # (block_q, d)
+    q_idx = q_tile * block_q + jnp.arange(block_q)
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        k = pl.load(
+            k_ref, (0, 0, pl.dslice(i * block_k, block_k), slice(None))
+        ).astype(jnp.float32)
+        v = pl.load(
+            v_ref, (0, 0, pl.dslice(i * block_k, block_k), slice(None))
+        ).astype(jnp.float32)
+        k_idx = i * block_k + jnp.arange(block_k)
+        # MXU matmul, fp32 accumulation (paper §3.7 precision handling).
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+        doc_q = doc_k = bias = None
+        if has_doc:
+            doc_q = pl.load(doc_ref, (0, pl.dslice(q_tile * block_q, block_q)))
+            doc_k = pl.load(doc_ref, (0, pl.dslice(i * block_k, block_k)))
+        if has_bias:
+            bias = pl.load(
+                bias_ref,
+                (
+                    0,
+                    0,
+                    pl.dslice(q_tile * block_q, block_q),
+                    pl.dslice(i * block_k, block_k),
+                ),
+            ).astype(jnp.float32)
+        s, keep = _score_mod(
+            variant, s, q_idx, k_idx, head, num_heads, params, doc_q, doc_k, bias
+        )
+        s = jnp.where(keep, s, NEG_INF)
+        # Online softmax (paper Alg. 2 / §3.4): rescale running state.
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.where(keep, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc
+
+    d = q_ref.shape[-1]
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+    m, l, acc = lax.fori_loop(0, seq_len // block_k, body, (m0, l0, acc0))
+    l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows emit zeros, not NaNs
+    o_ref[0, 0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # (B, Hq, S, D)
+    k: jax.Array,  # (B, Hkv, S, D)
+    v: jax.Array,  # (B, Hkv, S, D)
+    *,
+    variant: str = "vanilla",
+    window: int | None = None,
+    softcap: float | None = None,
+    prefix_len: int | None = None,
+    tau: float | None = None,
+    doc_ids: jax.Array | None = None,  # (B, S) int32
+    bias: jax.Array | None = None,  # (B, Hq | 1, S, S)
+    block_q: int | None = None,
+    block_k: int | None = None,
+    sm_scale: float | None = None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused FlashAttention-style kernel for all evaluated variants.
+
+    This is the single kernel Flashlight's compiler passes produce for the
+    ``softmax(score_mod(QK^T)) V`` family; GQA is handled by the kv index
+    map so kv heads are read ``Hq / Hkv`` times without materialization.
+    """
+    if variant not in VARIANTS:
+        raise ValueError(f"variant must be one of {VARIANTS}, got {variant!r}")
+    b, hq, s, d = q.shape
+    _, hkv, sk, dk = k.shape
+    if (sk, dk) != (s, d) or v.shape != k.shape:
+        raise ValueError(f"shape mismatch q={q.shape} k={k.shape} v={v.shape}")
+    if hq % hkv != 0:
+        raise ValueError(f"Hq={hq} must be a multiple of Hkv={hkv}")
+    group = hq // hkv
+    block_q = min(block_q or 64, s)
+    block_k = min(block_k or 64, s)
+    if s % block_q or s % block_k:
+        raise ValueError(f"S={s} must be divisible by blocks ({block_q},{block_k})")
+    sm_scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+
+    params: dict[str, Any] = {}
+    if variant == "sliding_window":
+        params["window"] = int(window if window is not None else 256)
+    if variant == "softcap":
+        params["softcap"] = float(softcap if softcap is not None else 20.0)
+    if variant == "prefix_lm":
+        params["prefix_len"] = int(prefix_len if prefix_len is not None else 256)
+    if variant == "rectified":
+        params["tau"] = float(tau if tau is not None else 0.0)
+
+    grid = (b, hq, s // block_q)
+    q_spec = pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0))
+    kv_spec = pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi // group, 0, 0))
+    in_specs = [q_spec, kv_spec, kv_spec]
+    inputs: list[jax.Array] = [q, k, v]
+    if variant == "document":
+        if doc_ids is None:
+            raise ValueError("document variant requires doc_ids")
+        in_specs.append(pl.BlockSpec((1, s), lambda bi, hi, qi: (bi, 0)))
+        inputs.append(doc_ids.astype(jnp.int32))
+    if variant == "bias":
+        if bias is None:
+            raise ValueError("bias variant requires bias")
+        hb = bias.shape[1]
+        in_specs.append(
+            pl.BlockSpec(
+                (1, 1, s, s), lambda bi, hi, qi: (bi, 0 if hb == 1 else hi, 0, 0)
+            )
+        )
+        inputs.append(bias)
+
+    kernel = functools.partial(
+        _flash_kernel, variant, hq, s, block_q, block_k, sm_scale, params
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(*inputs)
+
+
+def diff_attention(
+    q: jax.Array,  # (B, 2H, S, D) - chunked into two halves along heads
+    k: jax.Array,  # (B, 2H, S, D)
+    v: jax.Array,  # (B, H, S, D)
+    lambda_full: float,
+    **kw,
+) -> jax.Array:
+    """Differential attention (Ye et al., 2024), paper Listing 4.
+
+    Not expressible in the FlexAttention template; Flashlight compiles it
+    to two fused attention kernels plus a fused pointwise epilogue.
+    """
+    q0, q1 = jnp.split(q, 2, axis=1)
+    k0, k1 = jnp.split(k, 2, axis=1)
+    a0 = flash_attention(q0, k0, v, **kw)
+    a1 = flash_attention(q1, k1, v, **kw)
+    return a0 - lambda_full * a1
+
+
+def evoformer_gated_attention(
+    x: jax.Array,  # (B, R, S, Dm) MSA-style activations
+    wq: jax.Array,  # (Dm, H, D)
+    wk: jax.Array,
+    wv: jax.Array,
+    wg: jax.Array,  # (Dm, H, D) gate projection
+    wo: jax.Array,  # (H, D, Dm)
+    pair_bias: jax.Array,  # (B, H, S, S), broadcast over rows R
+) -> jax.Array:
+    """Row-wise gated self-attention from AlphaFold's Evoformer (paper §4.3).
+
+    Uses an additional row dimension and a pair bias broadcast along it —
+    beyond the FlexAttention template. The attention core runs through the
+    fused kernel; projections and the sigmoid gate are pointwise epilogues
+    XLA fuses around it.
+    """
+    b, r, s, dm = x.shape
+    h, d = wq.shape[1], wq.shape[2]
+    q = jnp.einsum("brsm,mhd->brhsd", x, wq) * (1.0 / math.sqrt(d))
+    kk = jnp.einsum("brsm,mhd->brhsd", x, wk)
+    vv = jnp.einsum("brsm,mhd->brhsd", x, wv)
+    # Flatten (B, R) into the kernel batch; bias index maps back to b = br // R.
+    qf = q.reshape(b * r, h, s, d)
+    kf = kk.reshape(b * r, h, s, d)
+    vf = vv.reshape(b * r, h, s, d)
+    bias_rep = jnp.repeat(pair_bias, r, axis=0)  # (B*R, H, S, S)
+    attn = flash_attention(qf, kf, vf, variant="bias", bias=bias_rep, sm_scale=1.0)
+    attn = attn.reshape(b, r, h, s, d)
+    gate = jax.nn.sigmoid(jnp.einsum("brsm,mhd->brhsd", x, wg))
+    out = gate * attn
+    return jnp.einsum("brhsd,hdm->brsm", out, wo)

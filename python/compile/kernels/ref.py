@@ -1,0 +1,135 @@
+"""Pure-jnp correctness oracle for the fused flash kernel.
+
+This is also the "torch.compile baseline" analog on the real runtime path:
+it materializes the (S, S) score and weight matrices exactly the way eager
+PyTorch / default-Inductor attention does (paper Listing 1), so rust-side
+serving benchmarks comparing fused vs naive artifacts measure the same
+materialization cost the paper's torch.compile baseline pays.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import alibi_slope
+
+NEG_INF = -1e30
+
+
+def build_mask(
+    variant: str,
+    s: int,
+    *,
+    window: int | None = None,
+    prefix_len: int | None = None,
+    doc_ids: jax.Array | None = None,  # (B, S)
+) -> jax.Array | None:
+    """Boolean keep-mask of shape (S, S) (or (B, 1, S, S) for document)."""
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    if variant in ("vanilla", "bias"):
+        return None
+    if variant in ("causal", "alibi", "softcap"):
+        return ki <= qi
+    if variant == "sliding_window":
+        w = window if window is not None else 256
+        return (ki <= qi) & (qi - ki <= w)
+    if variant == "prefix_lm":
+        p = prefix_len if prefix_len is not None else 256
+        return (ki <= qi) | (ki < p)
+    if variant == "document":
+        assert doc_ids is not None
+        return (doc_ids[:, :, None] == doc_ids[:, None, :])[:, None, :, :]
+    if variant == "rectified":
+        return None  # data-dependent: handled on the scores directly
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def attention_ref(
+    q: jax.Array,  # (B, Hq, S, D)
+    k: jax.Array,  # (B, Hkv, S, D)
+    v: jax.Array,
+    *,
+    variant: str = "vanilla",
+    window: int | None = None,
+    softcap: float | None = None,
+    prefix_len: int | None = None,
+    tau: float | None = None,
+    doc_ids: jax.Array | None = None,
+    bias: jax.Array | None = None,
+    sm_scale: float | None = None,
+) -> jax.Array:
+    """Naive two-pass attention: materializes scores, stable softmax, PV."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    if group != 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(d)
+    scores = (
+        jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+        * scale
+    )
+    if variant == "alibi":
+        slopes = alibi_slope(jnp.arange(hq), hq)  # (H,)
+        dist = (jnp.arange(s)[:, None] - jnp.arange(s)[None, :]).astype(jnp.float32)
+        scores = scores - slopes[None, :, None, None] * dist[None, None]
+    if variant == "softcap":
+        cap = softcap if softcap is not None else 20.0
+        scores = cap * jnp.tanh(scores / cap)
+    if variant == "bias":
+        assert bias is not None
+        scores = scores + bias.astype(jnp.float32)
+    mask = build_mask(
+        variant, s, window=window, prefix_len=prefix_len, doc_ids=doc_ids
+    )
+    if variant == "rectified":
+        t = tau if tau is not None else 0.0
+        mask = scores >= t  # data-dependent keep-mask
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    # Stable two-pass softmax (paper Alg. 1): max, then shifted exp-sum.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    if mask is not None:
+        p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    l = jnp.where(l == 0.0, 1.0, l)
+    w = p / l
+    out = jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def diff_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, lambda_full: float, **kw
+) -> jax.Array:
+    q0, q1 = jnp.split(q, 2, axis=1)
+    k0, k1 = jnp.split(k, 2, axis=1)
+    return attention_ref(q0, k0, v, **kw) - lambda_full * attention_ref(
+        q1, k1, v, **kw
+    )
+
+
+def evoformer_gated_attention_ref(
+    x: jax.Array,
+    wq: jax.Array,
+    wk: jax.Array,
+    wv: jax.Array,
+    wg: jax.Array,
+    wo: jax.Array,
+    pair_bias: jax.Array,
+) -> jax.Array:
+    b, r, s, dm = x.shape
+    h, d = wq.shape[1], wq.shape[2]
+    q = jnp.einsum("brsm,mhd->brhsd", x, wq) * (1.0 / math.sqrt(d))
+    kk = jnp.einsum("brsm,mhd->brhsd", x, wk)
+    vv = jnp.einsum("brsm,mhd->brhsd", x, wv)
+    scores = jnp.einsum("brhqd,brhkd->brhqk", q, kk) + pair_bias[:, None]
+    w = jax.nn.softmax(scores, axis=-1)
+    attn = jnp.einsum("brhqk,brhkd->brhqd", w, vv)
+    gate = jax.nn.sigmoid(jnp.einsum("brsm,mhd->brhsd", x, wg))
+    return jnp.einsum("brhsd,hdm->brsm", gate * attn, wo)

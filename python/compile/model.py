@@ -1,0 +1,252 @@
+"""L2: JAX model definitions lowered to AOT artifacts.
+
+Two model families, both build-time only (Python never serves requests):
+
+* ``TinyLlama`` — a small LLaMa-style decoder (RMSNorm, RoPE, GQA, SwiGLU)
+  with prefill and decode-step entry points. The prefill attention runs
+  either through the fused L1 Pallas kernel ("flashlight" artifacts) or
+  the materializing jnp reference ("naive" artifacts = the torch.compile
+  baseline on the real runtime path). Weights are baked into the HLO as
+  constants so the rust runtime only feeds tokens and KV caches.
+
+* ``EvoformerBlock`` — AlphaFold-style row-wise gated self-attention plus
+  transition, for the end-to-end AlphaFold experiment (paper §4.4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.flash_attention import flash_attention, evoformer_gated_attention
+from .kernels.ref import attention_ref, evoformer_gated_attention_ref
+
+
+# ---------------------------------------------------------------------------
+# Tiny LLaMa-style decoder
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LlamaConfig:
+    vocab: int = 2048
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    n_kv_heads: int = 4
+    ffn_hidden: int = 704
+    max_seq: int = 512
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def init_llama(cfg: LlamaConfig, seed: int = 0) -> dict[str, Any]:
+    """Deterministic random init (the serving paper needs no training)."""
+    key = jax.random.PRNGKey(seed)
+    ks = iter(jax.random.split(key, 4 + 9 * cfg.n_layers))
+
+    def lin(k, fan_in, shape):
+        return jax.random.normal(k, shape, jnp.float32) / math.sqrt(fan_in)
+
+    d, hd = cfg.d_model, cfg.head_dim
+    params: dict[str, Any] = {
+        "embed": lin(next(ks), 1.0, (cfg.vocab, d)),
+        "unembed": lin(next(ks), d, (d, cfg.vocab)),
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append(
+            {
+                "attn_norm": jnp.ones((d,), jnp.float32),
+                "wq": lin(next(ks), d, (d, cfg.n_heads * hd)),
+                "wk": lin(next(ks), d, (d, cfg.n_kv_heads * hd)),
+                "wv": lin(next(ks), d, (d, cfg.n_kv_heads * hd)),
+                "wo": lin(next(ks), cfg.n_heads * hd, (cfg.n_heads * hd, d)),
+                "ffn_norm": jnp.ones((d,), jnp.float32),
+                "w_gate": lin(next(ks), d, (d, cfg.ffn_hidden)),
+                "w_up": lin(next(ks), d, (d, cfg.ffn_hidden)),
+                "w_down": lin(next(ks), cfg.ffn_hidden, (cfg.ffn_hidden, d)),
+            }
+        )
+    return params
+
+
+def _rms_norm(x: jax.Array, g: jax.Array) -> jax.Array:
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * g
+
+
+def _rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, D), pos: (..., S) absolute positions."""
+    d = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, d, 2, dtype=jnp.float32) / d)  # (D/2,)
+    ang = pos[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape)
+
+
+def _attn_proj(layer, x, cfg: LlamaConfig, pos):
+    """Project to (q, k, v) heads with RoPE applied. x: (B, S, D)."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ layer["wq"]).reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = (x @ layer["wk"]).reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = (x @ layer["wv"]).reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    q = _rope(q, pos[:, None, :], cfg.rope_theta)
+    k = _rope(k, pos[:, None, :], cfg.rope_theta)
+    return q, k, v
+
+
+def _ffn(layer, x):
+    return (jax.nn.silu(x @ layer["w_gate"]) * (x @ layer["w_up"])) @ layer["w_down"]
+
+
+def llama_prefill(
+    params: dict[str, Any],
+    cfg: LlamaConfig,
+    tokens: jax.Array,  # (1, S) int32
+    *,
+    variant: str = "causal",
+    fused: bool = True,
+    softcap: float = 20.0,
+):
+    """Full prefill pass. Returns (per-position logits, k-cache, v-cache).
+
+    Logits are returned for every position (B, S, V) so the rust
+    coordinator can read the logits of the *real* last token when the
+    prompt is right-padded to a bucket length. Caches have shape
+    (L, Hkv, S, Dh); the coordinator copies them into the batched decode
+    cache at the request's slot (padded positions are later overwritten
+    by the decode scatter and masked by `ki <= pos`).
+    """
+    b, s = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = params["embed"][tokens]  # (B, S, D)
+    k_caches, v_caches = [], []
+    for layer in params["layers"]:
+        h = _rms_norm(x, layer["attn_norm"])
+        q, k, v = _attn_proj(layer, h, cfg, pos)
+        k_caches.append(k[0])
+        v_caches.append(v[0])
+        if fused:
+            attn = flash_attention(
+                q, k, v, variant=variant, softcap=softcap,
+                block_q=min(64, s), block_k=min(64, s),
+            )
+        else:
+            attn = attention_ref(q, k, v, variant=variant, softcap=softcap)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, s, -1)
+        x = x + attn @ layer["wo"]
+        x = x + _ffn(layer, _rms_norm(x, layer["ffn_norm"]))
+    x = _rms_norm(x, params["final_norm"])
+    logits = x @ params["unembed"]  # (B, S, V)
+    return logits, jnp.stack(k_caches), jnp.stack(v_caches)
+
+
+def llama_decode(
+    params: dict[str, Any],
+    cfg: LlamaConfig,
+    tokens: jax.Array,  # (B,) int32 — last generated token per slot
+    pos: jax.Array,  # (B,) int32 — number of tokens already cached per slot
+    k_cache: jax.Array,  # (L, B, Hkv, Smax, Dh)
+    v_cache: jax.Array,
+):
+    """One batched decode step over the padded slot batch.
+
+    Inactive slots run with pos=0 and are ignored by the coordinator
+    (classic padded continuous batching). Attends to cache[:pos]+self.
+    """
+    b = tokens.shape[0]
+    smax = k_cache.shape[3]
+    x = params["embed"][tokens][:, None, :]  # (B, 1, D)
+    new_k, new_v = [], []
+    for li, layer in enumerate(params["layers"]):
+        h = _rms_norm(x, layer["attn_norm"])
+        q, k, v = _attn_proj(layer, h, cfg, pos[:, None])  # q: (B,H,1,Dh)
+        # Scatter this step's k/v into the cache at position `pos`.
+        kc = jax.vmap(
+            lambda cache, kv, p: jax.lax.dynamic_update_slice(
+                cache, kv, (0, p, 0)
+            )
+        )(k_cache[li], k, pos)
+        vc = jax.vmap(
+            lambda cache, kv, p: jax.lax.dynamic_update_slice(
+                cache, kv, (0, p, 0)
+            )
+        )(v_cache[li], v, pos)
+        new_k.append(kc)
+        new_v.append(vc)
+        # Single-query attention over valid prefix (ki <= pos).
+        group = cfg.n_heads // cfg.n_kv_heads
+        kf = jnp.repeat(kc, group, axis=1)  # (B, H, Smax, Dh)
+        vf = jnp.repeat(vc, group, axis=1)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, kf) / math.sqrt(cfg.head_dim)
+        ki = jnp.arange(smax)[None, None, None, :]
+        scores = jnp.where(ki <= pos[:, None, None, None], scores, -1e30)
+        w = jax.nn.softmax(scores, axis=-1)
+        attn = jnp.einsum("bhqk,bhkd->bhqd", w, vf)
+        attn = attn.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+        x = x + attn @ layer["wo"]
+        x = x + _ffn(layer, _rms_norm(x, layer["ffn_norm"]))
+    x = _rms_norm(x, params["final_norm"])
+    logits = x[:, 0, :] @ params["unembed"]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+# ---------------------------------------------------------------------------
+# Evoformer block (AlphaFold row-wise gated self-attention + transition)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EvoformerConfig:
+    n_rows: int = 8
+    seq: int = 64
+    d_model: int = 64
+    n_heads: int = 4
+    d_head: int = 16
+    d_transition: int = 256
+
+
+def init_evoformer(cfg: EvoformerConfig, seed: int = 1) -> dict[str, Any]:
+    key = jax.random.PRNGKey(seed)
+    ks = iter(jax.random.split(key, 8))
+
+    def lin(k, fan_in, shape):
+        return jax.random.normal(k, shape, jnp.float32) / math.sqrt(fan_in)
+
+    dm, h, dh = cfg.d_model, cfg.n_heads, cfg.d_head
+    return {
+        "wq": lin(next(ks), dm, (dm, h, dh)),
+        "wk": lin(next(ks), dm, (dm, h, dh)),
+        "wv": lin(next(ks), dm, (dm, h, dh)),
+        "wg": lin(next(ks), dm, (dm, h, dh)),
+        "wo": lin(next(ks), h * dh, (h, dh, dm)),
+        "w_t1": lin(next(ks), dm, (dm, cfg.d_transition)),
+        "w_t2": lin(next(ks), cfg.d_transition, (cfg.d_transition, dm)),
+    }
+
+
+def evoformer_block(
+    params: dict[str, Any],
+    x: jax.Array,  # (B, R, S, Dm)
+    pair_bias: jax.Array,  # (B, H, S, S)
+    *,
+    fused: bool = True,
+) -> jax.Array:
+    fn = evoformer_gated_attention if fused else evoformer_gated_attention_ref
+    x = x + fn(
+        x, params["wq"], params["wk"], params["wv"], params["wg"], params["wo"],
+        pair_bias,
+    )
+    x = x + jax.nn.relu(x @ params["w_t1"]) @ params["w_t2"]
+    return x

@@ -1,0 +1,168 @@
+"""L1 correctness: Pallas flash kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the fused kernel: every variant,
+swept over shapes/dtypes with hypothesis, must match the materializing
+two-pass reference to fp32 tolerance. (The online-softmax rewrite is exact
+in real arithmetic — paper §3.3/App. A — so only fp rounding differs.)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.flash_attention import (
+    VARIANTS,
+    alibi_slope,
+    diff_attention,
+    flash_attention,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_qkv(key, b, hq, hkv, s, d, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, hq, s, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, s, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, s, d), dtype)
+    return q, k, v
+
+
+def variant_kwargs(variant, key, b, s):
+    kw = {}
+    if variant == "sliding_window":
+        kw["window"] = max(1, s // 4)
+    if variant == "softcap":
+        kw["softcap"] = 15.0
+    if variant == "prefix_lm":
+        kw["prefix_len"] = max(1, s // 3)
+    if variant == "rectified":
+        # tau away from 0 so fp reduction-order differences between the
+        # tiled kernel and the einsum oracle cannot flip the mask.
+        kw["tau"] = 0.05
+    if variant == "document":
+        kw["doc_ids"] = jnp.sort(
+            jax.random.randint(key, (b, s), 0, 3), axis=-1
+        )
+    if variant == "bias":
+        kw["bias"] = 0.2 * jax.random.normal(key, (b, 1, s, s), jnp.float32)
+    return kw
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_variant_matches_ref(variant):
+    key = jax.random.PRNGKey(hash(variant) % 2**31)
+    q, k, v = make_qkv(key, 2, 4, 4, 128, 64)
+    kw = variant_kwargs(variant, jax.random.fold_in(key, 1), 2, 128)
+    out = flash_attention(q, k, v, variant=variant, block_q=32, block_k=32, **kw)
+    exp = ref.attention_ref(q, k, v, variant=variant, **kw)
+    np.testing.assert_allclose(out, exp, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("variant", ["vanilla", "causal", "sliding_window"])
+@pytest.mark.parametrize("group", [2, 4])
+def test_gqa_matches_ref(variant, group):
+    key = jax.random.PRNGKey(7)
+    hq = 8
+    q, k, v = make_qkv(key, 1, hq, hq // group, 64, 32)
+    kw = variant_kwargs(variant, key, 1, 64)
+    out = flash_attention(q, k, v, variant=variant, block_q=32, block_k=32, **kw)
+    exp = ref.attention_ref(q, k, v, variant=variant, **kw)
+    np.testing.assert_allclose(out, exp, atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    variant=st.sampled_from(VARIANTS),
+    s_blocks=st.integers(1, 4),
+    block=st.sampled_from([16, 32]),
+    d=st.sampled_from([16, 32, 64]),
+    hq=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**30),
+)
+def test_hypothesis_shape_sweep(variant, s_blocks, block, d, hq, group, seed):
+    """Property: fused kernel == two-pass reference for any legal shape."""
+    if hq % group:
+        group = 1
+    s = s_blocks * block
+    key = jax.random.PRNGKey(seed)
+    q, k, v = make_qkv(key, 1, hq, hq // group, s, d)
+    kw = variant_kwargs(variant, jax.random.fold_in(key, 1), 1, s)
+    out = flash_attention(
+        q, k, v, variant=variant, block_q=block, block_k=block, **kw
+    )
+    exp = ref.attention_ref(q, k, v, variant=variant, **kw)
+    np.testing.assert_allclose(out, exp, atol=3e-5, rtol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    block_q=st.sampled_from([16, 32, 64]),
+    block_k=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**30),
+)
+def test_block_shape_invariance(block_q, block_k, seed):
+    """Property: the result must not depend on the tiling schedule."""
+    key = jax.random.PRNGKey(seed)
+    q, k, v = make_qkv(key, 1, 2, 2, 128, 32)
+    base = flash_attention(q, k, v, variant="causal", block_q=64, block_k=64)
+    out = flash_attention(
+        q, k, v, variant="causal", block_q=block_q, block_k=block_k
+    )
+    np.testing.assert_allclose(out, base, atol=2e-5, rtol=2e-5)
+
+
+def test_bf16_inputs_fp32_accumulation():
+    """Paper §3.7: bf16 inputs accumulate in fp32, output stays bf16."""
+    key = jax.random.PRNGKey(3)
+    q, k, v = make_qkv(key, 1, 2, 2, 64, 32, jnp.bfloat16)
+    out = flash_attention(q, k, v, variant="causal", block_q=32, block_k=32)
+    assert out.dtype == jnp.bfloat16
+    exp = ref.attention_ref(q, k, v, variant="causal")
+    np.testing.assert_allclose(
+        out.astype(np.float32), exp.astype(np.float32), atol=2e-2, rtol=2e-2
+    )
+
+
+def test_diff_attention():
+    key = jax.random.PRNGKey(11)
+    q = jax.random.normal(key, (1, 8, 64, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 8, 64, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 4, 64, 32))
+    out = diff_attention(q, k, v, 0.5, block_q=32, block_k=32)
+    exp = ref.diff_attention_ref(q, k, v, 0.5)
+    np.testing.assert_allclose(out, exp, atol=2e-5, rtol=2e-5)
+
+
+def test_alibi_slopes_monotone():
+    s = alibi_slope(jnp.arange(8), 8)
+    assert np.all(np.diff(np.asarray(s)) < 0)
+    assert float(s[7]) == pytest.approx(2.0 ** -8)
+
+
+def test_fully_masked_rows_are_zero():
+    """Sliding window of 0 width still keeps the diagonal; doc mask with a
+    unique doc per position reduces to self-attention; no NaNs anywhere."""
+    key = jax.random.PRNGKey(5)
+    q, k, v = make_qkv(key, 1, 1, 1, 32, 16)
+    out = flash_attention(
+        q, k, v, variant="sliding_window", window=0, block_q=16, block_k=16
+    )
+    assert not np.any(np.isnan(np.asarray(out)))
+    exp = ref.attention_ref(q, k, v, variant="sliding_window", window=0)
+    np.testing.assert_allclose(out, exp, atol=2e-5, rtol=2e-5)
+
+
+def test_rejects_bad_shapes():
+    q = jnp.zeros((1, 3, 32, 16))
+    k = jnp.zeros((1, 2, 32, 16))
+    with pytest.raises(ValueError):
+        flash_attention(q, k, k)
+    with pytest.raises(ValueError):
+        flash_attention(jnp.zeros((1, 2, 33, 16)), k, k)
+    with pytest.raises(ValueError):
+        flash_attention(jnp.zeros((1, 2, 32, 16)), k, k, variant="nope")

@@ -1,0 +1,338 @@
+//! Baseline system models: FlexAttention, FlashInfer, torch.compile and
+//! eager PyTorch (paper §4.1 "Systems").
+//!
+//! Flashlight and torch.compile estimates are *derived from their actual
+//! compiler plans* (this crate's planner + counters). FlexAttention and
+//! FlashInfer are modeled on top of the same workload counters with the
+//! mechanisms the paper describes:
+//!
+//! * FlexAttention (templated Triton): `score_mod` variants run the full
+//!   dense pipeline but the templatized kernel carries compute/memory
+//!   instructions for full/partial/empty block handling (paper: Flashlight
+//!   is up to 1.48x faster *because* its kernel is simpler). `mask_mod`
+//!   variants skip empty blocks (kernel faster than Flashlight's dense
+//!   kernel) but pay `create_block_mask`: an inspection kernel plus host
+//!   sync, amortizable only via an LRU cache, and the kernel still fetches
+//!   the block mask from device memory.
+//! * FlashInfer (JIT CUDA): evaluates sparsity *inline* from scalar
+//!   parameters (`causal`, `window_left`) — no mask materialization, no
+//!   inspection — with the best-tuned dense pipeline; its ALiBi path
+//!   either computes the bias element-wise or streams precomputed slopes
+//!   from global memory, paying a per-block read penalty (§4.2).
+
+pub mod template;
+
+use crate::cost::{kernel_time, Efficiency, GpuSpec};
+use crate::exec::Counters;
+use crate::fusion::{plan, FusionMode, TileConfig};
+use crate::variants::{build, AttnShape, Variant};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum System {
+    Flashlight,
+    FlexAttention { mask_cached: bool },
+    FlashInfer,
+    TorchCompile,
+    Eager,
+}
+
+impl System {
+    pub fn label(&self) -> &'static str {
+        match self {
+            System::Flashlight => "flashlight",
+            System::FlexAttention { mask_cached: true } => "flexattention(cached)",
+            System::FlexAttention { mask_cached: false } => "flexattention",
+            System::FlashInfer => "flashinfer",
+            System::TorchCompile => "torch.compile",
+            System::Eager => "eager",
+        }
+    }
+}
+
+/// Kernel-quality factors (fraction of peak / of bandwidth attained).
+pub const EFF_FLASHLIGHT: Efficiency = Efficiency::new(0.55, 0.85);
+pub const EFF_FLEX_TEMPLATE: Efficiency = Efficiency::new(0.40, 0.75);
+pub const EFF_FLEX_MASKED: Efficiency = Efficiency::new(0.50, 0.80);
+pub const EFF_FLASHINFER: Efficiency = Efficiency::new(0.72, 0.90);
+pub const EFF_INDUCTOR: Efficiency = Efficiency::new(0.70, 0.85);
+/// FlashInfer's ALiBi penalty: per-block global reads of the slope
+/// buffer / element-wise bias computation (§4.2).
+pub const FLASHINFER_ALIBI_PENALTY: f64 = 1.9;
+
+/// FlexAttention block size for block-mask construction.
+pub const FLEX_BLOCK: usize = 128;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Estimate {
+    /// Attention kernel execution time (s).
+    pub kernel_s: f64,
+    /// Preparation overhead per call (block-mask creation, plan()).
+    pub prep_s: f64,
+}
+
+impl Estimate {
+    pub fn total(&self) -> f64 {
+        self.kernel_s + self.prep_s
+    }
+}
+
+/// Dense fused-kernel counters for the variant at this shape, from the
+/// Flashlight plan (the ground truth the baselines are scaled from).
+pub fn fused_counters(variant: Variant, shape: &AttnShape, tile: TileConfig) -> Counters {
+    let g = build(variant, shape);
+    let p = plan(&g, FusionMode::Flashlight);
+    p.counters(&g, tile)
+}
+
+/// Scale counters by a visible-block density (kept-block compute and kv
+/// traffic only; q/output traffic is unaffected).
+fn sparsify(c: &Counters, density: f64) -> Counters {
+    let mut out = *c;
+    out.flops = (c.flops as f64 * density) as u64;
+    // roughly: kv reads dominate pipeline reads; scale reads by density
+    out.hbm_read = (c.hbm_read as f64 * density) as u64;
+    out.l2_read = (c.l2_read as f64 * density) as u64;
+    out
+}
+
+/// Block-mask creation cost (`create_block_mask`): evaluates `mask_mod`
+/// densely over the full (S, S) index grid (a vmapped Python callable —
+/// very low achieved efficiency), reduces it per 128x128 block, writes
+/// the sparse block tables, and syncs with the host. This is the cost
+/// the paper shows dominating FlexAttention end-to-end when the mask is
+/// not amortized by a cache (§4.2, Figs 2/3).
+pub fn mask_creation_time(spec: &GpuSpec, s: usize) -> f64 {
+    let points = (s * s) as u64;
+    let blocks = (s.div_ceil(FLEX_BLOCK) * s.div_ceil(FLEX_BLOCK)) as u64;
+    let c = Counters {
+        hbm_read: points / 8,
+        l2_read: 0,
+        hbm_write: points + 8 * blocks, // bool mask + block tables
+        flops: 64 * points,             // vmapped mask_mod evaluation
+        launches: 6,                    // the multi-kernel inspection path
+        peak_workspace: points,
+    };
+    spec.mask_host_s + kernel_time(spec, &c, Efficiency::new(0.015, 0.5))
+}
+
+/// Estimate one forward attention call for `system` on `variant`.
+/// Returns None when the system cannot express the variant (paper §3.8:
+/// DiffAttn / Evoformer / data-dependent variants are outside the
+/// FlexAttention template and FlashInfer's API).
+pub fn estimate_attention(
+    system: System,
+    variant: Variant,
+    shape: &AttnShape,
+    spec: &GpuSpec,
+    tile: TileConfig,
+) -> Option<Estimate> {
+    let s = shape.seq;
+    match system {
+        System::Flashlight => {
+            // Dense fused kernel — Flashlight does not exploit block
+            // sparsity (§3.8, left to future work).
+            let c = fused_counters(variant, shape, tile);
+            Some(Estimate {
+                kernel_s: kernel_time(spec, &c, EFF_FLASHLIGHT),
+                prep_s: 0.0,
+            })
+        }
+        System::TorchCompile | System::Eager => {
+            let g = build(variant, shape);
+            let mode = if system == System::TorchCompile {
+                FusionMode::TorchCompile
+            } else {
+                FusionMode::Eager
+            };
+            let c = plan(&g, mode).counters(&g, tile);
+            Some(Estimate {
+                kernel_s: kernel_time(spec, &c, EFF_INDUCTOR),
+                prep_s: 0.0,
+            })
+        }
+        System::FlexAttention { mask_cached } => {
+            if !variant.flex_supported() {
+                return None;
+            }
+            let dense = fused_counters(variant, shape, tile);
+            if variant.is_mask_variant() {
+                // Sparse-block kernel + block-mask fetch traffic.
+                let mut c = sparsify(&dense, variant.density(s));
+                let blocks =
+                    (s.div_ceil(FLEX_BLOCK) * s.div_ceil(FLEX_BLOCK)) as u64;
+                c.hbm_read += 8 * blocks * shape.batch as u64;
+                let kernel_s = kernel_time(spec, &c, EFF_FLEX_MASKED);
+                let prep_s = if mask_cached {
+                    0.0
+                } else {
+                    mask_creation_time(spec, s)
+                };
+                Some(Estimate { kernel_s, prep_s })
+            } else {
+                // score_mod path: dense with template overhead.
+                Some(Estimate {
+                    kernel_s: kernel_time(spec, &dense, EFF_FLEX_TEMPLATE),
+                    prep_s: 0.0,
+                })
+            }
+        }
+        System::FlashInfer => {
+            if !variant.flex_supported() {
+                return None;
+            }
+            let dense = fused_counters(variant, shape, tile);
+            let c = if variant.is_mask_variant() {
+                sparsify(&dense, variant.density(s))
+            } else {
+                dense
+            };
+            let mut kernel_s = kernel_time(spec, &c, EFF_FLASHINFER);
+            if matches!(variant, Variant::Alibi) {
+                kernel_s *= FLASHINFER_ALIBI_PENALTY;
+            }
+            Some(Estimate {
+                kernel_s,
+                prep_s: 12e-6, // plan(): host-side parameter setup
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::h100;
+
+    fn est(sys: System, v: Variant, b: usize, s: usize) -> Option<Estimate> {
+        let shape = AttnShape::mha(b, s);
+        estimate_attention(sys, v, &shape, &h100(), TileConfig::default())
+    }
+
+    #[test]
+    fn flashlight_beats_flex_on_score_mod_variants() {
+        for v in [
+            Variant::Vanilla,
+            Variant::Alibi,
+            Variant::Softcap { cap: 20.0 },
+        ] {
+            let fl = est(System::Flashlight, v, 4, 4096).unwrap();
+            let fx = est(System::FlexAttention { mask_cached: true }, v, 4, 4096)
+                .unwrap();
+            let speedup = fx.total() / fl.total();
+            assert!(
+                speedup > 1.0 && speedup < 1.6,
+                "{}: speedup {speedup} out of the paper's band",
+                v.name()
+            );
+        }
+    }
+
+    #[test]
+    fn flex_kernel_beats_flashlight_on_mask_variants_but_loses_end_to_end() {
+        // Paper §4.2: "FlexAttention's Kernel execution is always faster
+        // than Flashlight's ... However, FlexAttention's Block-Mask
+        // [creation] time is much slower" — Flashlight wins end-to-end
+        // across the token-budget sweep (B*S = 16k tokens).
+        let v = Variant::Causal;
+        for (b, s) in [(32usize, 512usize), (16, 1024), (4, 4096), (1, 16384)] {
+            let fl = est(System::Flashlight, v, b, s).unwrap();
+            let fx = est(System::FlexAttention { mask_cached: false }, v, b, s)
+                .unwrap();
+            assert!(
+                fx.kernel_s < fl.kernel_s,
+                "B={b} S={s}: flex sparse kernel should win"
+            );
+            assert!(
+                fx.total() > fl.total(),
+                "B={b} S={s}: mask creation should dominate ({:.0}us vs {:.0}us)",
+                fx.total() * 1e6,
+                fl.total() * 1e6
+            );
+        }
+        // With a warm mask cache (the serving case, Fig 5) the sparse
+        // kernel wins end-to-end — that is why Flex wins Causal serving.
+        let fl = est(System::Flashlight, v, 4, 4096).unwrap();
+        let fxc = est(System::FlexAttention { mask_cached: true }, v, 4, 4096)
+            .unwrap();
+        assert!(fxc.total() < fl.total());
+    }
+
+    #[test]
+    fn flashinfer_fastest_except_alibi() {
+        for v in crate::variants::paper_variants() {
+            let fi = est(System::FlashInfer, v, 4, 4096).unwrap();
+            let fl = est(System::Flashlight, v, 4, 4096).unwrap();
+            if matches!(v, Variant::Alibi) {
+                assert!(fi.total() > fl.total(), "alibi: flashinfer should lose");
+            } else {
+                assert!(
+                    fi.total() < fl.total(),
+                    "{}: flashinfer should win",
+                    v.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn torch_compile_slowest_everywhere() {
+        for v in crate::variants::paper_variants() {
+            let tc = est(System::TorchCompile, v, 4, 4096).unwrap();
+            let fl = est(System::Flashlight, v, 4, 4096).unwrap();
+            assert!(
+                tc.total() > 2.0 * fl.total(),
+                "{}: torch.compile only {}x slower",
+                v.name(),
+                tc.total() / fl.total()
+            );
+        }
+    }
+
+    #[test]
+    fn unsupported_variants_return_none_for_flex_and_flashinfer() {
+        let v = Variant::DiffAttn { lambda: 0.5 };
+        assert!(est(System::FlexAttention { mask_cached: true }, v, 1, 512).is_none());
+        assert!(est(System::FlashInfer, v, 1, 512).is_none());
+        assert!(est(System::Flashlight, v, 1, 512).is_some());
+        assert!(est(System::TorchCompile, v, 1, 512).is_some());
+    }
+
+    #[test]
+    fn mask_creation_grows_with_seqlen() {
+        let spec = h100();
+        assert!(mask_creation_time(&spec, 16384) > mask_creation_time(&spec, 512));
+        // but is dominated by the fixed host cost at short seqlens
+        let t = mask_creation_time(&spec, 512);
+        assert!(t > spec.mask_host_s && t < 2.0 * spec.mask_host_s);
+    }
+
+    #[test]
+    fn gqa_reduces_traffic_not_flops() {
+        // GQA shares kv heads: same attention flops, 8x less kv data.
+        // When the kernel is compute-bound the runtimes tie; the traffic
+        // advantage must show in the counters.
+        let mha = AttnShape::mha(4, 4096);
+        let gqa = AttnShape::gqa(4, 4096);
+        let cm = fused_counters(Variant::Causal, &mha, TileConfig::default());
+        let cg = fused_counters(Variant::Causal, &gqa, TileConfig::default());
+        assert_eq!(cm.flops, cg.flops);
+        assert!(cg.hbm_read < cm.hbm_read);
+        let tm = estimate_attention(
+            System::Flashlight,
+            Variant::Causal,
+            &mha,
+            &h100(),
+            TileConfig::default(),
+        )
+        .unwrap();
+        let tg = estimate_attention(
+            System::Flashlight,
+            Variant::Causal,
+            &gqa,
+            &h100(),
+            TileConfig::default(),
+        )
+        .unwrap();
+        assert!(tg.total() <= tm.total());
+    }
+}

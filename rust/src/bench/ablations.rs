@@ -1,0 +1,217 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//! the L2 swizzle/reuse, the tile-size autotuner (`blockreduction`
+//! heuristic, §3.7), and the materialization threshold (§3.7).
+
+use crate::baselines::EFF_FLASHLIGHT;
+use crate::bench::harness::Csv;
+use crate::cost::{kernel_time, GpuSpec};
+use crate::fusion::{
+    plan, plan_with_threshold, FusionMode, TileConfig,
+    FLASHLIGHT_MATERIALIZE_THRESHOLD, INDUCTOR_MATERIALIZE_THRESHOLD,
+};
+use crate::grid::{autotune, blockreduction_space, LaunchConfig};
+use crate::variants::{build, AttnShape, Variant};
+
+/// Pick the best (block_q, block_k) for a variant+shape by modeled
+/// kernel time — the `blockreduction` autotuner driving the same cost
+/// model the benchmarks use.
+pub fn autotune_tile(
+    variant: Variant,
+    shape: &AttnShape,
+    spec: &GpuSpec,
+    aggressive: bool,
+) -> (TileConfig, f64) {
+    let g = build(variant, shape);
+    let p = plan(&g, FusionMode::Flashlight);
+    let cost = |c: LaunchConfig| {
+        let tile = TileConfig {
+            block_q: c.xblock,
+            block_k: c.rblock,
+            l2_capacity: spec.l2_capacity,
+        };
+        kernel_time(spec, &p.counters(&g, tile), EFF_FLASHLIGHT)
+    };
+    let best = autotune(&blockreduction_space(aggressive), None, cost);
+    let tile = TileConfig {
+        block_q: best.xblock,
+        block_k: best.rblock,
+        l2_capacity: spec.l2_capacity,
+    };
+    let t = kernel_time(spec, &p.counters(&g, tile), EFF_FLASHLIGHT);
+    (tile, t)
+}
+
+pub fn run(spec: &GpuSpec) -> anyhow::Result<()> {
+    let mut csv = Csv::new(
+        super::figures::OUT_DIR,
+        "ablations.csv",
+        "ablation,config,value_us_or_count",
+    );
+
+    // --- A1: L2 reuse (the GROUP_M swizzle's effect) --------------------
+    println!("== A1: L2 tile-reuse (swizzle) ablation, causal MHA ({}) ==", spec.name);
+    for (b, s) in [(4usize, 4096usize), (1, 16384)] {
+        let g = build(Variant::Causal, &AttnShape::mha(b, s));
+        let p = plan(&g, FusionMode::Flashlight);
+        let with = p.counters(
+            &g,
+            TileConfig {
+                l2_capacity: spec.l2_capacity,
+                ..Default::default()
+            },
+        );
+        let without = p.counters(
+            &g,
+            TileConfig {
+                l2_capacity: 0, // rereads spill to HBM: no swizzle reuse
+                ..Default::default()
+            },
+        );
+        let t_with = kernel_time(spec, &with, EFF_FLASHLIGHT);
+        let t_without = kernel_time(spec, &without, EFF_FLASHLIGHT);
+        println!(
+            "  B{b} S{s}: with reuse {:8.1} us  without {:8.1} us  ({:.2}x)",
+            t_with * 1e6,
+            t_without * 1e6,
+            t_without / t_with
+        );
+        csv.row(&[
+            "l2_reuse".into(),
+            format!("B{b}S{s}_with"),
+            format!("{:.2}", t_with * 1e6),
+        ]);
+        csv.row(&[
+            "l2_reuse".into(),
+            format!("B{b}S{s}_without"),
+            format!("{:.2}", t_without * 1e6),
+        ]);
+    }
+
+    // --- A2: tile-size autotuning (blockreduction heuristic) ------------
+    println!("== A2: blockreduction autotuning, causal MHA B1 S16384 ==");
+    let shape = AttnShape::mha(1, 16384);
+    let g = build(Variant::Causal, &shape);
+    let p = plan(&g, FusionMode::Flashlight);
+    for bq in [16usize, 32, 64, 128, 256] {
+        let tile = TileConfig {
+            block_q: bq,
+            block_k: 64,
+            l2_capacity: spec.l2_capacity,
+        };
+        let t = kernel_time(spec, &p.counters(&g, tile), EFF_FLASHLIGHT);
+        println!("  block_q {bq:>4}: {:9.1} us", t * 1e6);
+        csv.row(&["tile_sweep".into(), format!("bq{bq}"), format!("{:.2}", t * 1e6)]);
+    }
+    let (best, t_best) = autotune_tile(Variant::Causal, &shape, spec, true);
+    println!(
+        "  autotuned -> block_q {} block_k {}: {:9.1} us",
+        best.block_q,
+        best.block_k,
+        t_best * 1e6
+    );
+    csv.row(&[
+        "tile_sweep".into(),
+        format!("autotuned_bq{}_bk{}", best.block_q, best.block_k),
+        format!("{:.2}", t_best * 1e6),
+    ]);
+
+    // --- A3: materialization threshold (§3.7) ---------------------------
+    println!("== A3: materialization threshold, ALiBi score chain ==");
+    let g = build(Variant::Alibi, &AttnShape::mha(4, 4096));
+    for (label, thr) in [
+        ("inductor", INDUCTOR_MATERIALIZE_THRESHOLD),
+        ("flashlight", FLASHLIGHT_MATERIALIZE_THRESHOLD),
+        ("tiny(3)", 3usize),
+    ] {
+        let p = plan_with_threshold(&g, FusionMode::TorchCompile, thr);
+        let c = p.counters(&g, TileConfig::default());
+        println!(
+            "  threshold {label:<12} -> {:>2} kernels, {:>6} MiB traffic",
+            p.groups.len(),
+            c.total_traffic() >> 20
+        );
+        csv.row(&[
+            "materialize_threshold".into(),
+            label.into(),
+            format!("{}", p.groups.len()),
+        ]);
+    }
+    let p = csv.finish()?;
+    println!("wrote {}", p.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::h100;
+
+    #[test]
+    fn l2_reuse_always_helps_or_ties() {
+        let spec = h100();
+        let g = build(Variant::Causal, &AttnShape::mha(1, 16384));
+        let p = plan(&g, FusionMode::Flashlight);
+        let with = p.counters(
+            &g,
+            TileConfig {
+                l2_capacity: spec.l2_capacity,
+                ..Default::default()
+            },
+        );
+        let without = p.counters(
+            &g,
+            TileConfig {
+                l2_capacity: 0,
+                ..Default::default()
+            },
+        );
+        assert!(with.hbm_read < without.hbm_read);
+        assert_eq!(with.total_with_l2(), without.total_with_l2());
+        assert!(
+            kernel_time(&spec, &with, EFF_FLASHLIGHT)
+                <= kernel_time(&spec, &without, EFF_FLASHLIGHT)
+        );
+    }
+
+    #[test]
+    fn autotuned_tile_no_worse_than_default() {
+        let spec = h100();
+        let shape = AttnShape::mha(1, 16384);
+        let g = build(Variant::Causal, &shape);
+        let p = plan(&g, FusionMode::Flashlight);
+        let t_default = kernel_time(
+            &spec,
+            &p.counters(
+                &g,
+                TileConfig {
+                    l2_capacity: spec.l2_capacity,
+                    ..Default::default()
+                },
+            ),
+            EFF_FLASHLIGHT,
+        );
+        let (_, t_tuned) = autotune_tile(Variant::Causal, &shape, &spec, true);
+        assert!(t_tuned <= t_default * 1.0001);
+    }
+
+    #[test]
+    fn lower_threshold_means_more_kernels() {
+        let g = build(Variant::Alibi, &AttnShape::mha(1, 1024));
+        let lo = plan_with_threshold(&g, FusionMode::TorchCompile, 3);
+        let hi = plan_with_threshold(
+            &g,
+            FusionMode::TorchCompile,
+            FLASHLIGHT_MATERIALIZE_THRESHOLD,
+        );
+        assert!(
+            lo.groups.len() > hi.groups.len(),
+            "threshold 3 -> {} kernels vs raised -> {}",
+            lo.groups.len(),
+            hi.groups.len()
+        );
+        // the raised threshold also means less boundary traffic
+        let cl = lo.counters(&g, TileConfig::default());
+        let ch = hi.counters(&g, TileConfig::default());
+        assert!(ch.total_traffic() <= cl.total_traffic());
+    }
+}

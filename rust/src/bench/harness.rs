@@ -1,0 +1,112 @@
+//! Minimal wall-clock benchmarking harness (criterion is unavailable in
+//! this offline environment): warmup + timed iterations + robust stats,
+//! mirroring the paper's methodology of 10 warmup + 20 measured runs.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub stddev_s: f64,
+    pub iters: usize,
+}
+
+impl Stats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_s * 1e6
+    }
+}
+
+/// Run `f` with `warmup` unmeasured and `iters` measured iterations
+/// (paper §4.1: 10 warmup, 20 measured).
+pub fn bench_fn(warmup: usize, iters: usize, mut f: impl FnMut()) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    stats_of(&mut samples)
+}
+
+pub fn stats_of(samples: &mut [f64]) -> Stats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len().max(1);
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let var = samples
+        .iter()
+        .map(|s| (s - mean) * (s - mean))
+        .sum::<f64>()
+        / n as f64;
+    Stats {
+        mean_s: mean,
+        median_s: samples[n / 2],
+        min_s: samples.first().copied().unwrap_or(0.0),
+        max_s: samples.last().copied().unwrap_or(0.0),
+        stddev_s: var.sqrt(),
+        iters: n,
+    }
+}
+
+/// Simple CSV writer for bench_results/.
+pub struct Csv {
+    path: std::path::PathBuf,
+    rows: Vec<String>,
+}
+
+impl Csv {
+    pub fn new(dir: &str, name: &str, header: &str) -> Self {
+        std::fs::create_dir_all(dir).ok();
+        Csv {
+            path: std::path::Path::new(dir).join(name),
+            rows: vec![header.to_string()],
+        }
+    }
+
+    pub fn row(&mut self, cols: &[String]) {
+        self.rows.push(cols.join(","));
+    }
+
+    pub fn finish(self) -> std::io::Result<std::path::PathBuf> {
+        std::fs::write(&self.path, self.rows.join("\n") + "\n")?;
+        Ok(self.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_are_sane() {
+        let mut s = vec![3.0, 1.0, 2.0];
+        let st = stats_of(&mut s);
+        assert_eq!(st.median_s, 2.0);
+        assert_eq!(st.min_s, 1.0);
+        assert_eq!(st.max_s, 3.0);
+        assert!((st.mean_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_fn_runs_expected_iterations() {
+        let mut count = 0;
+        let st = bench_fn(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(st.iters, 5);
+    }
+
+    #[test]
+    fn csv_writes_rows() {
+        let mut c = Csv::new("/tmp/flashlight_test_csv", "t.csv", "a,b");
+        c.row(&["1".into(), "2".into()]);
+        let p = c.finish().unwrap();
+        let s = std::fs::read_to_string(p).unwrap();
+        assert_eq!(s, "a,b\n1,2\n");
+    }
+}

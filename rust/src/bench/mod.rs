@@ -1,0 +1,42 @@
+//! Benchmark harness: regenerates every table and figure in the paper's
+//! evaluation (§4) — see DESIGN.md §5 for the experiment index.
+
+pub mod ablations;
+pub mod figures;
+pub mod harness;
+
+pub use harness::{bench_fn, stats_of, Csv, Stats};
+
+use crate::cost::{a100, h100, GpuSpec};
+
+/// Entry point for `flashlight bench <which> [--gpu ...]`.
+pub fn run(which: &str, gpu: &GpuSpec) -> anyhow::Result<()> {
+    match which {
+        "fig2" => figures::fig2_fig3(&h100(), false)?,
+        "fig3" => figures::fig2_fig3(&a100(), false)?,
+        "fig4" => figures::fig4(&[h100(), a100()])?,
+        "fig5" => crate::serve::bench_fig5(gpu)?,
+        "fig6" => figures::fig2_fig3(&h100(), true)?,
+        "fig7" => figures::fig2_fig3(&a100(), true)?,
+        "alphafold" => figures::alphafold(gpu)?,
+        "masks" => figures::mask_cost_table(gpu),
+        "ablations" => {
+            ablations::run(gpu)?;
+            crate::serve::bench_prefix_caching(gpu)?;
+        }
+        "all" => {
+            figures::fig2_fig3(&h100(), false)?;
+            figures::fig2_fig3(&a100(), false)?;
+            figures::fig4(&[h100(), a100()])?;
+            crate::serve::bench_fig5(gpu)?;
+            figures::fig2_fig3(&h100(), true)?;
+            figures::fig2_fig3(&a100(), true)?;
+            figures::alphafold(&h100())?;
+            figures::mask_cost_table(&h100());
+            ablations::run(&h100())?;
+            crate::serve::bench_prefix_caching(&h100())?;
+        }
+        other => anyhow::bail!("unknown figure {other} (fig2..fig7|alphafold|masks|all)"),
+    }
+    Ok(())
+}

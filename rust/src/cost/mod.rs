@@ -1,0 +1,188 @@
+//! GPU cost model: translates measured traffic/flop counters into
+//! estimated kernel times on the paper's testbeds (H100 / A100).
+//!
+//! FlashAttention-class kernels sit between the bandwidth and compute
+//! roofs, so per-kernel time is modeled as
+//! `launch + max(bytes / BW, flops / (peak * efficiency))` with the SM
+//! clock capped the way the paper caps it (H100 1290 MHz, A100 1080 MHz,
+//! §4.1). Efficiency factors encode the per-system kernel quality the
+//! paper measures and explains (§4.2): FlexAttention's templated kernel
+//! carries full/partial/empty-block handling instructions; FlashInfer's
+//! hand-tuned CUDA is the fastest dense pipeline; Flashlight's generated
+//! kernel is template-free. The *traffic and flop inputs* come from the
+//! compiler's plans and executors, not from hand formulas.
+
+use crate::exec::Counters;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// HBM bandwidth, bytes/s (effective, at the capped clock).
+    pub hbm_bw: f64,
+    /// L2 cache bandwidth, bytes/s — serves intra-kernel re-reads
+    /// (counted separately in [`Counters::l2_read`]).
+    pub l2_bw: f64,
+    /// L2 capacity in bytes; re-read working sets beyond this spill to
+    /// HBM (handled in the planner's analytic accounting).
+    pub l2_capacity: u64,
+    /// Peak bf16 tensor-core flops/s at the capped SM clock.
+    pub peak_flops: f64,
+    /// Kernel launch + scheduling overhead, seconds.
+    pub launch_s: f64,
+    /// Host-side cost of building / inspecting a block mask
+    /// (FlexAttention's `create_block_mask`: several small kernels, a
+    /// dense mask_mod evaluation, and a D2H sync — §3.8/§4.2).
+    pub mask_host_s: f64,
+}
+
+/// NVIDIA H100 80GB SXM, SM clock capped to 1290 MHz (paper §4.1):
+/// HBM3 3.35 TB/s; bf16 tensor peak 989 TFLOP/s at 1980 MHz boost
+/// scales to ~644 TFLOP/s at the cap.
+pub fn h100() -> GpuSpec {
+    GpuSpec {
+        name: "H100",
+        hbm_bw: 3.35e12,
+        l2_bw: 12.0e12,
+        l2_capacity: 50 << 20,
+        peak_flops: 989e12 * (1290.0 / 1980.0),
+        launch_s: 4.0e-6,
+        mask_host_s: 300e-6,
+    }
+}
+
+/// NVIDIA A100 80GB, SM clock capped to 1080 MHz (paper §4.1): HBM2e
+/// 2.0 TB/s; bf16 tensor peak 312 TFLOP/s at 1410 MHz -> ~239 TFLOP/s.
+pub fn a100() -> GpuSpec {
+    GpuSpec {
+        name: "A100",
+        hbm_bw: 2.0e12,
+        l2_bw: 7.0e12,
+        l2_capacity: 40 << 20,
+        peak_flops: 312e12 * (1080.0 / 1410.0),
+        launch_s: 4.0e-6,
+        mask_host_s: 360e-6,
+    }
+}
+
+pub fn gpu_by_name(name: &str) -> GpuSpec {
+    match name.to_ascii_lowercase().as_str() {
+        "h100" => h100(),
+        "a100" => a100(),
+        other => panic!("unknown GPU {other} (expected h100|a100)"),
+    }
+}
+
+/// Achieved-fraction-of-peak for the compute roof of each kernel family.
+#[derive(Debug, Clone, Copy)]
+pub struct Efficiency {
+    /// MXU/tensor-core utilization on the matmul portions.
+    pub compute: f64,
+    /// Achieved fraction of HBM bandwidth.
+    pub memory: f64,
+}
+
+impl Efficiency {
+    pub const fn new(compute: f64, memory: f64) -> Self {
+        Efficiency { compute, memory }
+    }
+}
+
+/// Kernel-time estimate from measured counters: the slowest of the HBM
+/// roof, the L2 roof and the compute roof, plus launch overhead.
+pub fn kernel_time(spec: &GpuSpec, c: &Counters, eff: Efficiency) -> f64 {
+    let hbm = c.total_traffic() as f64 / (spec.hbm_bw * eff.memory);
+    let l2 = c.l2_read as f64 / spec.l2_bw;
+    let cmp = c.flops as f64 / (spec.peak_flops * eff.compute);
+    spec.launch_s * c.launches as f64 + hbm.max(l2).max(cmp)
+}
+
+/// Roofline characterization of a kernel (for EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Copy)]
+pub struct Roofline {
+    pub arithmetic_intensity: f64,
+    pub memory_bound: bool,
+    pub attained_fraction_of_peak: f64,
+}
+
+pub fn roofline(spec: &GpuSpec, c: &Counters, eff: Efficiency) -> Roofline {
+    let ai = c.flops as f64 / c.total_traffic().max(1) as f64;
+    let ridge = spec.peak_flops / spec.hbm_bw;
+    let t = kernel_time(spec, c, eff);
+    Roofline {
+        arithmetic_intensity: ai,
+        memory_bound: ai < ridge,
+        attained_fraction_of_peak: c.flops as f64 / t / spec.peak_flops,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c(read: u64, write: u64, flops: u64, launches: u64) -> Counters {
+        Counters {
+            hbm_read: read,
+            l2_read: 0,
+            hbm_write: write,
+            flops,
+            launches,
+            peak_workspace: 0,
+        }
+    }
+
+    #[test]
+    fn l2_reads_are_cheaper_than_hbm_reads() {
+        let spec = h100();
+        let eff = Efficiency::new(0.5, 0.8);
+        let hbm_heavy = c(1 << 33, 0, 1000, 1);
+        let mut l2_heavy = c(1 << 20, 0, 1000, 1);
+        l2_heavy.l2_read = 1 << 33;
+        assert!(
+            kernel_time(&spec, &l2_heavy, eff) < kernel_time(&spec, &hbm_heavy, eff)
+        );
+    }
+
+    #[test]
+    fn memory_bound_kernel_scales_with_traffic() {
+        let spec = h100();
+        let eff = Efficiency::new(0.5, 0.8);
+        let t1 = kernel_time(&spec, &c(1 << 30, 0, 1000, 1), eff);
+        let t2 = kernel_time(&spec, &c(1 << 31, 0, 1000, 1), eff);
+        assert!(t2 / t1 > 1.9 && t2 / t1 < 2.1);
+    }
+
+    #[test]
+    fn compute_bound_kernel_ignores_small_traffic_changes() {
+        let spec = h100();
+        let eff = Efficiency::new(0.5, 0.8);
+        let big_flops = 1u64 << 45;
+        let t1 = kernel_time(&spec, &c(1024, 1024, big_flops, 1), eff);
+        let t2 = kernel_time(&spec, &c(2048, 2048, big_flops, 1), eff);
+        assert_eq!(t1, t2);
+    }
+
+    #[test]
+    fn launch_overhead_dominates_tiny_kernels() {
+        let spec = a100();
+        let eff = Efficiency::new(1.0, 1.0);
+        let t = kernel_time(&spec, &c(64, 64, 64, 10), eff);
+        assert!(t > 9.0 * spec.launch_s);
+    }
+
+    #[test]
+    fn h100_is_faster_than_a100() {
+        let eff = Efficiency::new(0.5, 0.8);
+        let work = c(1 << 32, 1 << 30, 1 << 40, 4);
+        assert!(kernel_time(&h100(), &work, eff) < kernel_time(&a100(), &work, eff));
+    }
+
+    #[test]
+    fn roofline_classifies_attention_as_expected() {
+        let spec = h100();
+        // arithmetic intensity below ridge -> memory bound
+        let low = c(1 << 30, 1 << 30, 1 << 32, 1);
+        assert!(roofline(&spec, &low, Efficiency::new(0.5, 0.8)).memory_bound);
+        let high = c(1 << 20, 1 << 20, 1 << 45, 1);
+        assert!(!roofline(&spec, &high, Efficiency::new(0.5, 0.8)).memory_bound);
+    }
+}

@@ -1,0 +1,91 @@
+//! Execution counters: the ground truth behind the GPU cost model.
+//!
+//! Both executors count the global-memory (HBM) traffic they generate,
+//! the floating-point work, and the number of kernel launches. Fusion's
+//! entire benefit shows up here: the fused executor never writes
+//! intermediates to HBM, the eager/reference executor writes and re-reads
+//! every one of them.
+
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Counters {
+    /// Bytes read from simulated HBM (compulsory: first touch of data).
+    pub hbm_read: u64,
+    /// Bytes re-read within one kernel that hit the L2 cache instead of
+    /// HBM (e.g. K/V tiles re-read once per q-tile in a flash pipeline —
+    /// the reuse the GROUP_M swizzle of §3.7 exists to capture).
+    pub l2_read: u64,
+    /// Bytes written to simulated HBM.
+    pub hbm_write: u64,
+    /// Scalar fused-multiply-add-equivalent flops (1 mul+add = 2 flops).
+    pub flops: u64,
+    /// Kernel launches.
+    pub launches: u64,
+    /// Peak extra workspace bytes alive at once (materialized
+    /// intermediates for eager; tile buffers for fused).
+    pub peak_workspace: u64,
+}
+
+impl Counters {
+    /// HBM traffic only (L2 hits excluded).
+    pub fn total_traffic(&self) -> u64 {
+        self.hbm_read + self.hbm_write
+    }
+
+    /// All data movement including L2-resident re-reads.
+    pub fn total_with_l2(&self) -> u64 {
+        self.hbm_read + self.hbm_write + self.l2_read
+    }
+
+    pub fn add(&mut self, other: &Counters) {
+        self.hbm_read += other.hbm_read;
+        self.l2_read += other.l2_read;
+        self.hbm_write += other.hbm_write;
+        self.flops += other.flops;
+        self.launches += other.launches;
+        self.peak_workspace = self.peak_workspace.max(other.peak_workspace);
+    }
+
+    pub fn read_elems(&mut self, n: usize) {
+        self.hbm_read += 4 * n as u64;
+    }
+
+    pub fn l2_elems(&mut self, n: usize) {
+        self.l2_read += 4 * n as u64;
+    }
+
+    pub fn write_elems(&mut self, n: usize) {
+        self.hbm_write += 4 * n as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_accumulates_and_max_workspace() {
+        let mut a = Counters {
+            hbm_read: 10,
+            l2_read: 7,
+            hbm_write: 5,
+            flops: 100,
+            launches: 1,
+            peak_workspace: 64,
+        };
+        let b = Counters {
+            hbm_read: 1,
+            l2_read: 3,
+            hbm_write: 2,
+            flops: 3,
+            launches: 4,
+            peak_workspace: 32,
+        };
+        a.add(&b);
+        assert_eq!(a.hbm_read, 11);
+        assert_eq!(a.l2_read, 10);
+        assert_eq!(a.launches, 5);
+        assert_eq!(a.peak_workspace, 64);
+        assert_eq!(a.total_traffic(), 18);
+        assert_eq!(a.total_with_l2(), 28);
+    }
+}

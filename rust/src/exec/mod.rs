@@ -1,0 +1,14 @@
+//! Executors for the simulated device: the eager reference interpreter
+//! (numerical oracle + traffic baseline) and the fused tiled executor
+//! (runs the flashlight-compiled kernel groups tile-by-tile with the
+//! online-softmax rewrite, counting HBM traffic it actually generates).
+
+mod counters;
+mod reference;
+mod tensor;
+pub mod tiled;
+
+pub use counters::Counters;
+pub use reference::{eager_counters, eval, eval_node, eval_pw, node_flops};
+pub use tensor::{flat_index, for_each_index, strides_of, Tensor, NEG_INF};
+pub use tiled::execute_plan;

@@ -1,0 +1,234 @@
+//! Dense row-major f32 tensors for the simulated device.
+
+use crate::ir::Shape;
+
+pub const NEG_INF: f32 = -1e30;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Shape,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// Deterministic pseudo-random fill, reproducible across languages:
+    /// `x[i] = sin(seed + i * 0.7) * 0.5` computed in f64.
+    pub fn synthetic(shape: &[usize], seed: u64) -> Self {
+        let n: usize = shape.iter().product();
+        let s = seed as f64;
+        let data = (0..n)
+            .map(|i| ((s + i as f64 * 0.7).sin() * 0.5) as f32)
+            .collect();
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        strides_of(&self.shape)
+    }
+
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[flat_index(&self.shape, idx)]
+    }
+
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let i = flat_index(&self.shape, idx);
+        self.data[i] = v;
+    }
+
+    /// Read with size-1 broadcasting against a (possibly larger) index.
+    pub fn at_broadcast(&self, idx: &[usize]) -> f32 {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut flat = 0;
+        let mut stride = 1;
+        for ax in (0..self.shape.len()).rev() {
+            if self.shape[ax] != 1 {
+                flat += idx[ax] * stride;
+            }
+            stride *= self.shape[ax];
+        }
+        self.data[flat]
+    }
+
+    /// Materialize a broadcast of `self` (size-1 dims stretch) to
+    /// `shape`, using axis-recursive row copies/fills instead of
+    /// per-element index arithmetic.
+    pub fn broadcast_to(&self, shape: &[usize]) -> Tensor {
+        debug_assert_eq!(shape.len(), self.shape.len());
+        let mut out = Tensor::zeros(shape);
+        let src_strides: Vec<usize> = {
+            let s = self.strides();
+            self.shape
+                .iter()
+                .zip(&s)
+                .map(|(&d, &st)| if d == 1 { 0 } else { st })
+                .collect()
+        };
+        let dst_strides = out.strides();
+        fn rec(
+            src: &[f32],
+            dst: &mut [f32],
+            shape: &[usize],
+            ss: &[usize],
+            ds: &[usize],
+            ax: usize,
+            so: usize,
+            dof: usize,
+        ) {
+            if ax + 1 == shape.len() {
+                let n = shape[ax];
+                if ss[ax] == 0 {
+                    let v = src[so];
+                    dst[dof..dof + n].fill(v);
+                } else {
+                    dst[dof..dof + n].copy_from_slice(&src[so..so + n]);
+                }
+                return;
+            }
+            for i in 0..shape[ax] {
+                rec(src, dst, shape, ss, ds, ax + 1, so + i * ss[ax], dof + i * ds[ax]);
+            }
+        }
+        if shape.is_empty() {
+            out.data[0] = self.data[0];
+        } else {
+            rec(
+                &self.data,
+                &mut out.data,
+                shape,
+                &src_strides,
+                &dst_strides,
+                0,
+                0,
+                0,
+            );
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    pub fn allclose(&self, other: &Tensor, atol: f32) -> bool {
+        self.shape == other.shape && self.max_abs_diff(other) <= atol
+    }
+}
+
+pub fn strides_of(shape: &[usize]) -> Vec<usize> {
+    let mut s = vec![1usize; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * shape[i + 1];
+    }
+    s
+}
+
+pub fn flat_index(shape: &[usize], idx: &[usize]) -> usize {
+    debug_assert_eq!(shape.len(), idx.len());
+    let mut flat = 0;
+    let mut stride = 1;
+    for ax in (0..shape.len()).rev() {
+        debug_assert!(idx[ax] < shape[ax], "index {idx:?} oob for {shape:?}");
+        flat += idx[ax] * stride;
+        stride *= shape[ax];
+    }
+    flat
+}
+
+/// Iterate all multi-indices of `shape` (row-major order).
+pub fn for_each_index(shape: &[usize], mut f: impl FnMut(&[usize])) {
+    let rank = shape.len();
+    if shape.iter().any(|&s| s == 0) {
+        return;
+    }
+    let mut idx = vec![0usize; rank];
+    loop {
+        f(&idx);
+        // increment
+        let mut ax = rank;
+        loop {
+            if ax == 0 {
+                return;
+            }
+            ax -= 1;
+            idx[ax] += 1;
+            if idx[ax] < shape[ax] {
+                break;
+            }
+            idx[ax] = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_and_indexing() {
+        let t = Tensor::from_vec(&[2, 3], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(t.strides(), vec![3, 1]);
+        assert_eq!(t.at(&[1, 2]), 5.0);
+        assert_eq!(t.at(&[0, 1]), 1.0);
+    }
+
+    #[test]
+    fn broadcast_read() {
+        let t = Tensor::from_vec(&[2, 1], vec![7., 9.]);
+        assert_eq!(t.at_broadcast(&[1, 5]), 9.0);
+        assert_eq!(t.at_broadcast(&[0, 3]), 7.0);
+    }
+
+    #[test]
+    fn for_each_visits_all_in_row_major() {
+        let mut seen = vec![];
+        for_each_index(&[2, 2], |i| seen.push((i[0], i[1])));
+        assert_eq!(seen, vec![(0, 0), (0, 1), (1, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn synthetic_is_deterministic() {
+        let a = Tensor::synthetic(&[8], 3);
+        let b = Tensor::synthetic(&[8], 3);
+        assert_eq!(a, b);
+        assert!(a.data.iter().all(|x| x.abs() <= 0.5));
+    }
+}

@@ -1,0 +1,17 @@
+//! The paper's compiler passes: structural fusion with dimension demotion
+//! (§3.2), semantic fusion via the algebraic online-softmax rewrite
+//! (§3.3/3.4), and tiling-aware dimension elimination (§3.5), composed by
+//! the planner into kernel-group partitions.
+
+mod online;
+mod planner;
+
+pub use online::{
+    online_reduce, online_reduce_blocked, stable_reduce, ExpDiag, ExpHom, ExpReal,
+    Mat2, OnlineRowState, Real, Ring,
+};
+pub use planner::{
+    plan, plan_with_threshold, FusionMode, GroupKind, KernelGroup, Pipeline, Plan, RewriteEvent, Rule,
+    SoftmaxRoles, TileConfig, FLASHLIGHT_MATERIALIZE_THRESHOLD,
+    INDUCTOR_MATERIALIZE_THRESHOLD, MAX_ELIM_DIM,
+};

@@ -1,0 +1,276 @@
+//! Algebraic transformation of reductions (paper §3.3 and Appendix A).
+//!
+//! The stable-softmax two-pass (max, then shifted exp-sum) is rewritten
+//! into the single-pass *online* form. The paper generalizes the rewrite
+//! to any ring `(A, ⊕, ⊗)` with a homomorphism `E : A → A` satisfying
+//! `E(a ⊕ b) = E(a) ⊗ E(b)` (so `E(0) = 1` and `E(⊖a) = E(a)⁻¹` where
+//! inverses exist): the sequences
+//!
+//! ```text
+//! ds[j] = ds[j-1] ⊕ (E(x[j]) ⊗ E(⊖ m[N]))        (stable, needs m[N])
+//! do[j] = (do[j-1] ⊗ E(m[j-1] ⊖ m[j])) ⊕ (E(x[j]) ⊗ E(⊖ m[j]))  (online)
+//! ```
+//!
+//! agree at `j = N` because both equal `(⊕_{i≤j} E(x[i])) ⊗ E(⊖ m[j])`.
+//! We implement the abstraction faithfully and *prove the theorem by
+//! property test* over multiple ring instances (see tests + proptests).
+
+/// A ring `(A, ⊕, ⊗)` as the paper's Appendix A requires. Commutativity
+/// of ⊕ is not needed; ⊗ must distribute over ⊕.
+pub trait Ring: Copy + PartialEq + std::fmt::Debug {
+    fn zero() -> Self; // identity of ⊕
+    fn one() -> Self; // identity of ⊗
+    fn add(self, other: Self) -> Self; // ⊕
+    fn mul(self, other: Self) -> Self; // ⊗
+}
+
+/// A homomorphism `E : ℝ → A` mapping (ℝ, +) into (A, ⊗):
+/// `E(a + b) = E(a) ⊗ E(b)`.
+pub trait ExpHom<A: Ring> {
+    fn hom(x: f64) -> A;
+}
+
+/// The softmax instance: `A = (ℝ, +, ×)`, `E = exp`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Real(pub f64);
+
+impl Ring for Real {
+    fn zero() -> Self {
+        Real(0.0)
+    }
+    fn one() -> Self {
+        Real(1.0)
+    }
+    fn add(self, o: Self) -> Self {
+        Real(self.0 + o.0)
+    }
+    fn mul(self, o: Self) -> Self {
+        Real(self.0 * o.0)
+    }
+}
+
+pub struct ExpReal;
+impl ExpHom<Real> for ExpReal {
+    fn hom(x: f64) -> Real {
+        Real(x.exp())
+    }
+}
+
+/// A second instance exercising the generality claim: 2×2 upper-
+/// triangular matrices over ℝ (a non-commutative ring) with
+/// `E(x) = [[e^x, 0], [0, e^{x/2}]]` (diagonal, hence a homomorphism).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Mat2(pub [f64; 4]); // row-major [a b; c d]
+
+impl Ring for Mat2 {
+    fn zero() -> Self {
+        Mat2([0.0; 4])
+    }
+    fn one() -> Self {
+        Mat2([1.0, 0.0, 0.0, 1.0])
+    }
+    fn add(self, o: Self) -> Self {
+        let a = self.0;
+        let b = o.0;
+        Mat2([a[0] + b[0], a[1] + b[1], a[2] + b[2], a[3] + b[3]])
+    }
+    fn mul(self, o: Self) -> Self {
+        let a = self.0;
+        let b = o.0;
+        Mat2([
+            a[0] * b[0] + a[1] * b[2],
+            a[0] * b[1] + a[1] * b[3],
+            a[2] * b[0] + a[3] * b[2],
+            a[2] * b[1] + a[3] * b[3],
+        ])
+    }
+}
+
+pub struct ExpDiag;
+impl ExpHom<Mat2> for ExpDiag {
+    fn hom(x: f64) -> Mat2 {
+        Mat2([x.exp(), 0.0, 0.0, (x / 2.0).exp()])
+    }
+}
+
+/// Stable (two-pass) reduction: `ds[N] = ⊕_j E(x[j] - m[N])` — Alg. 1.
+pub fn stable_reduce<A: Ring, E: ExpHom<A>>(x: &[f64]) -> (f64, A) {
+    let m = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mut d = A::zero();
+    for &xi in x {
+        d = d.add(E::hom(xi - m));
+    }
+    (m, d)
+}
+
+/// Online (single-pass) reduction — Alg. 2, generalized per Appendix A.
+pub fn online_reduce<A: Ring, E: ExpHom<A>>(x: &[f64]) -> (f64, A) {
+    let mut m = f64::NEG_INFINITY;
+    let mut d = A::zero();
+    for &xi in x {
+        let m_new = m.max(xi);
+        // d ⊗ E(m_old - m_new): rescale the running aggregate, then add
+        // the new term. E(-inf - -inf) is guarded: first element sets m.
+        let corr = if m.is_finite() {
+            E::hom(m - m_new)
+        } else {
+            A::one()
+        };
+        d = d.mul(corr).add(E::hom(xi - m_new));
+        m = m_new;
+    }
+    (m, d)
+}
+
+/// Blocked online reduction: processes `x` in chunks, carrying (m, d)
+/// across blocks — exactly the state the tiled flash kernel maintains.
+pub fn online_reduce_blocked<A: Ring, E: ExpHom<A>>(x: &[f64], block: usize) -> (f64, A) {
+    let mut m = f64::NEG_INFINITY;
+    let mut d = A::zero();
+    for chunk in x.chunks(block.max(1)) {
+        let bm = chunk.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let m_new = m.max(bm);
+        let corr = if m.is_finite() {
+            E::hom(m - m_new)
+        } else {
+            A::one()
+        };
+        let mut bsum = A::zero();
+        for &xi in chunk {
+            bsum = bsum.add(E::hom(xi - m_new));
+        }
+        d = d.mul(corr).add(bsum);
+        m = m_new;
+    }
+    (m, d)
+}
+
+/// The concrete per-row online-softmax state the tiled executor keeps in
+/// "registers": running max `m`, running denominator `l`, and the running
+/// output accumulator `acc` (rescaled by the same correction factor —
+/// this is the extension FlashAttention applies to the PV product).
+#[derive(Debug, Clone)]
+pub struct OnlineRowState {
+    pub m: f32,
+    pub l: f32,
+    pub acc: Vec<f32>,
+}
+
+impl OnlineRowState {
+    pub fn new(d: usize) -> Self {
+        OnlineRowState {
+            m: f32::NEG_INFINITY,
+            l: 0.0,
+            acc: vec![0.0; d],
+        }
+    }
+
+    /// Fold in one kv tile: `scores` (len Bk) and `v_tile` (Bk × d,
+    /// row-major). Returns nothing; state carries across tiles.
+    pub fn update(&mut self, scores: &[f32], v_tile: &[f32]) {
+        let d = self.acc.len();
+        debug_assert_eq!(scores.len() * d, v_tile.len());
+        let bm = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let m_new = self.m.max(bm);
+        if m_new == f32::NEG_INFINITY {
+            return; // all-masked tile
+        }
+        let alpha = if self.m.is_finite() {
+            (self.m - m_new).exp()
+        } else {
+            0.0
+        };
+        if alpha != 1.0 {
+            self.l *= alpha;
+            for a in &mut self.acc {
+                *a *= alpha;
+            }
+        }
+        for (j, &s) in scores.iter().enumerate() {
+            let p = (s - m_new).exp();
+            if p == 0.0 {
+                continue;
+            }
+            self.l += p;
+            let row = &v_tile[j * d..(j + 1) * d];
+            for (a, &vv) in self.acc.iter_mut().zip(row) {
+                *a += p * vv;
+            }
+        }
+        self.m = m_new;
+    }
+
+    /// Finalize: `acc / l` (zero for fully-masked rows).
+    pub fn finish(self) -> Vec<f32> {
+        let l = if self.l == 0.0 { 1.0 } else { self.l };
+        self.acc.into_iter().map(|a| a / l).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-9 * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn theorem_ds_equals_do_real() {
+        let x = vec![0.3, -1.2, 5.0, 2.2, 5.0, -7.5, 0.0];
+        let (ms, Real(ds)) = stable_reduce::<Real, ExpReal>(&x);
+        let (mo, Real(d_o)) = online_reduce::<Real, ExpReal>(&x);
+        assert_eq!(ms, mo);
+        assert!(close(ds, d_o), "{ds} vs {d_o}");
+    }
+
+    #[test]
+    fn theorem_holds_for_matrix_ring() {
+        let x = vec![1.0, 4.0, -2.0, 4.0, 3.5];
+        let (_, Mat2(ds)) = stable_reduce::<Mat2, ExpDiag>(&x);
+        let (_, Mat2(d_o)) = online_reduce::<Mat2, ExpDiag>(&x);
+        for i in 0..4 {
+            assert!(close(ds[i], d_o[i]), "{ds:?} vs {d_o:?}");
+        }
+    }
+
+    #[test]
+    fn blocked_matches_elementwise_online() {
+        let x: Vec<f64> = (0..37).map(|i| ((i * 13 % 17) as f64) - 8.0).collect();
+        let (m1, Real(d1)) = online_reduce::<Real, ExpReal>(&x);
+        for block in [1, 2, 3, 8, 37, 64] {
+            let (m2, Real(d2)) = online_reduce_blocked::<Real, ExpReal>(&x, block);
+            assert_eq!(m1, m2);
+            assert!(close(d1, d2));
+        }
+    }
+
+    #[test]
+    fn row_state_matches_two_pass_softmax_times_v() {
+        // 1 row, 8 kv positions, d=3; compare acc/l against naive.
+        let scores: Vec<f32> = vec![0.5, -1.0, 2.0, 0.0, 1.5, -0.5, 2.0, 3.0];
+        let v: Vec<f32> = (0..24).map(|i| (i as f32) * 0.1 - 1.0).collect();
+        let mut st = OnlineRowState::new(3);
+        for t in 0..4 {
+            st.update(&scores[t * 2..t * 2 + 2], &v[t * 6..t * 6 + 6]);
+        }
+        let out = st.finish();
+        // naive
+        let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let p: Vec<f32> = scores.iter().map(|s| (s - m).exp()).collect();
+        let l: f32 = p.iter().sum();
+        for dd in 0..3 {
+            let want: f32 =
+                (0..8).map(|j| p[j] * v[j * 3 + dd]).sum::<f32>() / l;
+            assert!((out[dd] - want).abs() < 1e-6, "{out:?}");
+        }
+    }
+
+    #[test]
+    fn all_masked_rows_finish_to_zero() {
+        let mut st = OnlineRowState::new(2);
+        st.update(&[f32::NEG_INFINITY, f32::NEG_INFINITY], &[1., 2., 3., 4.]);
+        let out = st.finish();
+        assert_eq!(out, vec![0.0, 0.0]);
+    }
+}

@@ -1,0 +1,1088 @@
+//! The fusion planner: partitions a tensor program into kernel groups by
+//! applying the paper's rewrites.
+//!
+//! Modes:
+//! * `Eager` — every node is its own kernel (PyTorch eager semantics).
+//! * `TorchCompile` — TorchInductor-style fusion: pointwise chains fuse
+//!   with identical sketches, reductions absorb pointwise prologues,
+//!   GEMMs absorb simple pointwise epilogues — but GEMMs never fuse with
+//!   reductions, and two dependent reductions never fuse (§3.1/§3.4's
+//!   "bifurcation" and "synchronization barrier").
+//! * `Flashlight` — additionally applies the paper's rewrites:
+//!   1. unified-reduction GEMM modeling (§3.1),
+//!   2. structural fusion with dimension demotion (§3.2),
+//!   3. semantic fusion via the online-softmax algebraic rewrite (§3.4),
+//!   4. tiling-aware dimension elimination (§3.5),
+//!   discovering the FlashAttention loop structure from idiomatic code.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::exec::{node_flops, Counters};
+use crate::ir::{Graph, NodeId, Op, PwOp};
+use crate::sketch::{analyze, find_softmax_patterns, DimAnalysis, DimClass};
+
+/// Max head-dim extent eligible for tiling-aware elimination (§3.5): a
+/// p-dimension collapses only if one tile covers it (`B_P >= |P|`).
+pub const MAX_ELIM_DIM: usize = 256;
+
+/// Materialization threshold (§3.7): the max number of ops fused into
+/// one non-pipeline kernel before intermediates are forced to
+/// materialize. The baseline compiler keeps a low limit; Flashlight
+/// raises it so complex fused subgraphs (e.g. ALiBi's score chain)
+/// stay in a single kernel without premature materialization.
+pub const INDUCTOR_MATERIALIZE_THRESHOLD: usize = 12;
+pub const FLASHLIGHT_MATERIALIZE_THRESHOLD: usize = 64;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FusionMode {
+    Eager,
+    TorchCompile,
+    Flashlight,
+}
+
+/// Which rewrite fired (for the plan log / `inspect` CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    UnifiedReductionGemm,
+    StructuralDemotion,
+    AlgebraicOnline,
+    TilingElimination,
+    PrologueFusion,
+    EpilogueFusion,
+    PointwiseFusion,
+}
+
+#[derive(Debug, Clone)]
+pub struct RewriteEvent {
+    pub rule: Rule,
+    pub at: NodeId,
+}
+
+/// Softmax roles inside a fused pipeline.
+#[derive(Debug, Clone, Copy)]
+pub struct SoftmaxRoles {
+    pub max: NodeId,
+    pub exp: NodeId,
+    pub sum: NodeId,
+    pub div: NodeId,
+}
+
+/// A fully fused FlashAttention-style kernel: first matmul, score chain,
+/// optional online softmax, second matmul, pointwise epilogue.
+#[derive(Debug, Clone)]
+pub struct Pipeline {
+    pub m1: NodeId,
+    /// The pre-softmax score node (input of `max`/`exp`), or the lhs of
+    /// `m2` when there is no softmax (twin-matmul case).
+    pub score_root: NodeId,
+    pub softmax: Option<SoftmaxRoles>,
+    pub m2: NodeId,
+    /// Final node of the group (after epilogue absorption).
+    pub out: NodeId,
+    pub q_class: DimClass,
+    pub kv_class: DimClass,
+}
+
+#[derive(Debug, Clone)]
+pub enum GroupKind {
+    Elementwise,
+    Reduction,
+    Matmul,
+    Pipeline(Pipeline),
+}
+
+#[derive(Debug, Clone)]
+pub struct KernelGroup {
+    pub nodes: Vec<NodeId>,
+    pub kind: GroupKind,
+}
+
+#[derive(Debug)]
+pub struct Plan {
+    pub mode: FusionMode,
+    pub groups: Vec<KernelGroup>,
+    /// node -> group index (inputs: usize::MAX).
+    pub assignment: Vec<usize>,
+    pub log: Vec<RewriteEvent>,
+}
+
+/// Tiling schedule used for traffic accounting of pipeline groups.
+#[derive(Debug, Clone, Copy)]
+pub struct TileConfig {
+    pub block_q: usize,
+    pub block_k: usize,
+    /// L2 capacity: per-operand re-read working sets larger than this
+    /// spill to HBM instead of hitting L2.
+    pub l2_capacity: u64,
+}
+
+impl Default for TileConfig {
+    fn default() -> Self {
+        TileConfig {
+            block_q: 128,
+            block_k: 64,
+            l2_capacity: 40 << 20,
+        }
+    }
+}
+
+fn is_generator(op: &Op) -> bool {
+    matches!(op, Op::Const { .. } | Op::Iota { .. })
+}
+
+/// Backward closure from `start` through fusable ops, stopping at
+/// `stops`, `Input`s and already-assigned nodes. Returns None if the
+/// closure hits a Matmul/Reduce that is not in `stops` (can't absorb).
+fn backward_closure(
+    g: &Graph,
+    start: NodeId,
+    stops: &HashSet<NodeId>,
+    assigned: &[Option<usize>],
+) -> Option<HashSet<NodeId>> {
+    let mut seen = HashSet::new();
+    let mut stack = vec![start];
+    while let Some(id) = stack.pop() {
+        if stops.contains(&id) || seen.contains(&id) {
+            continue;
+        }
+        let node = g.node(id);
+        match &node.op {
+            Op::Input { .. } => continue, // external operand
+            Op::Matmul { .. } | Op::Reduce { .. } => return None,
+            _ => {}
+        }
+        if assigned[id.0 as usize].is_some() {
+            continue; // produced by an earlier group: external operand
+        }
+        seen.insert(id);
+        stack.extend(node.op.input_ids());
+    }
+    Some(seen)
+}
+
+/// Try to build a flash pipeline rooted at matmul `m1`.
+fn try_pipeline(
+    g: &Graph,
+    an: &DimAnalysis,
+    cons: &[Vec<NodeId>],
+    softmaxes: &[(NodeId, NodeId, NodeId)],
+    m1: NodeId,
+    assigned: &[Option<usize>],
+    log: &mut Vec<RewriteEvent>,
+) -> Option<(HashSet<NodeId>, Pipeline)> {
+    let rank = g.node(m1).shape.len();
+    let q_class = an.axes[m1.0 as usize][rank - 2];
+    let kv_class = an.axes[m1.0 as usize][rank - 1];
+
+    // Look for a softmax pattern whose max-input is downstream of m1 and
+    // reduces over m1's N dimension (the demotion candidate).
+    for &(mx, ex, sm) in softmaxes {
+        let Op::Reduce { input: x, axis, .. } = g.node(mx).op else {
+            continue;
+        };
+        if an.axes[x.0 as usize][axis] != kv_class {
+            continue;
+        }
+        // Score chain: backward closure from x stopping at m1.
+        let stops: HashSet<NodeId> = [m1].into_iter().collect();
+        let Some(chain) = backward_closure(g, x, &stops, assigned) else {
+            continue;
+        };
+        // m1 must actually feed the chain (or be x itself).
+        let feeds = x == m1
+            || chain
+                .iter()
+                .any(|n| g.node(*n).op.input_ids().contains(&m1));
+        if !feeds {
+            continue;
+        }
+        // div: pointwise Div consumer of exp dividing by broadcast(sum).
+        let mut div = None;
+        for &c in &cons[ex.0 as usize] {
+            if let Op::Pointwise {
+                op: PwOp::Div,
+                ref inputs,
+            } = g.node(c).op
+            {
+                if inputs[0] == ex {
+                    div = Some(c);
+                }
+            }
+        }
+        let div = div?;
+        // m2: matmul consumer of div contracting over kv_class.
+        let mut m2 = None;
+        for &c in &cons[div.0 as usize] {
+            if let Op::Matmul { lhs, .. } = g.node(c).op {
+                if lhs == div && an.sketches[c.0 as usize].r.contains(&kv_class) {
+                    m2 = Some(c);
+                }
+            }
+        }
+        let m2 = m2?;
+        // Tiling-aware elimination precondition (§3.5): m2's output
+        // head-dim must fit one tile so its p-loop collapses.
+        let m2_rank = g.node(m2).shape.len();
+        let d_out = g.node(m2).shape[m2_rank - 1];
+        if d_out > MAX_ELIM_DIM {
+            return None;
+        }
+
+        // Assemble the group.
+        let mut nodes: HashSet<NodeId> = chain;
+        nodes.insert(m1);
+        nodes.insert(mx);
+        nodes.insert(ex);
+        nodes.insert(sm);
+        nodes.insert(div);
+        nodes.insert(m2);
+        // broadcasts of max/sum feeding sub/div
+        for id in g.ids() {
+            if let Op::Broadcast { input } = g.node(id).op {
+                if (input == mx || input == sm) && assigned[id.0 as usize].is_none() {
+                    nodes.insert(id);
+                }
+            }
+        }
+        // sub node (x's producer path is already in chain, but the sub
+        // between x and exp sits forward of x): exp's operand.
+        if let Op::Pointwise { ref inputs, .. } = g.node(ex).op {
+            for &i in inputs {
+                if assigned[i.0 as usize].is_none()
+                    && !matches!(g.node(i).op, Op::Input { .. })
+                {
+                    nodes.insert(i);
+                    for j in g.node(i).op.input_ids() {
+                        if !matches!(g.node(j).op, Op::Input { .. })
+                            && assigned[j.0 as usize].is_none()
+                            && (g.node(j).op.is_pointwise())
+                        {
+                            nodes.insert(j);
+                        }
+                    }
+                }
+            }
+        }
+        // Prologues of the matmul operands (slices/pointwise/views).
+        for src in [
+            g.node(m1).op.input_ids(),
+            g.node(m2).op.input_ids(),
+        ]
+        .concat()
+        {
+            if nodes.contains(&src) {
+                continue;
+            }
+            let stops: HashSet<NodeId> = nodes.iter().copied().collect();
+            if let Some(pro) = backward_closure_prologue(g, src, &stops, assigned) {
+                if !pro.is_empty() {
+                    log.push(RewriteEvent {
+                        rule: Rule::PrologueFusion,
+                        at: src,
+                    });
+                }
+                nodes.extend(pro);
+            }
+        }
+
+        // Legality: every in-group node's consumers stay in-group,
+        // except m2 (the group output so far).
+        for &n in &nodes {
+            if n == m2 {
+                continue;
+            }
+            if cons[n.0 as usize].iter().any(|c| !nodes.contains(c)) {
+                return None;
+            }
+        }
+
+        log.push(RewriteEvent {
+            rule: Rule::UnifiedReductionGemm,
+            at: m1,
+        });
+        log.push(RewriteEvent {
+            rule: Rule::StructuralDemotion,
+            at: mx,
+        });
+        log.push(RewriteEvent {
+            rule: Rule::AlgebraicOnline,
+            at: sm,
+        });
+        log.push(RewriteEvent {
+            rule: Rule::TilingElimination,
+            at: m2,
+        });
+
+        // Epilogue absorption: follow pointwise consumers of m2.
+        let mut out = m2;
+        loop {
+            let next = cons[out.0 as usize]
+                .iter()
+                .copied()
+                .filter(|c| {
+                    matches!(g.node(*c).op, Op::Pointwise { .. })
+                        && assigned[c.0 as usize].is_none()
+                })
+                .collect::<Vec<_>>();
+            if next.len() != 1 {
+                break;
+            }
+            let c = next[0];
+            // Epilogue p-dims must be within the pipeline output's dims.
+            let cp: HashSet<DimClass> =
+                an.sketches[c.0 as usize].p.iter().copied().collect();
+            let op_: HashSet<DimClass> =
+                an.sketches[out.0 as usize].p.iter().copied().collect();
+            if !cp.is_subset(&op_) || !an.sketches[c.0 as usize].r.is_empty() {
+                break;
+            }
+            // Absorb the side-operand generator trees too.
+            let mut ok = true;
+            let mut extra = HashSet::new();
+            for opnd in g.node(c).op.input_ids() {
+                if nodes.contains(&opnd) || matches!(g.node(opnd).op, Op::Input { .. })
+                {
+                    continue;
+                }
+                if assigned[opnd.0 as usize].is_some() {
+                    continue; // external, already materialized
+                }
+                let stops: HashSet<NodeId> = nodes.iter().copied().collect();
+                match backward_closure_prologue(g, opnd, &stops, assigned) {
+                    Some(t) => {
+                        extra.insert(opnd);
+                        extra.extend(t);
+                    }
+                    None => {
+                        ok = false;
+                    }
+                }
+            }
+            if !ok {
+                break;
+            }
+            // side nodes' consumers must be within the new group
+            let mut trial = nodes.clone();
+            trial.insert(c);
+            trial.extend(extra.iter().copied());
+            if extra
+                .iter()
+                .any(|n| cons[n.0 as usize].iter().any(|cc| !trial.contains(cc)))
+            {
+                break;
+            }
+            nodes = trial;
+            out = c;
+            log.push(RewriteEvent {
+                rule: Rule::EpilogueFusion,
+                at: c,
+            });
+        }
+
+        return Some((
+            nodes,
+            Pipeline {
+                m1,
+                score_root: x,
+                softmax: Some(SoftmaxRoles {
+                    max: mx,
+                    exp: ex,
+                    sum: sm,
+                    div,
+                }),
+                m2,
+                out,
+                q_class,
+                kv_class,
+            },
+        ));
+    }
+
+    // Twin-matmul (no softmax, §3.5's motivating example): a pointwise
+    // chain from m1 into a matmul m2 contracting over m1's N.
+    try_twin_matmul(g, an, cons, m1, assigned, log, q_class, kv_class)
+}
+
+/// Prologue closure: like `backward_closure` but returns Some(empty) when
+/// `start` itself is an Input/assigned node (pure external operand).
+fn backward_closure_prologue(
+    g: &Graph,
+    start: NodeId,
+    stops: &HashSet<NodeId>,
+    assigned: &[Option<usize>],
+) -> Option<HashSet<NodeId>> {
+    if matches!(g.node(start).op, Op::Input { .. })
+        || assigned[start.0 as usize].is_some()
+        || stops.contains(&start)
+    {
+        return Some(HashSet::new());
+    }
+    let mut set = backward_closure(g, start, stops, assigned)?;
+    set.insert(start);
+    Some(set)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn try_twin_matmul(
+    g: &Graph,
+    an: &DimAnalysis,
+    cons: &[Vec<NodeId>],
+    m1: NodeId,
+    assigned: &[Option<usize>],
+    log: &mut Vec<RewriteEvent>,
+    q_class: DimClass,
+    kv_class: DimClass,
+) -> Option<(HashSet<NodeId>, Pipeline)> {
+    // Walk forward through single-consumer pointwise nodes.
+    let mut cur = m1;
+    let mut chain: HashSet<NodeId> = HashSet::new();
+    for _ in 0..16 {
+        let cs = &cons[cur.0 as usize];
+        if cs.len() != 1 {
+            return None;
+        }
+        let c = cs[0];
+        match g.node(c).op {
+            Op::Pointwise { .. } => {
+                chain.insert(c);
+                cur = c;
+            }
+            Op::Matmul { lhs, .. } => {
+                if lhs != cur || !an.sketches[c.0 as usize].r.contains(&kv_class) {
+                    return None;
+                }
+                let m2 = c;
+                let m2_rank = g.node(m2).shape.len();
+                if g.node(m2).shape[m2_rank - 1] > MAX_ELIM_DIM {
+                    return None;
+                }
+                let mut nodes = chain;
+                nodes.insert(m1);
+                nodes.insert(m2);
+                for &n in &nodes {
+                    if n != m2
+                        && cons[n.0 as usize].iter().any(|x| !nodes.contains(x))
+                    {
+                        return None;
+                    }
+                }
+                let _ = assigned;
+                log.push(RewriteEvent {
+                    rule: Rule::UnifiedReductionGemm,
+                    at: m1,
+                });
+                log.push(RewriteEvent {
+                    rule: Rule::StructuralDemotion,
+                    at: m2,
+                });
+                log.push(RewriteEvent {
+                    rule: Rule::TilingElimination,
+                    at: m2,
+                });
+                let score_root = cur;
+                return Some((
+                    nodes,
+                    Pipeline {
+                        m1,
+                        score_root,
+                        softmax: None,
+                        m2,
+                        out: m2,
+                        q_class,
+                        kv_class,
+                    },
+                ));
+            }
+            _ => return None,
+        }
+    }
+    None
+}
+
+/// TorchInductor-style grouping over `pending` nodes (used for the whole
+/// graph in `TorchCompile` mode and for pipeline leftovers in
+/// `Flashlight` mode).
+fn inductor_partition(
+    g: &Graph,
+    an: &DimAnalysis,
+    assigned: &mut [Option<usize>],
+    groups: &mut Vec<KernelGroup>,
+    log: &mut Vec<RewriteEvent>,
+    materialize_threshold: usize,
+) {
+    struct GState {
+        p: Vec<DimClass>,
+        has_reduce: bool,
+        has_matmul: bool,
+    }
+    let mut states: HashMap<usize, GState> = HashMap::new();
+
+    for id in g.ids() {
+        if assigned[id.0 as usize].is_some() {
+            continue;
+        }
+        let node = g.node(id);
+        if matches!(node.op, Op::Input { .. }) {
+            continue;
+        }
+        let my_p: Vec<DimClass> = an.sketches[id.0 as usize].p.clone();
+        let my_p_set: HashSet<DimClass> = my_p.iter().copied().collect();
+        let is_reduce = matches!(node.op, Op::Reduce { .. });
+        let is_matmul = matches!(node.op, Op::Matmul { .. });
+        let is_pw = node.op.is_pointwise() || matches!(node.op, Op::Slice { .. });
+
+        // Try to join a producer's group. Joining group `gi` is only
+        // legal if no operand comes from a *later* group — groups
+        // execute in index order, so that would be a scheduling cycle
+        // (e.g. softmax's `sub` may not rejoin the QK^T group: its
+        // broadcast(max) operand is produced after it).
+        let operand_groups: Vec<Option<usize>> = node
+            .op
+            .input_ids()
+            .iter()
+            .map(|o| assigned[o.0 as usize])
+            .collect();
+        let mut target: Option<usize> = None;
+        if !is_matmul {
+            for opnd in node.op.input_ids() {
+                let Some(gi) = assigned[opnd.0 as usize] else {
+                    continue;
+                };
+                if operand_groups.iter().flatten().any(|&gj| gj > gi) {
+                    continue; // would depend on a later group
+                }
+                let Some(st) = states.get(&gi) else { continue };
+                if matches!(groups[gi].kind, GroupKind::Pipeline(_)) {
+                    continue;
+                }
+                let sp: HashSet<DimClass> = st.p.iter().copied().collect();
+                let join = if groups[gi].nodes.len() >= materialize_threshold {
+                    false // materialization threshold reached (§3.7)
+                } else if is_pw {
+                    // pointwise epilogue: identical p-dims; GEMM groups
+                    // accept only "simple elementwise" epilogues.
+                    sp == my_p_set || (st.has_matmul && my_p_set.is_subset(&sp))
+                } else if is_reduce {
+                    // prologue fusion into a reduction kernel: producer
+                    // group must be pure pointwise with matching p-dims.
+                    !st.has_reduce && !st.has_matmul
+                        && my_p_set.is_subset(&sp)
+                } else {
+                    false
+                };
+                if join {
+                    target = Some(gi);
+                    break;
+                }
+            }
+        }
+
+        match target {
+            Some(gi) => {
+                groups[gi].nodes.push(id);
+                assigned[id.0 as usize] = Some(gi);
+                let st = states.get_mut(&gi).unwrap();
+                if is_reduce {
+                    st.has_reduce = true;
+                    st.p = my_p;
+                    groups[gi].kind = GroupKind::Reduction;
+                }
+                log.push(RewriteEvent {
+                    rule: if is_reduce {
+                        Rule::PrologueFusion
+                    } else {
+                        Rule::PointwiseFusion
+                    },
+                    at: id,
+                });
+            }
+            None => {
+                let kind = if is_matmul {
+                    GroupKind::Matmul
+                } else if is_reduce {
+                    GroupKind::Reduction
+                } else {
+                    GroupKind::Elementwise
+                };
+                let gi = groups.len();
+                groups.push(KernelGroup {
+                    nodes: vec![id],
+                    kind,
+                });
+                states.insert(
+                    gi,
+                    GState {
+                        p: my_p,
+                        has_reduce: is_reduce,
+                        has_matmul: is_matmul,
+                    },
+                );
+                assigned[id.0 as usize] = Some(gi);
+            }
+        }
+    }
+}
+
+/// Partition the graph under the given fusion mode (mode-default
+/// materialization threshold).
+pub fn plan(g: &Graph, mode: FusionMode) -> Plan {
+    let thr = match mode {
+        FusionMode::TorchCompile => INDUCTOR_MATERIALIZE_THRESHOLD,
+        _ => FLASHLIGHT_MATERIALIZE_THRESHOLD,
+    };
+    plan_with_threshold(g, mode, thr)
+}
+
+/// Partition with an explicit materialization threshold (§3.7 ablation).
+pub fn plan_with_threshold(g: &Graph, mode: FusionMode, threshold: usize) -> Plan {
+    let an = analyze(g);
+    let cons = g.consumers();
+    let mut assigned: Vec<Option<usize>> = vec![None; g.nodes.len()];
+    let mut groups: Vec<KernelGroup> = vec![];
+    let mut log: Vec<RewriteEvent> = vec![];
+
+    match mode {
+        FusionMode::Eager => {
+            for id in g.ids() {
+                if matches!(g.node(id).op, Op::Input { .. }) {
+                    continue;
+                }
+                let kind = match g.node(id).op {
+                    Op::Matmul { .. } => GroupKind::Matmul,
+                    Op::Reduce { .. } => GroupKind::Reduction,
+                    _ => GroupKind::Elementwise,
+                };
+                assigned[id.0 as usize] = Some(groups.len());
+                groups.push(KernelGroup {
+                    nodes: vec![id],
+                    kind,
+                });
+            }
+        }
+        FusionMode::TorchCompile => {
+            inductor_partition(g, &an, &mut assigned, &mut groups, &mut log, threshold);
+        }
+        FusionMode::Flashlight => {
+            let softmaxes = find_softmax_patterns(g, &an);
+            // Pipelines first (in topo order of m1).
+            for id in g.ids() {
+                if assigned[id.0 as usize].is_some()
+                    || !matches!(g.node(id).op, Op::Matmul { .. })
+                {
+                    continue;
+                }
+                if let Some((nodes, pipe)) =
+                    try_pipeline(g, &an, &cons, &softmaxes, id, &assigned, &mut log)
+                {
+                    let gi = groups.len();
+                    let mut sorted: Vec<NodeId> = nodes.iter().copied().collect();
+                    sorted.sort();
+                    for &n in &sorted {
+                        assigned[n.0 as usize] = Some(gi);
+                    }
+                    groups.push(KernelGroup {
+                        nodes: sorted,
+                        kind: GroupKind::Pipeline(pipe),
+                    });
+                }
+            }
+            // Everything else: inductor rules with the raised
+            // materialization threshold (§3.7).
+            inductor_partition(g, &an, &mut assigned, &mut groups, &mut log, threshold);
+        }
+    }
+
+    let assignment = assigned
+        .iter()
+        .map(|a| a.unwrap_or(usize::MAX))
+        .collect();
+    Plan {
+        mode,
+        groups,
+        assignment,
+        log,
+    }
+}
+
+impl Plan {
+    /// Analytic counters for executing this plan once with the given
+    /// tiling schedule (pipeline groups only use the schedule).
+    pub fn counters(&self, g: &Graph, tile: TileConfig) -> Counters {
+        let an = analyze(g);
+        let cons = g.consumers(); // computed once, not per group/node
+        let outputs: HashSet<NodeId> = g.outputs.iter().copied().collect();
+        let mut c = Counters::default();
+        for (gi, grp) in self.groups.iter().enumerate() {
+            let members: HashSet<NodeId> = grp.nodes.iter().copied().collect();
+            c.launches += 1;
+            // flops: dense work of all member nodes
+            for &n in &grp.nodes {
+                c.flops += node_flops(g, n);
+            }
+            // reads: unique external operands. In pipeline groups, the
+            // tile schedule determines how often each operand is
+            // re-touched: K/V-like operands (kv-dim but no q-dim) are
+            // re-read once per q-tile; operands broadcast over outer
+            // dims (GQA kv heads, Evoformer pair bias over rows) are
+            // re-read once per broadcast replica. First touch is HBM
+            // (compulsory); re-reads hit L2 unless the operand exceeds
+            // its capacity (then they spill back to HBM).
+            let mut seen = HashSet::new();
+            let pipe = match &grp.kind {
+                GroupKind::Pipeline(p) => Some(p),
+                _ => None,
+            };
+            let (n_qtiles, outer) = match pipe {
+                Some(p) => {
+                    let sq = an.size(p.q_class);
+                    let out_axes = &an.axes[p.out.0 as usize];
+                    let out_shape = &g.node(p.out).shape;
+                    let rank = out_shape.len();
+                    let q_ax = out_axes
+                        .iter()
+                        .position(|cl| *cl == p.q_class)
+                        .unwrap_or(rank - 2);
+                    // outer classes with sizes (all out axes except q, d)
+                    let outer: Vec<(DimClass, usize)> = (0..rank)
+                        .filter(|&ax| ax != q_ax && ax != rank - 1)
+                        .map(|ax| (out_axes[ax], out_shape[ax]))
+                        .collect();
+                    (sq.div_ceil(tile.block_q) as u64, outer)
+                }
+                None => (1, vec![]),
+            };
+            for &n in &grp.nodes {
+                for opnd in g.node(n).op.input_ids() {
+                    if members.contains(&opnd) || !seen.insert(opnd) {
+                        continue;
+                    }
+                    // generators materialize only in eager mode
+                    if is_generator(&g.node(opnd).op)
+                        && self.mode != FusionMode::Eager
+                        && self.assignment[opnd.0 as usize] == usize::MAX
+                    {
+                        continue;
+                    }
+                    let bytes = 4 * g.numel(opnd) as u64;
+                    let (touches, working_set) = match pipe {
+                        Some(p) => {
+                            let axes = &an.axes[opnd.0 as usize];
+                            let shape = &g.node(opnd).shape;
+                            let covers = |cl: DimClass| {
+                                axes.iter()
+                                    .zip(shape)
+                                    .any(|(c2, &sz)| *c2 == cl && sz > 1)
+                            };
+                            // broadcast multiplicity over outer dims, and
+                            // the per-outer-iteration slice size (the L2
+                            // working set the swizzle keeps resident).
+                            let mut mult: u64 = 1;
+                            let mut covered: u64 = 1;
+                            for &(cl, sz) in &outer {
+                                if sz > 1 && !covers(cl) {
+                                    mult *= sz as u64;
+                                } else if sz > 1 {
+                                    covered *= sz as u64;
+                                }
+                            }
+                            let has_kv = covers(p.kv_class);
+                            let has_q = covers(p.q_class);
+                            let t = if has_kv && !has_q {
+                                mult * n_qtiles
+                            } else {
+                                mult
+                            };
+                            (t, bytes / covered.max(1))
+                        }
+                        None => (1, bytes),
+                    };
+                    c.hbm_read += bytes;
+                    let reread = bytes * (touches - 1);
+                    if working_set <= tile.l2_capacity {
+                        c.l2_read += reread;
+                    } else {
+                        c.hbm_read += reread;
+                    }
+                }
+            }
+            // writes: nodes visible outside the group
+            for &n in &grp.nodes {
+                let external = outputs.contains(&n)
+                    || cons[n.0 as usize]
+                        .iter()
+                        .any(|cc| self.assignment[cc.0 as usize] != gi);
+                if external {
+                    c.hbm_write += 4 * g.numel(n) as u64;
+                }
+            }
+            let _ = tile.block_k;
+        }
+        // workspace: bytes of all materialized intermediates (non-output)
+        let mut live = 0u64;
+        for id in g.ids() {
+            if matches!(g.node(id).op, Op::Input { .. }) || outputs.contains(&id) {
+                continue;
+            }
+            let gi = self.assignment[id.0 as usize];
+            if gi == usize::MAX {
+                continue;
+            }
+            let external = cons[id.0 as usize]
+                .iter()
+                .any(|cc| self.assignment[cc.0 as usize] != gi);
+            if external || self.mode == FusionMode::Eager {
+                live += 4 * g.numel(id) as u64;
+            }
+        }
+        c.peak_workspace = live;
+        c
+    }
+
+    pub fn num_pipelines(&self) -> usize {
+        self.groups
+            .iter()
+            .filter(|gr| matches!(gr.kind, GroupKind::Pipeline(_)))
+            .count()
+    }
+
+    /// Computation sketch of a kernel group in the paper's §3.2 notation
+    /// `[(P0, P1, ...), (R0, R1, ...)]` with extents. For pipelines the
+    /// demoted kv dimension is shown on the R side — the visible effect
+    /// of the §3.2 rewrite.
+    pub fn group_sketch(&self, g: &Graph, an: &DimAnalysis, grp: &KernelGroup) -> String {
+        let fmt_dims = |dims: &[DimClass]| {
+            dims.iter()
+                .map(|c| an.size(*c).to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        match &grp.kind {
+            GroupKind::Pipeline(p) => {
+                let out_sk = &an.sketches[p.out.0 as usize];
+                let ps: Vec<DimClass> = out_sk
+                    .p
+                    .iter()
+                    .copied()
+                    .filter(|c| *c != p.kv_class)
+                    .collect();
+                let mut rs = vec![p.kv_class];
+                // the first matmul's contraction also stays an inner loop
+                rs.extend(an.sketches[p.m1.0 as usize].r.iter().copied());
+                format!("[({}), ({})]", fmt_dims(&ps), fmt_dims(&rs))
+            }
+            _ => {
+                // the group's anchor node: last reduction/matmul, else last
+                let anchor = grp
+                    .nodes
+                    .iter()
+                    .rev()
+                    .find(|n| {
+                        matches!(
+                            g.node(**n).op,
+                            Op::Reduce { .. } | Op::Matmul { .. }
+                        )
+                    })
+                    .or_else(|| grp.nodes.last())
+                    .copied()
+                    .expect("non-empty group");
+                let sk = &an.sketches[anchor.0 as usize];
+                format!("[({}), ({})]", fmt_dims(&sk.p), fmt_dims(&sk.r))
+            }
+        }
+    }
+
+    pub fn describe(&self, g: &Graph) -> String {
+        use std::fmt::Write;
+        let an = analyze(g);
+        let mut s = String::new();
+        writeln!(s, "plan[{:?}] for `{}`: {} kernels", self.mode, g.name, self.groups.len())
+            .unwrap();
+        for (i, grp) in self.groups.iter().enumerate() {
+            let kind = match &grp.kind {
+                GroupKind::Elementwise => "elementwise".to_string(),
+                GroupKind::Reduction => "reduction".to_string(),
+                GroupKind::Matmul => "matmul".to_string(),
+                GroupKind::Pipeline(p) => format!(
+                    "flash-pipeline(online_softmax={})",
+                    p.softmax.is_some()
+                ),
+            };
+            writeln!(
+                s,
+                "  kernel {i}: {kind} [{} nodes] sketch {}",
+                grp.nodes.len(),
+                self.group_sketch(g, &an, grp)
+            )
+            .unwrap();
+        }
+        for e in &self.log {
+            writeln!(s, "  rewrite {:?} at node {}", e.rule, e.at.0).unwrap();
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+    use crate::variants::{build, AttnShape, Variant};
+
+    fn shape() -> AttnShape {
+        AttnShape {
+            batch: 1,
+            rows: 1,
+            heads_q: 4,
+            heads_kv: 2,
+            seq: 64,
+            head_dim: 16,
+        }
+    }
+
+    #[test]
+    fn flashlight_fuses_vanilla_attention_into_one_kernel() {
+        let g = build(Variant::Vanilla, &shape());
+        let p = plan(&g, FusionMode::Flashlight);
+        assert_eq!(p.num_pipelines(), 1, "{}", p.describe(&g));
+        // everything lives in the pipeline: exactly 1 kernel
+        assert_eq!(p.groups.len(), 1, "{}", p.describe(&g));
+        let rules: Vec<Rule> = p.log.iter().map(|e| e.rule).collect();
+        assert!(rules.contains(&Rule::UnifiedReductionGemm));
+        assert!(rules.contains(&Rule::StructuralDemotion));
+        assert!(rules.contains(&Rule::AlgebraicOnline));
+        assert!(rules.contains(&Rule::TilingElimination));
+    }
+
+    #[test]
+    fn flashlight_fuses_all_paper_variants() {
+        for v in crate::variants::paper_variants() {
+            let g = build(v, &shape());
+            let p = plan(&g, FusionMode::Flashlight);
+            assert_eq!(
+                p.num_pipelines(),
+                1,
+                "{}: {}",
+                v.name(),
+                p.describe(&g)
+            );
+            assert_eq!(p.groups.len(), 1, "{}", v.name());
+        }
+    }
+
+    #[test]
+    fn diff_attn_fuses_into_two_pipelines() {
+        let g = build(Variant::DiffAttn { lambda: 0.5 }, &shape());
+        let p = plan(&g, FusionMode::Flashlight);
+        assert_eq!(p.num_pipelines(), 2, "{}", p.describe(&g));
+        // epilogue (mul_scalar + sub) must be fused: 2 kernels total
+        assert_eq!(p.groups.len(), 2, "{}", p.describe(&g));
+    }
+
+    #[test]
+    fn evoformer_fuses_gating_epilogue() {
+        let g = build(Variant::Evoformer, &shape());
+        let p = plan(&g, FusionMode::Flashlight);
+        assert_eq!(p.num_pipelines(), 1, "{}", p.describe(&g));
+        assert_eq!(p.groups.len(), 1, "{}", p.describe(&g));
+    }
+
+    #[test]
+    fn twin_matmul_fuses_without_softmax() {
+        // E = (A @ B) @ D with small inner p-dim (§3.5's example).
+        let mut b = GraphBuilder::new("twin");
+        let a = b.input("a", &[256, 64]);
+        let bb = b.input("b", &[64, 128]);
+        let d = b.input("d", &[128, 32]);
+        let c = b.matmul(a, bb);
+        let e = b.matmul(c, d);
+        let g = b.finish(&[e]);
+        let p = plan(&g, FusionMode::Flashlight);
+        assert_eq!(p.num_pipelines(), 1, "{}", p.describe(&g));
+    }
+
+    #[test]
+    fn torch_compile_does_not_fuse_across_gemm_or_reductions() {
+        let g = build(Variant::Vanilla, &shape());
+        let p = plan(&g, FusionMode::TorchCompile);
+        assert_eq!(p.num_pipelines(), 0);
+        // must be several kernels: QK^T(+scale), max, sub-exp-sum, div, PV
+        assert!(p.groups.len() >= 4, "{}", p.describe(&g));
+    }
+
+    #[test]
+    fn eager_is_one_kernel_per_node() {
+        let g = build(Variant::Vanilla, &shape());
+        let p = plan(&g, FusionMode::Eager);
+        let non_input = g
+            .ids()
+            .filter(|i| !matches!(g.node(*i).op, Op::Input { .. }))
+            .count();
+        assert_eq!(p.groups.len(), non_input);
+    }
+
+    #[test]
+    fn traffic_ordering_flashlight_lt_torchcompile_lt_eager() {
+        let g = build(Variant::Causal, &shape());
+        let tc = TileConfig::default();
+        let fl = plan(&g, FusionMode::Flashlight).counters(&g, tc);
+        let ind = plan(&g, FusionMode::TorchCompile).counters(&g, tc);
+        let eag = plan(&g, FusionMode::Eager).counters(&g, tc);
+        assert!(
+            fl.total_traffic() < ind.total_traffic(),
+            "flashlight {} vs inductor {}",
+            fl.total_traffic(),
+            ind.total_traffic()
+        );
+        assert!(ind.total_traffic() < eag.total_traffic());
+        assert!(fl.launches < ind.launches);
+        assert!(ind.launches < eag.launches);
+        // fused peak workspace excludes the S^2 intermediates
+        assert!(fl.peak_workspace < ind.peak_workspace);
+    }
+
+    #[test]
+    fn eager_group_counters_match_reference_executor() {
+        let g = build(Variant::Causal, &shape());
+        let p = plan(&g, FusionMode::Eager);
+        let c1 = p.counters(&g, TileConfig::default());
+        let c2 = crate::exec::eager_counters(&g);
+        assert_eq!(c1.hbm_read, c2.hbm_read);
+        assert_eq!(c1.hbm_write, c2.hbm_write);
+        assert_eq!(c1.flops, c2.flops);
+        assert_eq!(c1.launches, c2.launches);
+    }
+
+    #[test]
+    fn sketch_notation_shows_demotion() {
+        // §3.2 made visible: under torch.compile, QK^T's sketch keeps kv
+        // as a p-dimension; the flash pipeline demotes it to an r-dim.
+        let g = build(Variant::Causal, &shape());
+        let fl = plan(&g, FusionMode::Flashlight);
+        let d = fl.describe(&g);
+        assert!(
+            d.contains("sketch [(2, 2, 64, 16), (64, 16)]"),
+            "pipeline sketch missing demoted kv dim:\n{d}"
+        );
+        let tc = plan(&g, FusionMode::TorchCompile);
+        let d = tc.describe(&g);
+        assert!(
+            d.contains("(2, 2, 64, 64), (16)"),
+            "matmul sketch should keep kv as p-dim:\n{d}"
+        );
+    }
+
+    #[test]
+    fn large_head_dim_blocks_tiling_elimination() {
+        let mut b = GraphBuilder::new("bighead");
+        let q = b.input("q", &[1, 1, 1, 64, 16]);
+        let k = b.input("k", &[1, 1, 1, 64, 16]);
+        // v with head dim 512 > MAX_ELIM_DIM
+        let v = b.input("v", &[1, 1, 1, 64, 512]);
+        let s = b.matmul_nt(q, k);
+        let w = b.softmax(s, 4);
+        let o = b.matmul(w, v);
+        let g = b.finish(&[o]);
+        let p = plan(&g, FusionMode::Flashlight);
+        assert_eq!(p.num_pipelines(), 0, "{}", p.describe(&g));
+    }
+}

@@ -1,0 +1,261 @@
+//! Logical grid dimensions (paper §3.6) and the `blockreduction`
+//! autotuning heuristic (§3.7).
+//!
+//! TorchInductor couples logical tiling dimensions to the physical GPU
+//! grid, whose Y/Z extents cap at 65,535 — forcing either a shared tile
+//! size (flattening) or a size limit (multi-grid). Flashlight instead
+//! defines a *logical* multi-dimensional grid of tiles with independent
+//! per-dimension tile sizes, unrolls it into a single physical dimension,
+//! and recovers the logical tile coordinates in-kernel with an inverse
+//! affine map. The L2-cache swizzle groups blocks into GROUP_M strips.
+
+/// One logical tiled dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TiledDim {
+    pub size: usize,
+    pub tile: usize,
+}
+
+impl TiledDim {
+    pub fn n_tiles(&self) -> usize {
+        self.size.div_ceil(self.tile)
+    }
+}
+
+/// A logical multi-dimensional grid of tiles, mapped to one physical
+/// grid dimension (CUDA X / `tl.program_id(0)`).
+#[derive(Debug, Clone)]
+pub struct LogicalGrid {
+    pub dims: Vec<TiledDim>,
+}
+
+/// CUDA physical grid limits the paper cites: X up to 2^31-1, Y/Z 65,535.
+pub const CUDA_MAX_X: usize = (1 << 31) - 1;
+pub const CUDA_MAX_YZ: usize = 65_535;
+
+impl LogicalGrid {
+    pub fn new(dims: Vec<TiledDim>) -> Self {
+        LogicalGrid { dims }
+    }
+
+    /// Total number of physical blocks after unrolling.
+    pub fn n_blocks(&self) -> usize {
+        self.dims.iter().map(|d| d.n_tiles()).product()
+    }
+
+    /// Would a naive multi-grid mapping (one logical dim per physical
+    /// dim) exceed the hardware's Y/Z limits? (the dilemma of §3.6)
+    pub fn multi_grid_mapping_fails(&self) -> bool {
+        self.dims.len() > 1
+            && self.dims[..self.dims.len() - 1]
+                .iter()
+                .any(|d| d.n_tiles() > CUDA_MAX_YZ)
+    }
+
+    /// Linearize logical tile coordinates to a physical block id
+    /// (row-major over the logical grid).
+    pub fn linearize(&self, coords: &[usize]) -> usize {
+        debug_assert_eq!(coords.len(), self.dims.len());
+        let mut id = 0;
+        for (c, d) in coords.iter().zip(&self.dims) {
+            debug_assert!(*c < d.n_tiles());
+            id = id * d.n_tiles() + c;
+        }
+        id
+    }
+
+    /// The in-kernel inverse affine map: physical block id -> logical
+    /// tile coordinates.
+    pub fn delinearize(&self, mut id: usize) -> Vec<usize> {
+        let mut coords = vec![0usize; self.dims.len()];
+        for (i, d) in self.dims.iter().enumerate().rev() {
+            coords[i] = id % d.n_tiles();
+            id /= d.n_tiles();
+        }
+        coords
+    }
+
+    /// Element range covered by tile coordinate `c` of dim `i`.
+    pub fn tile_range(&self, i: usize, c: usize) -> (usize, usize) {
+        let d = self.dims[i];
+        let start = c * d.tile;
+        (start, d.tile.min(d.size - start))
+    }
+}
+
+/// L2-cache swizzle (§3.7): for a 2-D tiled iteration (m_tiles x
+/// n_tiles), group blocks into strips of `group_m` rows and serpentine
+/// within each strip so adjacent block ids touch adjacent tiles —
+/// generalizing Triton's matmul-tutorial swizzle.
+pub fn swizzle_2d(m_tiles: usize, n_tiles: usize, group_m: usize, pid: usize) -> (usize, usize) {
+    let group_m = group_m.max(1);
+    let width = group_m * n_tiles;
+    let group_id = pid / width;
+    let first_m = group_id * group_m;
+    let group_size = group_m.min(m_tiles - first_m);
+    let pid_m = first_m + (pid % group_size);
+    let pid_n = (pid % width) / group_size;
+    (pid_m, pid_n)
+}
+
+/// One candidate kernel launch configuration (the paper's
+/// `blockreduction` heuristic tunes (XBLOCK, RBLOCK, warps, stages)).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaunchConfig {
+    pub xblock: usize,
+    pub rblock: usize,
+    pub num_warps: usize,
+    pub num_stages: usize,
+}
+
+/// The default `blockreduction` search space; `aggressive` widens it
+/// with smaller blocks for low-parallelism workloads (§3.7).
+pub fn blockreduction_space(aggressive: bool) -> Vec<LaunchConfig> {
+    let xs: &[usize] = if aggressive {
+        &[16, 32, 64, 128, 256]
+    } else {
+        &[64, 128, 256]
+    };
+    let rs: &[usize] = if aggressive {
+        &[16, 32, 64, 128]
+    } else {
+        &[32, 64]
+    };
+    let mut out = vec![];
+    for &x in xs {
+        for &r in rs {
+            for &w in &[4usize, 8] {
+                for &st in &[2usize, 3] {
+                    out.push(LaunchConfig {
+                        xblock: x,
+                        rblock: r,
+                        num_warps: w,
+                        num_stages: st,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pick the best launch config by the provided cost function. Scheduler
+/// hints (from the blocking analysis) override the search space.
+pub fn autotune(
+    space: &[LaunchConfig],
+    hint: Option<LaunchConfig>,
+    mut cost: impl FnMut(LaunchConfig) -> f64,
+) -> LaunchConfig {
+    if let Some(h) = hint {
+        return h;
+    }
+    *space
+        .iter()
+        .min_by(|a, b| cost(**a).partial_cmp(&cost(**b)).unwrap())
+        .expect("non-empty search space")
+}
+
+/// VMEM/SRAM footprint (bytes) of a flash tile: q tile + k/v tiles +
+/// score tile + accumulator, fp32. Used both by the autotuner constraint
+/// and the DESIGN.md §Perf VMEM estimates for the Pallas kernel.
+pub fn flash_tile_footprint(bq: usize, bk: usize, d: usize) -> usize {
+    4 * (bq * d + 2 * bk * d + bq * bk + bq * d + 2 * bq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linearize_delinearize_roundtrip() {
+        let g = LogicalGrid::new(vec![
+            TiledDim { size: 100, tile: 32 },
+            TiledDim { size: 7, tile: 2 },
+            TiledDim { size: 64, tile: 64 },
+        ]);
+        assert_eq!(g.n_blocks(), 4 * 4 * 1);
+        for id in 0..g.n_blocks() {
+            let c = g.delinearize(id);
+            assert_eq!(g.linearize(&c), id);
+        }
+    }
+
+    #[test]
+    fn tile_ranges_cover_dim_exactly() {
+        let g = LogicalGrid::new(vec![TiledDim { size: 100, tile: 32 }]);
+        let mut covered = 0;
+        for c in 0..g.dims[0].n_tiles() {
+            let (start, len) = g.tile_range(0, c);
+            assert_eq!(start, covered);
+            covered += len;
+        }
+        assert_eq!(covered, 100);
+    }
+
+    #[test]
+    fn eliminated_dim_has_one_tile() {
+        // §3.5: B_P >= |P| collapses the loop.
+        let d = TiledDim { size: 64, tile: 128 };
+        assert_eq!(d.n_tiles(), 1);
+    }
+
+    #[test]
+    fn multi_grid_limit_detection() {
+        let big = LogicalGrid::new(vec![
+            TiledDim {
+                size: 70_000 * 16,
+                tile: 16,
+            },
+            TiledDim { size: 64, tile: 16 },
+        ]);
+        assert!(big.multi_grid_mapping_fails());
+        // but the logical unroll handles it fine
+        assert!(big.n_blocks() > CUDA_MAX_YZ);
+        let c = big.delinearize(big.n_blocks() - 1);
+        assert_eq!(big.linearize(&c), big.n_blocks() - 1);
+    }
+
+    #[test]
+    fn swizzle_is_a_permutation() {
+        let (m, n, gm) = (7, 5, 3);
+        let mut seen = std::collections::HashSet::new();
+        for pid in 0..m * n {
+            let (pm, pn) = swizzle_2d(m, n, gm, pid);
+            assert!(pm < m && pn < n, "({pm},{pn})");
+            assert!(seen.insert((pm, pn)), "duplicate ({pm},{pn})");
+        }
+        assert_eq!(seen.len(), m * n);
+    }
+
+    #[test]
+    fn swizzle_improves_m_locality() {
+        // within a strip, consecutive pids share pid_n ranges and walk
+        // pid_m first: first group_m pids all have pid_n == 0.
+        for pid in 0..3 {
+            let (_, pn) = swizzle_2d(8, 8, 3, pid);
+            assert_eq!(pn, 0);
+        }
+    }
+
+    #[test]
+    fn autotune_picks_min_cost_and_respects_hint() {
+        let space = blockreduction_space(false);
+        let best = autotune(&space, None, |c| {
+            ((c.xblock as i64 - 128).abs() + (c.rblock as i64 - 64).abs()) as f64
+        });
+        assert_eq!(best.xblock, 128);
+        assert_eq!(best.rblock, 64);
+        let hint = LaunchConfig {
+            xblock: 16,
+            rblock: 16,
+            num_warps: 4,
+            num_stages: 2,
+        };
+        assert_eq!(autotune(&space, Some(hint), |_| 0.0), hint);
+    }
+
+    #[test]
+    fn aggressive_space_is_wider() {
+        assert!(blockreduction_space(true).len() > blockreduction_space(false).len());
+    }
+}

@@ -1,0 +1,324 @@
+//! Graph container and a builder with PyTorch-flavoured helpers.
+
+use super::{broadcast_shapes, numel, CmpOp, Op, PwOp, ReduceOp, Shape};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct NodeId(pub u32);
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub op: Op,
+    pub shape: Shape,
+}
+
+/// A tensor program: SSA nodes in topological order (construction order),
+/// with designated inputs and outputs.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    pub inputs: Vec<NodeId>,
+    pub outputs: Vec<NodeId>,
+    pub name: String,
+}
+
+impl Graph {
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0 as usize]
+    }
+
+    pub fn ids(&self) -> impl Iterator<Item = NodeId> {
+        (0..self.nodes.len() as u32).map(NodeId)
+    }
+
+    pub fn numel(&self, id: NodeId) -> usize {
+        numel(&self.node(id).shape)
+    }
+
+    /// Consumers of each node (computed on demand).
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut cons = vec![Vec::new(); self.nodes.len()];
+        for id in self.ids() {
+            for src in self.node(id).op.input_ids() {
+                cons[src.0 as usize].push(id);
+            }
+        }
+        cons
+    }
+
+    /// Total elements materialized by eager execution (all non-input nodes).
+    pub fn total_intermediate_elems(&self) -> usize {
+        self.ids()
+            .filter(|id| !matches!(self.node(*id).op, Op::Input { .. }))
+            .map(|id| self.numel(id))
+            .sum()
+    }
+}
+
+/// Builder exposing an idiomatic tensor API — the analog of writing the
+/// attention variant in native PyTorch (paper Listings 1/3/4). Everything
+/// the builder emits is plain IR; no attention-specific node exists.
+pub struct GraphBuilder {
+    g: Graph,
+}
+
+impl GraphBuilder {
+    pub fn new(name: &str) -> Self {
+        GraphBuilder {
+            g: Graph {
+                name: name.to_string(),
+                ..Default::default()
+            },
+        }
+    }
+
+    fn push(&mut self, op: Op, shape: Shape) -> NodeId {
+        let id = NodeId(self.g.nodes.len() as u32);
+        self.g.nodes.push(Node { op, shape });
+        id
+    }
+
+    pub fn shape(&self, id: NodeId) -> &Shape {
+        &self.g.node(id).shape
+    }
+
+    pub fn input(&mut self, name: &str, shape: &[usize]) -> NodeId {
+        let id = self.push(
+            Op::Input {
+                name: name.to_string(),
+            },
+            shape.to_vec(),
+        );
+        self.g.inputs.push(id);
+        id
+    }
+
+    pub fn constant(&mut self, value: f32, shape: &[usize]) -> NodeId {
+        self.push(Op::Const { value }, shape.to_vec())
+    }
+
+    pub fn iota(&mut self, shape: &[usize], axis: usize) -> NodeId {
+        assert!(axis < shape.len());
+        self.push(Op::Iota { axis }, shape.to_vec())
+    }
+
+    /// Broadcast `x` (with size-1 dims) to `shape`.
+    pub fn broadcast(&mut self, x: NodeId, shape: &[usize]) -> NodeId {
+        let xs = self.shape(x).clone();
+        assert_eq!(xs.len(), shape.len(), "broadcast rank mismatch");
+        for (a, b) in xs.iter().zip(shape) {
+            assert!(*a == *b || *a == 1, "broadcast {xs:?} -> {shape:?}");
+        }
+        if xs == shape {
+            return x;
+        }
+        self.push(Op::Broadcast { input: x }, shape.to_vec())
+    }
+
+    fn pointwise(&mut self, op: PwOp, inputs: Vec<NodeId>) -> NodeId {
+        assert_eq!(op.arity(), inputs.len(), "{op:?} arity");
+        let mut shape = self.shape(inputs[0]).clone();
+        for x in &inputs[1..] {
+            shape = broadcast_shapes(&shape, self.shape(*x))
+                .unwrap_or_else(|| panic!("pointwise shape mismatch {op:?}"));
+        }
+        // Insert explicit broadcasts so executors never broadcast implicitly.
+        let inputs = inputs
+            .into_iter()
+            .map(|x| self.broadcast(x, &shape.clone()))
+            .collect();
+        self.push(Op::Pointwise { op, inputs }, shape)
+    }
+
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.pointwise(PwOp::Add, vec![a, b])
+    }
+    pub fn sub(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.pointwise(PwOp::Sub, vec![a, b])
+    }
+    pub fn mul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.pointwise(PwOp::Mul, vec![a, b])
+    }
+    pub fn div(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.pointwise(PwOp::Div, vec![a, b])
+    }
+    pub fn exp(&mut self, a: NodeId) -> NodeId {
+        self.pointwise(PwOp::Exp, vec![a])
+    }
+    pub fn tanh(&mut self, a: NodeId) -> NodeId {
+        self.pointwise(PwOp::Tanh, vec![a])
+    }
+    pub fn sigmoid(&mut self, a: NodeId) -> NodeId {
+        self.pointwise(PwOp::Sigmoid, vec![a])
+    }
+    pub fn neg(&mut self, a: NodeId) -> NodeId {
+        self.pointwise(PwOp::Neg, vec![a])
+    }
+    pub fn maximum(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.pointwise(PwOp::Maximum, vec![a, b])
+    }
+    pub fn mul_scalar(&mut self, a: NodeId, s: f32) -> NodeId {
+        self.pointwise(PwOp::MulScalar(s), vec![a])
+    }
+    pub fn add_scalar(&mut self, a: NodeId, s: f32) -> NodeId {
+        self.pointwise(PwOp::AddScalar(s), vec![a])
+    }
+    pub fn cmp(&mut self, op: CmpOp, a: NodeId, b: NodeId) -> NodeId {
+        self.pointwise(PwOp::Cmp(op), vec![a, b])
+    }
+    /// `select(cond, a, b)` — cond is 0/1-valued.
+    pub fn where_(&mut self, cond: NodeId, a: NodeId, b: NodeId) -> NodeId {
+        self.pointwise(PwOp::Where, vec![cond, a, b])
+    }
+    /// Mask positions where `keep == 0` to a large negative value
+    /// (`masked_fill(~keep, -INF)` in the paper's Listing 1).
+    pub fn masked_fill_neg(&mut self, x: NodeId, keep: NodeId) -> NodeId {
+        let neg = self.constant(crate::exec::NEG_INF, &self.shape(x).clone());
+        self.where_(keep, x, neg)
+    }
+
+    /// `a @ b` over the last two dims; batch dims of `b` may be 1.
+    pub fn matmul(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.matmul_impl(a, b, false)
+    }
+
+    /// `a @ b.transpose(-2, -1)` — the natural `Q Kᵀ` form.
+    pub fn matmul_nt(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.matmul_impl(a, b, true)
+    }
+
+    fn matmul_impl(&mut self, a: NodeId, b: NodeId, transpose_rhs: bool) -> NodeId {
+        let sa = self.shape(a).clone();
+        let sb = self.shape(b).clone();
+        assert_eq!(sa.len(), sb.len(), "matmul rank mismatch {sa:?} {sb:?}");
+        let r = sa.len();
+        assert!(r >= 2);
+        let (m, ka) = (sa[r - 2], sa[r - 1]);
+        let (kb, n) = if transpose_rhs {
+            (sb[r - 1], sb[r - 2])
+        } else {
+            (sb[r - 2], sb[r - 1])
+        };
+        assert_eq!(ka, kb, "matmul contraction mismatch {sa:?} {sb:?}");
+        let mut shape = Vec::with_capacity(r);
+        for i in 0..r - 2 {
+            assert!(sb[i] == sa[i] || sb[i] == 1, "matmul batch {sa:?} {sb:?}");
+            shape.push(sa[i]);
+        }
+        shape.push(m);
+        shape.push(n);
+        self.push(
+            Op::Matmul {
+                lhs: a,
+                rhs: b,
+                transpose_rhs,
+            },
+            shape,
+        )
+    }
+
+    /// Reduce with keepdim (size-1 on `axis`).
+    pub fn reduce(&mut self, op: ReduceOp, x: NodeId, axis: usize) -> NodeId {
+        let mut shape = self.shape(x).clone();
+        assert!(axis < shape.len());
+        shape[axis] = 1;
+        self.push(Op::Reduce { op, input: x, axis }, shape)
+    }
+
+    pub fn max_reduce(&mut self, x: NodeId, axis: usize) -> NodeId {
+        self.reduce(ReduceOp::Max, x, axis)
+    }
+    pub fn sum_reduce(&mut self, x: NodeId, axis: usize) -> NodeId {
+        self.reduce(ReduceOp::Sum, x, axis)
+    }
+
+    pub fn slice(&mut self, x: NodeId, axis: usize, start: usize, len: usize) -> NodeId {
+        let mut shape = self.shape(x).clone();
+        assert!(start + len <= shape[axis], "slice out of range");
+        shape[axis] = len;
+        self.push(
+            Op::Slice {
+                input: x,
+                axis,
+                start,
+                len,
+            },
+            shape,
+        )
+    }
+
+    /// Numerically-stable softmax over `axis` — written exactly the way
+    /// idiomatic framework code writes it (two passes; paper Alg. 1).
+    /// The *compiler* is responsible for discovering the online form.
+    pub fn softmax(&mut self, x: NodeId, axis: usize) -> NodeId {
+        let shape = self.shape(x).clone();
+        let m = self.max_reduce(x, axis);
+        let mb = self.broadcast(m, &shape);
+        let shifted = self.sub(x, mb);
+        let p = self.exp(shifted);
+        let l = self.sum_reduce(p, axis);
+        let lb = self.broadcast(l, &shape);
+        self.div(p, lb)
+    }
+
+    pub fn output(&mut self, id: NodeId) {
+        self.g.outputs.push(id);
+    }
+
+    pub fn finish(mut self, outputs: &[NodeId]) -> Graph {
+        for &o in outputs {
+            self.g.outputs.push(o);
+        }
+        self.g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_builds_two_pass_pattern() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[4, 8]);
+        let s = b.softmax(x, 1);
+        let g = b.finish(&[s]);
+        let n_max = g
+            .ids()
+            .filter(|i| matches!(g.node(*i).op, Op::Reduce { op: ReduceOp::Max, .. }))
+            .count();
+        let n_sum = g
+            .ids()
+            .filter(|i| matches!(g.node(*i).op, Op::Reduce { op: ReduceOp::Sum, .. }))
+            .count();
+        assert_eq!((n_max, n_sum), (1, 1));
+        assert_eq!(g.node(s).shape, vec![4, 8]);
+    }
+
+    #[test]
+    fn matmul_shapes() {
+        let mut b = GraphBuilder::new("t");
+        let q = b.input("q", &[2, 3, 16, 8]);
+        let k = b.input("k", &[2, 3, 32, 8]);
+        let s = b.matmul_nt(q, k);
+        assert_eq!(b.shape(s), &vec![2, 3, 16, 32]);
+        let v = b.input("v", &[2, 3, 32, 8]);
+        let o = b.matmul(s, v);
+        assert_eq!(b.shape(o), &vec![2, 3, 16, 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul contraction mismatch")]
+    fn matmul_rejects_bad_contraction() {
+        let mut b = GraphBuilder::new("t");
+        let a = b.input("a", &[4, 8]);
+        let c = b.input("c", &[4, 8]);
+        b.matmul(a, c);
+    }
+
+    #[test]
+    fn broadcast_identity_is_noop() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[4, 8]);
+        assert_eq!(b.broadcast(x, &[4, 8]), x);
+    }
+}

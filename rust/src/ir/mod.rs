@@ -1,0 +1,44 @@
+//! Tensor-program IR with the paper's unified reduction model (§3.1).
+//!
+//! Every operation is classified by which of its dimensions are
+//! *p-dimensions* (data-independent, present in the output) and which are
+//! *r-dimensions* (reduced / data-dependent). Crucially, `Matmul` is an
+//! ordinary node in the same IR — a sum-reduction over its contracted
+//! dimension — instead of an opaque library call. This is what dismantles
+//! the GEMM fusion boundary that TorchInductor's special-path creates.
+//!
+//! Graphs are built by the frontends in [`crate::variants`] from idiomatic
+//! attention code (the analog of the paper's Listings 1/3/4) and consumed
+//! by the sketch extractor, the fusion planner, and both executors.
+
+mod graph;
+mod ops;
+
+pub use graph::{Graph, GraphBuilder, Node, NodeId};
+pub use ops::{CmpOp, Op, PwOp, ReduceOp};
+
+/// Static tensor shape. All tensors are f32 on the simulated device
+/// (paper §3.7: GEMM accumulation is unconditionally promoted to fp32;
+/// lower-precision I/O is modeled by the cost layer's `bytes_per_elem`).
+pub type Shape = Vec<usize>;
+
+/// Number of elements of a shape.
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Broadcast-compatibility of two equal-rank shapes (size-1 stretches).
+pub fn broadcast_shapes(a: &[usize], b: &[usize]) -> Option<Shape> {
+    if a.len() != b.len() {
+        return None;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| match (x, y) {
+            (x, y) if x == y => Some(x),
+            (1, y) => Some(y),
+            (x, 1) => Some(x),
+            _ => None,
+        })
+        .collect()
+}

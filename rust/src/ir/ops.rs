@@ -1,0 +1,152 @@
+//! Operation vocabulary for the unified reduction IR.
+
+/// Element-wise (pointwise) operators. All operands share one broadcasted
+/// shape; these are always p-dimension-only ops (sketch `[(P...), ()]`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PwOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Neg,
+    Exp,
+    Exp2,
+    Tanh,
+    Sigmoid,
+    Recip,
+    Sqrt,
+    Rsqrt,
+    Abs,
+    Maximum,
+    Minimum,
+    /// `select(cond, a, b)`: cond is a 0/1-valued tensor.
+    Where,
+    /// Binary comparison producing 0/1.
+    Cmp(CmpOp),
+    /// Fused multiply-add `a * b + c` (ternary).
+    MulAdd,
+    /// Multiply by a compile-time scalar (kept immediate: no memory operand).
+    MulScalar(f32),
+    /// Add a compile-time scalar.
+    AddScalar(f32),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CmpOp {
+    Le,
+    Lt,
+    Ge,
+    Gt,
+    Eq,
+    Ne,
+    And,
+    Or,
+}
+
+impl PwOp {
+    pub fn arity(&self) -> usize {
+        match self {
+            PwOp::Neg
+            | PwOp::Exp
+            | PwOp::Exp2
+            | PwOp::Tanh
+            | PwOp::Sigmoid
+            | PwOp::Recip
+            | PwOp::Sqrt
+            | PwOp::Rsqrt
+            | PwOp::Abs
+            | PwOp::MulScalar(_)
+            | PwOp::AddScalar(_) => 1,
+            PwOp::Where | PwOp::MulAdd => 3,
+            _ => 2,
+        }
+    }
+}
+
+/// Reduction operators. `Sum` and `Max` are the two monoids the paper's
+/// algebraic machinery needs: softmax's two passes are a Max-reduction
+/// followed by a Sum-reduction whose body applies the homomorphism `exp`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Max,
+}
+
+impl ReduceOp {
+    /// Identity element of the reduction monoid.
+    pub fn identity(&self) -> f32 {
+        match self {
+            ReduceOp::Sum => 0.0,
+            ReduceOp::Max => f32::NEG_INFINITY,
+        }
+    }
+
+    pub fn combine(&self, a: f32, b: f32) -> f32 {
+        match self {
+            ReduceOp::Sum => a + b,
+            ReduceOp::Max => a.max(b),
+        }
+    }
+}
+
+/// IR nodes. Shapes are stored on the graph node, not the op.
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// External input (HBM-resident operand).
+    Input { name: String },
+    /// Scalar constant, logically broadcast to the node shape. The fused
+    /// executor materializes nothing; the eager/reference executor counts a
+    /// full write+read, matching eager PyTorch's materialized constants.
+    Const { value: f32 },
+    /// Index values along `axis`, broadcast over the other dims. Eager
+    /// PyTorch materializes these (`torch.arange(...).view(...)`, paper
+    /// Listing 3); a fused kernel regenerates them in registers.
+    Iota { axis: usize },
+    /// Element-wise op over broadcast-compatible operands.
+    Pointwise { op: PwOp, inputs: Vec<crate::ir::NodeId> },
+    /// Batched matrix product `[..., M, K] x [..., K, N] -> [..., M, N]`.
+    /// With `transpose_rhs`, rhs is `[..., N, K]` (computes `A Bᵀ`, the
+    /// natural QKᵀ form). Batch dims of rhs may be 1 (broadcast).
+    Matmul {
+        lhs: crate::ir::NodeId,
+        rhs: crate::ir::NodeId,
+        transpose_rhs: bool,
+    },
+    /// Reduce `axis` with keepdim semantics (output size 1 on `axis`).
+    Reduce {
+        op: ReduceOp,
+        input: crate::ir::NodeId,
+        axis: usize,
+    },
+    /// Stretch size-1 dims of `input` to the node shape (explicit
+    /// broadcast; the materializing executor pays for it like eager does).
+    Broadcast { input: crate::ir::NodeId },
+    /// Static slice along `axis`: elements `[start, start + len)`.
+    /// Used by e.g. differential attention's `chunk` (paper Listing 4).
+    Slice {
+        input: crate::ir::NodeId,
+        axis: usize,
+        start: usize,
+        len: usize,
+    },
+}
+
+impl Op {
+    pub fn input_ids(&self) -> Vec<crate::ir::NodeId> {
+        match self {
+            Op::Input { .. } | Op::Const { .. } | Op::Iota { .. } => vec![],
+            Op::Pointwise { inputs, .. } => inputs.clone(),
+            Op::Matmul { lhs, rhs, .. } => vec![*lhs, *rhs],
+            Op::Reduce { input, .. }
+            | Op::Broadcast { input }
+            | Op::Slice { input, .. } => vec![*input],
+        }
+    }
+
+    pub fn is_pointwise(&self) -> bool {
+        matches!(
+            self,
+            Op::Pointwise { .. } | Op::Const { .. } | Op::Iota { .. } | Op::Broadcast { .. }
+        )
+    }
+}

@@ -1,0 +1,33 @@
+//! # flashlight — compiler-native fusion for attention variants
+//!
+//! A reproduction of *Flashlight: PyTorch Compiler Extensions to
+//! Accelerate Attention Variants* (MLSys 2026) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the paper's compiler: a unified-reduction
+//!   tensor IR ([`ir`]), computation sketches ([`sketch`]), the fusion
+//!   rewrites ([`fusion`]), a tiled executor with HBM traffic counters
+//!   ([`exec`]), logical-grid tiling ([`grid`]), a GPU cost model
+//!   ([`cost`]), the FlexAttention / FlashInfer / torch.compile baselines
+//!   ([`baselines`]), plus the serving coordinator ([`serve`]) and PJRT
+//!   runtime ([`runtime`]) that execute AOT-compiled JAX/Pallas artifacts.
+//! * **L2 (python/compile)** — JAX attention variants + a tiny LLaMa-style
+//!   model, AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels)** — the Pallas flash-attention kernel
+//!   with fused variant mods (the analog of Flashlight's generated Triton
+//!   kernel), `interpret=True` for CPU PJRT execution.
+//!
+//! Python never runs on the request path: `make artifacts` is build-time.
+
+pub mod baselines;
+pub mod bench;
+pub mod cost;
+pub mod exec;
+pub mod fusion;
+pub mod grid;
+pub mod ir;
+pub mod runtime;
+pub mod serve;
+pub mod sketch;
+pub mod tracegen;
+pub mod variants;

@@ -1,0 +1,149 @@
+//! flashlight CLI: compile/inspect attention programs, run the fused
+//! executor, regenerate the paper's figures, and serve the tiny model.
+
+use flashlight::bench;
+use flashlight::cost::gpu_by_name;
+use flashlight::exec::{execute_plan, Tensor};
+use flashlight::fusion::{plan, FusionMode, TileConfig};
+use flashlight::variants::{build, AttnShape, Variant};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: flashlight <command> [args]\n\
+         commands:\n\
+         \x20 inspect <variant> [--mode eager|torchcompile|flashlight]\n\
+         \x20     print the fusion plan for an attention variant\n\
+         \x20 run <variant> [--seq N] [--batch N]\n\
+         \x20     execute fused vs reference and compare numerics/traffic\n\
+         \x20 bench <fig2..fig7|alphafold|masks|ablations|all> [--gpu h100|a100]\n\
+         \x20     regenerate a paper figure's series (CSV to bench_results/)\n\
+         \x20 serve [--requests N] [--backend sim|pjrt]\n\
+         \x20     run the serving coordinator on a Mooncake-like trace\n\
+         \x20 selftest\n\
+         \x20     load + execute every AOT artifact and cross-check"
+    );
+    std::process::exit(2)
+}
+
+fn parse_variant(name: &str) -> Variant {
+    match name {
+        "vanilla" => Variant::Vanilla,
+        "causal" => Variant::Causal,
+        "sliding_window" => Variant::SlidingWindow { window: 256 },
+        "alibi" => Variant::Alibi,
+        "softcap" => Variant::Softcap { cap: 20.0 },
+        "prefix_lm" => Variant::PrefixLm { prefix: 256 },
+        "document" => Variant::DocumentMask,
+        "diff_attn" => Variant::DiffAttn { lambda: 0.5 },
+        "evoformer" => Variant::Evoformer,
+        "rectified" => Variant::Rectified { tau: 0.05 },
+        other => {
+            eprintln!("unknown variant {other}");
+            std::process::exit(2)
+        }
+    }
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    match cmd.as_str() {
+        "inspect" => {
+            let v = parse_variant(args.get(1).map(String::as_str).unwrap_or("vanilla"));
+            let mode = match flag(&args, "--mode").as_deref() {
+                Some("eager") => FusionMode::Eager,
+                Some("torchcompile") => FusionMode::TorchCompile,
+                _ => FusionMode::Flashlight,
+            };
+            let shape = AttnShape {
+                batch: 1,
+                rows: 1,
+                heads_q: 4,
+                heads_kv: 2,
+                seq: 512,
+                head_dim: 64,
+            };
+            let g = build(v, &shape);
+            let p = plan(&g, mode);
+            print!("{}", p.describe(&g));
+            let c = p.counters(&g, TileConfig::default());
+            println!(
+                "traffic: read {} MiB, write {} MiB, {} launches, {:.1} GFLOP",
+                c.hbm_read >> 20,
+                c.hbm_write >> 20,
+                c.launches,
+                c.flops as f64 / 1e9
+            );
+        }
+        "run" => {
+            let v = parse_variant(args.get(1).map(String::as_str).unwrap_or("vanilla"));
+            let seq: usize = flag(&args, "--seq").map(|s| s.parse().unwrap()).unwrap_or(128);
+            let batch: usize =
+                flag(&args, "--batch").map(|s| s.parse().unwrap()).unwrap_or(1);
+            let shape = AttnShape {
+                batch,
+                rows: 1,
+                heads_q: 4,
+                heads_kv: 2,
+                seq,
+                head_dim: 32,
+            };
+            let g = build(v, &shape);
+            let mut inputs = std::collections::HashMap::new();
+            for (i, &id) in g.inputs.iter().enumerate() {
+                let node = g.node(id);
+                let flashlight::ir::Op::Input { name } = &node.op else {
+                    unreachable!()
+                };
+                let t = if name.starts_with("doc") {
+                    let n: usize = node.shape.iter().product();
+                    Tensor::from_vec(
+                        &node.shape,
+                        (0..n).map(|j| (j * 4 / n) as f32).collect(),
+                    )
+                } else {
+                    Tensor::synthetic(&node.shape, 42 + i as u64)
+                };
+                inputs.insert(name.clone(), t);
+            }
+            let (want, c_eager) = flashlight::exec::eval(&g, &inputs);
+            let p = plan(&g, FusionMode::Flashlight);
+            let (got, c_fused) = execute_plan(&g, &p, &inputs, TileConfig::default());
+            println!(
+                "{}: fused kernels={} max|Δ|={:.2e}",
+                v.name(),
+                p.groups.len(),
+                got[0].max_abs_diff(&want[0])
+            );
+            println!(
+                "traffic: eager {} KiB -> fused {} KiB ({:.1}x less)",
+                c_eager.total_traffic() >> 10,
+                c_fused.total_traffic() >> 10,
+                c_eager.total_traffic() as f64 / c_fused.total_traffic() as f64
+            );
+        }
+        "bench" => {
+            let which = args.get(1).map(String::as_str).unwrap_or("all");
+            let gpu = gpu_by_name(&flag(&args, "--gpu").unwrap_or("h100".into()));
+            bench::run(which, &gpu)?;
+        }
+        "serve" => {
+            let n: usize = flag(&args, "--requests")
+                .map(|s| s.parse().unwrap())
+                .unwrap_or(200);
+            let backend = flag(&args, "--backend").unwrap_or("sim".into());
+            flashlight::serve::cli_serve(n, &backend)?;
+        }
+        "selftest" => {
+            flashlight::runtime::selftest("artifacts")?;
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

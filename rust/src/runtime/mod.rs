@@ -1,0 +1,355 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the PJRT CPU client.
+//!
+//! This is the only place the rust side touches XLA; Python never runs on
+//! the request path. Interchange is HLO *text* (see aot.py — serialized
+//! protos from jax >= 0.5 are rejected by xla_extension 0.5.1).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Tensor metadata from the manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorMeta {
+    pub dtype: String, // "f32" | "i32"
+    pub shape: Vec<usize>,
+}
+
+impl TensorMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        let (dtype, dims) = s.split_once(':').context("dtype:shape")?;
+        let shape = if dims == "0" || dims.is_empty() {
+            vec![]
+        } else {
+            dims.split('x')
+                .map(|d| d.parse::<usize>().context("dim"))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorMeta {
+            dtype: dtype.to_string(),
+            shape,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+    pub meta: HashMap<String, String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct WeightsMeta {
+    pub file: String,
+    pub tensors: Vec<(String, Vec<usize>)>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: HashMap<String, ArtifactMeta>,
+    pub weights: HashMap<String, WeightsMeta>,
+    pub configs: HashMap<String, HashMap<String, String>>,
+}
+
+impl Manifest {
+    /// Parse `manifest.txt` (line-based; see aot.py::finish).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading {}/manifest.txt (run `make artifacts`)", dir.display()))?;
+        let mut m = Manifest::default();
+        for line in text.lines() {
+            let mut parts = line.split_whitespace();
+            match parts.next() {
+                Some("artifact") => {
+                    let name = parts.next().context("artifact name")?.to_string();
+                    let file = parts.next().context("artifact file")?.to_string();
+                    let rest: Vec<&str> = parts.collect();
+                    let in_pos = rest.iter().position(|t| *t == "in").context("in")?;
+                    let out_pos = rest.iter().position(|t| *t == "out").context("out")?;
+                    let meta_pos = rest.iter().position(|t| *t == "meta").unwrap_or(rest.len());
+                    let inputs = rest[in_pos + 1..out_pos]
+                        .iter()
+                        .map(|s| TensorMeta::parse(s))
+                        .collect::<Result<Vec<_>>>()?;
+                    let outputs = rest[out_pos + 1..meta_pos]
+                        .iter()
+                        .map(|s| TensorMeta::parse(s))
+                        .collect::<Result<Vec<_>>>()?;
+                    let mut meta = HashMap::new();
+                    for kv in rest.iter().skip(meta_pos + 1) {
+                        if let Some((k, v)) = kv.split_once('=') {
+                            meta.insert(k.to_string(), v.to_string());
+                        }
+                    }
+                    m.artifacts.insert(
+                        name.clone(),
+                        ArtifactMeta {
+                            name,
+                            file,
+                            inputs,
+                            outputs,
+                            meta,
+                        },
+                    );
+                }
+                Some("weights") => {
+                    let family = parts.next().context("weights family")?.to_string();
+                    let file = parts.next().context("weights file")?.to_string();
+                    let tensors = parts
+                        .map(|t| -> Result<(String, Vec<usize>)> {
+                            let (name, dims) = t.rsplit_once(':').context("w shape")?;
+                            let shape = dims
+                                .split('x')
+                                .map(|d| d.parse::<usize>().context("dim"))
+                                .collect::<Result<Vec<_>>>()?;
+                            Ok((name.to_string(), shape))
+                        })
+                        .collect::<Result<Vec<_>>>()?;
+                    m.weights.insert(family, WeightsMeta { file, tensors });
+                }
+                Some("config") => {
+                    let family = parts.next().context("config family")?.to_string();
+                    let mut cfg = HashMap::new();
+                    for kv in parts {
+                        if let Some((k, v)) = kv.split_once('=') {
+                            cfg.insert(k.to_string(), v.to_string());
+                        }
+                    }
+                    m.configs.insert(family, cfg);
+                }
+                _ => {}
+            }
+        }
+        Ok(m)
+    }
+}
+
+/// A weight blob loaded from `<family>_weights.bin`, split per tensor.
+pub struct Weights {
+    pub tensors: Vec<(String, Vec<usize>, Vec<f32>)>,
+}
+
+impl Weights {
+    pub fn literals(&self) -> Vec<xla::Literal> {
+        self.tensors
+            .iter()
+            .map(|(_, shape, data)| {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims).expect("reshape")
+            })
+            .collect()
+    }
+}
+
+/// The PJRT engine: lazily compiles artifacts and executes them.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            dir,
+            manifest,
+            compiled: HashMap::new(),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.manifest
+            .artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact {name}"))
+    }
+
+    /// Compile (and cache) an artifact.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.artifact(name)?.clone();
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        self.compiled.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with the given input literals. Outputs are the
+    /// flattened tuple elements (aot.py lowers with return_tuple=True).
+    pub fn run(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.compile(name)?;
+        let meta = self.artifact(name)?;
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let exe = &self.compiled[name];
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    /// Load a weight family from its binary blob.
+    pub fn load_weights(&self, family: &str) -> Result<Weights> {
+        let meta = self
+            .manifest
+            .weights
+            .get(family)
+            .with_context(|| format!("unknown weights {family}"))?;
+        let bytes = std::fs::read(self.dir.join(&meta.file))?;
+        let floats: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let mut tensors = vec![];
+        let mut off = 0usize;
+        for (name, shape) in &meta.tensors {
+            let n: usize = shape.iter().product();
+            if off + n > floats.len() {
+                bail!("weight blob too short for {name}");
+            }
+            tensors.push((name.clone(), shape.clone(), floats[off..off + n].to_vec()));
+            off += n;
+        }
+        if off != floats.len() {
+            bail!("weight blob has {} trailing floats", floats.len() - off);
+        }
+        Ok(Weights { tensors })
+    }
+
+    /// Build a deterministic synthetic literal for an input slot
+    /// (matching `Tensor::synthetic` on the pure-rust side).
+    pub fn synthetic_input(meta: &TensorMeta, seed: u64) -> xla::Literal {
+        let n = meta.numel();
+        let dims: Vec<i64> = meta.shape.iter().map(|&d| d as i64).collect();
+        if meta.dtype == "i32" {
+            // token ids / doc ids / positions: small sorted-ish ints
+            let data: Vec<i32> = (0..n).map(|i| ((i * 3) / n.max(1)) as i32).collect();
+            xla::Literal::vec1(&data).reshape(&dims).expect("reshape")
+        } else {
+            let s = seed as f64;
+            let data: Vec<f32> = (0..n)
+                .map(|i| ((s + i as f64 * 0.7).sin() * 0.5) as f32)
+                .collect();
+            xla::Literal::vec1(&data).reshape(&dims).expect("reshape")
+        }
+    }
+}
+
+/// Integration self-test: for every `<name>_fused` / `<name>_naive`
+/// artifact pair, execute both on identical synthetic inputs and check
+/// the outputs agree — the fused Pallas kernel vs the materializing jnp
+/// reference, end-to-end through HLO text -> PJRT.
+pub fn selftest(dir: &str) -> Result<()> {
+    let mut engine = Engine::new(dir)?;
+    let names: Vec<String> = engine
+        .manifest
+        .artifacts
+        .keys()
+        .filter(|n| n.contains("_fused"))
+        .cloned()
+        .collect();
+    let mut checked = 0;
+    let mut names = names;
+    names.sort();
+    for fused in names {
+        let naive = fused.replace("_fused", "_naive");
+        if !engine.manifest.artifacts.contains_key(&naive) {
+            continue;
+        }
+        let meta = engine.artifact(&fused)?.clone();
+        let needs_weights = fused.starts_with("llama") || fused.starts_with("evoformer");
+        let mut inputs: Vec<xla::Literal> = vec![];
+        if needs_weights {
+            let family = if fused.starts_with("llama") {
+                "llama"
+            } else {
+                "evoformer"
+            };
+            let w = engine.load_weights(family)?;
+            inputs.extend(w.literals());
+        }
+        for (i, im) in meta.inputs.iter().enumerate().skip(inputs.len()) {
+            inputs.push(Engine::synthetic_input(im, 42 + i as u64));
+        }
+        let out_f = engine.run(&fused, &inputs)?;
+        let out_n = engine.run(&naive, &inputs)?;
+        anyhow::ensure!(out_f.len() == out_n.len(), "{fused}: output arity");
+        for (a, b) in out_f.iter().zip(&out_n) {
+            let va: Vec<f32> = a.to_vec()?;
+            let vb: Vec<f32> = b.to_vec()?;
+            let err = va
+                .iter()
+                .zip(&vb)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            anyhow::ensure!(
+                err < 2e-3,
+                "{fused} vs {naive}: max abs diff {err}"
+            );
+        }
+        println!("  OK {fused} == {naive}");
+        checked += 1;
+    }
+    anyhow::ensure!(checked >= 10, "only {checked} artifact pairs checked");
+    println!("selftest: {checked} fused/naive artifact pairs agree");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_meta_parses() {
+        let t = TensorMeta::parse("f32:1x4x128x64").unwrap();
+        assert_eq!(t.dtype, "f32");
+        assert_eq!(t.shape, vec![1, 4, 128, 64]);
+        assert_eq!(t.numel(), 1 * 4 * 128 * 64);
+        let s = TensorMeta::parse("i32:8").unwrap();
+        assert_eq!(s.shape, vec![8]);
+    }
+
+    #[test]
+    fn manifest_parses_when_artifacts_exist() {
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert!(m.artifacts.contains_key("attn_vanilla_fused"));
+        assert!(m.weights.contains_key("llama"));
+        let llama = &m.configs["llama"];
+        assert_eq!(llama["n_layers"], "4");
+        let a = &m.artifacts["attn_vanilla_fused"];
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.meta["variant"], "vanilla");
+    }
+}

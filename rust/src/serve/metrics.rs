@@ -1,0 +1,106 @@
+//! Serving metrics: TTFT, ITL, token throughput (paper Fig 5).
+
+#[derive(Debug, Clone, Default)]
+pub struct RequestMetrics {
+    pub id: usize,
+    pub arrival_s: f64,
+    pub first_token_s: f64,
+    pub done_s: f64,
+    pub input_tokens: usize,
+    pub output_tokens: usize,
+    /// Inter-token latencies (seconds between consecutive tokens).
+    pub itls: Vec<f64>,
+}
+
+impl RequestMetrics {
+    pub fn ttft(&self) -> f64 {
+        self.first_token_s - self.arrival_s
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    pub n_requests: usize,
+    pub ttft_mean_s: f64,
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+    pub itl_mean_s: f64,
+    pub itl_p50_s: f64,
+    pub itl_p99_s: f64,
+    /// Generated tokens per second over the whole run.
+    pub tokens_per_s: f64,
+    pub makespan_s: f64,
+}
+
+fn pct(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let i = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[i.min(sorted.len() - 1)]
+}
+
+pub fn summarize(reqs: &[RequestMetrics]) -> Summary {
+    let mut ttfts: Vec<f64> = reqs.iter().map(|r| r.ttft()).collect();
+    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut itls: Vec<f64> = reqs.iter().flat_map(|r| r.itls.iter().copied()).collect();
+    itls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let makespan = reqs
+        .iter()
+        .map(|r| r.done_s)
+        .fold(0.0f64, f64::max)
+        .max(1e-12);
+    let out_tokens: usize = reqs.iter().map(|r| r.output_tokens).sum();
+    let mean = |v: &[f64]| {
+        if v.is_empty() {
+            0.0
+        } else {
+            v.iter().sum::<f64>() / v.len() as f64
+        }
+    };
+    Summary {
+        n_requests: reqs.len(),
+        ttft_mean_s: mean(&ttfts),
+        ttft_p50_s: pct(&ttfts, 0.5),
+        ttft_p99_s: pct(&ttfts, 0.99),
+        itl_mean_s: mean(&itls),
+        itl_p50_s: pct(&itls, 0.5),
+        itl_p99_s: pct(&itls, 0.99),
+        tokens_per_s: out_tokens as f64 / makespan,
+        makespan_s: makespan,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_math() {
+        let reqs = vec![
+            RequestMetrics {
+                id: 0,
+                arrival_s: 0.0,
+                first_token_s: 0.1,
+                done_s: 0.5,
+                input_tokens: 10,
+                output_tokens: 5,
+                itls: vec![0.1; 4],
+            },
+            RequestMetrics {
+                id: 1,
+                arrival_s: 0.2,
+                first_token_s: 0.5,
+                done_s: 1.0,
+                input_tokens: 10,
+                output_tokens: 5,
+                itls: vec![0.125; 4],
+            },
+        ];
+        let s = summarize(&reqs);
+        assert_eq!(s.n_requests, 2);
+        assert!((s.ttft_mean_s - 0.2).abs() < 1e-12);
+        assert!((s.tokens_per_s - 10.0).abs() < 1e-9);
+        assert!((s.itl_mean_s - 0.1125).abs() < 1e-12);
+    }
+}

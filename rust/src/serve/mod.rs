@@ -1,0 +1,175 @@
+//! Serving stack (paper §4.4): vLLM-style coordinator, simulated
+//! LLaMa-3.2-1B backend for Fig 5, and the real PJRT backend over the
+//! tiny AOT-compiled model.
+
+pub mod engine;
+pub mod metrics;
+pub mod pjrt;
+pub mod sim;
+
+pub use engine::{run_trace, Backend, SchedulerConfig};
+pub use metrics::{summarize, RequestMetrics, Summary};
+pub use pjrt::PjrtBackend;
+pub use sim::{llama_3_2_1b, ModelShape, SimBackend};
+
+use crate::baselines::System;
+use crate::bench::harness::Csv;
+use crate::cost::GpuSpec;
+use crate::tracegen::{generate, TraceConfig};
+use crate::variants::Variant;
+
+/// The Fig 5 trace: first 200 requests of a Mooncake-like conversation
+/// trace at LLaMa-1B serving scale.
+pub fn fig5_trace(n: usize) -> Vec<crate::tracegen::Request> {
+    generate(&TraceConfig {
+        n_requests: n,
+        rate: 120.0, // saturating replay, like the paper's back-to-back 200 requests
+        input_mu: 6.3, // ~540 tokens median first turn
+        input_sigma: 0.9,
+        mean_output: 96.0,
+        max_input: 4096,
+        max_output: 256,
+        ..Default::default()
+    })
+}
+
+/// Figure 5: TTFT / ITL / token throughput for LLaMa-3.2-1B variants
+/// under Flashlight vs FlexAttention on the Mooncake-like trace.
+pub fn bench_fig5(spec: &GpuSpec) -> anyhow::Result<()> {
+    println!(
+        "== Figure 5: Mooncake-like trace, LLaMa-3.2-1B shapes, {} ==",
+        spec.name
+    );
+    let trace = fig5_trace(200);
+    let mut csv = Csv::new(
+        crate::bench::figures::OUT_DIR,
+        "fig5.csv",
+        "gpu,variant,system,ttft_mean_ms,ttft_p99_ms,itl_mean_ms,itl_p99_ms,tokens_per_s",
+    );
+    println!(
+        "{:<10} {:<22} {:>10} {:>10} {:>9} {:>9} {:>10}",
+        "variant", "system", "TTFT(ms)", "p99", "ITL(ms)", "p99", "tok/s"
+    );
+    for variant in [
+        Variant::Vanilla,
+        Variant::Causal,
+        Variant::Softcap { cap: 20.0 },
+    ] {
+        let mut totals = vec![];
+        for system in [
+            System::Flashlight,
+            System::FlexAttention { mask_cached: false },
+        ] {
+            let mut backend = SimBackend::new(*spec, system, variant);
+            let done = run_trace(
+                &mut backend,
+                &trace,
+                SchedulerConfig::default(),
+                llama_3_2_1b().vocab,
+            )?;
+            let s = summarize(&done);
+            println!(
+                "{:<10} {:<22} {:>10.2} {:>10.2} {:>9.3} {:>9.3} {:>10.1}",
+                variant.name(),
+                system.label(),
+                s.ttft_mean_s * 1e3,
+                s.ttft_p99_s * 1e3,
+                s.itl_mean_s * 1e3,
+                s.itl_p99_s * 1e3,
+                s.tokens_per_s
+            );
+            csv.row(&[
+                spec.name.into(),
+                variant.name().into(),
+                system.label().into(),
+                format!("{:.3}", s.ttft_mean_s * 1e3),
+                format!("{:.3}", s.ttft_p99_s * 1e3),
+                format!("{:.4}", s.itl_mean_s * 1e3),
+                format!("{:.4}", s.itl_p99_s * 1e3),
+                format!("{:.2}", s.tokens_per_s),
+            ]);
+            totals.push(s.tokens_per_s);
+        }
+        let better = if totals[0] >= totals[1] {
+            "flashlight"
+        } else {
+            "flexattention"
+        };
+        println!("{:<10} -> higher throughput: {}", variant.name(), better);
+    }
+    let p = csv.finish()?;
+    println!("wrote {}", p.display());
+    Ok(())
+}
+
+/// Mooncake's core trade (storage for computation): serving throughput
+/// with vs without conversation prefix caching, Flashlight attention.
+pub fn bench_prefix_caching(spec: &GpuSpec) -> anyhow::Result<()> {
+    println!("== Mooncake prefix-caching ablation ({}) ==", spec.name);
+    let trace = fig5_trace(200);
+    for caching in [false, true] {
+        let mut backend = SimBackend::new(*spec, System::Flashlight, Variant::Causal);
+        backend.prefix_caching = caching;
+        let done = run_trace(
+            &mut backend,
+            &trace,
+            SchedulerConfig::default(),
+            llama_3_2_1b().vocab,
+        )?;
+        let s = summarize(&done);
+        println!(
+            "  prefix_caching={:<5} TTFT mean {:8.2} ms p99 {:8.2} ms | tok/s {:8.1}",
+            caching,
+            s.ttft_mean_s * 1e3,
+            s.ttft_p99_s * 1e3,
+            s.tokens_per_s
+        );
+    }
+    Ok(())
+}
+
+/// `flashlight serve` CLI: run the coordinator on a trace with either
+/// the simulated backend or the real PJRT backend (fused vs naive).
+pub fn cli_serve(n_requests: usize, backend: &str) -> anyhow::Result<()> {
+    match backend {
+        "sim" => {
+            let spec = crate::cost::h100();
+            bench_fig5(&spec)?;
+            let _ = n_requests;
+            Ok(())
+        }
+        "pjrt" => {
+            // Small-scale trace that fits the tiny model's 256-token
+            // prefill bucket and 512-token context.
+            let trace = generate(&TraceConfig {
+                n_requests,
+                rate: 50.0,
+                input_mu: 4.2,
+                input_sigma: 0.7,
+                mean_output: 12.0,
+                max_input: 240,
+                max_output: 24,
+                ..Default::default()
+            });
+            for fused in [true, false] {
+                let tag = if fused { "fused(flashlight)" } else { "naive(torch.compile)" };
+                let mut b = PjrtBackend::new("artifacts", "causal", fused)?;
+                let vocab = b.vocab();
+                let t0 = std::time::Instant::now();
+                let done = run_trace(&mut b, &trace, SchedulerConfig::default(), vocab)?;
+                let s = summarize(&done);
+                println!(
+                    "pjrt {tag}: {} reqs in {:.2}s wall | TTFT mean {:.1} ms p99 {:.1} ms | ITL mean {:.2} ms | {:.1} tok/s",
+                    s.n_requests,
+                    t0.elapsed().as_secs_f64(),
+                    s.ttft_mean_s * 1e3,
+                    s.ttft_p99_s * 1e3,
+                    s.itl_mean_s * 1e3,
+                    s.tokens_per_s
+                );
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown backend {other} (sim|pjrt)"),
+    }
+}

@@ -1,0 +1,375 @@
+//! Computation sketches (paper §3.2) and the dimension analysis behind
+//! them.
+//!
+//! A kernel's sketch `[(P0, P1, ...), (R0, R1, ...)]` captures its loop
+//! hierarchy: data-independent p-dimensions form the outer parallel loops,
+//! data-dependent r-dimensions the inner iterative loops. To compare
+//! sketches *across* nodes (the whole point of fusion rules), dimensions
+//! need identity, not just extent: the `M` axis of `QKᵀ` is the same loop
+//! as the `M` axis of the downstream softmax. We recover that identity
+//! with a union-find over `(node, axis)` pairs, unified through pointwise
+//! ops, broadcasts, reductions and matmuls.
+
+use std::collections::HashMap;
+
+use crate::ir::{Graph, NodeId, Op, ReduceOp};
+
+/// A canonical dimension class (equivalence class of `(node, axis)`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DimClass(pub u32);
+
+/// Sketch of one node (or one fused kernel group).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Sketch {
+    /// Parallel dimensions, outermost first.
+    pub p: Vec<DimClass>,
+    /// Reduction dimensions.
+    pub r: Vec<DimClass>,
+}
+
+impl Sketch {
+    pub fn pointwise(p: Vec<DimClass>) -> Self {
+        Sketch { p, r: vec![] }
+    }
+}
+
+/// Result of dimension analysis over a graph.
+pub struct DimAnalysis {
+    /// For each node, the dim class of each axis.
+    pub axes: Vec<Vec<DimClass>>,
+    /// Extent of each dim class.
+    pub sizes: HashMap<DimClass, usize>,
+    /// Per-node sketch (p-dims in axis order, r-dims for reductions/matmul).
+    pub sketches: Vec<Sketch>,
+}
+
+struct UnionFind {
+    parent: Vec<u32>,
+}
+
+impl UnionFind {
+    fn new() -> Self {
+        UnionFind { parent: vec![] }
+    }
+    fn fresh(&mut self) -> u32 {
+        let id = self.parent.len() as u32;
+        self.parent.push(id);
+        id
+    }
+    fn find(&mut self, x: u32) -> u32 {
+        let p = self.parent[x as usize];
+        if p == x {
+            return x;
+        }
+        let root = self.find(p);
+        self.parent[x as usize] = root;
+        root
+    }
+    fn union(&mut self, a: u32, b: u32) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            self.parent[rb as usize] = ra;
+        }
+    }
+}
+
+/// Run the union-find dimension analysis.
+///
+/// Unification rules:
+/// * pointwise: every operand axis ≡ output axis (size-1 broadcast axes of
+///   operands excepted — they get their own degenerate class);
+/// * broadcast: non-stretched axes ≡ input axes;
+/// * reduce (keepdim): non-reduced axes ≡ input axes; the reduced input
+///   axis becomes the node's r-dimension; the size-1 output axis is fresh;
+/// * matmul: batch axes ≡ lhs/rhs batch axes (unless broadcast), `M` ≡
+///   lhs `M`, `N` ≡ rhs `N`, and the contracted `K` axes of lhs and rhs
+///   are unified with each other — that shared class is the r-dimension.
+/// * slice: the sliced axis gets a fresh class (different extent); the
+///   other axes keep the input's identity.
+pub fn analyze(g: &Graph) -> DimAnalysis {
+    let mut uf = UnionFind::new();
+    // Assign provisional classes: one fresh id per (node, axis).
+    let mut raw: Vec<Vec<u32>> = g
+        .nodes
+        .iter()
+        .map(|n| n.shape.iter().map(|_| uf.fresh()).collect())
+        .collect();
+    // Extra classes for reduction dims that don't appear in outputs
+    // (matmul K): map node -> r classes.
+    let mut r_of: Vec<Vec<u32>> = vec![vec![]; g.nodes.len()];
+
+    for id in g.ids() {
+        let i = id.0 as usize;
+        let node = g.node(id);
+        match &node.op {
+            Op::Input { .. } | Op::Const { .. } | Op::Iota { .. } => {}
+            Op::Pointwise { inputs, .. } => {
+                for &src in inputs {
+                    let s = src.0 as usize;
+                    for ax in 0..node.shape.len() {
+                        // Builder inserts explicit broadcasts, so operand
+                        // shapes match exactly here.
+                        uf.union(raw[i][ax], raw[s][ax]);
+                    }
+                }
+            }
+            Op::Broadcast { input } => {
+                let s = input.0 as usize;
+                for ax in 0..node.shape.len() {
+                    if g.node(*input).shape[ax] == node.shape[ax] {
+                        uf.union(raw[i][ax], raw[s][ax]);
+                    }
+                    // stretched axes keep their fresh class; pointwise
+                    // consumers will unify them with peer operands.
+                }
+            }
+            Op::Reduce { input, axis, .. } => {
+                let s = input.0 as usize;
+                for ax in 0..node.shape.len() {
+                    if ax != *axis {
+                        uf.union(raw[i][ax], raw[s][ax]);
+                    }
+                }
+                r_of[i].push(raw[s][*axis]);
+            }
+            Op::Matmul {
+                lhs,
+                rhs,
+                transpose_rhs,
+            } => {
+                let (l, r) = (lhs.0 as usize, rhs.0 as usize);
+                let rank = node.shape.len();
+                for ax in 0..rank - 2 {
+                    if g.node(*lhs).shape[ax] == node.shape[ax] {
+                        uf.union(raw[i][ax], raw[l][ax]);
+                    }
+                    if g.node(*rhs).shape[ax] == node.shape[ax] {
+                        uf.union(raw[i][ax], raw[r][ax]);
+                    }
+                }
+                // M from lhs, N from rhs.
+                uf.union(raw[i][rank - 2], raw[l][rank - 2]);
+                let (rhs_k_ax, rhs_n_ax) = if *transpose_rhs {
+                    (rank - 1, rank - 2)
+                } else {
+                    (rank - 2, rank - 1)
+                };
+                uf.union(raw[i][rank - 1], raw[r][rhs_n_ax]);
+                // Contraction: lhs K ≡ rhs K -> the r-dimension.
+                uf.union(raw[l][rank - 1], raw[r][rhs_k_ax]);
+                r_of[i].push(raw[l][rank - 1]);
+            }
+            Op::Slice { input, axis, .. } => {
+                // Non-sliced axes keep their identity; only the sliced
+                // axis changes extent/alignment and gets a fresh class.
+                let s = input.0 as usize;
+                for ax in 0..node.shape.len() {
+                    if ax != *axis {
+                        uf.union(raw[i][ax], raw[s][ax]);
+                    }
+                }
+            }
+        }
+    }
+
+    // Canonicalize.
+    let mut sizes = HashMap::new();
+    let mut axes = Vec::with_capacity(g.nodes.len());
+    for id in g.ids() {
+        let i = id.0 as usize;
+        let classes: Vec<DimClass> = raw[i]
+            .iter()
+            .map(|&c| DimClass(uf.find(c)))
+            .collect();
+        for (ax, &c) in classes.iter().enumerate() {
+            let sz = g.node(id).shape[ax];
+            let e = sizes.entry(c).or_insert(sz);
+            // A class may mix a broadcast size-1 axis with the real
+            // extent; keep the max (true extent).
+            if sz > *e {
+                *e = sz;
+            }
+        }
+        axes.push(classes);
+    }
+    for r in raw.iter_mut().flatten() {
+        *r = uf.find(*r);
+    }
+
+    let mut sketches = Vec::with_capacity(g.nodes.len());
+    for id in g.ids() {
+        let i = id.0 as usize;
+        let p: Vec<DimClass> = axes[i]
+            .iter()
+            .copied()
+            .filter(|c| sizes[c] > 1)
+            .collect();
+        let r: Vec<DimClass> = r_of[i].iter().map(|&c| DimClass(uf.find(c))).collect();
+        for &c in &r {
+            sizes.entry(c).or_insert(0);
+        }
+        sketches.push(Sketch { p, r });
+    }
+
+    DimAnalysis {
+        axes,
+        sizes,
+        sketches,
+    }
+}
+
+impl DimAnalysis {
+    pub fn sketch(&self, id: NodeId) -> &Sketch {
+        &self.sketches[id.0 as usize]
+    }
+
+    pub fn size(&self, c: DimClass) -> usize {
+        self.sizes[&c]
+    }
+
+    /// Is `needle`'s reduced dim among `hay`'s p-dims? (the demotion
+    /// precondition of §3.2: consumer r-dim == producer p-dim).
+    pub fn reduces_over_p_of(&self, consumer: NodeId, producer: NodeId) -> bool {
+        let cr = &self.sketch(consumer).r;
+        let pp = &self.sketch(producer).p;
+        cr.iter().any(|c| pp.contains(c))
+    }
+}
+
+/// Detect the two-pass stable-softmax pattern (paper §3.4):
+/// `max`-reduce over class `c`, then `exp(x ⊖ broadcast(m))`, then
+/// `sum`-reduce over the same class, where `x` is the max's input.
+/// Returns (max_node, exp_node, sum_node) triples.
+pub fn find_softmax_patterns(g: &Graph, an: &DimAnalysis) -> Vec<(NodeId, NodeId, NodeId)> {
+    let cons = g.consumers();
+    let mut out = vec![];
+    for id in g.ids() {
+        let Op::Reduce {
+            op: ReduceOp::Max,
+            input: x,
+            axis,
+        } = g.node(id).op
+        else {
+            continue;
+        };
+        let r_class = an.axes[x.0 as usize][axis];
+        // Follow broadcast -> sub -> exp -> sum chains.
+        for &b in &cons[id.0 as usize] {
+            let after_b = if matches!(g.node(b).op, Op::Broadcast { .. }) {
+                cons[b.0 as usize].clone()
+            } else {
+                vec![b]
+            };
+            for &s in &after_b {
+                let Op::Pointwise {
+                    op: crate::ir::PwOp::Sub,
+                    ref inputs,
+                } = g.node(s).op
+                else {
+                    continue;
+                };
+                if inputs[0] != x {
+                    continue;
+                }
+                for &e in &cons[s.0 as usize] {
+                    if !matches!(
+                        g.node(e).op,
+                        Op::Pointwise {
+                            op: crate::ir::PwOp::Exp,
+                            ..
+                        }
+                    ) {
+                        continue;
+                    }
+                    for &sm in &cons[e.0 as usize] {
+                        if let Op::Reduce {
+                            op: ReduceOp::Sum,
+                            input,
+                            axis: sum_axis,
+                        } = g.node(sm).op
+                        {
+                            if input == e && an.axes[e.0 as usize][sum_axis] == r_class {
+                                out.push((id, e, sm));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::GraphBuilder;
+
+    fn attention_graph() -> Graph {
+        let mut b = GraphBuilder::new("attn");
+        let q = b.input("q", &[2, 64, 16]);
+        let k = b.input("k", &[2, 64, 16]);
+        let v = b.input("v", &[2, 64, 16]);
+        let s = b.matmul_nt(q, k);
+        let s = b.mul_scalar(s, 0.25);
+        let w = b.softmax(s, 2);
+        let o = b.matmul(w, v);
+        b.finish(&[o])
+    }
+
+    #[test]
+    fn matmul_sketch_has_contraction_r_dim() {
+        let g = attention_graph();
+        let an = analyze(&g);
+        // Node 3 is QK^T: p = [B, M, N], r = [K(=16)].
+        let sk = an.sketch(crate::ir::NodeId(3));
+        assert_eq!(sk.p.len(), 3);
+        assert_eq!(sk.r.len(), 1);
+        assert_eq!(an.size(sk.r[0]), 16);
+    }
+
+    #[test]
+    fn qk_and_softmax_share_dims() {
+        let g = attention_graph();
+        let an = analyze(&g);
+        // The softmax reduction class must equal QK^T's N p-dim class.
+        let pats = find_softmax_patterns(&g, &an);
+        assert_eq!(pats.len(), 1);
+        let (m, _e, s) = pats[0];
+        let Op::Reduce { input, axis, .. } = g.node(m).op else {
+            panic!()
+        };
+        let max_r = an.axes[input.0 as usize][axis];
+        let Op::Reduce {
+            input: si, axis: sa, ..
+        } = g.node(s).op
+        else {
+            panic!()
+        };
+        assert_eq!(an.axes[si.0 as usize][sa], max_r);
+        assert_eq!(an.size(max_r), 64);
+    }
+
+    #[test]
+    fn demotion_precondition_holds_for_pv_after_qk() {
+        let g = attention_graph();
+        let an = analyze(&g);
+        // PV matmul (last node) reduces over N, which is a p-dim of QK^T.
+        let pv = *g.outputs.first().unwrap();
+        assert!(an.reduces_over_p_of(pv, crate::ir::NodeId(3)));
+    }
+
+    #[test]
+    fn broadcast_axes_reunify_through_pointwise() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[4, 32]);
+        let m = b.max_reduce(x, 1);
+        let mb = b.broadcast(m, &[4, 32]);
+        let d = b.sub(x, mb);
+        let g = b.finish(&[d]);
+        let an = analyze(&g);
+        // sub's axis-1 class == x's axis-1 class == mb's stretched axis.
+        assert_eq!(an.axes[d.0 as usize][1], an.axes[x.0 as usize][1]);
+        assert_eq!(an.axes[mb.0 as usize][1], an.axes[x.0 as usize][1]);
+    }
+}

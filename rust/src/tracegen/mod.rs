@@ -1,0 +1,195 @@
+//! Synthetic Mooncake-like conversation trace (DESIGN.md §2 substitution
+//! for https://github.com/kvcache-ai/Mooncake FAST25 traces).
+//!
+//! The paper replays the first 200 requests of the Mooncake conversation
+//! trace through vLLM (§4.4). The statistics that drive the serving
+//! metrics are: multi-turn conversations (long shared prefixes), heavily
+//! skewed input lengths, shorter outputs, and bursty Poisson-ish
+//! arrivals. The generator reproduces those, seeded and deterministic.
+
+/// xorshift64* — deterministic, dependency-free RNG (also used by the
+/// property-test helpers).
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform integer in [lo, hi).
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.next_u64() as usize) % (hi - lo).max(1)
+    }
+
+    /// Exponential with mean `mean`.
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        -mean * (1.0 - self.f64()).ln()
+    }
+
+    /// Log-normal via Box-Muller.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        let (u1, u2) = (self.f64().max(1e-12), self.f64());
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        (mu + sigma * z).exp()
+    }
+}
+
+/// One serving request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: usize,
+    /// Arrival time (seconds since trace start).
+    pub arrival_s: f64,
+    /// Prompt length in tokens (including the conversation history).
+    pub input_tokens: usize,
+    /// Tokens to generate.
+    pub output_tokens: usize,
+    /// Conversation this request belongs to (multi-turn reuse).
+    pub conversation: usize,
+    /// Turn index within the conversation.
+    pub turn: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub seed: u64,
+    pub n_requests: usize,
+    /// Mean arrival rate (requests/s).
+    pub rate: f64,
+    /// Log-normal parameters of the *first-turn* prompt length.
+    pub input_mu: f64,
+    pub input_sigma: f64,
+    /// Mean output length (geometric-ish).
+    pub mean_output: f64,
+    /// Probability a request continues an existing conversation.
+    pub continuation_p: f64,
+    /// Hard caps so requests fit the serving model's context window.
+    pub max_input: usize,
+    pub max_output: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            seed: 0xF1A5,
+            n_requests: 200, // the paper replays the first 200 requests
+            rate: 8.0,
+            input_mu: 5.0, // e^5 ~ 148 tokens median first turn
+            input_sigma: 0.8,
+            mean_output: 48.0,
+            continuation_p: 0.55,
+            max_input: 480,
+            max_output: 64,
+        }
+    }
+}
+
+/// Generate the trace. Deterministic for a given config.
+pub fn generate(cfg: &TraceConfig) -> Vec<Request> {
+    let mut rng = Rng::new(cfg.seed);
+    let mut t = 0.0f64;
+    let mut conversations: Vec<(usize, usize)> = vec![]; // (total_len, turns)
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    for id in 0..cfg.n_requests {
+        t += rng.exp(1.0 / cfg.rate);
+        let cont = !conversations.is_empty() && rng.f64() < cfg.continuation_p;
+        let (conversation, turn, input_tokens) = if cont {
+            let ci = rng.range(0, conversations.len());
+            let (hist, turns) = conversations[ci];
+            // next turn: history + new user message
+            let add = rng.lognormal(cfg.input_mu - 1.0, cfg.input_sigma) as usize + 1;
+            let len = (hist + add).min(cfg.max_input);
+            conversations[ci] = (len, turns + 1);
+            (ci, turns + 1, len)
+        } else {
+            let len = (rng.lognormal(cfg.input_mu, cfg.input_sigma) as usize + 1)
+                .min(cfg.max_input);
+            conversations.push((len, 0));
+            (conversations.len() - 1, 0, len)
+        };
+        let output_tokens = ((rng.exp(cfg.mean_output) as usize) + 1).min(cfg.max_output);
+        out.push(Request {
+            id,
+            arrival_s: t,
+            input_tokens,
+            output_tokens,
+            conversation,
+            turn,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic() {
+        let cfg = TraceConfig::default();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.len(), 200);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.input_tokens, y.input_tokens);
+        }
+    }
+
+    #[test]
+    fn arrivals_are_monotone_and_rate_plausible() {
+        let cfg = TraceConfig::default();
+        let t = generate(&cfg);
+        for w in t.windows(2) {
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        let span = t.last().unwrap().arrival_s;
+        let rate = t.len() as f64 / span;
+        assert!(rate > cfg.rate * 0.6 && rate < cfg.rate * 1.6, "rate {rate}");
+    }
+
+    #[test]
+    fn lengths_respect_caps_and_skew() {
+        let cfg = TraceConfig::default();
+        let t = generate(&cfg);
+        assert!(t.iter().all(|r| r.input_tokens <= cfg.max_input));
+        assert!(t.iter().all(|r| r.output_tokens <= cfg.max_output));
+        assert!(t.iter().all(|r| r.input_tokens >= 1));
+        // multi-turn requests exist and have longer inputs on average
+        let (mut turn0, mut turnn) = (vec![], vec![]);
+        for r in &t {
+            if r.turn == 0 {
+                turn0.push(r.input_tokens as f64);
+            } else {
+                turnn.push(r.input_tokens as f64);
+            }
+        }
+        assert!(!turnn.is_empty(), "no multi-turn requests generated");
+        let m0 = turn0.iter().sum::<f64>() / turn0.len() as f64;
+        let mn = turnn.iter().sum::<f64>() / turnn.len() as f64;
+        assert!(mn > m0, "continuations should carry history ({mn} vs {m0})");
+    }
+
+    #[test]
+    fn rng_uniformity_smoke() {
+        let mut rng = Rng::new(7);
+        let n = 10_000;
+        let mean = (0..n).map(|_| rng.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+}

@@ -1,0 +1,167 @@
+//! Failure-injection tests: the system must fail loudly and precisely,
+//! never silently compute garbage.
+
+use flashlight::runtime::{Engine, Manifest, TensorMeta};
+use flashlight::serve::{run_trace, Backend, SchedulerConfig};
+use flashlight::tracegen::{generate, Request, TraceConfig};
+
+#[test]
+fn manifest_load_fails_cleanly_on_missing_dir() {
+    let err = Manifest::load(std::path::Path::new("/definitely/not/here"))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("manifest"), "{err}");
+}
+
+#[test]
+fn manifest_rejects_malformed_lines() {
+    let dir = std::path::Path::new("/tmp/flashlight_bad_manifest");
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.txt"),
+        "artifact broken broken.hlo.txt in notashape out f32:4\n",
+    )
+    .unwrap();
+    assert!(Manifest::load(dir).is_err());
+}
+
+#[test]
+fn tensor_meta_rejects_garbage() {
+    assert!(TensorMeta::parse("f32").is_err());
+    assert!(TensorMeta::parse("f32:4xBANANA").is_err());
+    assert!(TensorMeta::parse("f32:1x2x3").is_ok());
+}
+
+#[test]
+fn engine_reports_unknown_artifact_and_arity_mismatch() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut engine = Engine::new("artifacts").unwrap();
+    let err = match engine.run("no_such_artifact", &[]) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("expected error"),
+    };
+    assert!(err.contains("unknown artifact"), "{err}");
+    // wrong input arity must be rejected before execution
+    let err = match engine.run("attn_causal_fused", &[]) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("expected error"),
+    };
+    assert!(err.contains("expected"), "{err}");
+}
+
+#[test]
+fn weight_blob_length_is_validated() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // Truncated blob in a scratch dir with a doctored manifest.
+    let dir = std::path::Path::new("/tmp/flashlight_trunc_weights");
+    std::fs::create_dir_all(dir).unwrap();
+    let manifest = std::fs::read_to_string("artifacts/manifest.txt").unwrap();
+    std::fs::write(dir.join("manifest.txt"), &manifest).unwrap();
+    // copy one real artifact file so Engine::new parses
+    let blob = std::fs::read("artifacts/llama_weights.bin").unwrap();
+    std::fs::write(dir.join("llama_weights.bin"), &blob[..blob.len() / 2]).unwrap();
+    let engine = Engine::new(dir).unwrap();
+    let err = match engine.load_weights("llama") {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("expected error"),
+    };
+    assert!(err.contains("too short"), "{err}");
+}
+
+/// Backend that always reports a fixed-size context window.
+struct TinyContextBackend;
+
+impl Backend for TinyContextBackend {
+    fn n_slots(&self) -> usize {
+        2
+    }
+    fn max_context(&self) -> usize {
+        64
+    }
+    fn prefill(
+        &mut self,
+        _s: usize,
+        _req: &Request,
+        t: &[u32],
+    ) -> anyhow::Result<(f64, u32)> {
+        assert!(t.len() <= 64);
+        Ok((1e-4, 0))
+    }
+    fn decode(&mut self, a: &[usize]) -> anyhow::Result<(f64, Vec<u32>)> {
+        Ok((1e-4, vec![0; a.len()]))
+    }
+    fn release(&mut self, _s: usize) {}
+    fn is_virtual_time(&self) -> bool {
+        true
+    }
+}
+
+#[test]
+fn coordinator_rejects_requests_exceeding_context() {
+    let trace = vec![Request {
+        id: 0,
+        arrival_s: 0.0,
+        input_tokens: 100, // > 64-token window
+        output_tokens: 8,
+        conversation: 0,
+        turn: 0,
+    }];
+    let mut b = TinyContextBackend;
+    let err = run_trace(&mut b, &trace, SchedulerConfig::default(), 512)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("exceeds context"), "{err}");
+}
+
+#[test]
+fn coordinator_survives_empty_and_single_token_requests() {
+    let mut trace = generate(&TraceConfig {
+        n_requests: 8,
+        max_input: 32,
+        max_output: 2,
+        ..Default::default()
+    });
+    // degenerate: 1 input token, 1 output token
+    trace[0].input_tokens = 1;
+    trace[0].output_tokens = 1;
+    let mut b = TinyContextBackend;
+    let done = run_trace(&mut b, &trace, SchedulerConfig::default(), 512).unwrap();
+    assert_eq!(done.len(), 8);
+    assert!(done[0].itls.is_empty()); // single-token: no inter-token gaps
+}
+
+#[test]
+fn graph_builder_panics_are_informative() {
+    use flashlight::ir::GraphBuilder;
+    let caught = std::panic::catch_unwind(|| {
+        let mut b = GraphBuilder::new("bad");
+        let x = b.input("x", &[4, 4]);
+        let y = b.input("y", &[4, 5]);
+        b.add(x, y); // incompatible non-broadcastable shapes
+    });
+    assert!(caught.is_err());
+}
+
+#[test]
+fn executor_rejects_missing_and_misshapen_inputs() {
+    use flashlight::exec::{eval, Tensor};
+    use flashlight::ir::GraphBuilder;
+    let mut b = GraphBuilder::new("t");
+    let x = b.input("x", &[2, 2]);
+    let y = b.neg(x);
+    let g = b.finish(&[y]);
+    // missing input
+    let r = std::panic::catch_unwind(|| eval(&g, &Default::default()));
+    assert!(r.is_err());
+    // misshapen input
+    let mut inputs = std::collections::HashMap::new();
+    inputs.insert("x".to_string(), Tensor::zeros(&[3, 3]));
+    let r = std::panic::catch_unwind(|| eval(&g, &inputs));
+    assert!(r.is_err());
+}

@@ -1,0 +1,349 @@
+//! Cross-module integration tests: variants -> planner -> executors ->
+//! cost model, plus randomized property tests (proptest is unavailable
+//! offline; properties are driven by the crate's deterministic RNG over
+//! many sampled cases).
+
+use std::collections::HashMap;
+
+use flashlight::exec::{eager_counters, eval, execute_plan, Tensor};
+use flashlight::fusion::{plan, FusionMode, GroupKind, TileConfig};
+use flashlight::ir::{CmpOp, Graph, GraphBuilder, Op};
+use flashlight::sketch::analyze;
+use flashlight::tracegen::Rng;
+use flashlight::variants::{build, paper_variants, AttnShape, Variant};
+
+fn inputs_for(g: &Graph, seed: u64) -> HashMap<String, Tensor> {
+    let mut m = HashMap::new();
+    for (i, &id) in g.inputs.iter().enumerate() {
+        let node = g.node(id);
+        let Op::Input { name } = &node.op else { unreachable!() };
+        let t = if name.starts_with("doc") {
+            let n: usize = node.shape.iter().product();
+            Tensor::from_vec(&node.shape, (0..n).map(|j| (j * 3 / n) as f32).collect())
+        } else {
+            Tensor::synthetic(&node.shape, seed + i as u64)
+        };
+        m.insert(name.clone(), t);
+    }
+    m
+}
+
+fn all_variants() -> Vec<Variant> {
+    let mut v = paper_variants();
+    v.push(Variant::DiffAttn { lambda: 0.3 });
+    v.push(Variant::Evoformer);
+    v.push(Variant::Rectified { tau: 0.05 });
+    v
+}
+
+/// Property: for random shapes and tile configs, the fused plan executes
+/// to the same values as the eager reference, for every variant.
+#[test]
+fn property_fused_equals_eager_over_random_shapes() {
+    let mut rng = Rng::new(2024);
+    for case in 0..24 {
+        let variant = all_variants()[rng.range(0, 10)];
+        let block = [8usize, 16, 32][rng.range(0, 3)];
+        let s = block * rng.range(1, 4);
+        let hkv = [1usize, 2][rng.range(0, 2)];
+        let group = [1usize, 2][rng.range(0, 2)];
+        let shape = AttnShape {
+            batch: rng.range(1, 3),
+            rows: if matches!(variant, Variant::Evoformer) { rng.range(1, 4) } else { 1 },
+            heads_q: hkv * group,
+            heads_kv: hkv,
+            seq: s,
+            head_dim: [8usize, 16][rng.range(0, 2)],
+        };
+        let variant = match variant {
+            Variant::SlidingWindow { .. } => Variant::SlidingWindow {
+                window: rng.range(1, s),
+            },
+            Variant::PrefixLm { .. } => Variant::PrefixLm {
+                prefix: rng.range(1, s),
+            },
+            other => other,
+        };
+        let g = build(variant, &shape);
+        let inputs = inputs_for(&g, case as u64 * 31 + 7);
+        let (want, _) = eval(&g, &inputs);
+        let p = plan(&g, FusionMode::Flashlight);
+        assert!(
+            p.num_pipelines() >= 1,
+            "case {case} {}: no pipeline found",
+            variant.name()
+        );
+        let tile = TileConfig {
+            block_q: block,
+            block_k: [8usize, 16, 32][rng.range(0, 3)],
+            ..Default::default()
+        };
+        let (got, _) = execute_plan(&g, &p, &inputs, tile);
+        let err = got[0].max_abs_diff(&want[0]);
+        assert!(
+            err < 1e-4,
+            "case {case} {} shape {shape:?}: err {err}",
+            variant.name()
+        );
+    }
+}
+
+/// Property: every plan is a partition — each non-input node belongs to
+/// exactly one group, and group node lists are disjoint and complete.
+#[test]
+fn property_plans_partition_the_graph() {
+    for variant in all_variants() {
+        let shape = AttnShape {
+            batch: 1,
+            rows: 2,
+            heads_q: 4,
+            heads_kv: 2,
+            seq: 32,
+            head_dim: 8,
+        };
+        let g = build(variant, &shape);
+        for mode in [
+            FusionMode::Eager,
+            FusionMode::TorchCompile,
+            FusionMode::Flashlight,
+        ] {
+            let p = plan(&g, mode);
+            let mut seen = std::collections::HashSet::new();
+            for grp in &p.groups {
+                for &n in &grp.nodes {
+                    assert!(
+                        seen.insert(n),
+                        "{} {:?}: node {n:?} in two groups",
+                        variant.name(),
+                        mode
+                    );
+                }
+            }
+            for id in g.ids() {
+                let is_input = matches!(g.node(id).op, Op::Input { .. });
+                assert_eq!(
+                    !is_input,
+                    seen.contains(&id),
+                    "{} {:?}: node {id:?} coverage",
+                    variant.name(),
+                    mode
+                );
+            }
+        }
+    }
+}
+
+/// Property: the fusion-mode ordering of traffic and launches holds for
+/// every variant at paper-like (scaled) shapes.
+#[test]
+fn property_traffic_ordering_all_variants() {
+    for variant in all_variants() {
+        let shape = AttnShape {
+            batch: 1,
+            rows: 4,
+            heads_q: 4,
+            heads_kv: 2,
+            seq: 256,
+            head_dim: 32,
+        };
+        let g = build(variant, &shape);
+        let tc = TileConfig::default();
+        let fl = plan(&g, FusionMode::Flashlight).counters(&g, tc);
+        let ind = plan(&g, FusionMode::TorchCompile).counters(&g, tc);
+        let eag = plan(&g, FusionMode::Eager).counters(&g, tc);
+        assert!(
+            fl.total_traffic() < ind.total_traffic(),
+            "{}: {} !< {}",
+            variant.name(),
+            fl.total_traffic(),
+            ind.total_traffic()
+        );
+        assert!(ind.total_traffic() <= eag.total_traffic(), "{}", variant.name());
+        assert!(fl.launches < ind.launches, "{}", variant.name());
+        assert!(ind.launches < eag.launches, "{}", variant.name());
+    }
+}
+
+/// Property: counters scale quadratically in S for eager (materialized
+/// S^2) but the fused pipeline's *workspace* does not.
+#[test]
+fn property_fused_workspace_is_subquadratic() {
+    let mk = |s: usize| AttnShape {
+        batch: 1,
+        rows: 1,
+        heads_q: 2,
+        heads_kv: 2,
+        seq: s,
+        head_dim: 16,
+    };
+    let tc = TileConfig::default();
+    let w = |s: usize, mode: FusionMode| {
+        let g = build(Variant::Causal, &mk(s));
+        plan(&g, mode).counters(&g, tc).peak_workspace as f64
+    };
+    let eager_ratio = w(512, FusionMode::Eager) / w(128, FusionMode::Eager);
+    assert!(eager_ratio > 12.0, "eager should be ~16x (quadratic): {eager_ratio}");
+    let fl128 = w(128, FusionMode::Flashlight);
+    let fl512 = w(512, FusionMode::Flashlight);
+    let fused_ratio = fl512 / fl128.max(1.0);
+    assert!(
+        fused_ratio < 8.0,
+        "fused workspace should be subquadratic: {fused_ratio}"
+    );
+}
+
+/// Random pointwise/reduce/matmul graphs (not attention-shaped): the
+/// planner must stay legal — whatever it fuses still evaluates to the
+/// eager result.
+#[test]
+fn property_random_graphs_execute_correctly_under_all_modes() {
+    let mut rng = Rng::new(77);
+    for case in 0..20 {
+        let mut gb = GraphBuilder::new("rand");
+        let m = 8 * rng.range(1, 4);
+        let n = 8 * rng.range(1, 4);
+        let k = 8 * rng.range(1, 3);
+        let a = gb.input("a", &[m, k]);
+        let b = gb.input("b", &[k, n]);
+        let mut x = gb.matmul(a, b);
+        // random pointwise chain
+        for _ in 0..rng.range(0, 4) {
+            x = match rng.range(0, 4) {
+                0 => gb.mul_scalar(x, 0.5),
+                1 => gb.tanh(x),
+                2 => gb.add_scalar(x, 1.0),
+                _ => gb.sigmoid(x),
+            };
+        }
+        // optionally a softmax and a second matmul
+        let with_softmax = rng.range(0, 2) == 1;
+        if with_softmax {
+            x = gb.softmax(x, 1);
+        }
+        let out = if rng.range(0, 2) == 1 {
+            let c = gb.input("c", &[n, 8]);
+            gb.matmul(x, c)
+        } else {
+            x
+        };
+        let g = gb.finish(&[out]);
+        let inputs = inputs_for(&g, case as u64);
+        let (want, _) = eval(&g, &inputs);
+        for mode in [FusionMode::TorchCompile, FusionMode::Flashlight] {
+            let p = plan(&g, mode);
+            let (got, _) = execute_plan(
+                &g,
+                &p,
+                &inputs,
+                TileConfig {
+                    block_q: 8,
+                    block_k: 8,
+                    ..Default::default()
+                },
+            );
+            let err = got[0].max_abs_diff(&want[0]);
+            assert!(err < 1e-4, "case {case} {mode:?}: err {err}");
+        }
+    }
+}
+
+/// The causal mask built from iota/cmp is exactly lower-triangular, and
+/// the masked softmax renormalizes over the visible prefix only.
+#[test]
+fn causal_masking_semantics() {
+    let mut gb = GraphBuilder::new("mask");
+    let s = 16;
+    let x = gb.input("x", &[s, s]);
+    let qi = gb.iota(&[s, s], 0);
+    let ki = gb.iota(&[s, s], 1);
+    let keep = gb.cmp(CmpOp::Le, ki, qi);
+    let masked = gb.masked_fill_neg(x, keep);
+    let w = gb.softmax(masked, 1);
+    let g = gb.finish(&[w]);
+    let mut inputs = HashMap::new();
+    inputs.insert("x".into(), Tensor::synthetic(&[s, s], 5));
+    let (outs, _) = eval(&g, &inputs);
+    for i in 0..s {
+        let row = &outs[0].data[i * s..(i + 1) * s];
+        let visible: f32 = row[..=i].iter().sum();
+        let hidden: f32 = row[i + 1..].iter().sum();
+        assert!((visible - 1.0).abs() < 1e-5, "row {i} sums to {visible}");
+        assert!(hidden.abs() < 1e-12, "row {i} leaks {hidden}");
+    }
+}
+
+/// Dimension analysis agrees with the executors: for every variant, the
+/// pipeline's q/kv classes have the extents the shape dictates.
+#[test]
+fn pipeline_dim_classes_match_shape() {
+    let shape = AttnShape {
+        batch: 2,
+        rows: 1,
+        heads_q: 4,
+        heads_kv: 2,
+        seq: 64,
+        head_dim: 16,
+    };
+    for variant in paper_variants() {
+        let g = build(variant, &shape);
+        let an = analyze(&g);
+        let p = plan(&g, FusionMode::Flashlight);
+        for grp in &p.groups {
+            if let GroupKind::Pipeline(pipe) = &grp.kind {
+                assert_eq!(an.size(pipe.q_class), 64, "{}", variant.name());
+                assert_eq!(an.size(pipe.kv_class), 64, "{}", variant.name());
+            }
+        }
+    }
+}
+
+/// Eager analytic counters equal executed counters for all variants.
+#[test]
+fn eager_counters_consistency_all_variants() {
+    for variant in all_variants() {
+        let shape = AttnShape {
+            batch: 1,
+            rows: 2,
+            heads_q: 2,
+            heads_kv: 2,
+            seq: 32,
+            head_dim: 8,
+        };
+        let g = build(variant, &shape);
+        let inputs = inputs_for(&g, 3);
+        let (_, c_run) = eval(&g, &inputs);
+        let c_model = eager_counters(&g);
+        assert_eq!(c_run, c_model, "{}", variant.name());
+    }
+}
+
+/// AOT artifact round-trip (skipped when artifacts are absent): the
+/// manifest parses, and one fused/naive pair agrees through PJRT.
+#[test]
+fn artifact_roundtrip_if_present() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut engine = flashlight::runtime::Engine::new("artifacts").unwrap();
+    let meta = engine.artifact("attn_causal_fused").unwrap().clone();
+    let inputs: Vec<xla::Literal> = meta
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, m)| flashlight::runtime::Engine::synthetic_input(m, i as u64))
+        .collect();
+    let a: Vec<f32> = engine.run("attn_causal_fused", &inputs).unwrap()[0]
+        .to_vec()
+        .unwrap();
+    let b: Vec<f32> = engine.run("attn_causal_naive", &inputs).unwrap()[0]
+        .to_vec()
+        .unwrap();
+    let err = a
+        .iter()
+        .zip(&b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(err < 1e-4, "PJRT fused/naive diverge: {err}");
+}
