@@ -11,11 +11,11 @@ use flashlight::serve;
 fn main() -> anyhow::Result<()> {
     serve::bench_fig5(&h100())?;
 
-    if std::path::Path::new("artifacts/manifest.txt").exists() {
+    if std::path::Path::new("artifacts/manifest.txt").exists() && cfg!(feature = "pjrt") {
         println!("\n== real PJRT serving (tiny model, fused vs naive) ==");
-        serve::cli_serve(16, "pjrt")?;
+        serve::cli_serve(16, "pjrt", flashlight::exec::Parallelism::available())?;
     } else {
-        println!("artifacts/ missing; skipping real PJRT serving bench");
+        println!("artifacts or pjrt feature missing; skipping real PJRT serving bench");
     }
     Ok(())
 }

@@ -86,9 +86,26 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // 5. The same computation through the real three-layer stack:
+    // 5. The parallel engine: the same fused plan over its launch grid
+    //    on all cores — bit-identical outputs and traffic counters.
+    let par = flashlight::exec::Parallelism::available();
+    let (got_par, c_par) =
+        flashlight::exec::execute_plan_par(&g, &fused, &inputs, tile, &par);
+    println!(
+        "parallel engine ({} threads): bit-identical to sequential: {}",
+        par.num_threads,
+        got_par == got && c_par == c_fused
+    );
+
+    // 6. The same computation through the real three-layer stack:
     //    Pallas flash kernel (L1) inside a JAX module (L2), AOT-lowered
     //    to HLO text and executed from rust via PJRT (L3).
+    pjrt_demo()?;
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_demo() -> anyhow::Result<()> {
     if std::path::Path::new("artifacts/manifest.txt").exists() {
         let mut engine = flashlight::runtime::Engine::new("artifacts")?;
         let meta = engine.artifact("attn_causal_fused")?.clone();
@@ -113,5 +130,11 @@ fn main() -> anyhow::Result<()> {
     } else {
         println!("(run `make artifacts` to also exercise the PJRT path)");
     }
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_demo() -> anyhow::Result<()> {
+    println!("(build with --features pjrt and run `make artifacts` to also exercise the PJRT path)");
     Ok(())
 }

@@ -1,0 +1,177 @@
+//! Parallel-engine benchmark: wall-clock of the fused tiled executor,
+//! sequential vs multi-threaded, for every built-in variant — with a
+//! bit-identity check between the two runs baked in.
+//!
+//! Writes `BENCH_parallel_engine.json` (via `scripts/bench_regress.sh`)
+//! so future PRs have a perf trajectory to compare against.
+
+use std::collections::HashMap;
+
+use crate::bench::harness::{bench_fn, json_f64, json_str, JsonArray};
+use crate::exec::{eval, execute_plan, execute_plan_par, Parallelism, Tensor};
+use crate::fusion::{plan, FusionMode, TileConfig};
+use crate::ir::{Graph, Op};
+use crate::variants::{build, paper_variants, AttnShape, Variant};
+
+fn inputs_for(g: &Graph, seed: u64) -> HashMap<String, Tensor> {
+    let mut m = HashMap::new();
+    for (i, &id) in g.inputs.iter().enumerate() {
+        let node = g.node(id);
+        let Op::Input { name } = &node.op else { unreachable!() };
+        let t = if name.starts_with("doc") {
+            let n: usize = node.shape.iter().product();
+            Tensor::from_vec(&node.shape, (0..n).map(|j| (j * 4 / n) as f32).collect())
+        } else {
+            Tensor::synthetic(&node.shape, seed + i as u64)
+        };
+        m.insert(name.clone(), t);
+    }
+    m
+}
+
+fn bench_variants(seq: usize) -> Vec<Variant> {
+    let mut vs: Vec<Variant> = paper_variants()
+        .into_iter()
+        .map(|v| match v {
+            Variant::SlidingWindow { .. } => Variant::SlidingWindow { window: seq / 4 },
+            Variant::PrefixLm { .. } => Variant::PrefixLm { prefix: seq * 3 / 8 },
+            other => other,
+        })
+        .collect();
+    vs.push(Variant::DiffAttn { lambda: 0.5 });
+    vs.push(Variant::Evoformer);
+    vs
+}
+
+/// Run the engine bench. `threads == 0` means all available cores.
+/// Writes the JSON trajectory to `out_path` and prints a table.
+pub fn run(threads: usize, out_path: &str) -> anyhow::Result<()> {
+    let shape = AttnShape {
+        batch: 2,
+        rows: 1,
+        heads_q: 8,
+        heads_kv: 4,
+        seq: 256,
+        head_dim: 32,
+    };
+    let tile = TileConfig {
+        block_q: 32,
+        block_k: 64,
+        ..Default::default()
+    };
+    run_with(threads, out_path, shape, tile, 2, 5)
+}
+
+/// Parameterized form (tests use a scaled-down shape).
+pub fn run_with(
+    threads: usize,
+    out_path: &str,
+    shape: AttnShape,
+    tile: TileConfig,
+    warmup: usize,
+    iters: usize,
+) -> anyhow::Result<()> {
+    // threads == 0: FLASHLIGHT_THREADS env override, else all cores.
+    let par = if threads == 0 {
+        Parallelism::from_env()
+    } else {
+        Parallelism::with_threads(threads)
+    };
+    println!(
+        "== parallel engine: fused executor, sequential vs {} threads ==",
+        par.num_threads
+    );
+    println!(
+        "{:<16} {:>10} {:>10} {:>8}  {}",
+        "variant", "seq(ms)", "par(ms)", "speedup", "bit-identical"
+    );
+    let mut json = JsonArray::new(out_path);
+    let mut worst_speedup = f64::INFINITY;
+    for v in bench_variants(shape.seq) {
+        let shape = if matches!(v, Variant::Evoformer) {
+            AttnShape { rows: 2, ..shape }
+        } else {
+            shape
+        };
+        let g = build(v, &shape);
+        let inputs = inputs_for(&g, 7);
+        let p = plan(&g, FusionMode::Flashlight);
+        anyhow::ensure!(p.num_pipelines() >= 1, "{}: no pipeline", v.name());
+
+        // Correctness + determinism gate before timing anything.
+        let (seq_out, seq_c) = execute_plan(&g, &p, &inputs, tile);
+        let (par_out, par_c) = execute_plan_par(&g, &p, &inputs, tile, &par);
+        let identical = seq_out == par_out && seq_c == par_c;
+        anyhow::ensure!(identical, "{}: parallel run diverged", v.name());
+        let (want, _) = eval(&g, &inputs);
+        let err = seq_out[0].max_abs_diff(&want[0]);
+        anyhow::ensure!(err < 1e-3, "{}: fused/eager err {err}", v.name());
+
+        let st_seq = bench_fn(warmup, iters, || {
+            let _ = execute_plan(&g, &p, &inputs, tile);
+        });
+        let st_par = bench_fn(warmup, iters, || {
+            let _ = execute_plan_par(&g, &p, &inputs, tile, &par);
+        });
+        let speedup = st_seq.median_s / st_par.median_s;
+        worst_speedup = worst_speedup.min(speedup);
+        println!(
+            "{:<16} {:>10.3} {:>10.3} {:>8.2}  {}",
+            v.name(),
+            st_seq.median_s * 1e3,
+            st_par.median_s * 1e3,
+            speedup,
+            identical
+        );
+        json.push_obj(&[
+            ("variant", json_str(v.name())),
+            ("seq_ms", json_f64(st_seq.median_s * 1e3)),
+            ("par_ms", json_f64(st_par.median_s * 1e3)),
+            ("speedup", json_f64(speedup)),
+            ("threads", par.num_threads.to_string()),
+            ("bit_identical", identical.to_string()),
+            ("seq", shape.seq.to_string()),
+            ("batch", shape.batch.to_string()),
+            ("heads_q", shape.heads_q.to_string()),
+            ("head_dim", shape.head_dim.to_string()),
+        ]);
+    }
+    let p = json.finish()?;
+    println!(
+        "worst speedup {:.2}x over {} threads; wrote {}",
+        worst_speedup,
+        par.num_threads,
+        p.display()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_bench_runs_and_writes_json() {
+        // Tiny smoke run (2 threads, scaled-down shape, 1 iter each).
+        let dir = "/tmp/flashlight_engine_bench";
+        std::fs::create_dir_all(dir).unwrap();
+        let path = format!("{dir}/BENCH_parallel_engine.json");
+        let shape = AttnShape {
+            batch: 1,
+            rows: 1,
+            heads_q: 2,
+            heads_kv: 2,
+            seq: 32,
+            head_dim: 8,
+        };
+        let tile = TileConfig {
+            block_q: 8,
+            block_k: 8,
+            ..Default::default()
+        };
+        run_with(2, &path, shape, tile, 0, 1).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.contains("\"variant\": \"causal\""));
+        assert!(s.contains("\"bit_identical\": true"));
+    }
+}

@@ -79,9 +79,96 @@ impl Csv {
     }
 }
 
+/// Minimal JSON array-of-objects writer (serde is unavailable offline).
+/// Values are pre-rendered JSON fragments — use [`json_str`]/[`json_f64`].
+pub struct JsonArray {
+    path: std::path::PathBuf,
+    items: Vec<String>,
+}
+
+impl JsonArray {
+    pub fn new(path: impl Into<std::path::PathBuf>) -> Self {
+        JsonArray {
+            path: path.into(),
+            items: vec![],
+        }
+    }
+
+    /// Append one object; `fields` are (key, rendered-JSON-value) pairs.
+    pub fn push_obj(&mut self, fields: &[(&str, String)]) {
+        let body = fields
+            .iter()
+            .map(|(k, v)| format!("{}: {}", json_str(k), v))
+            .collect::<Vec<_>>()
+            .join(", ");
+        self.items.push(format!("{{{body}}}"));
+    }
+
+    pub fn finish(self) -> std::io::Result<std::path::PathBuf> {
+        let mut out = String::from("[\n");
+        out.push_str(
+            &self
+                .items
+                .iter()
+                .map(|i| format!("  {i}"))
+                .collect::<Vec<_>>()
+                .join(",\n"),
+        );
+        out.push_str("\n]\n");
+        std::fs::write(&self.path, out)?;
+        Ok(self.path)
+    }
+}
+
+/// Render a JSON string literal (quotes + minimal escaping).
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Render a finite f64 as JSON (NaN/inf become null).
+pub fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_array_renders_parseable_objects() {
+        let mut j = JsonArray::new("/tmp/flashlight_test_json/t.json");
+        std::fs::create_dir_all("/tmp/flashlight_test_json").unwrap();
+        j.push_obj(&[
+            ("name", json_str("causal \"v1\"")),
+            ("speedup", json_f64(2.5)),
+            ("threads", "8".to_string()),
+        ]);
+        j.push_obj(&[("name", json_str("alibi")), ("speedup", json_f64(f64::NAN))]);
+        let p = j.finish().unwrap();
+        let s = std::fs::read_to_string(p).unwrap();
+        assert!(s.starts_with("[\n"));
+        assert!(s.contains("\"causal \\\"v1\\\"\""));
+        assert!(s.contains("\"speedup\": 2.500000"));
+        assert!(s.contains("\"speedup\": null"));
+        assert!(s.trim_end().ends_with(']'));
+    }
 
     #[test]
     fn stats_are_sane() {

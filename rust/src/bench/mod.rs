@@ -2,16 +2,22 @@
 //! evaluation (§4) — see DESIGN.md §5 for the experiment index.
 
 pub mod ablations;
+pub mod engine;
 pub mod figures;
 pub mod harness;
 
-pub use harness::{bench_fn, stats_of, Csv, Stats};
+pub use harness::{bench_fn, json_f64, json_str, stats_of, Csv, JsonArray, Stats};
 
 use crate::cost::{a100, h100, GpuSpec};
 
-/// Entry point for `flashlight bench <which> [--gpu ...]`.
-pub fn run(which: &str, gpu: &GpuSpec) -> anyhow::Result<()> {
+/// Default output path for the parallel-engine perf trajectory.
+pub const ENGINE_BENCH_PATH: &str = "BENCH_parallel_engine.json";
+
+/// Entry point for `flashlight bench <which> [--gpu ...] [--threads N]`.
+/// `threads == 0` means all available cores (engine bench only).
+pub fn run(which: &str, gpu: &GpuSpec, threads: usize) -> anyhow::Result<()> {
     match which {
+        "engine" => engine::run(threads, ENGINE_BENCH_PATH)?,
         "fig2" => figures::fig2_fig3(&h100(), false)?,
         "fig3" => figures::fig2_fig3(&a100(), false)?,
         "fig4" => figures::fig4(&[h100(), a100()])?,
@@ -35,8 +41,11 @@ pub fn run(which: &str, gpu: &GpuSpec) -> anyhow::Result<()> {
             figures::mask_cost_table(&h100());
             ablations::run(&h100())?;
             crate::serve::bench_prefix_caching(&h100())?;
+            engine::run(threads, ENGINE_BENCH_PATH)?;
         }
-        other => anyhow::bail!("unknown figure {other} (fig2..fig7|alphafold|masks|all)"),
+        other => {
+            anyhow::bail!("unknown figure {other} (fig2..fig7|alphafold|masks|engine|all)")
+        }
     }
     Ok(())
 }

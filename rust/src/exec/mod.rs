@@ -2,13 +2,25 @@
 //! (numerical oracle + traffic baseline) and the fused tiled executor
 //! (runs the flashlight-compiled kernel groups tile-by-tile with the
 //! online-softmax rewrite, counting HBM traffic it actually generates).
+//!
+//! The tiled executor is a data-parallel engine: pipeline groups run
+//! their (batch, head, q-tile) launch grid across threads
+//! ([`Parallelism`]) with per-thread scratch pools ([`TilePool`]), and
+//! both executors' matmuls go through the cache-blocked microkernels in
+//! [`gemm`]. See `rust/src/exec/README.md` for the architecture.
 
 mod counters;
+mod gemm;
+mod parallel;
+mod pool;
 mod reference;
 mod tensor;
 pub mod tiled;
 
 pub use counters::Counters;
+pub use gemm::{batched_matmul, gemm_nn, gemm_nt};
+pub use parallel::{parallel_map_with, Parallelism};
+pub use pool::TilePool;
 pub use reference::{eager_counters, eval, eval_node, eval_pw, node_flops};
-pub use tensor::{flat_index, for_each_index, strides_of, Tensor, NEG_INF};
-pub use tiled::execute_plan;
+pub use tensor::{flat_index, for_each_index, for_each_row, strides_of, Tensor, NEG_INF};
+pub use tiled::{execute_plan, execute_plan_par};

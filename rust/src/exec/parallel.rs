@@ -1,0 +1,178 @@
+//! Thread scheduling for the data-parallel execution engine.
+//!
+//! The tiled executor's launch grid — one program instance per
+//! (batch, head, q-tile) block of [`crate::grid::LogicalGrid`] — is
+//! embarrassingly parallel: blocks share only read-only state. This
+//! module distributes block ids over a scoped thread pool with a shared
+//! atomic cursor (dynamic load balancing: causal/windowed variants give
+//! q-tiles very different amounts of unmasked work), then returns the
+//! results **in block order** so the caller's merge is deterministic and
+//! bit-identical to a sequential run.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// How many OS threads the execution engine may use. `num_threads == 1`
+/// is the exact sequential path (no threads are spawned).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism {
+    pub num_threads: usize,
+}
+
+impl Parallelism {
+    /// Single-threaded execution (the default: bit-stable with the
+    /// pre-parallel engine, and what unit tests compare against).
+    pub fn sequential() -> Self {
+        Parallelism { num_threads: 1 }
+    }
+
+    /// One thread per available hardware thread.
+    pub fn available() -> Self {
+        Parallelism {
+            num_threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        }
+    }
+
+    /// Exactly `n` threads (clamped to at least 1).
+    pub fn with_threads(n: usize) -> Self {
+        Parallelism {
+            num_threads: n.max(1),
+        }
+    }
+
+    /// `FLASHLIGHT_THREADS=N` override, else all available cores.
+    pub fn from_env() -> Self {
+        match std::env::var("FLASHLIGHT_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            Some(n) => Self::with_threads(n),
+            None => Self::available(),
+        }
+    }
+
+    pub fn is_parallel(&self) -> bool {
+        self.num_threads > 1
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Self::sequential()
+    }
+}
+
+/// Map `f` over `0..n`, giving each worker thread its own scratch state
+/// built by `init` (reused across all items that worker claims — this is
+/// how the engine keeps per-thread tile pools warm). Items are claimed
+/// dynamically from a shared cursor; the returned Vec is in item order
+/// regardless of which thread computed what.
+///
+/// Worker panics propagate to the caller.
+pub fn parallel_map_with<S, T, I, F>(par: &Parallelism, n: usize, init: I, f: F) -> Vec<T>
+where
+    S: Send,
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    let workers = par.num_threads.min(n).max(1);
+    if workers == 1 {
+        let mut state = init();
+        return (0..n).map(|i| f(&mut state, i)).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let mut shards: Vec<Vec<(usize, T)>> = Vec::with_capacity(workers);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            handles.push(scope.spawn(|| {
+                let mut state = init();
+                let mut local: Vec<(usize, T)> = Vec::new();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(&mut state, i)));
+                }
+                local
+            }));
+        }
+        for h in handles {
+            match h.join() {
+                Ok(shard) => shards.push(shard),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for (i, v) in shards.into_iter().flatten() {
+        debug_assert!(out[i].is_none(), "item {i} computed twice");
+        out[i] = Some(v);
+    }
+    out.into_iter()
+        .map(|o| o.expect("work item never claimed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_and_parallel_agree_in_order() {
+        let f = |_s: &mut (), i: usize| i * i;
+        let seq = parallel_map_with(&Parallelism::sequential(), 100, || (), f);
+        for threads in [2, 3, 8, 64] {
+            let par = parallel_map_with(&Parallelism::with_threads(threads), 100, || (), f);
+            assert_eq!(seq, par, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn empty_and_single_item_grids() {
+        let par = Parallelism::with_threads(4);
+        let none: Vec<usize> = parallel_map_with(&par, 0, || (), |_, i| i);
+        assert!(none.is_empty());
+        let one = parallel_map_with(&par, 1, || (), |_, i| i + 7);
+        assert_eq!(one, vec![7]);
+    }
+
+    #[test]
+    fn per_worker_state_is_reused_not_shared() {
+        // Each worker counts the items it processed in its own state;
+        // the per-item result records the worker-local ordinal, which
+        // must never exceed the item count.
+        let n = 64;
+        let out = parallel_map_with(
+            &Parallelism::with_threads(4),
+            n,
+            || 0usize,
+            |count, _i| {
+                *count += 1;
+                *count
+            },
+        );
+        assert_eq!(out.len(), n);
+        assert!(out.iter().all(|&c| c >= 1 && c <= n));
+        // sequential: one state sees every item
+        let seq = parallel_map_with(&Parallelism::sequential(), n, || 0usize, |c, _| {
+            *c += 1;
+            *c
+        });
+        assert_eq!(seq, (1..=n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallelism_constructors_clamp() {
+        assert_eq!(Parallelism::with_threads(0).num_threads, 1);
+        assert!(Parallelism::available().num_threads >= 1);
+        assert!(!Parallelism::sequential().is_parallel());
+        assert!(Parallelism::with_threads(2).is_parallel());
+        assert_eq!(Parallelism::default(), Parallelism::sequential());
+    }
+}

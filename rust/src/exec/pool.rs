@@ -1,0 +1,122 @@
+//! Scratch-buffer pool for the tiled executor's inner loops.
+//!
+//! The k-tile loop of a flash pipeline touches a handful of tile-sized
+//! buffers per iteration (gathered operand tiles, pointwise temps, the
+//! PV accumulator). Allocating fresh `Vec<f32>`s for each of them — as
+//! the original executor did via `Tensor::zeros` — puts the allocator on
+//! the hot path. The pool keeps retired buffers (with their capacity)
+//! and hands them back for the next tile, so steady-state execution of a
+//! pipeline performs no heap allocation in the k loop.
+//!
+//! Each worker thread of the parallel engine owns its own pool; nothing
+//! here is synchronized.
+
+use crate::exec::tensor::Tensor;
+
+/// Retired buffers kept for reuse. Bounded so pathological plans cannot
+/// hold unbounded memory captive.
+const MAX_POOLED: usize = 64;
+
+#[derive(Debug, Default)]
+pub struct TilePool {
+    free: Vec<Vec<f32>>,
+}
+
+impl TilePool {
+    pub fn new() -> Self {
+        TilePool { free: Vec::new() }
+    }
+
+    /// An empty buffer with capacity for at least `n` elements. The
+    /// caller fills it with `extend`/`push` (no redundant zero-fill).
+    pub fn take(&mut self, n: usize) -> Vec<f32> {
+        match self.free.pop() {
+            Some(mut buf) => {
+                buf.clear();
+                buf.reserve(n);
+                buf
+            }
+            None => Vec::with_capacity(n),
+        }
+    }
+
+    /// A zero-filled buffer of length `n` (for accumulators).
+    pub fn take_zeroed(&mut self, n: usize) -> Vec<f32> {
+        let mut buf = self.take(n);
+        buf.resize(n, 0.0);
+        buf
+    }
+
+    /// Return a buffer's storage to the pool.
+    pub fn put(&mut self, buf: Vec<f32>) {
+        if self.free.len() < MAX_POOLED && buf.capacity() > 0 {
+            self.free.push(buf);
+        }
+    }
+
+    /// Retire a whole tensor, keeping its storage.
+    pub fn recycle(&mut self, t: Tensor) {
+        self.put(t.data);
+    }
+
+    /// A copy of `t` backed by pooled storage (the executor's memo keeps
+    /// copies of tile values; this keeps those copies allocation-free).
+    pub fn duplicate(&mut self, t: &Tensor) -> Tensor {
+        let mut buf = self.take(t.data.len());
+        buf.extend_from_slice(&t.data);
+        Tensor::from_vec(&t.shape, buf)
+    }
+
+    /// Number of buffers currently pooled (for tests/diagnostics).
+    pub fn idle_buffers(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_reuses_recycled_capacity() {
+        let mut pool = TilePool::new();
+        let mut a = pool.take(128);
+        a.resize(128, 1.0);
+        let cap = a.capacity();
+        let ptr = a.as_ptr();
+        pool.put(a);
+        assert_eq!(pool.idle_buffers(), 1);
+        let b = pool.take(64);
+        assert!(b.is_empty());
+        assert_eq!(b.capacity(), cap);
+        assert_eq!(b.as_ptr(), ptr, "storage must be reused");
+        assert_eq!(pool.idle_buffers(), 0);
+    }
+
+    #[test]
+    fn take_zeroed_clears_stale_contents() {
+        let mut pool = TilePool::new();
+        let mut a = pool.take(8);
+        a.extend_from_slice(&[9.0; 8]);
+        pool.put(a);
+        let b = pool.take_zeroed(8);
+        assert_eq!(b, vec![0.0; 8]);
+    }
+
+    #[test]
+    fn duplicate_matches_source() {
+        let mut pool = TilePool::new();
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let d = pool.duplicate(&t);
+        assert_eq!(d, t);
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let mut pool = TilePool::new();
+        for _ in 0..(MAX_POOLED + 10) {
+            pool.put(vec![0.0; 4]);
+        }
+        assert_eq!(pool.idle_buffers(), MAX_POOLED);
+    }
+}

@@ -8,7 +8,7 @@
 use std::collections::HashMap;
 
 use crate::exec::counters::Counters;
-use crate::exec::tensor::{for_each_index, Tensor};
+use crate::exec::tensor::{for_each_index, for_each_row, Tensor};
 use crate::ir::{CmpOp, Graph, NodeId, Op, PwOp};
 
 pub fn eval_pw(op: PwOp, args: &[f32]) -> f32 {
@@ -88,100 +88,75 @@ pub fn eval_node(node_op: &Op, shape: &[usize], operands: &[&Tensor]) -> Tensor 
         }
         Op::Broadcast { .. } => operands[0].broadcast_to(shape),
         Op::Reduce { op, axis, .. } => {
+            // Row-contiguous reduction: decompose the source into
+            // (outer, axis, inner) runs. The combine order per output
+            // element (ascending along `axis`) matches the row-major
+            // element walk exactly, so results are bit-identical to the
+            // scalar-indexed form while inner rows vectorize.
             let src = operands[0];
             let mut out = Tensor::full(shape, op.identity());
-            let src_shape = src.shape.clone();
-            let mut i = 0;
-            let out_strides = out.strides();
-            for_each_index(&src_shape, |idx| {
-                let mut flat = 0;
-                for (ax, &ix) in idx.iter().enumerate() {
-                    let j = if ax == *axis { 0 } else { ix };
-                    flat += j * out_strides[ax];
+            let inner: usize = src.shape[axis + 1..].iter().product();
+            let count = src.shape[*axis];
+            let outer: usize = src.shape[..*axis].iter().product();
+            if inner == 1 {
+                for o in 0..outer {
+                    let row = &src.data[o * count..(o + 1) * count];
+                    let mut acc = out.data[o];
+                    for &x in row {
+                        acc = op.combine(acc, x);
+                    }
+                    out.data[o] = acc;
                 }
-                out.data[flat] = op.combine(out.data[flat], src.data[i]);
-                i += 1;
-            });
-            out
-        }
-        Op::Matmul { transpose_rhs, .. } => {
-            let (a, b) = (operands[0], operands[1]);
-            let rank = shape.len();
-            let m = shape[rank - 2];
-            let n = shape[rank - 1];
-            let k = a.shape[rank - 1];
-            let batch_shape = &shape[..rank - 2];
-            let batch: usize = batch_shape.iter().product();
-            let mut out = Tensor::zeros(shape);
-            for bi in 0..batch {
-                // Per-axis broadcast mapping of the batch index (size-1
-                // dims of either operand map to 0), as in `at_broadcast`.
-                let (mut ab, mut bb) = (0usize, 0usize);
-                let (mut astride, mut bstride) = (1usize, 1usize);
-                let mut rem = bi;
-                for ax in (0..batch_shape.len()).rev() {
-                    let ix = rem % batch_shape[ax];
-                    rem /= batch_shape[ax];
-                    if a.shape[ax] != 1 {
-                        ab += ix * astride;
-                    }
-                    if b.shape[ax] != 1 {
-                        bb += ix * bstride;
-                    }
-                    astride *= a.shape[ax];
-                    bstride *= b.shape[ax];
-                }
-                let a_off = ab * m * k;
-                let (b_off, out_off) = (bb * k * n, bi * m * n);
-                // Slice-based microkernels: contiguous zips the compiler
-                // can vectorize (the scalar-indexed form ran ~1 GFLOP/s).
-                let a_mat = &a.data[a_off..a_off + m * k];
-                if *transpose_rhs {
-                    // b is [.., N, K]: out[i][j] = dot(a_row_i, b_row_j)
-                    let b_mat = &b.data[b_off..b_off + n * k];
-                    for (i, a_row) in a_mat.chunks_exact(k).enumerate() {
-                        let out_row = &mut out.data[out_off + i * n..out_off + (i + 1) * n];
-                        for (j, b_row) in b_mat.chunks_exact(k).enumerate() {
-                            out_row[j] = a_row
-                                .iter()
-                                .zip(b_row)
-                                .map(|(x, y)| x * y)
-                                .sum::<f32>();
-                        }
-                    }
-                } else {
-                    // b is [.., K, N]: out_row_i += a[i][p] * b_row_p
-                    let b_mat = &b.data[b_off..b_off + k * n];
-                    for (i, a_row) in a_mat.chunks_exact(k).enumerate() {
-                        let out_row = &mut out.data[out_off + i * n..out_off + (i + 1) * n];
-                        for (p, b_row) in b_mat.chunks_exact(n).enumerate() {
-                            let aip = a_row[p];
-                            if aip != 0.0 {
-                                for (o, &bv) in out_row.iter_mut().zip(b_row) {
-                                    *o += aip * bv;
-                                }
-                            }
+            } else {
+                for o in 0..outer {
+                    let dst = &mut out.data[o * inner..(o + 1) * inner];
+                    for j in 0..count {
+                        let s_off = (o * count + j) * inner;
+                        let row = &src.data[s_off..s_off + inner];
+                        for (d, &x) in dst.iter_mut().zip(row) {
+                            *d = op.combine(*d, x);
                         }
                     }
                 }
             }
             out
         }
-        Op::Slice {
-            axis, start, len, ..
-        } => {
+        Op::Matmul { transpose_rhs, .. } => {
+            // Cache-blocked microkernels in `exec::gemm` (NT and NN
+            // forms) — shared with the tiled executor's tile matmuls.
+            let mut out = Tensor::zeros(shape);
+            crate::exec::gemm::batched_matmul(
+                operands[0],
+                operands[1],
+                *transpose_rhs,
+                shape,
+                &mut out.data,
+            );
+            out
+        }
+        Op::Slice { axis, start, .. } => {
+            // Row-wise copies: every output row (the contiguous last
+            // axis) is contiguous in the source too — including when
+            // the sliced axis *is* the last axis (the row then starts
+            // `start` elements in). One copy_from_slice per row.
             let src = operands[0];
             let mut out = Tensor::zeros(shape);
-            let sh = shape.to_vec();
-            let mut i = 0;
-            let mut src_idx = vec![0usize; sh.len()];
-            for_each_index(&sh, |idx| {
-                src_idx.copy_from_slice(idx);
-                src_idx[*axis] = idx[*axis] + start;
-                out.data[i] = src.at(&src_idx);
-                i += 1;
-            });
-            let _ = len;
+            let rank = shape.len();
+            if rank > 0 {
+                let row = shape[rank - 1];
+                let src_strides = src.strides();
+                let mut dof = 0usize;
+                for_each_row(shape, |idx| {
+                    let mut soff = if *axis == rank - 1 { *start } else { 0 };
+                    for ax in 0..rank - 1 {
+                        let j = idx[ax] + if ax == *axis { *start } else { 0 };
+                        soff += j * src_strides[ax];
+                    }
+                    out.data[dof..dof + row]
+                        .copy_from_slice(&src.data[soff..soff + row]);
+                    dof += row;
+                });
+            }
             out
         }
     }

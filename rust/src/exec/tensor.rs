@@ -173,6 +173,34 @@ pub fn flat_index(shape: &[usize], idx: &[usize]) -> usize {
     flat
 }
 
+/// Visit each row (last-axis run) of a region shaped `lens` in
+/// row-major order, passing the leading multi-index (all axes but the
+/// last) to `f`. The shared odometer behind the executors'
+/// row-contiguous gather/scatter/slice walks.
+pub fn for_each_row(lens: &[usize], mut f: impl FnMut(&[usize])) {
+    let rank = lens.len();
+    if rank == 0 || lens.iter().any(|&l| l == 0) {
+        return;
+    }
+    let mut idx = vec![0usize; rank - 1];
+    loop {
+        f(&idx);
+        // odometer increment over the leading axes
+        let mut ax = rank - 1;
+        loop {
+            if ax == 0 {
+                return;
+            }
+            ax -= 1;
+            idx[ax] += 1;
+            if idx[ax] < lens[ax] {
+                break;
+            }
+            idx[ax] = 0;
+        }
+    }
+}
+
 /// Iterate all multi-indices of `shape` (row-major order).
 pub fn for_each_index(shape: &[usize], mut f: impl FnMut(&[usize])) {
     let rank = shape.len();
@@ -222,6 +250,23 @@ mod tests {
         let mut seen = vec![];
         for_each_index(&[2, 2], |i| seen.push((i[0], i[1])));
         assert_eq!(seen, vec![(0, 0), (0, 1), (1, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn for_each_row_walks_leading_indices() {
+        let mut rows = vec![];
+        for_each_row(&[2, 3, 5], |i| rows.push((i[0], i[1])));
+        assert_eq!(rows, vec![(0, 0), (0, 1), (0, 2), (1, 0), (1, 1), (1, 2)]);
+        // rank 1: a single row with an empty leading index
+        let mut count = 0;
+        for_each_row(&[7], |i| {
+            assert!(i.is_empty());
+            count += 1;
+        });
+        assert_eq!(count, 1);
+        // zero-sized and rank-0 regions visit nothing
+        for_each_row(&[2, 0, 3], |_| panic!("no rows"));
+        for_each_row(&[], |_| panic!("no rows"));
     }
 
     #[test]

@@ -6,123 +6,147 @@
 //! The executor counts the HBM traffic it *actually* generates (every
 //! `Input`/materialized-tensor tile read and every output tile write), so
 //! `plan.counters()`'s analytic model is testable against real execution.
+//!
+//! ## The parallel engine
+//!
+//! A pipeline group's iteration space is the launch grid of §3.6: one
+//! program instance per (batch…, head…, q-tile) block, modeled by
+//! [`LogicalGrid`]. Blocks share only read-only state (graph, inputs,
+//! previously materialized values), so [`execute_plan_par`] schedules
+//! them across threads ([`crate::exec::parallel`]) with per-thread
+//! scratch ([`WorkerScratch`]: tile pool + online-softmax row states).
+//!
+//! Determinism: each block computes with exactly the code a sequential
+//! run uses and *logs* its operand-region fetches instead of counting
+//! them; the main thread merges blocks in grid order, replaying the
+//! touch logs against the group-level seen-set. Outputs and [`Counters`]
+//! — including the HBM-vs-L2 split, which depends on first-touch order —
+//! are therefore bit-identical between sequential and parallel runs
+//! (asserted by `rust/tests/parallel_parity.rs`).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
+use crate::exec::gemm;
+use crate::exec::parallel::{parallel_map_with, Parallelism};
+use crate::exec::pool::TilePool;
 use crate::exec::{eval_node, eval_pw, node_flops, Counters, Tensor};
-use crate::fusion::{GroupKind, Pipeline, Plan, TileConfig};
+use crate::fusion::{GroupKind, OnlineRowState, Pipeline, Plan, TileConfig};
+use crate::grid::{LogicalGrid, TiledDim};
 use crate::ir::{Graph, NodeId, Op};
 use crate::sketch::{analyze, DimAnalysis};
 
 /// Per-axis (start, len) region of a node's tensor.
 type Region = Vec<(usize, usize)>;
 
-struct TiledCtx<'a> {
-    g: &'a Graph,
-    inputs: &'a HashMap<String, Tensor>,
+/// One logged operand-region fetch: (node, region, elements). Replayed
+/// in block order at merge time to attribute HBM vs L2 deterministically.
+type Touch = (u32, Region, usize);
+
+/// State shared read-only by every grid block of a pipeline group.
+struct PipelineShared<'g> {
+    g: &'g Graph,
+    inputs: &'g HashMap<String, Tensor>,
     /// Materialized results of earlier groups (and graph inputs by id).
-    values: HashMap<NodeId, Tensor>,
+    values: &'g HashMap<NodeId, Tensor>,
+}
+
+/// Per-block evaluation context. `pool` (and the caller's row states)
+/// live in the worker's [`WorkerScratch`] and persist across the blocks
+/// that worker claims, so the k-tile loop is allocation-free at steady
+/// state.
+struct TiledCtx<'g, 'w> {
+    sh: &'w PipelineShared<'g>,
     /// Values pinned by the pipeline driver (e.g. the PV accumulator).
     pinned: HashMap<NodeId, Tensor>,
     memo: HashMap<(u32, Region), Tensor>,
-    /// Regions already fetched once within the current kernel: re-reads
-    /// hit L2, not HBM (cleared at each kernel-group boundary).
-    seen_regions: std::collections::HashSet<(u32, Region)>,
-    counters: Counters,
+    touches: Vec<Touch>,
+    flops: u64,
+    pool: &'w mut TilePool,
 }
 
-
-impl<'a> TiledCtx<'a> {
-    /// Gather a sub-region of a full tensor, counting read traffic: the
-    /// first touch of a region is an HBM read, repeats are L2 hits.
+impl<'g, 'w> TiledCtx<'g, 'w> {
+    /// Gather a sub-region of a full tensor into a pooled buffer and log
+    /// the fetch (the merge step decides HBM vs L2).
     fn gather(&mut self, id: NodeId, t: &Tensor, region: &Region) -> Tensor {
         let lens: Vec<usize> = region.iter().map(|(_, l)| *l).collect();
-        let mut out = Tensor::zeros(&lens);
-        let n = out.numel();
+        let n: usize = lens.iter().product();
         let rank = lens.len();
+        let mut data = self.pool.take(n);
         if rank == 0 {
-            out.data[0] = t.data[0];
+            data.push(t.data[0]);
         } else {
             // Row-wise copies: the last axis is contiguous in the source,
             // so decompose indices once per row, not once per element.
             let strides = t.strides();
             let row = lens[rank - 1];
-            let mut idx = vec![0usize; rank - 1];
-            let mut dof = 0usize;
-            loop {
+            crate::exec::for_each_row(&lens, |idx| {
                 let mut soff = region[rank - 1].0; // last-axis start
                 for ax in 0..rank - 1 {
                     soff += (region[ax].0 + idx[ax]) * strides[ax];
                 }
-                out.data[dof..dof + row].copy_from_slice(&t.data[soff..soff + row]);
-                dof += row;
-                if dof >= n {
-                    break;
-                }
-                // increment leading indices
-                let mut ax = rank - 1;
-                loop {
-                    ax -= 1;
-                    idx[ax] += 1;
-                    if idx[ax] < lens[ax] {
-                        break;
-                    }
-                    idx[ax] = 0;
-                    if ax == 0 {
-                        break;
-                    }
-                }
-            }
+                data.extend_from_slice(&t.data[soff..soff + row]);
+            });
+            debug_assert_eq!(data.len(), n);
         }
-        if self.seen_regions.insert((id.0, region.clone())) {
-            self.counters.read_elems(n);
-        } else {
-            self.counters.l2_elems(n);
-        }
-        out
+        self.touches.push((id.0, region.clone(), n));
+        Tensor::from_vec(&lens, data)
     }
 
     /// Evaluate `node` restricted to `region`, recursively. Regions
     /// propagate structurally: each op knows its operands' regions.
     fn eval_region(&mut self, id: NodeId, region: &Region) -> Tensor {
-        if let Some(t) = self.pinned.get(&id) {
-            return t.clone();
-        }
         let key = (id.0, region.clone());
-        if let Some(t) = self.memo.get(&key) {
-            return t.clone();
+        {
+            let TiledCtx {
+                pinned, memo, pool, ..
+            } = self;
+            if let Some(t) = pinned.get(&id) {
+                return pool.duplicate(t);
+            }
+            if let Some(t) = memo.get(&key) {
+                return pool.duplicate(t);
+            }
         }
         // Materialized by an earlier group: read the tile from "HBM".
-        if let Some(t) = self.values.get(&id) {
-            let t = t.clone();
-            let out = self.gather(id, &t, region);
-            self.memo.insert(key, out.clone());
+        let values = self.sh.values;
+        if let Some(t) = values.get(&id) {
+            let out = self.gather(id, t, region);
+            let copy = self.pool.duplicate(&out);
+            self.memo.insert(key, copy);
             return out;
         }
-        let node = self.g.node(id).clone();
+        let g = self.sh.g;
+        let node = g.node(id);
         let lens: Vec<usize> = region.iter().map(|(_, l)| *l).collect();
         let out = match &node.op {
             Op::Input { name } => {
-                let t = self.inputs[name].clone();
-                self.gather(id, &t, region)
+                let inputs = self.sh.inputs;
+                self.gather(id, &inputs[name], region)
             }
-            Op::Const { value } => Tensor::full(&lens, *value),
+            Op::Const { value } => {
+                let n: usize = lens.iter().product();
+                let mut data = self.pool.take(n);
+                data.resize(n, *value);
+                Tensor::from_vec(&lens, data)
+            }
             Op::Iota { axis } => {
                 // Only idx[axis] matters: fill in (outer, value, inner)
                 // runs instead of decomposing every element index.
-                let mut out = Tensor::zeros(&lens);
+                let n: usize = lens.iter().product();
                 let inner: usize = lens[axis + 1..].iter().product();
                 let count = lens[*axis];
                 let outer: usize = lens[..*axis].iter().product();
                 let start = region[*axis].0;
-                let mut off = 0;
-                for _ in 0..outer.max(1) {
-                    for j in 0..count {
-                        out.data[off..off + inner].fill((start + j) as f32);
-                        off += inner;
+                let mut data = self.pool.take(n);
+                if n > 0 {
+                    for _ in 0..outer.max(1) {
+                        for j in 0..count {
+                            data.resize(data.len() + inner, (start + j) as f32);
+                        }
                     }
                 }
-                out
+                debug_assert_eq!(data.len(), n);
+                Tensor::from_vec(&lens, data)
             }
             Op::Pointwise { op, inputs } => {
                 let ts: Vec<Tensor> = inputs
@@ -133,37 +157,50 @@ impl<'a> TiledCtx<'a> {
                 // Fast paths hoist the op dispatch out of the element
                 // loop (the interpreter's hottest code).
                 use crate::ir::PwOp;
-                let data: Vec<f32> = match (ts.len(), *op) {
+                let mut data = self.pool.take(n);
+                match (ts.len(), *op) {
                     (1, op1) => {
                         let a = &ts[0].data;
                         match op1 {
-                            PwOp::Exp => a.iter().map(|x| x.exp()).collect(),
-                            PwOp::Tanh => a.iter().map(|x| x.tanh()).collect(),
-                            PwOp::Sigmoid => {
-                                a.iter().map(|x| 1.0 / (1.0 + (-x).exp())).collect()
+                            PwOp::Exp => data.extend(a.iter().map(|x| x.exp())),
+                            PwOp::Tanh => data.extend(a.iter().map(|x| x.tanh())),
+                            PwOp::Sigmoid => data
+                                .extend(a.iter().map(|x| 1.0 / (1.0 + (-x).exp()))),
+                            PwOp::Neg => data.extend(a.iter().map(|x| -x)),
+                            PwOp::MulScalar(s) => {
+                                data.extend(a.iter().map(|x| x * s))
                             }
-                            PwOp::Neg => a.iter().map(|x| -x).collect(),
-                            PwOp::MulScalar(s) => a.iter().map(|x| x * s).collect(),
-                            PwOp::AddScalar(s) => a.iter().map(|x| x + s).collect(),
-                            other => a.iter().map(|&x| eval_pw(other, &[x])).collect(),
+                            PwOp::AddScalar(s) => {
+                                data.extend(a.iter().map(|x| x + s))
+                            }
+                            other => {
+                                data.extend(a.iter().map(|&x| eval_pw(other, &[x])))
+                            }
                         }
                     }
                     (2, op2) => {
                         let (a, b) = (&ts[0].data, &ts[1].data);
                         match op2 {
-                            PwOp::Add => a.iter().zip(b).map(|(x, y)| x + y).collect(),
-                            PwOp::Sub => a.iter().zip(b).map(|(x, y)| x - y).collect(),
-                            PwOp::Mul => a.iter().zip(b).map(|(x, y)| x * y).collect(),
-                            PwOp::Div => a.iter().zip(b).map(|(x, y)| x / y).collect(),
-                            other => a
-                                .iter()
-                                .zip(b)
-                                .map(|(&x, &y)| eval_pw(other, &[x, y]))
-                                .collect(),
+                            PwOp::Add => {
+                                data.extend(a.iter().zip(b).map(|(x, y)| x + y))
+                            }
+                            PwOp::Sub => {
+                                data.extend(a.iter().zip(b).map(|(x, y)| x - y))
+                            }
+                            PwOp::Mul => {
+                                data.extend(a.iter().zip(b).map(|(x, y)| x * y))
+                            }
+                            PwOp::Div => {
+                                data.extend(a.iter().zip(b).map(|(x, y)| x / y))
+                            }
+                            other => data.extend(
+                                a.iter()
+                                    .zip(b)
+                                    .map(|(&x, &y)| eval_pw(other, &[x, y])),
+                            ),
                         }
                     }
                     _ => {
-                        let mut data = Vec::with_capacity(n);
                         let mut args = [0f32; 3];
                         for f in 0..n {
                             for (j, t) in ts.iter().enumerate() {
@@ -171,21 +208,26 @@ impl<'a> TiledCtx<'a> {
                             }
                             data.push(eval_pw(*op, &args[..ts.len()]));
                         }
-                        data
                     }
-                };
+                }
                 debug_assert_eq!(data.len(), n);
-                Tensor::from_vec(&lens, data)
+                let out = Tensor::from_vec(&lens, data);
+                for t in ts {
+                    self.pool.recycle(t);
+                }
+                out
             }
             Op::Broadcast { input } => {
-                let in_shape = &self.g.node(*input).shape;
+                let in_shape = &g.node(*input).shape;
                 let op_region: Region = region
                     .iter()
                     .enumerate()
                     .map(|(ax, &(s, l))| if in_shape[ax] == 1 { (0, 1) } else { (s, l) })
                     .collect();
                 let src = self.eval_region(*input, &op_region);
-                src.broadcast_to(&lens)
+                let out = src.broadcast_to(&lens);
+                self.pool.recycle(src);
+                out
             }
             Op::Slice {
                 input,
@@ -206,9 +248,9 @@ impl<'a> TiledCtx<'a> {
                 transpose_rhs,
             } => {
                 let rank = region.len();
-                let k_full = self.g.node(*lhs).shape[rank - 1];
-                let lhs_shape = self.g.node(*lhs).shape.clone();
-                let rhs_shape = self.g.node(*rhs).shape.clone();
+                let k_full = g.node(*lhs).shape[rank - 1];
+                let lhs_shape = &g.node(*lhs).shape;
+                let rhs_shape = &g.node(*rhs).shape;
                 let mut lr: Region = vec![];
                 let mut rr: Region = vec![];
                 for ax in 0..rank - 2 {
@@ -227,26 +269,257 @@ impl<'a> TiledCtx<'a> {
                 }
                 let lt = self.eval_region(*lhs, &lr);
                 let rt = self.eval_region(*rhs, &rr);
-                eval_node(&node.op, &lens, &[&lt, &rt])
+                let n: usize = lens.iter().product();
+                let mut data = self.pool.take_zeroed(n);
+                gemm::batched_matmul(&lt, &rt, *transpose_rhs, &lens, &mut data);
+                self.pool.recycle(lt);
+                self.pool.recycle(rt);
+                Tensor::from_vec(&lens, data)
             }
             Op::Reduce { .. } => {
                 panic!("reductions inside pipelines are handled by the driver")
             }
         };
-        self.memo.insert(key, out.clone());
+        let copy = self.pool.duplicate(&out);
+        self.memo.insert(key, copy);
         out
     }
 }
 
-/// Execute a fused pipeline group. Returns the materialized value of
-/// `pipe.out`.
+/// Block-invariant pipeline geometry, computed once per group.
+struct PipeMeta {
+    out_shape: Vec<usize>,
+    score_shape: Vec<usize>,
+    q_ax_out: usize,
+    q_ax_s: usize,
+    kv_ax_s: usize,
+    sk: usize,
+    d_out: usize,
+    has_sm: bool,
+    outer_axes: Vec<usize>,
+    bk: usize,
+    /// score axis -> outer-coordinate slot pinned per block.
+    score_outer_map: Vec<Option<usize>>,
+    /// v axis -> outer-coordinate slot pinned per block.
+    v_outer_map: Vec<Option<usize>>,
+    v_src: NodeId,
+    v_shape: Vec<usize>,
+    /// m1 contraction extent (flops accounting).
+    kdim: usize,
+    m2: NodeId,
+    m2_rank: usize,
+}
+
+/// Per-worker scratch, reused across all blocks a thread claims.
+struct WorkerScratch {
+    pool: TilePool,
+    states: Vec<OnlineRowState>,
+}
+
+impl WorkerScratch {
+    fn new() -> Self {
+        WorkerScratch {
+            pool: TilePool::new(),
+            states: Vec::new(),
+        }
+    }
+}
+
+/// Result of one grid block, merged deterministically by the caller.
+struct BlockOut {
+    out_region: Region,
+    tile: Tensor,
+    touches: Vec<Touch>,
+    flops: u64,
+}
+
+/// Execute one (outer…, q-tile) program instance of a pipeline group.
+fn run_block(
+    sh: &PipelineShared,
+    pipe: &Pipeline,
+    meta: &PipeMeta,
+    grid: &LogicalGrid,
+    block: usize,
+    scratch: &mut WorkerScratch,
+) -> BlockOut {
+    let coords = grid.delinearize(block);
+    let q_dim = coords.len() - 1;
+    let outer_idx = &coords[..q_dim];
+    let (qt, cq) = grid.tile_range(q_dim, coords[q_dim]);
+
+    let WorkerScratch { pool, states } = scratch;
+    let mut ctx = TiledCtx {
+        sh,
+        pinned: HashMap::new(),
+        memo: HashMap::new(),
+        touches: Vec::new(),
+        flops: 0,
+        pool,
+    };
+
+    // Score region template (per kv tile) for this block.
+    let mut score_region: Region = meta.score_shape.iter().map(|&s| (0, s)).collect();
+    for (ax_s, slot) in meta.score_outer_map.iter().enumerate() {
+        if let Some(i) = slot {
+            score_region[ax_s] = (outer_idx[*i], 1);
+        }
+    }
+    score_region[meta.q_ax_s] = (qt, cq);
+
+    // Online state per q row (worker-resident, reset per block).
+    if meta.has_sm {
+        for st in states.iter_mut().take(cq) {
+            st.m = f32::NEG_INFINITY;
+            st.l = 0.0;
+            st.acc.clear();
+            st.acc.resize(meta.d_out, 0.0);
+        }
+        while states.len() < cq {
+            states.push(OnlineRowState::new(meta.d_out));
+        }
+    }
+    let mut plain_acc = if meta.has_sm {
+        Vec::new()
+    } else {
+        ctx.pool.take_zeroed(cq * meta.d_out)
+    };
+
+    let v_rank = meta.v_shape.len();
+    let mut kt = 0;
+    while kt < meta.sk {
+        let ck = meta.bk.min(meta.sk - kt);
+        let mut sr = score_region.clone();
+        sr[meta.kv_ax_s] = (kt, ck);
+        let s_tile = ctx.eval_region(pipe.score_root, &sr);
+        // v tile: [.., ck, d]
+        let vr: Region = meta
+            .v_shape
+            .iter()
+            .enumerate()
+            .map(|(ax, &s)| {
+                if s == 1 {
+                    (0, 1)
+                } else if ax == v_rank - 2 {
+                    // contraction axis of v
+                    (kt, ck)
+                } else if ax == v_rank - 1 {
+                    (0, s)
+                } else if let Some(i) = meta.v_outer_map[ax] {
+                    // outer batch axis
+                    (outer_idx[i], 1)
+                } else {
+                    (0, s)
+                }
+            })
+            .collect();
+        let v_tile = ctx.eval_region(meta.v_src, &vr);
+        debug_assert_eq!(v_tile.numel(), ck * meta.d_out);
+
+        // Fold into the online state row by row.
+        let s_flat = &s_tile.data; // [.., cq, ck] with leading 1s
+        debug_assert_eq!(s_tile.numel(), cq * ck);
+        if meta.has_sm {
+            for (r, st) in states.iter_mut().take(cq).enumerate() {
+                st.update(&s_flat[r * ck..(r + 1) * ck], &v_tile.data);
+            }
+            ctx.flops += (2 * cq * ck * meta.d_out + 4 * cq * ck) as u64;
+        } else {
+            // twin-matmul: plain blocked accumulation
+            gemm::gemm_nn(s_flat, &v_tile.data, &mut plain_acc, cq, meta.d_out, ck);
+            ctx.flops += (2 * cq * ck * meta.d_out) as u64;
+        }
+        ctx.pool.recycle(s_tile);
+        ctx.pool.recycle(v_tile);
+        kt += ck;
+    }
+    // m1 flops for this tile row (q-block x full kv).
+    ctx.flops += (2 * cq * meta.sk * meta.kdim) as u64;
+
+    // Finalize the accumulator -> pin as m2's tile value.
+    let acc: Vec<f32> = if meta.has_sm {
+        let mut acc = ctx.pool.take(cq * meta.d_out);
+        for st in states.iter().take(cq) {
+            // `OnlineRowState::finish`, without consuming the state.
+            let l = if st.l == 0.0 { 1.0 } else { st.l };
+            acc.extend(st.acc.iter().map(|a| a / l));
+        }
+        acc
+    } else {
+        plain_acc
+    };
+    // m2's region shape (leading size-1 batch dims preserved).
+    let mut m2_lens = vec![1usize; meta.m2_rank];
+    m2_lens[meta.m2_rank - 2] = cq;
+    m2_lens[meta.m2_rank - 1] = meta.d_out;
+    ctx.pinned.insert(meta.m2, Tensor::from_vec(&m2_lens, acc));
+
+    // Evaluate the epilogue at tile granularity.
+    let mut out_region: Region = meta.out_shape.iter().map(|&s| (0, s)).collect();
+    for (i, &ax_out) in meta.outer_axes.iter().enumerate() {
+        out_region[ax_out] = (outer_idx[i], 1);
+    }
+    out_region[meta.q_ax_out] = (qt, cq);
+    let tile = ctx.eval_region(pipe.out, &out_region);
+
+    // Retire all per-block buffers into the worker pool.
+    let TiledCtx {
+        pinned,
+        memo,
+        touches,
+        flops,
+        pool: retired,
+        ..
+    } = ctx;
+    for (_, t) in memo {
+        retired.put(t.data);
+    }
+    for (_, t) in pinned {
+        retired.put(t.data);
+    }
+
+    BlockOut {
+        out_region,
+        tile,
+        touches,
+        flops,
+    }
+}
+
+/// Row-contiguous scatter of a tile into the full output tensor.
+fn scatter_tile(out: &mut Tensor, region: &Region, tile: &Tensor) {
+    let rank = region.len();
+    if rank == 0 {
+        out.data[0] = tile.data[0];
+        return;
+    }
+    let lens: Vec<usize> = region.iter().map(|(_, l)| *l).collect();
+    let strides = out.strides();
+    let row = lens[rank - 1];
+    let mut soff = 0usize;
+    crate::exec::for_each_row(&lens, |idx| {
+        let mut dst = region[rank - 1].0;
+        for ax in 0..rank - 1 {
+            dst += (region[ax].0 + idx[ax]) * strides[ax];
+        }
+        out.data[dst..dst + row].copy_from_slice(&tile.data[soff..soff + row]);
+        soff += row;
+    });
+    debug_assert_eq!(soff, tile.numel());
+}
+
+/// Execute a fused pipeline group over its logical launch grid. Returns
+/// the materialized value of `pipe.out`; traffic goes into `counters`
+/// via the deterministic block-order merge.
 fn run_pipeline(
-    ctx: &mut TiledCtx,
+    sh: &PipelineShared,
     an: &DimAnalysis,
     pipe: &Pipeline,
     tile: TileConfig,
+    par: &Parallelism,
+    seen: &mut HashSet<(u32, Region)>,
+    counters: &mut Counters,
 ) -> Tensor {
-    let g = ctx.g;
+    let g = sh.g;
     let out_shape = g.node(pipe.out).shape.clone();
     let out_axes = an.axes[pipe.out.0 as usize].clone();
     let score_shape = g.node(pipe.score_root).shape.clone();
@@ -269,224 +542,156 @@ fn run_pipeline(
     let sq = out_shape[q_ax_out];
     let sk = score_shape[kv_ax_s];
     let d_out = out_shape[rank - 1];
-    let has_sm = pipe.softmax.is_some();
 
     // Outer iteration space: all output axes except q and the last (d).
     let outer_axes: Vec<usize> = (0..rank)
         .filter(|&ax| ax != q_ax_out && ax != rank - 1)
         .collect();
     let outer_shape: Vec<usize> = outer_axes.iter().map(|&ax| out_shape[ax]).collect();
-    let n_outer: usize = outer_shape.iter().product::<usize>().max(1);
 
-    let mut out = Tensor::zeros(&out_shape);
-    let out_strides = out.strides();
     let bq = tile.block_q.min(sq);
     let bk = tile.block_k.min(sk);
 
-    for o in 0..n_outer {
-        // Decompose the outer index.
-        let mut outer_idx = vec![0usize; outer_axes.len()];
-        let mut rem = o;
-        for i in (0..outer_axes.len()).rev() {
-            outer_idx[i] = rem % outer_shape[i];
-            rem /= outer_shape[i];
+    // v source (the PV matmul rhs) and its per-axis outer mapping.
+    let (v_src, v_transposed) = match g.node(pipe.m2).op {
+        Op::Matmul {
+            rhs, transpose_rhs, ..
+        } => (rhs, transpose_rhs),
+        _ => unreachable!(),
+    };
+    assert!(!v_transposed, "PV matmul with transposed V unsupported");
+    let v_shape = g.node(v_src).shape.clone();
+    let mut v_outer_map: Vec<Option<usize>> = vec![None; v_shape.len()];
+    for ax in 0..v_shape.len().saturating_sub(2) {
+        if v_shape[ax] == 1 {
+            continue;
         }
-        let mut qt = 0;
-        while qt < sq {
-            ctx.memo.clear();
-            let cq = bq.min(sq - qt);
-            // Score region template (per kv tile).
-            let mut score_region: Region = score_shape.iter().map(|&s| (0, s)).collect();
-            for (i, &ax_out) in outer_axes.iter().enumerate() {
-                // map the outer axis class onto score axes
-                let cls = out_axes[ax_out];
-                for (ax_s, c) in score_axes.iter().enumerate() {
-                    if *c == cls && score_shape[ax_s] > 1 {
-                        score_region[ax_s] = (outer_idx[i], 1);
-                    }
-                }
+        let cls = an.axes[v_src.0 as usize][ax];
+        for (i, &ax_out) in outer_axes.iter().enumerate() {
+            if out_axes[ax_out] == cls {
+                v_outer_map[ax] = Some(i);
             }
-            score_region[q_ax_s] = (qt, cq);
-
-            // Online state per q row.
-            let mut states: Vec<crate::fusion::OnlineRowState> = (0..cq)
-                .map(|_| crate::fusion::OnlineRowState::new(d_out))
-                .collect();
-            let mut plain_acc = vec![0f32; cq * d_out];
-
-            // v region template.
-            let (v_src, v_transposed) = match g.node(pipe.m2).op {
-                Op::Matmul {
-                    rhs, transpose_rhs, ..
-                } => (rhs, transpose_rhs),
-                _ => unreachable!(),
-            };
-            assert!(!v_transposed, "PV matmul with transposed V unsupported");
-            let v_shape = g.node(v_src).shape.clone();
-
-            let mut kt = 0;
-            while kt < sk {
-                let ck = bk.min(sk - kt);
-                let mut sr = score_region.clone();
-                sr[kv_ax_s] = (kt, ck);
-                let s_tile = ctx.eval_region(pipe.score_root, &sr);
-                // v tile: [.., ck, d]
-                let mut vr: Region = v_shape
-                    .iter()
-                    .enumerate()
-                    .map(|(ax, &s)| {
-                        if s == 1 {
-                            (0, 1)
-                        } else if ax == v_shape.len() - 2 {
-                            (kt, ck)
-                        } else if ax == v_shape.len() - 1 {
-                            (0, s)
-                        } else {
-                            // outer batch axis
-                            let cls = an.axes[v_src.0 as usize][ax];
-                            let mut r = (0, s);
-                            for (i, &ax_out) in outer_axes.iter().enumerate() {
-                                if out_axes[ax_out] == cls {
-                                    r = (outer_idx[i], 1);
-                                }
-                            }
-                            r
-                        }
-                    })
-                    .collect();
-                // contraction axis of v is its second-to-last
-                vr[v_shape.len() - 2] = (kt, ck);
-                let v_tile = ctx.eval_region(v_src, &vr);
-                debug_assert_eq!(v_tile.numel(), ck * d_out);
-
-                // Fold into the online state row by row.
-                let s_flat = &s_tile.data; // [.., cq, ck] with leading 1s
-                debug_assert_eq!(s_tile.numel(), cq * ck);
-                if has_sm {
-                    for (r, st) in states.iter_mut().enumerate() {
-                        st.update(&s_flat[r * ck..(r + 1) * ck], &v_tile.data);
-                    }
-                    ctx.counters.flops += (2 * cq * ck * d_out + 4 * cq * ck) as u64;
-                } else {
-                    // twin-matmul: plain accumulation
-                    for r in 0..cq {
-                        for j in 0..ck {
-                            let s = s_flat[r * ck + j];
-                            for dd in 0..d_out {
-                                plain_acc[r * d_out + dd] += s * v_tile.data[j * d_out + dd];
-                            }
-                        }
-                    }
-                    ctx.counters.flops += (2 * cq * ck * d_out) as u64;
-                }
-                kt += ck;
-            }
-            // m1 flops for this tile row (q-block x full kv).
-            let k_contraction = g.node(pipe.m1).shape.len();
-            let kdim = {
-                let Op::Matmul { lhs, .. } = g.node(pipe.m1).op else {
-                    unreachable!()
-                };
-                g.node(lhs).shape[k_contraction - 1]
-            };
-            ctx.counters.flops += (2 * cq * sk * kdim) as u64;
-
-            // Finalize the accumulator -> pin as m2's tile value.
-            let acc: Vec<f32> = if has_sm {
-                states
-                    .into_iter()
-                    .flat_map(|st| st.finish())
-                    .collect()
-            } else {
-                plain_acc
-            };
-            // m2's region shape (leading size-1 batch dims preserved).
-            let m2_shape = g.node(pipe.m2).shape.clone();
-            let m2_lens: Vec<usize> = m2_shape
-                .iter()
-                .enumerate()
-                .map(|(ax, &s)| {
-                    if ax == m2_shape.len() - 2 {
-                        cq
-                    } else if ax == m2_shape.len() - 1 {
-                        d_out
-                    } else if s == 1 {
-                        1
-                    } else {
-                        1 // fixed outer index
-                    }
-                })
-                .collect();
-            ctx.pinned
-                .insert(pipe.m2, Tensor::from_vec(&m2_lens, acc));
-
-            // Evaluate the epilogue at tile granularity and write out.
-            let mut out_region: Region = out_shape.iter().map(|&s| (0, s)).collect();
-            for (i, &ax_out) in outer_axes.iter().enumerate() {
-                out_region[ax_out] = (outer_idx[i], 1);
-            }
-            out_region[q_ax_out] = (qt, cq);
-            let tile_out = ctx.eval_region(pipe.out, &out_region);
-            ctx.pinned.remove(&pipe.m2);
-            // scatter into output
-            let lens: Vec<usize> = out_region.iter().map(|(_, l)| *l).collect();
-            let n = tile_out.numel();
-            let mut idx = vec![0usize; rank];
-            for flat in 0..n {
-                let mut rem = flat;
-                let mut dst = 0usize;
-                for ax in (0..rank).rev() {
-                    idx[ax] = rem % lens[ax] + out_region[ax].0;
-                    rem /= lens[ax];
-                    dst += idx[ax] * out_strides[ax];
-                }
-                out.data[dst] = tile_out.data[flat];
-            }
-            ctx.counters.write_elems(n);
-            qt += cq;
         }
     }
-    ctx.memo.clear();
+    // Map each outer coordinate onto matching score axes.
+    let mut score_outer_map: Vec<Option<usize>> = vec![None; score_shape.len()];
+    for (i, &ax_out) in outer_axes.iter().enumerate() {
+        let cls = out_axes[ax_out];
+        for (ax_s, c) in score_axes.iter().enumerate() {
+            if *c == cls && score_shape[ax_s] > 1 {
+                score_outer_map[ax_s] = Some(i);
+            }
+        }
+    }
+    let kdim = {
+        let m1_rank = g.node(pipe.m1).shape.len();
+        let Op::Matmul { lhs, .. } = g.node(pipe.m1).op else {
+            unreachable!()
+        };
+        g.node(lhs).shape[m1_rank - 1]
+    };
+
+    let meta = PipeMeta {
+        out_shape: out_shape.clone(),
+        score_shape,
+        q_ax_out,
+        q_ax_s,
+        kv_ax_s,
+        sk,
+        d_out,
+        has_sm: pipe.softmax.is_some(),
+        outer_axes,
+        bk,
+        score_outer_map,
+        v_outer_map,
+        v_src,
+        v_shape,
+        kdim,
+        m2: pipe.m2,
+        m2_rank: g.node(pipe.m2).shape.len(),
+    };
+
+    // The launch grid of §3.6, executed for real: outer dims at tile=1,
+    // the q dimension tiled by block_q, unrolled to one block-id axis.
+    let mut dims: Vec<TiledDim> = outer_shape
+        .iter()
+        .map(|&s| TiledDim { size: s, tile: 1 })
+        .collect();
+    dims.push(TiledDim { size: sq, tile: bq });
+    let grid = LogicalGrid::new(dims);
+
+    let blocks = parallel_map_with(par, grid.n_blocks(), WorkerScratch::new, |ws, bid| {
+        run_block(sh, pipe, &meta, &grid, bid, ws)
+    });
+
+    // Deterministic merge in block (= sequential iteration) order.
+    let mut out = Tensor::zeros(&out_shape);
+    for b in blocks {
+        for (nid, region, n) in b.touches {
+            if seen.insert((nid, region)) {
+                counters.read_elems(n);
+            } else {
+                counters.l2_elems(n);
+            }
+        }
+        counters.flops += b.flops;
+        let n = b.tile.numel();
+        scatter_tile(&mut out, &b.out_region, &b.tile);
+        counters.write_elems(n);
+    }
     out
 }
 
-/// Execute the whole plan: pipeline groups tiled + online, other groups
-/// as single materializing kernels. Returns (outputs, counters).
+/// Execute the whole plan sequentially (bit-identical to
+/// [`execute_plan_par`] at any thread count).
 pub fn execute_plan(
     g: &Graph,
     plan: &Plan,
     inputs: &HashMap<String, Tensor>,
     tile: TileConfig,
 ) -> (Vec<Tensor>, Counters) {
+    execute_plan_par(g, plan, inputs, tile, &Parallelism::sequential())
+}
+
+/// Execute the whole plan: pipeline groups run tiled + online over their
+/// launch grid with `par` worker threads; other groups execute as single
+/// kernels. Returns (outputs, counters).
+pub fn execute_plan_par(
+    g: &Graph,
+    plan: &Plan,
+    inputs: &HashMap<String, Tensor>,
+    tile: TileConfig,
+    par: &Parallelism,
+) -> (Vec<Tensor>, Counters) {
     let an = analyze(g);
-    let mut ctx = TiledCtx {
-        g,
-        inputs,
-        values: HashMap::new(),
-        pinned: HashMap::new(),
-        memo: HashMap::new(),
-        seen_regions: std::collections::HashSet::new(),
-        counters: Counters::default(),
-    };
+    let mut values: HashMap<NodeId, Tensor> = HashMap::new();
+    let mut counters = Counters::default();
     let cons = g.consumers();
-    let outputs: std::collections::HashSet<NodeId> = g.outputs.iter().copied().collect();
+    let outputs: HashSet<NodeId> = g.outputs.iter().copied().collect();
 
     for (gi, grp) in plan.groups.iter().enumerate() {
-        ctx.counters.launches += 1;
-        ctx.seen_regions.clear(); // L2 is not assumed warm across kernels
+        counters.launches += 1;
         match &grp.kind {
             GroupKind::Pipeline(p) => {
-                let t = run_pipeline(&mut ctx, &an, p, tile);
-                ctx.values.insert(p.out, t);
+                // L2 is not assumed warm across kernels: fresh seen-set
+                // per kernel group.
+                let mut seen: HashSet<(u32, Region)> = HashSet::new();
+                let t = {
+                    let sh = PipelineShared {
+                        g,
+                        inputs,
+                        values: &values,
+                    };
+                    run_pipeline(&sh, &an, p, tile, par, &mut seen, &mut counters)
+                };
+                values.insert(p.out, t);
             }
             _ => {
                 // Single-kernel group: evaluate members in order using a
                 // local scratch; count boundary traffic only.
-                let members: std::collections::HashSet<NodeId> =
-                    grp.nodes.iter().copied().collect();
+                let members: HashSet<NodeId> = grp.nodes.iter().copied().collect();
                 let mut scratch: HashMap<NodeId, Tensor> = HashMap::new();
-                let mut read_seen: std::collections::HashSet<NodeId> =
-                    std::collections::HashSet::new();
+                let mut read_seen: HashSet<NodeId> = HashSet::new();
                 for &n in &grp.nodes {
                     let node = g.node(n);
                     let operand_ids = node.op.input_ids();
@@ -494,14 +699,14 @@ pub fn execute_plan(
                     for &oid in &operand_ids {
                         let t = if let Some(t) = scratch.get(&oid) {
                             t.clone()
-                        } else if let Some(t) = ctx.values.get(&oid) {
+                        } else if let Some(t) = values.get(&oid) {
                             if !members.contains(&oid) && read_seen.insert(oid) {
-                                ctx.counters.read_elems(g.numel(oid));
+                                counters.read_elems(g.numel(oid));
                             }
                             t.clone()
                         } else if let Op::Input { name } = &g.node(oid).op {
                             if read_seen.insert(oid) {
-                                ctx.counters.read_elems(g.numel(oid));
+                                counters.read_elems(g.numel(oid));
                             }
                             inputs[name].clone()
                         } else if matches!(
@@ -519,7 +724,7 @@ pub fn execute_plan(
                     }
                     let refs: Vec<&Tensor> = operand_tensors.iter().collect();
                     let t = eval_node(&node.op, &node.shape, &refs);
-                    ctx.counters.flops += node_flops(g, n);
+                    counters.flops += node_flops(g, n);
                     scratch.insert(n, t);
                 }
                 // Materialize externally-visible nodes.
@@ -529,20 +734,16 @@ pub fn execute_plan(
                             .iter()
                             .any(|c| plan.assignment[c.0 as usize] != gi);
                     if external {
-                        ctx.counters.write_elems(g.numel(n));
-                        ctx.values.insert(n, scratch[&n].clone());
+                        counters.write_elems(g.numel(n));
+                        values.insert(n, scratch[&n].clone());
                     }
                 }
             }
         }
     }
 
-    let outs = g
-        .outputs
-        .iter()
-        .map(|o| ctx.values[o].clone())
-        .collect();
-    (outs, ctx.counters)
+    let outs = g.outputs.iter().map(|o| values[o].clone()).collect();
+    (outs, counters)
 }
 
 #[cfg(test)]
@@ -732,5 +933,39 @@ mod tests {
         let fl = plan(&g, FusionMode::Flashlight);
         let (_, cf) = execute_plan(&g, &fl, &inputs, TileConfig::default());
         assert!(cf.total_traffic() < c.total_traffic());
+    }
+
+    #[test]
+    fn parallel_execution_is_bit_identical_to_sequential() {
+        let shape = AttnShape {
+            batch: 2,
+            rows: 1,
+            heads_q: 4,
+            heads_kv: 2,
+            seq: 32,
+            head_dim: 8,
+        };
+        let tile = TileConfig {
+            block_q: 8,
+            block_k: 8,
+            l2_capacity: 40 << 20,
+        };
+        for v in [Variant::Causal, Variant::Alibi, Variant::DiffAttn { lambda: 0.5 }] {
+            let g = build(v, &shape);
+            let inputs = synthetic_inputs(&g, 17);
+            let p = plan(&g, FusionMode::Flashlight);
+            let (seq_out, seq_c) = execute_plan(&g, &p, &inputs, tile);
+            for threads in [2, 5] {
+                let (par_out, par_c) = execute_plan_par(
+                    &g,
+                    &p,
+                    &inputs,
+                    tile,
+                    &Parallelism::with_threads(threads),
+                );
+                assert_eq!(seq_out, par_out, "{} threads={threads}", v.name());
+                assert_eq!(seq_c, par_c, "{} threads={threads}", v.name());
+            }
+        }
     }
 }

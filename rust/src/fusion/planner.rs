@@ -705,6 +705,19 @@ pub fn plan_with_threshold(g: &Graph, mode: FusionMode, threshold: usize) -> Pla
 }
 
 impl Plan {
+    /// Execute this plan on the tiled engine. `par` selects the grid
+    /// scheduling (sequential or multi-threaded); outputs and counters
+    /// are bit-identical at any thread count.
+    pub fn execute(
+        &self,
+        g: &Graph,
+        inputs: &HashMap<String, crate::exec::Tensor>,
+        tile: TileConfig,
+        par: crate::exec::Parallelism,
+    ) -> (Vec<crate::exec::Tensor>, Counters) {
+        crate::exec::execute_plan_par(g, self, inputs, tile, &par)
+    }
+
     /// Analytic counters for executing this plan once with the given
     /// tiling schedule (pipeline groups only use the schedule).
     pub fn counters(&self, g: &Graph, tile: TileConfig) -> Counters {

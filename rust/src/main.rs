@@ -3,7 +3,7 @@
 
 use flashlight::bench;
 use flashlight::cost::gpu_by_name;
-use flashlight::exec::{execute_plan, Tensor};
+use flashlight::exec::{execute_plan_par, Parallelism, Tensor};
 use flashlight::fusion::{plan, FusionMode, TileConfig};
 use flashlight::variants::{build, AttnShape, Variant};
 
@@ -13,11 +13,15 @@ fn usage() -> ! {
          commands:\n\
          \x20 inspect <variant> [--mode eager|torchcompile|flashlight]\n\
          \x20     print the fusion plan for an attention variant\n\
-         \x20 run <variant> [--seq N] [--batch N]\n\
+         \x20 run <variant> [--seq N] [--batch N] [--threads N]\n\
          \x20     execute fused vs reference and compare numerics/traffic\n\
-         \x20 bench <fig2..fig7|alphafold|masks|ablations|all> [--gpu h100|a100]\n\
-         \x20     regenerate a paper figure's series (CSV to bench_results/)\n\
-         \x20 serve [--requests N] [--backend sim|pjrt]\n\
+         \x20     (--threads > 1 also cross-checks the parallel engine)\n\
+         \x20 bench <fig2..fig7|alphafold|masks|ablations|engine|all>\n\
+         \x20       [--gpu h100|a100] [--threads N]\n\
+         \x20     regenerate a paper figure's series (CSV to bench_results/);\n\
+         \x20     `engine` measures seq-vs-parallel executor wall clock\n\
+         \x20     (default threads: FLASHLIGHT_THREADS env, else all cores)\n\
+         \x20 serve [--requests N] [--backend sim|pjrt] [--threads N]\n\
          \x20     run the serving coordinator on a Mooncake-like trace\n\
          \x20 selftest\n\
          \x20     load + execute every AOT artifact and cross-check"
@@ -86,6 +90,9 @@ fn main() -> anyhow::Result<()> {
             let seq: usize = flag(&args, "--seq").map(|s| s.parse().unwrap()).unwrap_or(128);
             let batch: usize =
                 flag(&args, "--batch").map(|s| s.parse().unwrap()).unwrap_or(1);
+            let threads: usize = flag(&args, "--threads")
+                .map(|s| s.parse().unwrap())
+                .unwrap_or(1);
             let shape = AttnShape {
                 batch,
                 rows: 1,
@@ -114,13 +121,23 @@ fn main() -> anyhow::Result<()> {
             }
             let (want, c_eager) = flashlight::exec::eval(&g, &inputs);
             let p = plan(&g, FusionMode::Flashlight);
-            let (got, c_fused) = execute_plan(&g, &p, &inputs, TileConfig::default());
+            let par = Parallelism::with_threads(threads);
+            let (got, c_fused) = execute_plan_par(&g, &p, &inputs, TileConfig::default(), &par);
             println!(
-                "{}: fused kernels={} max|Δ|={:.2e}",
+                "{}: fused kernels={} threads={} max|Δ|={:.2e}",
                 v.name(),
                 p.groups.len(),
+                par.num_threads,
                 got[0].max_abs_diff(&want[0])
             );
+            if par.is_parallel() {
+                // Cross-check: parallel must be bit-identical to sequential.
+                let (got_seq, c_seq) =
+                    execute_plan_par(&g, &p, &inputs, TileConfig::default(), &Parallelism::sequential());
+                let identical = got == got_seq && c_fused == c_seq;
+                println!("parallel/sequential bit-identical: {identical}");
+                anyhow::ensure!(identical, "parallel engine diverged from sequential");
+            }
             println!(
                 "traffic: eager {} KiB -> fused {} KiB ({:.1}x less)",
                 c_eager.total_traffic() >> 10,
@@ -131,14 +148,20 @@ fn main() -> anyhow::Result<()> {
         "bench" => {
             let which = args.get(1).map(String::as_str).unwrap_or("all");
             let gpu = gpu_by_name(&flag(&args, "--gpu").unwrap_or("h100".into()));
-            bench::run(which, &gpu)?;
+            let threads: usize = flag(&args, "--threads")
+                .map(|s| s.parse().unwrap())
+                .unwrap_or(0); // 0 = all cores
+            bench::run(which, &gpu, threads)?;
         }
         "serve" => {
             let n: usize = flag(&args, "--requests")
                 .map(|s| s.parse().unwrap())
                 .unwrap_or(200);
             let backend = flag(&args, "--backend").unwrap_or("sim".into());
-            flashlight::serve::cli_serve(n, &backend)?;
+            let threads: usize = flag(&args, "--threads")
+                .map(|s| s.parse().unwrap())
+                .unwrap_or(1);
+            flashlight::serve::cli_serve(n, &backend, Parallelism::with_threads(threads))?;
         }
         "selftest" => {
             flashlight::runtime::selftest("artifacts")?;

@@ -4,11 +4,19 @@
 //! This is the only place the rust side touches XLA; Python never runs on
 //! the request path. Interchange is HLO *text* (see aot.py — serialized
 //! protos from jax >= 0.5 are rejected by xla_extension 0.5.1).
+//!
+//! The XLA-touching half (the [`Engine`], `selftest`) is gated behind
+//! the `pjrt` cargo feature because the `xla` crate cannot be built in
+//! the offline image; manifest/weights parsing stays always-on.
 
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
 
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::bail;
+use anyhow::{Context, Result};
 
 /// Tensor metadata from the manifest.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -139,6 +147,7 @@ pub struct Weights {
 }
 
 impl Weights {
+    #[cfg(feature = "pjrt")]
     pub fn literals(&self) -> Vec<xla::Literal> {
         self.tensors
             .iter()
@@ -151,6 +160,7 @@ impl Weights {
 }
 
 /// The PJRT engine: lazily compiles artifacts and executes them.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -158,6 +168,7 @@ pub struct Engine {
     compiled: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Engine {
     pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
@@ -266,6 +277,7 @@ impl Engine {
 /// artifact pair, execute both on identical synthetic inputs and check
 /// the outputs agree — the fused Pallas kernel vs the materializing jnp
 /// reference, end-to-end through HLO text -> PJRT.
+#[cfg(feature = "pjrt")]
 pub fn selftest(dir: &str) -> Result<()> {
     let mut engine = Engine::new(dir)?;
     let names: Vec<String> = engine
@@ -320,6 +332,17 @@ pub fn selftest(dir: &str) -> Result<()> {
     anyhow::ensure!(checked >= 10, "only {checked} artifact pairs checked");
     println!("selftest: {checked} fused/naive artifact pairs agree");
     Ok(())
+}
+
+/// Without the `pjrt` feature there is no XLA client to run artifacts
+/// on; fail loudly instead of silently passing.
+#[cfg(not(feature = "pjrt"))]
+pub fn selftest(_dir: &str) -> Result<()> {
+    anyhow::bail!(
+        "flashlight was built without the `pjrt` feature: add the `xla` \
+         dependency to Cargo.toml (see the [features] note there) and \
+         rebuild with --features pjrt to run selftest"
+    )
 }
 
 #[cfg(test)]

@@ -42,12 +42,19 @@ pub struct SchedulerConfig {
     /// Max prefills admitted per scheduling step (vLLM default: prefill
     /// priority, one at a time keeps TTFT fair under load).
     pub max_prefills_per_step: usize,
+    /// Host-side execution parallelism, carried for backends that run
+    /// plans on the tiled engine. Neither built-in backend consumes it
+    /// yet (the simulated backend models a fully parallel device; the
+    /// PJRT backend delegates threading to XLA) — see ROADMAP
+    /// "multi-request batching" for the serve-side work that will.
+    pub parallelism: crate::exec::Parallelism,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
         SchedulerConfig {
             max_prefills_per_step: 1,
+            parallelism: crate::exec::Parallelism::sequential(),
         }
     }
 }

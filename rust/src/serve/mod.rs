@@ -4,11 +4,13 @@
 
 pub mod engine;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod sim;
 
 pub use engine::{run_trace, Backend, SchedulerConfig};
 pub use metrics::{summarize, RequestMetrics, Summary};
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 pub use sim::{llama_3_2_1b, ModelShape, SimBackend};
 
@@ -130,46 +132,69 @@ pub fn bench_prefix_caching(spec: &GpuSpec) -> anyhow::Result<()> {
 
 /// `flashlight serve` CLI: run the coordinator on a trace with either
 /// the simulated backend or the real PJRT backend (fused vs naive).
-pub fn cli_serve(n_requests: usize, backend: &str) -> anyhow::Result<()> {
+/// `par` is handed to backends that execute real plans (see
+/// [`SchedulerConfig::parallelism`]).
+pub fn cli_serve(
+    n_requests: usize,
+    backend: &str,
+    par: crate::exec::Parallelism,
+) -> anyhow::Result<()> {
     match backend {
         "sim" => {
             let spec = crate::cost::h100();
             bench_fig5(&spec)?;
-            let _ = n_requests;
+            let _ = (n_requests, par);
             Ok(())
         }
-        "pjrt" => {
-            // Small-scale trace that fits the tiny model's 256-token
-            // prefill bucket and 512-token context.
-            let trace = generate(&TraceConfig {
-                n_requests,
-                rate: 50.0,
-                input_mu: 4.2,
-                input_sigma: 0.7,
-                mean_output: 12.0,
-                max_input: 240,
-                max_output: 24,
-                ..Default::default()
-            });
-            for fused in [true, false] {
-                let tag = if fused { "fused(flashlight)" } else { "naive(torch.compile)" };
-                let mut b = PjrtBackend::new("artifacts", "causal", fused)?;
-                let vocab = b.vocab();
-                let t0 = std::time::Instant::now();
-                let done = run_trace(&mut b, &trace, SchedulerConfig::default(), vocab)?;
-                let s = summarize(&done);
-                println!(
-                    "pjrt {tag}: {} reqs in {:.2}s wall | TTFT mean {:.1} ms p99 {:.1} ms | ITL mean {:.2} ms | {:.1} tok/s",
-                    s.n_requests,
-                    t0.elapsed().as_secs_f64(),
-                    s.ttft_mean_s * 1e3,
-                    s.ttft_p99_s * 1e3,
-                    s.itl_mean_s * 1e3,
-                    s.tokens_per_s
-                );
-            }
-            Ok(())
-        }
+        "pjrt" => serve_pjrt(n_requests, par),
         other => anyhow::bail!("unknown backend {other} (sim|pjrt)"),
     }
+}
+
+/// Real PJRT serving run (fused vs naive attention).
+#[cfg(feature = "pjrt")]
+fn serve_pjrt(n_requests: usize, par: crate::exec::Parallelism) -> anyhow::Result<()> {
+    // Small-scale trace that fits the tiny model's 256-token prefill
+    // bucket and 512-token context.
+    let trace = generate(&TraceConfig {
+        n_requests,
+        rate: 50.0,
+        input_mu: 4.2,
+        input_sigma: 0.7,
+        mean_output: 12.0,
+        max_input: 240,
+        max_output: 24,
+        ..Default::default()
+    });
+    let cfg = SchedulerConfig {
+        parallelism: par,
+        ..Default::default()
+    };
+    for fused in [true, false] {
+        let tag = if fused { "fused(flashlight)" } else { "naive(torch.compile)" };
+        let mut b = PjrtBackend::new("artifacts", "causal", fused)?;
+        let vocab = b.vocab();
+        let t0 = std::time::Instant::now();
+        let done = run_trace(&mut b, &trace, cfg, vocab)?;
+        let s = summarize(&done);
+        println!(
+            "pjrt {tag}: {} reqs in {:.2}s wall | TTFT mean {:.1} ms p99 {:.1} ms | ITL mean {:.2} ms | {:.1} tok/s",
+            s.n_requests,
+            t0.elapsed().as_secs_f64(),
+            s.ttft_mean_s * 1e3,
+            s.ttft_p99_s * 1e3,
+            s.itl_mean_s * 1e3,
+            s.tokens_per_s
+        );
+    }
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn serve_pjrt(_n_requests: usize, _par: crate::exec::Parallelism) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "flashlight was built without the `pjrt` feature: add the `xla` \
+         dependency to Cargo.toml (see the [features] note there) and \
+         rebuild with --features pjrt"
+    )
 }

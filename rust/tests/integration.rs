@@ -319,6 +319,7 @@ fn eager_counters_consistency_all_variants() {
 
 /// AOT artifact round-trip (skipped when artifacts are absent): the
 /// manifest parses, and one fused/naive pair agrees through PJRT.
+#[cfg(feature = "pjrt")]
 #[test]
 fn artifact_roundtrip_if_present() {
     let dir = std::path::Path::new("artifacts");

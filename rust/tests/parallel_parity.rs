@@ -1,0 +1,213 @@
+//! Parallel/sequential parity for the tiled execution engine.
+//!
+//! The contract (see `rust/src/exec/README.md`): at ANY thread count,
+//! `execute_plan_par` produces bit-identical outputs AND bit-identical
+//! [`Counters`] — including the HBM-vs-L2 split, which depends on the
+//! order regions are first touched — to the sequential path. These are
+//! property-style tests over every built-in variant, several tile
+//! configs, and randomized shapes.
+
+use std::collections::HashMap;
+
+use flashlight::exec::{execute_plan, execute_plan_par, Parallelism, Tensor};
+use flashlight::fusion::{plan, FusionMode, TileConfig};
+use flashlight::ir::{Graph, Op};
+use flashlight::tracegen::Rng;
+use flashlight::variants::{build, paper_variants, AttnShape, Variant};
+
+fn inputs_for(g: &Graph, seed: u64) -> HashMap<String, Tensor> {
+    let mut m = HashMap::new();
+    for (i, &id) in g.inputs.iter().enumerate() {
+        let node = g.node(id);
+        let Op::Input { name } = &node.op else { unreachable!() };
+        let t = if name.starts_with("doc") {
+            let n: usize = node.shape.iter().product();
+            Tensor::from_vec(&node.shape, (0..n).map(|j| (j * 3 / n) as f32).collect())
+        } else {
+            Tensor::synthetic(&node.shape, seed + i as u64)
+        };
+        m.insert(name.clone(), t);
+    }
+    m
+}
+
+fn all_variants(s: usize) -> Vec<Variant> {
+    let mut v: Vec<Variant> = paper_variants()
+        .into_iter()
+        .map(|v| match v {
+            Variant::SlidingWindow { .. } => Variant::SlidingWindow { window: s / 3 },
+            Variant::PrefixLm { .. } => Variant::PrefixLm { prefix: s / 2 },
+            other => other,
+        })
+        .collect();
+    v.push(Variant::DiffAttn { lambda: 0.3 });
+    v.push(Variant::Evoformer);
+    v.push(Variant::Rectified { tau: 0.05 });
+    v
+}
+
+fn assert_parity(g: &Graph, inputs: &HashMap<String, Tensor>, tile: TileConfig, label: &str) {
+    let p = plan(g, FusionMode::Flashlight);
+    let (seq_out, seq_c) = execute_plan(g, &p, inputs, tile);
+    for threads in [2, 3, 7] {
+        let par = Parallelism::with_threads(threads);
+        let (par_out, par_c) = execute_plan_par(g, &p, inputs, tile, &par);
+        assert_eq!(seq_out.len(), par_out.len(), "{label} threads={threads}");
+        for (i, (a, b)) in seq_out.iter().zip(&par_out).enumerate() {
+            assert_eq!(a.shape, b.shape, "{label} out[{i}] shape, threads={threads}");
+            assert!(
+                a.data == b.data,
+                "{label} out[{i}] data not bit-identical at threads={threads}"
+            );
+        }
+        assert_eq!(
+            seq_c, par_c,
+            "{label}: counters diverge at threads={threads}"
+        );
+    }
+}
+
+/// Every built-in variant, across several tile configs, at several
+/// thread counts: outputs and counters bit-identical to sequential.
+#[test]
+fn parity_all_variants_multiple_tile_configs() {
+    let shape = AttnShape {
+        batch: 2,
+        rows: 1,
+        heads_q: 4,
+        heads_kv: 2,
+        seq: 48,
+        head_dim: 8,
+    };
+    let tiles = [
+        TileConfig {
+            block_q: 8,
+            block_k: 8,
+            l2_capacity: 40 << 20,
+        },
+        TileConfig {
+            block_q: 16,
+            block_k: 32,
+            l2_capacity: 40 << 20,
+        },
+        // block_q > seq: the whole q range is one grid block
+        TileConfig {
+            block_q: 64,
+            block_k: 16,
+            l2_capacity: 40 << 20,
+        },
+    ];
+    for v in all_variants(shape.seq) {
+        let shape = if matches!(v, Variant::Evoformer) {
+            AttnShape { rows: 2, ..shape }
+        } else {
+            shape
+        };
+        let g = build(v, &shape);
+        let inputs = inputs_for(&g, 23);
+        for (ti, tile) in tiles.iter().enumerate() {
+            assert_parity(&g, &inputs, *tile, &format!("{} tile#{ti}", v.name()));
+        }
+    }
+}
+
+/// Randomized shapes/tiles (deterministic RNG): parity must hold for
+/// uneven tails, GQA group broadcasts, and multi-pipeline graphs alike.
+#[test]
+fn parity_random_shapes_property() {
+    let mut rng = Rng::new(4242);
+    for case in 0..12 {
+        let variants = all_variants(32);
+        let variant = variants[rng.range(0, variants.len())];
+        let block = [8usize, 16, 24][rng.range(0, 3)];
+        let s = 8 * rng.range(2, 7); // 16..48, often not divisible by block
+        let hkv = [1usize, 2][rng.range(0, 2)];
+        let group = [1usize, 2][rng.range(0, 2)];
+        let shape = AttnShape {
+            batch: rng.range(1, 3),
+            rows: if matches!(variant, Variant::Evoformer) {
+                rng.range(1, 3)
+            } else {
+                1
+            },
+            heads_q: hkv * group,
+            heads_kv: hkv,
+            seq: s,
+            head_dim: [8usize, 16][rng.range(0, 2)],
+        };
+        let variant = match variant {
+            Variant::SlidingWindow { .. } => Variant::SlidingWindow {
+                window: rng.range(1, s),
+            },
+            Variant::PrefixLm { .. } => Variant::PrefixLm {
+                prefix: rng.range(1, s),
+            },
+            other => other,
+        };
+        let g = build(variant, &shape);
+        let inputs = inputs_for(&g, case as u64 * 13 + 1);
+        let tile = TileConfig {
+            block_q: block,
+            block_k: [8usize, 16, 32][rng.range(0, 3)],
+            ..Default::default()
+        };
+        assert_parity(
+            &g,
+            &inputs,
+            tile,
+            &format!("case {case} {} {shape:?}", variant.name()),
+        );
+    }
+}
+
+/// The `Plan::execute` convenience API routes through the same engine.
+#[test]
+fn plan_execute_is_bit_identical_too() {
+    let shape = AttnShape {
+        batch: 1,
+        rows: 1,
+        heads_q: 4,
+        heads_kv: 4,
+        seq: 32,
+        head_dim: 8,
+    };
+    let g = build(Variant::Causal, &shape);
+    let inputs = inputs_for(&g, 3);
+    let p = plan(&g, FusionMode::Flashlight);
+    let tile = TileConfig {
+        block_q: 8,
+        block_k: 16,
+        ..Default::default()
+    };
+    let (a, ca) = p.execute(&g, &inputs, tile, Parallelism::sequential());
+    let (b, cb) = p.execute(&g, &inputs, tile, Parallelism::with_threads(4));
+    assert_eq!(a, b);
+    assert_eq!(ca, cb);
+}
+
+/// Oversubscription: far more threads than grid blocks must still be
+/// correct (workers that never claim a block are fine).
+#[test]
+fn parity_with_more_threads_than_blocks() {
+    let shape = AttnShape {
+        batch: 1,
+        rows: 1,
+        heads_q: 2,
+        heads_kv: 2,
+        seq: 16,
+        head_dim: 8,
+    };
+    let g = build(Variant::Vanilla, &shape);
+    let inputs = inputs_for(&g, 9);
+    let p = plan(&g, FusionMode::Flashlight);
+    let tile = TileConfig {
+        block_q: 16,
+        block_k: 8,
+        ..Default::default()
+    };
+    let (seq_out, seq_c) = execute_plan(&g, &p, &inputs, tile);
+    let (par_out, par_c) =
+        execute_plan_par(&g, &p, &inputs, tile, &Parallelism::with_threads(64));
+    assert_eq!(seq_out, par_out);
+    assert_eq!(seq_c, par_c);
+}

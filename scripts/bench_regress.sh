@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Perf-regression driver: build release, run the compiler-micro and
+# fig2/fig3 benches, and record the parallel-engine trajectory
+# (sequential vs parallel wall clock per variant) in
+# BENCH_parallel_engine.json at the repo root, so future PRs have a
+# baseline to compare against.
+#
+# Usage: scripts/bench_regress.sh [THREADS]
+#   THREADS  worker threads for the parallel runs (default: all cores)
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+THREADS="${1:-0}" # 0 = all available cores
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo
+echo "== compiler-micro bench =="
+cargo bench --bench compiler_micro
+
+echo
+echo "== fig2/fig3 variants bench (cost-model series + measured executor) =="
+cargo bench --bench fig2_fig3_variants
+
+echo
+echo "== parallel engine: seq vs par per variant -> BENCH_parallel_engine.json =="
+cargo run --release -- bench engine --threads "$THREADS"
+
+echo
+echo "wrote $(pwd)/BENCH_parallel_engine.json:"
+cat BENCH_parallel_engine.json

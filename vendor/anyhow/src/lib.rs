@@ -1,0 +1,211 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! Implements the subset this repository uses — `Result`, `Error`,
+//! the `Context` extension trait for `Result`/`Option`, and the
+//! `anyhow!` / `bail!` / `ensure!` macros — with matching semantics:
+//!
+//! * `Error` does NOT implement `std::error::Error` (exactly like real
+//!   anyhow), so the blanket `From<E: std::error::Error>` conversion and
+//!   the identity `From<Error>` never overlap and `?` works from both.
+//! * `Display` shows the outermost message/context; `Debug` shows the
+//!   full cause chain (what `fn main() -> Result<()>` prints on exit).
+
+use std::fmt;
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error {
+            msg: m.to_string(),
+            cause: None,
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Error {
+            msg: c.to_string(),
+            cause: Some(Box::new(self)),
+        }
+    }
+
+    /// The `Display` strings of the chain, outermost first.
+    pub fn chain(&self) -> Vec<&str> {
+        let mut out = vec![self.msg.as_str()];
+        let mut cur = &self.cause;
+        while let Some(e) = cur {
+            out.push(e.msg.as_str());
+            cur = &e.cause;
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let chain = self.chain();
+        if chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for c in &chain[1..] {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        // Preserve the source chain as context layers.
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err = Error::msg(msgs.pop().unwrap());
+        while let Some(m) = msgs.pop() {
+            err = err.context(m);
+        }
+        err
+    }
+}
+
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!(
+                "Condition failed: `{}`",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{Context, Error, Result};
+
+    fn io_fail() -> Result<String> {
+        let r = std::fs::read_to_string("/definitely/not/here/x");
+        r.with_context(|| format!("reading {}", "/definitely/not/here/x"))
+    }
+
+    #[test]
+    fn context_is_outermost_display() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().contains("reading /definitely/not/here/x"));
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let v: Option<u32> = None;
+        let e = v.context("missing key").unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+
+        fn f(x: u32) -> Result<u32> {
+            crate::ensure!(x > 2, "x too small: {x}");
+            if x > 100 {
+                crate::bail!("x too big");
+            }
+            Ok(x)
+        }
+        assert!(f(1).unwrap_err().to_string().contains("too small: 1"));
+        assert!(f(101).unwrap_err().to_string().contains("too big"));
+        assert_eq!(f(7).unwrap(), 7);
+
+        fn bare(x: u32) -> Result<u32> {
+            crate::ensure!(x != 0);
+            Ok(x)
+        }
+        assert!(bare(0).unwrap_err().to_string().contains("Condition failed"));
+    }
+
+    #[test]
+    fn question_mark_from_std_error() {
+        fn g() -> Result<i32> {
+            let n: i32 = "not a number".parse()?;
+            Ok(n)
+        }
+        assert!(g().is_err());
+        // identity ? from Error works too
+        fn h() -> Result<i32> {
+            let v = g()?;
+            Ok(v)
+        }
+        assert!(h().is_err());
+        let _ = Error::msg("x");
+    }
+}
