@@ -7,7 +7,7 @@
 
 use std::collections::HashMap;
 
-use crate::bench::harness::{bench_fn, json_f64, json_str, JsonArray};
+use crate::bench::harness::{bench_median_ms, json_f64, json_str, JsonArray};
 use crate::exec::{eval, execute_plan, execute_plan_par, Parallelism, Tensor};
 use crate::fusion::{plan, FusionMode, TileConfig};
 use crate::ir::{Graph, Op};
@@ -107,26 +107,26 @@ pub fn run_with(
         let err = seq_out[0].max_abs_diff(&want[0]);
         anyhow::ensure!(err < 1e-3, "{}: fused/eager err {err}", v.name());
 
-        let st_seq = bench_fn(warmup, iters, || {
+        let seq_ms = bench_median_ms(warmup, iters, || {
             let _ = execute_plan(&g, &p, &inputs, tile);
         });
-        let st_par = bench_fn(warmup, iters, || {
+        let par_ms = bench_median_ms(warmup, iters, || {
             let _ = execute_plan_par(&g, &p, &inputs, tile, &par);
         });
-        let speedup = st_seq.median_s / st_par.median_s;
+        let speedup = seq_ms / par_ms;
         worst_speedup = worst_speedup.min(speedup);
         println!(
             "{:<16} {:>10.3} {:>10.3} {:>8.2}  {}",
             v.name(),
-            st_seq.median_s * 1e3,
-            st_par.median_s * 1e3,
+            seq_ms,
+            par_ms,
             speedup,
             identical
         );
         json.push_obj(&[
             ("variant", json_str(v.name())),
-            ("seq_ms", json_f64(st_seq.median_s * 1e3)),
-            ("par_ms", json_f64(st_par.median_s * 1e3)),
+            ("seq_ms", json_f64(seq_ms)),
+            ("par_ms", json_f64(par_ms)),
             ("speedup", json_f64(speedup)),
             ("threads", par.num_threads.to_string()),
             ("bit_identical", identical.to_string()),

@@ -54,6 +54,14 @@ pub fn stats_of(samples: &mut [f64]) -> Stats {
     }
 }
 
+/// Median wall clock of `f` in milliseconds over `warmup` unmeasured +
+/// `iters` measured runs — the timing-loop boilerplate shared by the
+/// bench tables (engine bench, serve bench) so call sites don't each
+/// re-spell the warmup/measure/convert dance.
+pub fn bench_median_ms(warmup: usize, iters: usize, f: impl FnMut()) -> f64 {
+    bench_fn(warmup, iters, f).median_s * 1e3
+}
+
 /// Simple CSV writer for bench_results/.
 pub struct Csv {
     path: std::path::PathBuf,

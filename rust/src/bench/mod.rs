@@ -5,19 +5,26 @@ pub mod ablations;
 pub mod engine;
 pub mod figures;
 pub mod harness;
+pub mod serve_bench;
 
-pub use harness::{bench_fn, json_f64, json_str, stats_of, Csv, JsonArray, Stats};
+pub use harness::{
+    bench_fn, bench_median_ms, json_f64, json_str, stats_of, Csv, JsonArray, Stats,
+};
 
 use crate::cost::{a100, h100, GpuSpec};
 
 /// Default output path for the parallel-engine perf trajectory.
 pub const ENGINE_BENCH_PATH: &str = "BENCH_parallel_engine.json";
 
+/// Default output path for the serve-throughput trajectory.
+pub const SERVE_BENCH_PATH: &str = "BENCH_serve_engine.json";
+
 /// Entry point for `flashlight bench <which> [--gpu ...] [--threads N]`.
 /// `threads == 0` means all available cores (engine bench only).
 pub fn run(which: &str, gpu: &GpuSpec, threads: usize) -> anyhow::Result<()> {
     match which {
         "engine" => engine::run(threads, ENGINE_BENCH_PATH)?,
+        "serve_engine" => serve_bench::run(SERVE_BENCH_PATH)?,
         "fig2" => figures::fig2_fig3(&h100(), false)?,
         "fig3" => figures::fig2_fig3(&a100(), false)?,
         "fig4" => figures::fig4(&[h100(), a100()])?,
@@ -42,9 +49,13 @@ pub fn run(which: &str, gpu: &GpuSpec, threads: usize) -> anyhow::Result<()> {
             ablations::run(&h100())?;
             crate::serve::bench_prefix_caching(&h100())?;
             engine::run(threads, ENGINE_BENCH_PATH)?;
+            serve_bench::run(SERVE_BENCH_PATH)?;
         }
         other => {
-            anyhow::bail!("unknown figure {other} (fig2..fig7|alphafold|masks|engine|all)")
+            anyhow::bail!(
+                "unknown figure {other} \
+                 (fig2..fig7|alphafold|masks|engine|serve_engine|all)"
+            )
         }
     }
     Ok(())

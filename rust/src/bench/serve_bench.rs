@@ -1,0 +1,104 @@
+//! Serve-throughput bench: the engine backend under the continuous
+//! batcher at 1 / 2 / all threads, with the bit-identity gate baked in
+//! (every thread count must emit the identical token stream).
+//!
+//! Writes `BENCH_serve_engine.json` (via `scripts/bench_regress.sh`) so
+//! the perf trajectory covers the serve side: engine-backend tokens/s
+//! per thread count plus plan-cache hit rates.
+
+use crate::bench::harness::{json_f64, JsonArray};
+use crate::exec::Parallelism;
+use crate::serve::{engine_trace, run_trace, summarize, EngineBackend, SchedulerConfig};
+
+/// Default entry point (`flashlight bench serve_engine`).
+pub fn run(out_path: &str) -> anyhow::Result<()> {
+    run_with(out_path, 24)
+}
+
+/// Parameterized form (tests use a smaller trace).
+pub fn run_with(out_path: &str, n_requests: usize) -> anyhow::Result<()> {
+    let trace = engine_trace(n_requests);
+    let mut threads: Vec<usize> = vec![1, 2, Parallelism::available().num_threads];
+    threads.sort_unstable();
+    threads.dedup();
+    println!(
+        "== serve throughput: engine backend, {} requests ==",
+        n_requests
+    );
+    println!(
+        "{:>7} {:>10} {:>10} {:>9} {:>9}  {}",
+        "threads", "tok/s", "wall(s)", "TTFT(ms)", "ITL(ms)", "bit-identical"
+    );
+    let mut json = JsonArray::new(out_path);
+    let mut baseline: Option<Vec<u32>> = None;
+    for &t in &threads {
+        let par = Parallelism::with_threads(t);
+        let mut b = EngineBackend::default_server(par);
+        let vocab = b.model.vocab;
+        b.enable_token_log(); // the bit-identity gate needs the stream
+        let cfg = SchedulerConfig {
+            parallelism: par,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let done = run_trace(&mut b, &trace, cfg, vocab)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let s = summarize(&done);
+        let cs = b.cache_stats();
+        // Bit-identity gate: the scheduler's call sequence is timing
+        // independent, so the token stream must match the 1-thread run
+        // exactly at every thread count.
+        let identical = match &baseline {
+            None => {
+                baseline = Some(b.token_log.clone());
+                true
+            }
+            Some(base) => base == &b.token_log,
+        };
+        anyhow::ensure!(
+            identical,
+            "engine serve diverged at {t} threads (token stream mismatch)"
+        );
+        println!(
+            "{:>7} {:>10.1} {:>10.2} {:>9.2} {:>9.3}  {}",
+            t,
+            s.tokens_per_s,
+            wall,
+            s.ttft_mean_s * 1e3,
+            s.itl_mean_s * 1e3,
+            identical
+        );
+        json.push_obj(&[
+            ("threads", t.to_string()),
+            ("tokens_per_s", json_f64(s.tokens_per_s)),
+            ("wall_s", json_f64(wall)),
+            ("ttft_mean_ms", json_f64(s.ttft_mean_s * 1e3)),
+            ("itl_mean_ms", json_f64(s.itl_mean_s * 1e3)),
+            ("bit_identical", identical.to_string()),
+            ("plan_cache_hits", cs.hits.to_string()),
+            ("plan_cache_misses", cs.misses.to_string()),
+            ("plan_cache_hit_rate", json_f64(cs.hit_rate())),
+            ("requests", n_requests.to_string()),
+        ]);
+    }
+    let p = json.finish()?;
+    println!("wrote {}", p.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_bench_runs_and_writes_json() {
+        let dir = "/tmp/flashlight_serve_bench";
+        std::fs::create_dir_all(dir).unwrap();
+        let path = format!("{dir}/BENCH_serve_engine.json");
+        run_with(&path, 4).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.contains("\"tokens_per_s\""));
+        assert!(s.contains("\"bit_identical\": true"));
+        assert!(s.contains("\"plan_cache_hit_rate\""));
+    }
+}

@@ -23,4 +23,4 @@ pub use parallel::{parallel_map_with, Parallelism};
 pub use pool::TilePool;
 pub use reference::{eager_counters, eval, eval_node, eval_pw, node_flops};
 pub use tensor::{flat_index, for_each_index, for_each_row, strides_of, Tensor, NEG_INF};
-pub use tiled::{execute_plan, execute_plan_par};
+pub use tiled::{execute_plan, execute_plan_par, execute_plans_batched, PlanJob};

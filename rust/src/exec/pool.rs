@@ -14,8 +14,9 @@
 use crate::exec::tensor::Tensor;
 
 /// Retired buffers kept for reuse. Bounded so pathological plans cannot
-/// hold unbounded memory captive.
-const MAX_POOLED: usize = 64;
+/// hold unbounded memory captive. Sized so a whole block's memo
+/// teardown (score chain × k-tiles) fits without dropping buffers.
+const MAX_POOLED: usize = 256;
 
 #[derive(Debug, Default)]
 pub struct TilePool {
@@ -29,9 +30,27 @@ impl TilePool {
 
     /// An empty buffer with capacity for at least `n` elements. The
     /// caller fills it with `extend`/`push` (no redundant zero-fill).
+    ///
+    /// Best-fit: the smallest retired buffer whose capacity already
+    /// covers `n` (a linear scan over the bounded free list beats a
+    /// realloc); otherwise the largest buffer, so the regrow is minimal.
+    /// The pool mixes scalar-sized and tile-sized retirements, so a
+    /// size-blind LIFO pop would routinely reallocate.
     pub fn take(&mut self, n: usize) -> Vec<f32> {
-        match self.free.pop() {
-            Some(mut buf) => {
+        let mut best: Option<usize> = None;
+        let mut largest: Option<usize> = None;
+        for (i, b) in self.free.iter().enumerate() {
+            let cap = b.capacity();
+            if cap >= n && best.map_or(true, |j| cap < self.free[j].capacity()) {
+                best = Some(i);
+            }
+            if largest.map_or(true, |j| cap > self.free[j].capacity()) {
+                largest = Some(i);
+            }
+        }
+        match best.or(largest) {
+            Some(i) => {
+                let mut buf = self.free.swap_remove(i);
                 buf.clear();
                 buf.reserve(n);
                 buf
@@ -57,6 +76,15 @@ impl TilePool {
     /// Retire a whole tensor, keeping its storage.
     pub fn recycle(&mut self, t: Tensor) {
         self.put(t.data);
+    }
+
+    /// Retire a shared (copy-on-write) tensor: reclaims the storage only
+    /// when this was the last reference — the executor's memo may still
+    /// hold the same allocation.
+    pub fn recycle_shared(&mut self, t: std::rc::Rc<Tensor>) {
+        if let Ok(t) = std::rc::Rc::try_unwrap(t) {
+            self.put(t.data);
+        }
     }
 
     /// A copy of `t` backed by pooled storage (the executor's memo keeps
@@ -109,6 +137,18 @@ mod tests {
         let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
         let d = pool.duplicate(&t);
         assert_eq!(d, t);
+    }
+
+    #[test]
+    fn recycle_shared_reclaims_only_last_reference() {
+        use std::rc::Rc;
+        let mut pool = TilePool::new();
+        let t = Rc::new(Tensor::from_vec(&[4], vec![1., 2., 3., 4.]));
+        let t2 = t.clone();
+        pool.recycle_shared(t2); // a second handle is live: keep the data
+        assert_eq!(pool.idle_buffers(), 0);
+        pool.recycle_shared(t); // last reference: storage reclaimed
+        assert_eq!(pool.idle_buffers(), 1);
     }
 
     #[test]

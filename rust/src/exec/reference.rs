@@ -8,8 +8,78 @@
 use std::collections::HashMap;
 
 use crate::exec::counters::Counters;
-use crate::exec::tensor::{for_each_index, for_each_row, Tensor};
-use crate::ir::{CmpOp, Graph, NodeId, Op, PwOp};
+use crate::exec::tensor::{for_each_row, Tensor};
+use crate::ir::{CmpOp, Graph, NodeId, Op, PwOp, ReduceOp};
+
+/// Append iota values along `axis` of a tensor with dims `lens` to
+/// `data` (an empty buffer), starting the axis at `start`. Only
+/// `idx[axis]` matters, so the fill runs in (outer, value, inner) runs.
+/// Shared by the eager executor and both tiled paths so there is one
+/// implementation to keep bit-stable.
+pub(crate) fn iota_fill(data: &mut Vec<f32>, lens: &[usize], axis: usize, start: usize) {
+    let n: usize = lens.iter().product();
+    let inner: usize = lens[axis + 1..].iter().product();
+    let count = lens[axis];
+    let outer: usize = lens[..axis].iter().product();
+    if n > 0 {
+        for _ in 0..outer.max(1) {
+            for j in 0..count {
+                data.resize(data.len() + inner, (start + j) as f32);
+            }
+        }
+    }
+    debug_assert_eq!(data.len(), n);
+}
+
+/// Generic pointwise element loop: gather each operand's element `i`,
+/// apply `op`, push. The slow-path kernel shared by the eager executor
+/// and both tiled paths (their fast paths special-case 1/2-operand ops)
+/// so a semantics change — operand arity, NaN policy — lands everywhere
+/// at once. `T` is anything that derefs to a tensor (`&Tensor`, `Rc`).
+pub(crate) fn pointwise_fill<T>(data: &mut Vec<f32>, op: PwOp, operands: &[T], n: usize)
+where
+    T: std::ops::Deref<Target = Tensor>,
+{
+    let mut args = [0f32; 3];
+    for i in 0..n {
+        for (j, t) in operands.iter().enumerate() {
+            args[j] = t.data[i];
+        }
+        data.push(eval_pw(op, &args[..operands.len()]));
+    }
+}
+
+/// Row-contiguous reduction of `src` along `axis` into `out`, which the
+/// caller pre-fills with the reduce identity. The combine order —
+/// ascending along `axis`, row-major inner walk — is the bit-stability
+/// contract shared by the eager and fused executors: both call this one
+/// implementation, so fused-vs-eager parity can never drift.
+pub(crate) fn reduce_rows_into(src: &Tensor, axis: usize, op: ReduceOp, out: &mut [f32]) {
+    let inner: usize = src.shape[axis + 1..].iter().product();
+    let count = src.shape[axis];
+    let outer: usize = src.shape[..axis].iter().product();
+    if inner == 1 {
+        for o in 0..outer {
+            let row = &src.data[o * count..(o + 1) * count];
+            let mut acc = out[o];
+            for &x in row {
+                acc = op.combine(acc, x);
+            }
+            out[o] = acc;
+        }
+    } else {
+        for o in 0..outer {
+            let dst = &mut out[o * inner..(o + 1) * inner];
+            for j in 0..count {
+                let s_off = (o * count + j) * inner;
+                let row = &src.data[s_off..s_off + inner];
+                for (d, &x) in dst.iter_mut().zip(row) {
+                    *d = op.combine(*d, x);
+                }
+            }
+        }
+    }
+}
 
 pub fn eval_pw(op: PwOp, args: &[f32]) -> f32 {
     match op {
@@ -65,60 +135,21 @@ pub fn eval_node(node_op: &Op, shape: &[usize], operands: &[&Tensor]) -> Tensor 
         Op::Input { .. } => panic!("inputs are provided, not evaluated"),
         Op::Const { value } => Tensor::full(shape, *value),
         Op::Iota { axis } => {
-            let mut out = Tensor::zeros(shape);
-            let sh = shape.to_vec();
-            let mut i = 0;
-            for_each_index(&sh, |idx| {
-                out.data[i] = idx[*axis] as f32;
-                i += 1;
-            });
-            out
+            let mut data = Vec::with_capacity(shape.iter().product());
+            iota_fill(&mut data, shape, *axis, 0);
+            Tensor::from_vec(shape, data)
         }
         Op::Pointwise { op, .. } => {
             let n: usize = shape.iter().product();
             let mut data = Vec::with_capacity(n);
-            let mut args = [0f32; 3];
-            for i in 0..n {
-                for (j, t) in operands.iter().enumerate() {
-                    args[j] = t.data[i];
-                }
-                data.push(eval_pw(*op, &args[..operands.len()]));
-            }
+            pointwise_fill(&mut data, *op, operands, n);
             Tensor::from_vec(shape, data)
         }
         Op::Broadcast { .. } => operands[0].broadcast_to(shape),
         Op::Reduce { op, axis, .. } => {
-            // Row-contiguous reduction: decompose the source into
-            // (outer, axis, inner) runs. The combine order per output
-            // element (ascending along `axis`) matches the row-major
-            // element walk exactly, so results are bit-identical to the
-            // scalar-indexed form while inner rows vectorize.
             let src = operands[0];
             let mut out = Tensor::full(shape, op.identity());
-            let inner: usize = src.shape[axis + 1..].iter().product();
-            let count = src.shape[*axis];
-            let outer: usize = src.shape[..*axis].iter().product();
-            if inner == 1 {
-                for o in 0..outer {
-                    let row = &src.data[o * count..(o + 1) * count];
-                    let mut acc = out.data[o];
-                    for &x in row {
-                        acc = op.combine(acc, x);
-                    }
-                    out.data[o] = acc;
-                }
-            } else {
-                for o in 0..outer {
-                    let dst = &mut out.data[o * inner..(o + 1) * inner];
-                    for j in 0..count {
-                        let s_off = (o * count + j) * inner;
-                        let row = &src.data[s_off..s_off + inner];
-                        for (d, &x) in dst.iter_mut().zip(row) {
-                            *d = op.combine(*d, x);
-                        }
-                    }
-                }
-            }
+            reduce_rows_into(src, *axis, *op, &mut out.data);
             out
         }
         Op::Matmul { transpose_rhs, .. } => {

@@ -1,7 +1,8 @@
 //! Fused tiled executor: runs a [`Plan`](crate::fusion::Plan) the way the
 //! generated Triton kernel would — pipeline groups execute tile-by-tile
 //! with the online-softmax rewrite, never materializing the (S, S)
-//! intermediates; other groups execute as single kernels.
+//! intermediates; other groups execute as single kernels through the
+//! shared [`TilePool`].
 //!
 //! The executor counts the HBM traffic it *actually* generates (every
 //! `Input`/materialized-tensor tile read and every output tile write), so
@@ -12,23 +13,40 @@
 //! A pipeline group's iteration space is the launch grid of §3.6: one
 //! program instance per (batch…, head…, q-tile) block, modeled by
 //! [`LogicalGrid`]. Blocks share only read-only state (graph, inputs,
-//! previously materialized values), so [`execute_plan_par`] schedules
-//! them across threads ([`crate::exec::parallel`]) with per-thread
-//! scratch ([`WorkerScratch`]: tile pool + online-softmax row states).
+//! previously materialized values), so a [`PipelineRun`] schedules them
+//! across threads ([`crate::exec::parallel`]) with per-thread scratch
+//! ([`WorkerScratch`]: tile pool + online-softmax row states).
+//!
+//! ## The multi-plan work queue
+//!
+//! [`execute_plans_batched`] runs *several* plans at once (the serving
+//! engine's batched decode: one plan per active request). All plans that
+//! are ready at a pipeline group contribute tagged work items
+//! `(plan, block)` to **one** shared worker pool, so grid parallelism is
+//! cross-request, not per-plan — a single-block decode step no longer
+//! strands the other workers. [`execute_plan_par`] is the one-job case.
 //!
 //! Determinism: each block computes with exactly the code a sequential
 //! run uses and *logs* its operand-region fetches instead of counting
-//! them; the main thread merges blocks in grid order, replaying the
-//! touch logs against the group-level seen-set. Outputs and [`Counters`]
-//! — including the HBM-vs-L2 split, which depends on first-touch order —
-//! are therefore bit-identical between sequential and parallel runs
-//! (asserted by `rust/tests/parallel_parity.rs`).
+//! them; the scheduler thread merges each plan's blocks in grid order,
+//! replaying the touch logs against that plan's group-level seen-set.
+//! Outputs and [`Counters`] — including the HBM-vs-L2 split, which
+//! depends on first-touch order — are therefore bit-identical between
+//! sequential, parallel, and batched multi-plan runs (asserted by
+//! `rust/tests/parallel_parity.rs`).
+//!
+//! Memory: per-block tile values live in a copy-on-write memo of shared
+//! (`Rc`) tensors — consumers retire their handle into the worker's
+//! [`TilePool`], and the storage is reclaimed as soon as the last holder
+//! lets go, so no duplicate copies are made for memoization.
 
 use std::collections::{HashMap, HashSet};
+use std::rc::Rc;
 
 use crate::exec::gemm;
 use crate::exec::parallel::{parallel_map_with, Parallelism};
 use crate::exec::pool::TilePool;
+use crate::exec::reference::{iota_fill, pointwise_fill, reduce_rows_into};
 use crate::exec::{eval_node, eval_pw, node_flops, Counters, Tensor};
 use crate::fusion::{GroupKind, OnlineRowState, Pipeline, Plan, TileConfig};
 use crate::grid::{LogicalGrid, TiledDim};
@@ -53,12 +71,14 @@ struct PipelineShared<'g> {
 /// Per-block evaluation context. `pool` (and the caller's row states)
 /// live in the worker's [`WorkerScratch`] and persist across the blocks
 /// that worker claims, so the k-tile loop is allocation-free at steady
-/// state.
+/// state. Tile values are shared `Rc`s: the memo and the consumer hold
+/// the same allocation (copy-on-write — no duplicate is ever made), and
+/// [`TilePool::recycle_shared`] reclaims storage at the last release.
 struct TiledCtx<'g, 'w> {
     sh: &'w PipelineShared<'g>,
     /// Values pinned by the pipeline driver (e.g. the PV accumulator).
-    pinned: HashMap<NodeId, Tensor>,
-    memo: HashMap<(u32, Region), Tensor>,
+    pinned: HashMap<NodeId, Rc<Tensor>>,
+    memo: HashMap<(u32, Region), Rc<Tensor>>,
     touches: Vec<Touch>,
     flops: u64,
     pool: &'w mut TilePool,
@@ -94,25 +114,21 @@ impl<'g, 'w> TiledCtx<'g, 'w> {
 
     /// Evaluate `node` restricted to `region`, recursively. Regions
     /// propagate structurally: each op knows its operands' regions.
-    fn eval_region(&mut self, id: NodeId, region: &Region) -> Tensor {
+    /// Returns a shared handle; the memo keeps a clone of the same `Rc`
+    /// (copy-on-write), so repeated requests are free.
+    fn eval_region(&mut self, id: NodeId, region: &Region) -> Rc<Tensor> {
+        if let Some(t) = self.pinned.get(&id) {
+            return t.clone();
+        }
         let key = (id.0, region.clone());
-        {
-            let TiledCtx {
-                pinned, memo, pool, ..
-            } = self;
-            if let Some(t) = pinned.get(&id) {
-                return pool.duplicate(t);
-            }
-            if let Some(t) = memo.get(&key) {
-                return pool.duplicate(t);
-            }
+        if let Some(t) = self.memo.get(&key) {
+            return t.clone();
         }
         // Materialized by an earlier group: read the tile from "HBM".
         let values = self.sh.values;
         if let Some(t) = values.get(&id) {
-            let out = self.gather(id, t, region);
-            let copy = self.pool.duplicate(&out);
-            self.memo.insert(key, copy);
+            let out = Rc::new(self.gather(id, t, region));
+            self.memo.insert(key, out.clone());
             return out;
         }
         let g = self.sh.g;
@@ -130,26 +146,13 @@ impl<'g, 'w> TiledCtx<'g, 'w> {
                 Tensor::from_vec(&lens, data)
             }
             Op::Iota { axis } => {
-                // Only idx[axis] matters: fill in (outer, value, inner)
-                // runs instead of decomposing every element index.
                 let n: usize = lens.iter().product();
-                let inner: usize = lens[axis + 1..].iter().product();
-                let count = lens[*axis];
-                let outer: usize = lens[..*axis].iter().product();
-                let start = region[*axis].0;
                 let mut data = self.pool.take(n);
-                if n > 0 {
-                    for _ in 0..outer.max(1) {
-                        for j in 0..count {
-                            data.resize(data.len() + inner, (start + j) as f32);
-                        }
-                    }
-                }
-                debug_assert_eq!(data.len(), n);
+                iota_fill(&mut data, &lens, *axis, region[*axis].0);
                 Tensor::from_vec(&lens, data)
             }
             Op::Pointwise { op, inputs } => {
-                let ts: Vec<Tensor> = inputs
+                let ts: Vec<Rc<Tensor>> = inputs
                     .iter()
                     .map(|&i| self.eval_region(i, region))
                     .collect();
@@ -200,20 +203,12 @@ impl<'g, 'w> TiledCtx<'g, 'w> {
                             ),
                         }
                     }
-                    _ => {
-                        let mut args = [0f32; 3];
-                        for f in 0..n {
-                            for (j, t) in ts.iter().enumerate() {
-                                args[j] = t.data[f];
-                            }
-                            data.push(eval_pw(*op, &args[..ts.len()]));
-                        }
-                    }
+                    _ => pointwise_fill(&mut data, *op, &ts, n),
                 }
                 debug_assert_eq!(data.len(), n);
                 let out = Tensor::from_vec(&lens, data);
                 for t in ts {
-                    self.pool.recycle(t);
+                    self.pool.recycle_shared(t);
                 }
                 out
             }
@@ -226,7 +221,7 @@ impl<'g, 'w> TiledCtx<'g, 'w> {
                     .collect();
                 let src = self.eval_region(*input, &op_region);
                 let out = src.broadcast_to(&lens);
-                self.pool.recycle(src);
+                self.pool.recycle_shared(src);
                 out
             }
             Op::Slice {
@@ -240,7 +235,11 @@ impl<'g, 'w> TiledCtx<'g, 'w> {
                     .enumerate()
                     .map(|(ax, &(s, l))| if ax == *axis { (s + start, l) } else { (s, l) })
                     .collect();
-                self.eval_region(*input, &op_region)
+                // Shared alias of the inner value: memoize the same Rc
+                // under the slice key (copy-on-write, no duplicate).
+                let inner = self.eval_region(*input, &op_region);
+                self.memo.insert(key, inner.clone());
+                return inner;
             }
             Op::Matmul {
                 lhs,
@@ -272,16 +271,16 @@ impl<'g, 'w> TiledCtx<'g, 'w> {
                 let n: usize = lens.iter().product();
                 let mut data = self.pool.take_zeroed(n);
                 gemm::batched_matmul(&lt, &rt, *transpose_rhs, &lens, &mut data);
-                self.pool.recycle(lt);
-                self.pool.recycle(rt);
+                self.pool.recycle_shared(lt);
+                self.pool.recycle_shared(rt);
                 Tensor::from_vec(&lens, data)
             }
             Op::Reduce { .. } => {
                 panic!("reductions inside pipelines are handled by the driver")
             }
         };
-        let copy = self.pool.duplicate(&out);
-        self.memo.insert(key, copy);
+        let out = Rc::new(out);
+        self.memo.insert(key, out.clone());
         out
     }
 }
@@ -428,8 +427,8 @@ fn run_block(
             gemm::gemm_nn(s_flat, &v_tile.data, &mut plain_acc, cq, meta.d_out, ck);
             ctx.flops += (2 * cq * ck * meta.d_out) as u64;
         }
-        ctx.pool.recycle(s_tile);
-        ctx.pool.recycle(v_tile);
+        ctx.pool.recycle_shared(s_tile);
+        ctx.pool.recycle_shared(v_tile);
         kt += ck;
     }
     // m1 flops for this tile row (q-block x full kv).
@@ -451,7 +450,8 @@ fn run_block(
     let mut m2_lens = vec![1usize; meta.m2_rank];
     m2_lens[meta.m2_rank - 2] = cq;
     m2_lens[meta.m2_rank - 1] = meta.d_out;
-    ctx.pinned.insert(meta.m2, Tensor::from_vec(&m2_lens, acc));
+    ctx.pinned
+        .insert(meta.m2, Rc::new(Tensor::from_vec(&m2_lens, acc)));
 
     // Evaluate the epilogue at tile granularity.
     let mut out_region: Region = meta.out_shape.iter().map(|&s| (0, s)).collect();
@@ -459,9 +459,16 @@ fn run_block(
         out_region[ax_out] = (outer_idx[i], 1);
     }
     out_region[meta.q_ax_out] = (qt, cq);
-    let tile = ctx.eval_region(pipe.out, &out_region);
+    let tile_rc = ctx.eval_region(pipe.out, &out_region);
+    // Unshare the output tile: drop the memo/pinned aliases first so the
+    // unwrap is copy-free.
+    ctx.memo.remove(&(pipe.out.0, out_region.clone()));
+    ctx.pinned.remove(&meta.m2);
+    let tile = Rc::try_unwrap(tile_rc).unwrap_or_else(|rc| (*rc).clone());
 
-    // Retire all per-block buffers into the worker pool.
+    // Retire all per-block buffers into the worker pool. The memo may
+    // alias the pinned tensors (slices); drain it first so the last
+    // holder reclaims each allocation exactly once.
     let TiledCtx {
         pinned,
         memo,
@@ -471,10 +478,10 @@ fn run_block(
         ..
     } = ctx;
     for (_, t) in memo {
-        retired.put(t.data);
+        retired.recycle_shared(t);
     }
     for (_, t) in pinned {
-        retired.put(t.data);
+        retired.recycle_shared(t);
     }
 
     BlockOut {
@@ -507,139 +514,462 @@ fn scatter_tile(out: &mut Tensor, region: &Region, tile: &Tensor) {
     debug_assert_eq!(soff, tile.numel());
 }
 
-/// Execute a fused pipeline group over its logical launch grid. Returns
-/// the materialized value of `pipe.out`; traffic goes into `counters`
-/// via the deterministic block-order merge.
-fn run_pipeline(
-    sh: &PipelineShared,
-    an: &DimAnalysis,
-    pipe: &Pipeline,
-    tile: TileConfig,
-    par: &Parallelism,
-    seen: &mut HashSet<(u32, Region)>,
-    counters: &mut Counters,
-) -> Tensor {
-    let g = sh.g;
-    let out_shape = g.node(pipe.out).shape.clone();
-    let out_axes = an.axes[pipe.out.0 as usize].clone();
-    let score_shape = g.node(pipe.score_root).shape.clone();
-    let score_axes = an.axes[pipe.score_root.0 as usize].clone();
-    let rank = out_shape.len();
+/// One pipeline group prepared for execution: block-invariant geometry
+/// plus read-only shared state. The same struct serves the single-plan
+/// path and the batched multi-plan queue — a `PipelineRun` knows how to
+/// run any of its grid blocks and how to merge them deterministically.
+struct PipelineRun<'a> {
+    sh: PipelineShared<'a>,
+    pipe: &'a Pipeline,
+    meta: PipeMeta,
+    grid: LogicalGrid,
+}
 
-    // Locate the q axis on the output and the kv axis on the scores.
-    let q_ax_out = out_axes
-        .iter()
-        .position(|c| *c == pipe.q_class)
-        .expect("pipeline output must carry the q dimension");
-    let kv_ax_s = score_axes
-        .iter()
-        .rposition(|c| *c == pipe.kv_class)
-        .expect("score node must carry the kv dimension");
-    let q_ax_s = score_axes[..kv_ax_s]
-        .iter()
-        .rposition(|c| *c == pipe.q_class)
-        .expect("score node must carry the q dimension");
-    let sq = out_shape[q_ax_out];
-    let sk = score_shape[kv_ax_s];
-    let d_out = out_shape[rank - 1];
+impl<'a> PipelineRun<'a> {
+    fn new(
+        g: &'a Graph,
+        an: &DimAnalysis,
+        pipe: &'a Pipeline,
+        tile: TileConfig,
+        inputs: &'a HashMap<String, Tensor>,
+        values: &'a HashMap<NodeId, Tensor>,
+    ) -> Self {
+        let out_shape = g.node(pipe.out).shape.clone();
+        let out_axes = an.axes[pipe.out.0 as usize].clone();
+        let score_shape = g.node(pipe.score_root).shape.clone();
+        let score_axes = an.axes[pipe.score_root.0 as usize].clone();
+        let rank = out_shape.len();
 
-    // Outer iteration space: all output axes except q and the last (d).
-    let outer_axes: Vec<usize> = (0..rank)
-        .filter(|&ax| ax != q_ax_out && ax != rank - 1)
-        .collect();
-    let outer_shape: Vec<usize> = outer_axes.iter().map(|&ax| out_shape[ax]).collect();
+        // Locate the q axis on the output and the kv axis on the scores.
+        let q_ax_out = out_axes
+            .iter()
+            .position(|c| *c == pipe.q_class)
+            .expect("pipeline output must carry the q dimension");
+        let kv_ax_s = score_axes
+            .iter()
+            .rposition(|c| *c == pipe.kv_class)
+            .expect("score node must carry the kv dimension");
+        let q_ax_s = score_axes[..kv_ax_s]
+            .iter()
+            .rposition(|c| *c == pipe.q_class)
+            .expect("score node must carry the q dimension");
+        let sq = out_shape[q_ax_out];
+        let sk = score_shape[kv_ax_s];
+        let d_out = out_shape[rank - 1];
 
-    let bq = tile.block_q.min(sq);
-    let bk = tile.block_k.min(sk);
+        // Outer iteration space: all output axes except q and the last (d).
+        let outer_axes: Vec<usize> = (0..rank)
+            .filter(|&ax| ax != q_ax_out && ax != rank - 1)
+            .collect();
+        let outer_shape: Vec<usize> =
+            outer_axes.iter().map(|&ax| out_shape[ax]).collect();
 
-    // v source (the PV matmul rhs) and its per-axis outer mapping.
-    let (v_src, v_transposed) = match g.node(pipe.m2).op {
-        Op::Matmul {
-            rhs, transpose_rhs, ..
-        } => (rhs, transpose_rhs),
-        _ => unreachable!(),
-    };
-    assert!(!v_transposed, "PV matmul with transposed V unsupported");
-    let v_shape = g.node(v_src).shape.clone();
-    let mut v_outer_map: Vec<Option<usize>> = vec![None; v_shape.len()];
-    for ax in 0..v_shape.len().saturating_sub(2) {
-        if v_shape[ax] == 1 {
-            continue;
-        }
-        let cls = an.axes[v_src.0 as usize][ax];
-        for (i, &ax_out) in outer_axes.iter().enumerate() {
-            if out_axes[ax_out] == cls {
-                v_outer_map[ax] = Some(i);
-            }
-        }
-    }
-    // Map each outer coordinate onto matching score axes.
-    let mut score_outer_map: Vec<Option<usize>> = vec![None; score_shape.len()];
-    for (i, &ax_out) in outer_axes.iter().enumerate() {
-        let cls = out_axes[ax_out];
-        for (ax_s, c) in score_axes.iter().enumerate() {
-            if *c == cls && score_shape[ax_s] > 1 {
-                score_outer_map[ax_s] = Some(i);
-            }
-        }
-    }
-    let kdim = {
-        let m1_rank = g.node(pipe.m1).shape.len();
-        let Op::Matmul { lhs, .. } = g.node(pipe.m1).op else {
-            unreachable!()
+        let bq = tile.block_q.min(sq);
+        let bk = tile.block_k.min(sk);
+
+        // v source (the PV matmul rhs) and its per-axis outer mapping.
+        let (v_src, v_transposed) = match g.node(pipe.m2).op {
+            Op::Matmul {
+                rhs, transpose_rhs, ..
+            } => (rhs, transpose_rhs),
+            _ => unreachable!(),
         };
-        g.node(lhs).shape[m1_rank - 1]
-    };
-
-    let meta = PipeMeta {
-        out_shape: out_shape.clone(),
-        score_shape,
-        q_ax_out,
-        q_ax_s,
-        kv_ax_s,
-        sk,
-        d_out,
-        has_sm: pipe.softmax.is_some(),
-        outer_axes,
-        bk,
-        score_outer_map,
-        v_outer_map,
-        v_src,
-        v_shape,
-        kdim,
-        m2: pipe.m2,
-        m2_rank: g.node(pipe.m2).shape.len(),
-    };
-
-    // The launch grid of §3.6, executed for real: outer dims at tile=1,
-    // the q dimension tiled by block_q, unrolled to one block-id axis.
-    let mut dims: Vec<TiledDim> = outer_shape
-        .iter()
-        .map(|&s| TiledDim { size: s, tile: 1 })
-        .collect();
-    dims.push(TiledDim { size: sq, tile: bq });
-    let grid = LogicalGrid::new(dims);
-
-    let blocks = parallel_map_with(par, grid.n_blocks(), WorkerScratch::new, |ws, bid| {
-        run_block(sh, pipe, &meta, &grid, bid, ws)
-    });
-
-    // Deterministic merge in block (= sequential iteration) order.
-    let mut out = Tensor::zeros(&out_shape);
-    for b in blocks {
-        for (nid, region, n) in b.touches {
-            if seen.insert((nid, region)) {
-                counters.read_elems(n);
-            } else {
-                counters.l2_elems(n);
+        assert!(!v_transposed, "PV matmul with transposed V unsupported");
+        let v_shape = g.node(v_src).shape.clone();
+        let mut v_outer_map: Vec<Option<usize>> = vec![None; v_shape.len()];
+        for ax in 0..v_shape.len().saturating_sub(2) {
+            if v_shape[ax] == 1 {
+                continue;
+            }
+            let cls = an.axes[v_src.0 as usize][ax];
+            for (i, &ax_out) in outer_axes.iter().enumerate() {
+                if out_axes[ax_out] == cls {
+                    v_outer_map[ax] = Some(i);
+                }
             }
         }
-        counters.flops += b.flops;
-        let n = b.tile.numel();
-        scatter_tile(&mut out, &b.out_region, &b.tile);
-        counters.write_elems(n);
+        // Map each outer coordinate onto matching score axes.
+        let mut score_outer_map: Vec<Option<usize>> = vec![None; score_shape.len()];
+        for (i, &ax_out) in outer_axes.iter().enumerate() {
+            let cls = out_axes[ax_out];
+            for (ax_s, c) in score_axes.iter().enumerate() {
+                if *c == cls && score_shape[ax_s] > 1 {
+                    score_outer_map[ax_s] = Some(i);
+                }
+            }
+        }
+        let kdim = {
+            let m1_rank = g.node(pipe.m1).shape.len();
+            let Op::Matmul { lhs, .. } = g.node(pipe.m1).op else {
+                unreachable!()
+            };
+            g.node(lhs).shape[m1_rank - 1]
+        };
+
+        let meta = PipeMeta {
+            out_shape,
+            score_shape,
+            q_ax_out,
+            q_ax_s,
+            kv_ax_s,
+            sk,
+            d_out,
+            has_sm: pipe.softmax.is_some(),
+            outer_axes,
+            bk,
+            score_outer_map,
+            v_outer_map,
+            v_src,
+            v_shape,
+            kdim,
+            m2: pipe.m2,
+            m2_rank: g.node(pipe.m2).shape.len(),
+        };
+
+        // The launch grid of §3.6, executed for real: outer dims at
+        // tile=1, the q dimension tiled by block_q, unrolled to one
+        // block-id axis.
+        let mut dims: Vec<TiledDim> = outer_shape
+            .iter()
+            .map(|&s| TiledDim { size: s, tile: 1 })
+            .collect();
+        dims.push(TiledDim { size: sq, tile: bq });
+        let grid = LogicalGrid::new(dims);
+
+        PipelineRun {
+            sh: PipelineShared { g, inputs, values },
+            pipe,
+            meta,
+            grid,
+        }
     }
-    out
+
+    fn n_blocks(&self) -> usize {
+        self.grid.n_blocks()
+    }
+
+    fn run_block(&self, block: usize, scratch: &mut WorkerScratch) -> BlockOut {
+        run_block(&self.sh, self.pipe, &self.meta, &self.grid, block, scratch)
+    }
+
+    /// Deterministic merge in block (= sequential iteration) order, with
+    /// a fresh per-kernel seen-set (L2 is not assumed warm across
+    /// kernels). Returns the materialized value of `pipe.out`.
+    fn merge(&self, blocks: Vec<BlockOut>, counters: &mut Counters) -> Tensor {
+        let mut seen: HashSet<(u32, Region)> = HashSet::new();
+        let mut out = Tensor::zeros(&self.meta.out_shape);
+        for b in blocks {
+            for (nid, region, n) in b.touches {
+                if seen.insert((nid, region)) {
+                    counters.read_elems(n);
+                } else {
+                    counters.l2_elems(n);
+                }
+            }
+            counters.flops += b.flops;
+            let n = b.tile.numel();
+            scatter_tile(&mut out, &b.out_region, &b.tile);
+            counters.write_elems(n);
+        }
+        out
+    }
+}
+
+/// Evaluate one node into a pooled output buffer (the non-pipeline
+/// kernel path). Pointwise / matmul / reduce / generator outputs come
+/// from the [`TilePool`]; ops whose reference implementation already
+/// allocates exactly once (broadcast views, row-wise slices) fall back
+/// to [`eval_node`].
+fn eval_node_pooled(
+    op: &Op,
+    shape: &[usize],
+    operands: &[&Tensor],
+    pool: &mut TilePool,
+) -> Tensor {
+    let n: usize = shape.iter().product();
+    match op {
+        Op::Const { value } => {
+            let mut data = pool.take(n);
+            data.resize(n, *value);
+            Tensor::from_vec(shape, data)
+        }
+        Op::Iota { axis } => {
+            let mut data = pool.take(n);
+            iota_fill(&mut data, shape, *axis, 0);
+            Tensor::from_vec(shape, data)
+        }
+        Op::Pointwise { op, .. } => {
+            let mut data = pool.take(n);
+            pointwise_fill(&mut data, *op, operands, n);
+            Tensor::from_vec(shape, data)
+        }
+        Op::Matmul { transpose_rhs, .. } => {
+            let mut data = pool.take_zeroed(n);
+            gemm::batched_matmul(operands[0], operands[1], *transpose_rhs, shape, &mut data);
+            Tensor::from_vec(shape, data)
+        }
+        Op::Reduce { op, axis, .. } => {
+            // The shared row-contiguous reduction (bit-identical combine
+            // order with the eager executor) into a pooled output.
+            let src = operands[0];
+            let mut data = pool.take(n);
+            data.resize(n, op.identity());
+            reduce_rows_into(src, *axis, *op, &mut data);
+            Tensor::from_vec(shape, data)
+        }
+        _ => eval_node(op, shape, operands),
+    }
+}
+
+/// Execute one non-pipeline kernel group: evaluate members in order with
+/// pooled buffers, retire member tensors as soon as their last in-group
+/// consumer has run, count boundary traffic only, and materialize the
+/// externally visible nodes into `values`.
+#[allow(clippy::too_many_arguments)]
+fn run_single_group(
+    g: &Graph,
+    plan: &Plan,
+    gi: usize,
+    inputs: &HashMap<String, Tensor>,
+    cons: &[Vec<NodeId>],
+    outputs: &HashSet<NodeId>,
+    values: &mut HashMap<NodeId, Tensor>,
+    counters: &mut Counters,
+    pool: &mut TilePool,
+) {
+    let grp = &plan.groups[gi];
+    let members: HashSet<NodeId> = grp.nodes.iter().copied().collect();
+    // Externally visible members must survive to be materialized.
+    let mut external: HashSet<NodeId> = HashSet::new();
+    for &n in &grp.nodes {
+        if outputs.contains(&n)
+            || cons[n.0 as usize]
+                .iter()
+                .any(|c| plan.assignment[c.0 as usize] != gi)
+        {
+            external.insert(n);
+        }
+    }
+    // Remaining in-group consumer count per member (per operand
+    // occurrence: `consumers()` records duplicates, and so does the
+    // decrement loop below).
+    let mut uses: HashMap<NodeId, usize> = HashMap::new();
+    for &n in &grp.nodes {
+        let u = cons[n.0 as usize]
+            .iter()
+            .filter(|c| members.contains(c))
+            .count();
+        uses.insert(n, u);
+    }
+
+    let mut scratch: HashMap<NodeId, Tensor> = HashMap::new();
+    let mut read_seen: HashSet<NodeId> = HashSet::new();
+    for &n in &grp.nodes {
+        let node = g.node(n);
+        let operand_ids = node.op.input_ids();
+        // First pass: materialize in-kernel generators and count boundary
+        // reads (kept separate so `scratch` isn't mutably borrowed while
+        // the evaluation references live).
+        for &oid in &operand_ids {
+            if scratch.contains_key(&oid) {
+                continue;
+            }
+            if values.contains_key(&oid) {
+                if !members.contains(&oid) && read_seen.insert(oid) {
+                    counters.read_elems(g.numel(oid));
+                }
+            } else if matches!(g.node(oid).op, Op::Input { .. }) {
+                if read_seen.insert(oid) {
+                    counters.read_elems(g.numel(oid));
+                }
+            } else if matches!(g.node(oid).op, Op::Const { .. } | Op::Iota { .. }) {
+                // in-kernel generator (free unless eager)
+                let t = eval_node_pooled(&g.node(oid).op, &g.node(oid).shape, &[], pool);
+                scratch.insert(oid, t);
+            } else {
+                panic!("operand {oid:?} not available");
+            }
+        }
+        let operand_refs: Vec<&Tensor> = operand_ids
+            .iter()
+            .map(|oid| {
+                scratch
+                    .get(oid)
+                    .or_else(|| values.get(oid))
+                    .unwrap_or_else(|| {
+                        let Op::Input { name } = &g.node(*oid).op else {
+                            panic!("operand {oid:?} not available")
+                        };
+                        &inputs[name]
+                    })
+            })
+            .collect();
+        let t = eval_node_pooled(&node.op, &node.shape, &operand_refs, pool);
+        counters.flops += node_flops(g, n);
+        drop(operand_refs);
+        scratch.insert(n, t);
+        // Retire member operands whose last in-group consumer this was.
+        for &oid in &operand_ids {
+            if let Some(u) = uses.get_mut(&oid) {
+                *u = u.saturating_sub(1);
+                if *u == 0 && !external.contains(&oid) {
+                    if let Some(dead) = scratch.remove(&oid) {
+                        pool.recycle(dead);
+                    }
+                }
+            }
+        }
+    }
+    // Materialize externally-visible nodes; retire everything else
+    // (leftover generators, dead group outputs).
+    for &n in &grp.nodes {
+        if external.contains(&n) {
+            counters.write_elems(g.numel(n));
+            if let Some(t) = scratch.remove(&n) {
+                values.insert(n, t);
+            }
+        }
+    }
+    for (_, t) in scratch.drain() {
+        pool.recycle(t);
+    }
+}
+
+/// One executable unit of the multi-plan work queue: a fusion plan with
+/// its graph, inputs and tile schedule. Plans are borrowed (the serving
+/// layer holds them in `Arc<CachedPlan>`s from the plan cache), so a job
+/// is cheap to construct per decode step.
+pub struct PlanJob<'a> {
+    pub graph: &'a Graph,
+    pub plan: &'a Plan,
+    pub inputs: &'a HashMap<String, Tensor>,
+    pub tile: TileConfig,
+}
+
+/// Execute several plans as one batch over a **shared** worker pool.
+///
+/// Per-plan group order is preserved (groups may depend on earlier
+/// groups' materialized values), but whenever multiple plans are ready at
+/// a pipeline group, *all* their grid blocks become tagged work items
+/// `(plan, block)` in a single [`parallel_map_with`] launch — the
+/// cross-request grid parallelism the serving engine's batched decode
+/// needs, where each individual plan may have too few blocks to fill the
+/// machine. Single-kernel groups run on the scheduler thread through a
+/// shared [`TilePool`].
+///
+/// Determinism: each plan's blocks are merged in block order against
+/// per-plan seen-sets, so every `(outputs, Counters)` pair is bit-equal
+/// to running that plan alone via [`execute_plan`], at any thread count.
+pub fn execute_plans_batched(
+    jobs: &[PlanJob],
+    par: &Parallelism,
+) -> Vec<(Vec<Tensor>, Counters)> {
+    let n = jobs.len();
+    let analyses: Vec<DimAnalysis> = jobs.iter().map(|j| analyze(j.graph)).collect();
+    let cons: Vec<Vec<Vec<NodeId>>> = jobs.iter().map(|j| j.graph.consumers()).collect();
+    let outputs: Vec<HashSet<NodeId>> = jobs
+        .iter()
+        .map(|j| j.graph.outputs.iter().copied().collect())
+        .collect();
+    let mut values: Vec<HashMap<NodeId, Tensor>> = (0..n).map(|_| HashMap::new()).collect();
+    let mut counters: Vec<Counters> = vec![Counters::default(); n];
+    let mut next_group: Vec<usize> = vec![0; n];
+    let mut pool = TilePool::new();
+
+    loop {
+        // Drain single-kernel groups on the scheduler thread (cheap);
+        // each job stops at its next pipeline group.
+        for j in 0..n {
+            while next_group[j] < jobs[j].plan.groups.len() {
+                let grp = &jobs[j].plan.groups[next_group[j]];
+                if matches!(grp.kind, GroupKind::Pipeline(_)) {
+                    break;
+                }
+                counters[j].launches += 1;
+                run_single_group(
+                    jobs[j].graph,
+                    jobs[j].plan,
+                    next_group[j],
+                    jobs[j].inputs,
+                    &cons[j],
+                    &outputs[j],
+                    &mut values[j],
+                    &mut counters[j],
+                    &mut pool,
+                );
+                next_group[j] += 1;
+            }
+        }
+        let ready: Vec<usize> = (0..n)
+            .filter(|&j| next_group[j] < jobs[j].plan.groups.len())
+            .collect();
+        if ready.is_empty() {
+            break;
+        }
+        // All ready pipeline groups share one launch: tagged work items
+        // over the combined grid.
+        let merged: Vec<(usize, NodeId, Tensor, Counters)> = {
+            let runs: Vec<PipelineRun> = ready
+                .iter()
+                .map(|&j| {
+                    let GroupKind::Pipeline(p) = &jobs[j].plan.groups[next_group[j]].kind
+                    else {
+                        unreachable!("ready jobs stop at pipeline groups")
+                    };
+                    PipelineRun::new(
+                        jobs[j].graph,
+                        &analyses[j],
+                        p,
+                        jobs[j].tile,
+                        jobs[j].inputs,
+                        &values[j],
+                    )
+                })
+                .collect();
+            let mut offsets = Vec::with_capacity(runs.len() + 1);
+            let mut total = 0usize;
+            for r in &runs {
+                offsets.push(total);
+                total += r.n_blocks();
+            }
+            offsets.push(total);
+            let blocks: Vec<BlockOut> =
+                parallel_map_with(par, total, WorkerScratch::new, |ws, item| {
+                    let ri = offsets.partition_point(|&o| o <= item) - 1;
+                    runs[ri].run_block(item - offsets[ri], ws)
+                });
+            // Per-plan deterministic merge, in block order.
+            let mut out = Vec::with_capacity(runs.len());
+            let mut it = blocks.into_iter();
+            for (ri, run) in runs.iter().enumerate() {
+                let count = offsets[ri + 1] - offsets[ri];
+                let bs: Vec<BlockOut> = it.by_ref().take(count).collect();
+                let mut c = Counters::default();
+                c.launches += 1;
+                let t = run.merge(bs, &mut c);
+                out.push((ready[ri], run.pipe.out, t, c));
+            }
+            out
+        };
+        for (j, node, t, c) in merged {
+            values[j].insert(node, t);
+            counters[j].add(&c);
+            next_group[j] += 1;
+        }
+    }
+
+    jobs.iter()
+        .enumerate()
+        .map(|(j, job)| {
+            let outs = job
+                .graph
+                .outputs
+                .iter()
+                .map(|o| values[j][o].clone())
+                .collect();
+            (outs, counters[j])
+        })
+        .collect()
 }
 
 /// Execute the whole plan sequentially (bit-identical to
@@ -655,7 +985,8 @@ pub fn execute_plan(
 
 /// Execute the whole plan: pipeline groups run tiled + online over their
 /// launch grid with `par` worker threads; other groups execute as single
-/// kernels. Returns (outputs, counters).
+/// kernels. Returns (outputs, counters). This is the one-job case of
+/// [`execute_plans_batched`].
 pub fn execute_plan_par(
     g: &Graph,
     plan: &Plan,
@@ -663,87 +994,15 @@ pub fn execute_plan_par(
     tile: TileConfig,
     par: &Parallelism,
 ) -> (Vec<Tensor>, Counters) {
-    let an = analyze(g);
-    let mut values: HashMap<NodeId, Tensor> = HashMap::new();
-    let mut counters = Counters::default();
-    let cons = g.consumers();
-    let outputs: HashSet<NodeId> = g.outputs.iter().copied().collect();
-
-    for (gi, grp) in plan.groups.iter().enumerate() {
-        counters.launches += 1;
-        match &grp.kind {
-            GroupKind::Pipeline(p) => {
-                // L2 is not assumed warm across kernels: fresh seen-set
-                // per kernel group.
-                let mut seen: HashSet<(u32, Region)> = HashSet::new();
-                let t = {
-                    let sh = PipelineShared {
-                        g,
-                        inputs,
-                        values: &values,
-                    };
-                    run_pipeline(&sh, &an, p, tile, par, &mut seen, &mut counters)
-                };
-                values.insert(p.out, t);
-            }
-            _ => {
-                // Single-kernel group: evaluate members in order using a
-                // local scratch; count boundary traffic only.
-                let members: HashSet<NodeId> = grp.nodes.iter().copied().collect();
-                let mut scratch: HashMap<NodeId, Tensor> = HashMap::new();
-                let mut read_seen: HashSet<NodeId> = HashSet::new();
-                for &n in &grp.nodes {
-                    let node = g.node(n);
-                    let operand_ids = node.op.input_ids();
-                    let mut operand_tensors: Vec<Tensor> = vec![];
-                    for &oid in &operand_ids {
-                        let t = if let Some(t) = scratch.get(&oid) {
-                            t.clone()
-                        } else if let Some(t) = values.get(&oid) {
-                            if !members.contains(&oid) && read_seen.insert(oid) {
-                                counters.read_elems(g.numel(oid));
-                            }
-                            t.clone()
-                        } else if let Op::Input { name } = &g.node(oid).op {
-                            if read_seen.insert(oid) {
-                                counters.read_elems(g.numel(oid));
-                            }
-                            inputs[name].clone()
-                        } else if matches!(
-                            g.node(oid).op,
-                            Op::Const { .. } | Op::Iota { .. }
-                        ) {
-                            // in-kernel generator (free unless eager)
-                            let t = eval_node(&g.node(oid).op, &g.node(oid).shape, &[]);
-                            scratch.insert(oid, t.clone());
-                            t
-                        } else {
-                            panic!("operand {oid:?} not available")
-                        };
-                        operand_tensors.push(t);
-                    }
-                    let refs: Vec<&Tensor> = operand_tensors.iter().collect();
-                    let t = eval_node(&node.op, &node.shape, &refs);
-                    counters.flops += node_flops(g, n);
-                    scratch.insert(n, t);
-                }
-                // Materialize externally-visible nodes.
-                for &n in &grp.nodes {
-                    let external = outputs.contains(&n)
-                        || cons[n.0 as usize]
-                            .iter()
-                            .any(|c| plan.assignment[c.0 as usize] != gi);
-                    if external {
-                        counters.write_elems(g.numel(n));
-                        values.insert(n, scratch[&n].clone());
-                    }
-                }
-            }
-        }
-    }
-
-    let outs = g.outputs.iter().map(|o| values[o].clone()).collect();
-    (outs, counters)
+    let job = PlanJob {
+        graph: g,
+        plan,
+        inputs,
+        tile,
+    };
+    execute_plans_batched(std::slice::from_ref(&job), par)
+        .pop()
+        .expect("one job in, one result out")
 }
 
 #[cfg(test)]
@@ -967,5 +1226,65 @@ mod tests {
                 assert_eq!(seq_c, par_c, "{} threads={threads}", v.name());
             }
         }
+    }
+
+    #[test]
+    fn batched_multi_plan_matches_individual_execution() {
+        // Mixed batch: two Flashlight pipelines + one multi-kernel
+        // TorchCompile plan, all through the shared work queue. Every
+        // job's outputs AND counters must be bit-equal to running that
+        // plan alone, at any thread count.
+        let shape = AttnShape {
+            batch: 1,
+            rows: 1,
+            heads_q: 2,
+            heads_kv: 2,
+            seq: 32,
+            head_dim: 8,
+        };
+        let tile = TileConfig {
+            block_q: 8,
+            block_k: 8,
+            l2_capacity: 40 << 20,
+        };
+        let specs = [
+            (Variant::Causal, FusionMode::Flashlight),
+            (Variant::Causal, FusionMode::TorchCompile),
+            (Variant::DiffAttn { lambda: 0.5 }, FusionMode::Flashlight),
+        ];
+        let graphs: Vec<Graph> = specs.iter().map(|(v, _)| build(*v, &shape)).collect();
+        let inputs: Vec<HashMap<String, Tensor>> = graphs
+            .iter()
+            .enumerate()
+            .map(|(i, g)| synthetic_inputs(g, 21 + i as u64))
+            .collect();
+        let plans: Vec<Plan> = graphs
+            .iter()
+            .zip(&specs)
+            .map(|(g, (_, m))| plan(g, *m))
+            .collect();
+        let jobs: Vec<PlanJob> = (0..graphs.len())
+            .map(|i| PlanJob {
+                graph: &graphs[i],
+                plan: &plans[i],
+                inputs: &inputs[i],
+                tile,
+            })
+            .collect();
+        for threads in [1, 3] {
+            let batched = execute_plans_batched(&jobs, &Parallelism::with_threads(threads));
+            assert_eq!(batched.len(), jobs.len());
+            for i in 0..graphs.len() {
+                let (want, c_want) = execute_plan(&graphs[i], &plans[i], &inputs[i], tile);
+                assert_eq!(batched[i].0, want, "job {i} threads={threads}");
+                assert_eq!(batched[i].1, c_want, "job {i} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_empty_job_list_is_fine() {
+        let out = execute_plans_batched(&[], &Parallelism::with_threads(4));
+        assert!(out.is_empty());
     }
 }

@@ -1,11 +1,15 @@
 //! The paper's compiler passes: structural fusion with dimension demotion
 //! (§3.2), semantic fusion via the algebraic online-softmax rewrite
 //! (§3.3/3.4), and tiling-aware dimension elimination (§3.5), composed by
-//! the planner into kernel-group partitions.
+//! the planner into kernel-group partitions — plus the serving-side
+//! [`PlanCache`] that memoizes plans and tile autotune results per shape
+//! class (the FlexAttention compiled-artifact-caching pattern, §4.4).
 
+mod cache;
 mod online;
 mod planner;
 
+pub use cache::{autotune_tile, bucket_len, CacheStats, CachedPlan, PlanCache, PlanKey};
 pub use online::{
     online_reduce, online_reduce_blocked, stable_reduce, ExpDiag, ExpHom, ExpReal,
     Mat2, OnlineRowState, Real, Ring,

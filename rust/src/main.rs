@@ -16,13 +16,17 @@ fn usage() -> ! {
          \x20 run <variant> [--seq N] [--batch N] [--threads N]\n\
          \x20     execute fused vs reference and compare numerics/traffic\n\
          \x20     (--threads > 1 also cross-checks the parallel engine)\n\
-         \x20 bench <fig2..fig7|alphafold|masks|ablations|engine|all>\n\
+         \x20 bench <fig2..fig7|alphafold|masks|ablations|engine|serve_engine|all>\n\
          \x20       [--gpu h100|a100] [--threads N]\n\
          \x20     regenerate a paper figure's series (CSV to bench_results/);\n\
          \x20     `engine` measures seq-vs-parallel executor wall clock\n\
-         \x20     (default threads: FLASHLIGHT_THREADS env, else all cores)\n\
-         \x20 serve [--requests N] [--backend sim|pjrt] [--threads N]\n\
-         \x20     run the serving coordinator on a Mooncake-like trace\n\
+         \x20     (default threads: FLASHLIGHT_THREADS env, else all cores);\n\
+         \x20     `serve_engine` measures engine-backend serve throughput\n\
+         \x20     at 1/2/all threads with the bit-identity gate\n\
+         \x20 serve [--requests N] [--backend sim|engine|pjrt] [--threads N]\n\
+         \x20     run the serving coordinator on a Mooncake-like trace;\n\
+         \x20     `engine` executes requests on the real tiled engine\n\
+         \x20     (slot-paged KV, plan cache, batched decode)\n\
          \x20 selftest\n\
          \x20     load + execute every AOT artifact and cross-check"
     );

@@ -13,6 +13,9 @@ use super::metrics::RequestMetrics;
 pub trait Backend {
     fn n_slots(&self) -> usize;
     fn max_context(&self) -> usize;
+    /// Called once by [`run_trace`] before any work: backends that
+    /// execute real plans pick up [`SchedulerConfig::parallelism`] here.
+    fn configure(&mut self, _cfg: &SchedulerConfig) {}
     /// Run a prefill for `tokens` in `slot`; returns (elapsed seconds,
     /// first generated token). The request is passed for conversation
     /// identity (prefix-cache reuse across turns).
@@ -42,11 +45,12 @@ pub struct SchedulerConfig {
     /// Max prefills admitted per scheduling step (vLLM default: prefill
     /// priority, one at a time keeps TTFT fair under load).
     pub max_prefills_per_step: usize,
-    /// Host-side execution parallelism, carried for backends that run
-    /// plans on the tiled engine. Neither built-in backend consumes it
-    /// yet (the simulated backend models a fully parallel device; the
-    /// PJRT backend delegates threading to XLA) — see ROADMAP
-    /// "multi-request batching" for the serve-side work that will.
+    /// Host-side execution parallelism, handed to the backend via
+    /// [`Backend::configure`]. The engine backend
+    /// ([`crate::serve::EngineBackend`]) schedules every active slot's
+    /// grid blocks over a worker pool of this many threads; the
+    /// simulated backend models a fully parallel device and the PJRT
+    /// backend delegates threading to XLA, so both ignore it.
     pub parallelism: crate::exec::Parallelism,
 }
 
@@ -75,6 +79,7 @@ pub fn run_trace(
     cfg: SchedulerConfig,
     vocab: usize,
 ) -> anyhow::Result<Vec<RequestMetrics>> {
+    backend.configure(&cfg);
     let n_slots = backend.n_slots();
     let mut clock = 0.0f64;
     let mut pending: VecDeque<Request> = trace.to_vec().into();

@@ -1,0 +1,499 @@
+//! The engine-backed serving backend: requests execute on the *real*
+//! fused tiled engine, not the cost model.
+//!
+//! Three pieces make a decode step cheap and batched:
+//!
+//! * **Slot-paged KV** ([`super::kv::PagedKv`]) — one page pool shared
+//!   across slots; appends are in-place, gathers produce the padded
+//!   bucketed tensors the cached plans expect.
+//! * **Plan cache** ([`crate::fusion::PlanCache`]) — fusion plans (and
+//!   their autotuned tile schedules) are keyed by shape class (variant +
+//!   heads + bucketed lengths), so steady-state decode re-plans nothing:
+//!   a step is a cache hit returning an `Arc<CachedPlan>`.
+//! * **Cross-request grid scheduling**
+//!   ([`crate::exec::execute_plans_batched`]) — every active slot's
+//!   decode step contributes its `LogicalGrid` blocks as tagged work
+//!   items to one shared worker pool, so `SchedulerConfig::parallelism`
+//!   is filled by the *batch*, not by any single request's (tiny) grid.
+//!
+//! Determinism: K/V/q embeddings are pure functions of (token, position),
+//! plans are shape-keyed, and the batched executor merges per plan in
+//! block order — so the token stream is bitwise identical whether slots
+//! decode together or one at a time, at any thread count (asserted by
+//! the tests below and gated in the serve bench).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::exec::{execute_plans_batched, Parallelism, PlanJob, Tensor};
+use crate::fusion::{bucket_len, CacheStats, CachedPlan, PlanCache, PlanKey};
+use crate::tracegen::{Request, Rng};
+use crate::variants::{build_serving, AttnShape, Variant};
+
+use super::engine::{Backend, SchedulerConfig};
+use super::kv::{PagedKv, DEFAULT_BLOCK_TOKENS};
+
+/// The tiny attention model the engine backend serves: one attention
+/// layer per step with deterministic token embeddings (the repo's scope
+/// is the attention path; the transformer backbone stays out of it).
+#[derive(Debug, Clone, Copy)]
+pub struct EngineModel {
+    pub variant: Variant,
+    pub heads_q: usize,
+    pub heads_kv: usize,
+    pub head_dim: usize,
+    pub vocab: usize,
+}
+
+impl EngineModel {
+    /// Small GQA config: fast enough to serve whole traces in tests.
+    pub fn tiny() -> Self {
+        EngineModel {
+            variant: Variant::Causal,
+            heads_q: 4,
+            heads_kv: 2,
+            head_dim: 16,
+            vocab: 512,
+        }
+    }
+}
+
+const K_SALT: u64 = 0x4B56_0001;
+const V_SALT: u64 = 0x4B56_0002;
+const Q_SALT: u64 = 0x4B56_0003;
+
+/// Deterministic per-(token, position) embedding in [-0.5, 0.5).
+fn embed(salt: u64, token: u32, pos: usize, n: usize) -> Vec<f32> {
+    let seed = salt
+        ^ ((token as u64) << 20)
+        ^ (pos as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut rng = Rng::new(seed | 1);
+    (0..n).map(|_| (rng.f64() - 0.5) as f32).collect()
+}
+
+/// Deterministic greedy "sampler": folds the attention output bits, so
+/// bitwise-identical outputs yield identical tokens (FNV-1a).
+fn sample_token(data: &[f32], vocab: usize) -> u32 {
+    let mut h: u32 = 0x811C_9DC5;
+    for &x in data {
+        h ^= x.to_bits();
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h % vocab.max(1) as u32
+}
+
+pub struct EngineBackend {
+    pub model: EngineModel,
+    n_slots: usize,
+    max_context: usize,
+    kv: PagedKv,
+    last_token: Vec<u32>,
+    plans: PlanCache,
+    par: Parallelism,
+    log_tokens: bool,
+    /// Every emitted token in backend-call order (prefill first tokens,
+    /// then decode tokens batch by batch) — the serve bench's
+    /// bit-identity gate compares these across thread counts. Only
+    /// populated after [`Self::enable_token_log`]; off by default so
+    /// long serving runs stay O(1) in generated tokens.
+    pub token_log: Vec<u32>,
+}
+
+impl EngineBackend {
+    pub fn new(model: EngineModel, n_slots: usize, max_context: usize, par: Parallelism) -> Self {
+        EngineBackend {
+            model,
+            n_slots,
+            max_context,
+            kv: PagedKv::new(
+                n_slots,
+                DEFAULT_BLOCK_TOKENS,
+                model.heads_kv,
+                model.head_dim,
+            ),
+            last_token: vec![0; n_slots],
+            plans: PlanCache::new(64),
+            par,
+            log_tokens: false,
+            token_log: Vec::new(),
+        }
+    }
+
+    /// The serving configuration shared by `serve --backend engine` and
+    /// the serve-throughput bench, so the CLI path and the recorded perf
+    /// trajectory always measure the same setup.
+    pub fn default_server(par: Parallelism) -> Self {
+        EngineBackend::new(EngineModel::tiny(), 8, 1024, par)
+    }
+
+    /// Record every emitted token into [`Self::token_log`] (the serve
+    /// bench's bit-identity gate needs the full stream).
+    pub fn enable_token_log(&mut self) {
+        self.log_tokens = true;
+    }
+
+    fn log_token(&mut self, tok: u32) {
+        if self.log_tokens {
+            self.token_log.push(tok);
+        }
+    }
+
+    /// Plan-cache hit/miss counters (surfaced in serving metrics).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.plans.stats()
+    }
+
+    /// KV page-pool occupancy: (allocated, free).
+    pub fn kv_pages(&self) -> (usize, usize) {
+        (self.kv.allocated_pages(), self.kv.free_pages())
+    }
+
+    /// The execution parallelism in effect (set via [`Backend::configure`]).
+    pub fn parallelism(&self) -> Parallelism {
+        self.par
+    }
+
+    /// Fetch (or build + autotune) the plan for one shape class.
+    fn plan_entry(&mut self, tag: &'static str, q_len: usize, kv_len: usize) -> Arc<CachedPlan> {
+        let m = self.model;
+        let key = PlanKey {
+            tag,
+            variant: m.variant.name(),
+            heads_q: m.heads_q,
+            heads_kv: m.heads_kv,
+            head_dim: m.head_dim,
+            q_len,
+            kv_len,
+        };
+        self.plans.get_or_build(key, || {
+            let shape = AttnShape {
+                batch: 1,
+                rows: 1,
+                heads_q: m.heads_q,
+                heads_kv: m.heads_kv,
+                seq: kv_len,
+                head_dim: m.head_dim,
+            };
+            build_serving(m.variant, &shape, q_len)
+        })
+    }
+
+    /// Assemble the engine inputs for one slot: gathered padded K/V plus
+    /// the runtime `kv_len` / `q_off` scalars.
+    fn attn_inputs(
+        &self,
+        slot: usize,
+        q: Tensor,
+        bucket: usize,
+        len: usize,
+        q_off: usize,
+    ) -> HashMap<String, Tensor> {
+        let (hkv, d) = (self.model.heads_kv, self.model.head_dim);
+        let mut kbuf = Vec::new();
+        let mut vbuf = Vec::new();
+        self.kv.gather(slot, bucket, &mut kbuf, &mut vbuf);
+        let mut m = HashMap::new();
+        m.insert("q".to_string(), q);
+        m.insert(
+            "k".to_string(),
+            Tensor::from_vec(&[1, hkv, 1, bucket, d], kbuf),
+        );
+        m.insert(
+            "v".to_string(),
+            Tensor::from_vec(&[1, hkv, 1, bucket, d], vbuf),
+        );
+        m.insert(
+            "kv_len".to_string(),
+            Tensor::from_vec(&[1, 1, 1, 1, 1], vec![len as f32]),
+        );
+        m.insert(
+            "q_off".to_string(),
+            Tensor::from_vec(&[1, 1, 1, 1, 1], vec![q_off as f32]),
+        );
+        m
+    }
+}
+
+impl Backend for EngineBackend {
+    fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    fn max_context(&self) -> usize {
+        self.max_context
+    }
+
+    fn configure(&mut self, cfg: &SchedulerConfig) {
+        self.par = cfg.parallelism;
+    }
+
+    fn prefill(
+        &mut self,
+        slot: usize,
+        _req: &Request,
+        tokens: &[u32],
+    ) -> anyhow::Result<(f64, u32)> {
+        let t0 = Instant::now();
+        anyhow::ensure!(self.kv.is_empty(slot), "prefill into a non-empty slot {slot}");
+        anyhow::ensure!(
+            tokens.len() <= self.max_context,
+            "prompt of {} tokens exceeds context window {}",
+            tokens.len(),
+            self.max_context
+        );
+        let bos = [0u32];
+        let toks: &[u32] = if tokens.is_empty() { &bos } else { tokens };
+        let (hq, d) = (self.model.heads_q, self.model.head_dim);
+        let stride = self.kv.token_stride();
+        for (pos, &tok) in toks.iter().enumerate() {
+            let k = embed(K_SALT, tok, pos, stride);
+            let v = embed(V_SALT, tok, pos, stride);
+            self.kv.append(slot, &k, &v);
+        }
+        let s = toks.len();
+        let bucket = bucket_len(s, self.kv.block_tokens());
+        let entry = self.plan_entry("prefill", bucket, bucket);
+        // q rows: one per prompt token (head-major, zero-padded rows).
+        let mut q = vec![0f32; hq * bucket * d];
+        for (pos, &tok) in toks.iter().enumerate() {
+            let qe = embed(Q_SALT, tok, pos, hq * d); // [hq][d]
+            for h in 0..hq {
+                let dst = (h * bucket + pos) * d;
+                q[dst..dst + d].copy_from_slice(&qe[h * d..(h + 1) * d]);
+            }
+        }
+        let q = Tensor::from_vec(
+            &[1, self.model.heads_kv, hq / self.model.heads_kv, bucket, d],
+            q,
+        );
+        let inputs = self.attn_inputs(slot, q, bucket, s, 0);
+        let (outs, _c) = entry
+            .plan
+            .execute(&entry.graph, &inputs, entry.tile, self.par);
+        // First token from the last valid q row across all heads.
+        let out = &outs[0]; // [1, hkv, g, bucket, d] == [hq][bucket][d]
+        let mut row = Vec::with_capacity(hq * d);
+        for h in 0..hq {
+            let off = (h * bucket + (s - 1)) * d;
+            row.extend_from_slice(&out.data[off..off + d]);
+        }
+        let tok = sample_token(&row, self.model.vocab);
+        self.last_token[slot] = tok;
+        self.log_token(tok);
+        Ok((t0.elapsed().as_secs_f64(), tok))
+    }
+
+    fn decode(&mut self, active: &[usize]) -> anyhow::Result<(f64, Vec<u32>)> {
+        let t0 = Instant::now();
+        let (hq, hkv, d) = (
+            self.model.heads_q,
+            self.model.heads_kv,
+            self.model.head_dim,
+        );
+        let stride = self.kv.token_stride();
+        // Phase 1 (per slot, scheduler thread): append the pending
+        // token's K/V, gather padded inputs, fetch the bucketed plan.
+        let mut per_slot: Vec<(Arc<CachedPlan>, HashMap<String, Tensor>)> =
+            Vec::with_capacity(active.len());
+        for &slot in active {
+            anyhow::ensure!(!self.kv.is_empty(slot), "decoding an unprefilled slot {slot}");
+            let tok = self.last_token[slot];
+            let pos = self.kv.len(slot);
+            anyhow::ensure!(pos < self.max_context, "slot {slot} exceeds context");
+            let k = embed(K_SALT, tok, pos, stride);
+            let v = embed(V_SALT, tok, pos, stride);
+            self.kv.append(slot, &k, &v);
+            let len = pos + 1;
+            let bucket = bucket_len(len, self.kv.block_tokens());
+            let entry = self.plan_entry("decode", 1, bucket);
+            // q for the single new position: [1, hkv, g, 1, d] is the
+            // same flat layout as embed's [hq][d].
+            let q = Tensor::from_vec(
+                &[1, hkv, hq / hkv, 1, d],
+                embed(Q_SALT, tok, pos, hq * d),
+            );
+            let inputs = self.attn_inputs(slot, q, bucket, len, len - 1);
+            per_slot.push((entry, inputs));
+        }
+        // Phase 2: all slots' grid blocks through ONE shared worker pool.
+        let jobs: Vec<PlanJob> = per_slot
+            .iter()
+            .map(|(e, inp)| PlanJob {
+                graph: &e.graph,
+                plan: &e.plan,
+                inputs: inp,
+                tile: e.tile,
+            })
+            .collect();
+        let results = execute_plans_batched(&jobs, &self.par);
+        drop(jobs);
+        let mut toks = Vec::with_capacity(active.len());
+        for (i, &slot) in active.iter().enumerate() {
+            let out = &results[i].0[0];
+            let tok = sample_token(&out.data, self.model.vocab);
+            self.last_token[slot] = tok;
+            self.log_token(tok);
+            toks.push(tok);
+        }
+        Ok((t0.elapsed().as_secs_f64(), toks))
+    }
+
+    fn release(&mut self, slot: usize) {
+        self.kv.release(slot);
+        self.last_token[slot] = 0;
+    }
+
+    fn is_virtual_time(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::engine::{prompt_tokens, run_trace};
+    use crate::tracegen::{generate, TraceConfig};
+
+    fn req(id: usize, input_tokens: usize) -> Request {
+        Request {
+            id,
+            arrival_s: 0.0,
+            input_tokens,
+            output_tokens: 8,
+            conversation: id,
+            turn: 0,
+        }
+    }
+
+    fn backend(par: Parallelism) -> EngineBackend {
+        EngineBackend::new(EngineModel::tiny(), 4, 1024, par)
+    }
+
+    #[test]
+    fn batched_decode_is_bitwise_identical_to_sequential_requests() {
+        // N slots decoded together must emit exactly the tokens each
+        // request produces when served alone — at multiple thread counts
+        // (the issue's batched-decode parity gate).
+        let prompts = [9usize, 23, 40];
+        let steps = 5;
+        let solo: Vec<Vec<u32>> = prompts
+            .iter()
+            .enumerate()
+            .map(|(i, &plen)| {
+                let mut b = backend(Parallelism::sequential());
+                let r = req(i, plen);
+                let toks = prompt_tokens(&r, b.model.vocab);
+                let (_, first) = b.prefill(0, &r, &toks).unwrap();
+                let mut out = vec![first];
+                for _ in 0..steps {
+                    let (_, t) = b.decode(&[0]).unwrap();
+                    out.push(t[0]);
+                }
+                out
+            })
+            .collect();
+        for threads in [1, 2, 4] {
+            let mut b = backend(Parallelism::with_threads(threads));
+            let mut outs: Vec<Vec<u32>> = Vec::new();
+            for (i, &plen) in prompts.iter().enumerate() {
+                let r = req(i, plen);
+                let toks = prompt_tokens(&r, b.model.vocab);
+                let (_, first) = b.prefill(i, &r, &toks).unwrap();
+                outs.push(vec![first]);
+            }
+            for _ in 0..steps {
+                let (_, ts) = b.decode(&[0, 1, 2]).unwrap();
+                for (i, t) in ts.iter().enumerate() {
+                    outs[i].push(*t);
+                }
+            }
+            assert_eq!(outs, solo, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn plan_cache_hit_rate_exceeds_90_percent_at_steady_state() {
+        let mut b = backend(Parallelism::sequential());
+        for (i, plen) in [40usize, 55, 62, 70].into_iter().enumerate() {
+            let r = req(i, plen);
+            let toks = prompt_tokens(&r, b.model.vocab);
+            b.prefill(i, &r, &toks).unwrap();
+        }
+        for _ in 0..60 {
+            b.decode(&[0, 1, 2, 3]).unwrap();
+        }
+        let s = b.cache_stats();
+        assert!(
+            s.hit_rate() > 0.9,
+            "steady-state decode hit rate {:.3} too low: {s:?}",
+            s.hit_rate()
+        );
+    }
+
+    #[test]
+    fn engine_backend_completes_a_generated_trace() {
+        let trace = generate(&TraceConfig {
+            n_requests: 8,
+            rate: 100.0,
+            input_mu: 3.0,
+            input_sigma: 0.5,
+            mean_output: 4.0,
+            max_input: 48,
+            max_output: 6,
+            ..Default::default()
+        });
+        let mut b = backend(Parallelism::sequential());
+        let vocab = b.model.vocab;
+        let cfg = SchedulerConfig {
+            parallelism: Parallelism::with_threads(2),
+            ..Default::default()
+        };
+        let done = run_trace(&mut b, &trace, cfg, vocab).unwrap();
+        assert_eq!(done.len(), trace.len());
+        for (m, r) in done.iter().zip(&trace) {
+            assert_eq!(m.id, r.id);
+            assert_eq!(m.itls.len(), r.output_tokens.max(1) - 1);
+        }
+        // SchedulerConfig.parallelism reached the backend (satellite:
+        // --threads flows end to end through configure()).
+        assert_eq!(b.parallelism().num_threads, 2);
+        // All slots were released: every page is back on the free list.
+        let (allocated, free) = b.kv_pages();
+        assert_eq!(allocated, free);
+    }
+
+    #[test]
+    fn kv_pages_are_shared_and_released() {
+        let mut b = backend(Parallelism::sequential());
+        let r = req(0, 100);
+        let toks = prompt_tokens(&r, b.model.vocab);
+        b.prefill(0, &r, &toks).unwrap();
+        let (alloc_after_prefill, _) = b.kv_pages();
+        assert_eq!(alloc_after_prefill, 2, "100 tokens = 2 pages of 64");
+        b.release(0);
+        let (_, free) = b.kv_pages();
+        assert_eq!(free, 2);
+        // A new request reuses the freed pages.
+        b.prefill(1, &r, &toks).unwrap();
+        let (alloc2, free2) = b.kv_pages();
+        assert_eq!(alloc2, 2);
+        assert_eq!(free2, 0);
+    }
+
+    #[test]
+    fn tokens_are_deterministic_across_backends() {
+        let mk = || {
+            let mut b = backend(Parallelism::sequential());
+            b.enable_token_log();
+            let r = req(7, 33);
+            let toks = prompt_tokens(&r, b.model.vocab);
+            b.prefill(0, &r, &toks).unwrap();
+            for _ in 0..4 {
+                b.decode(&[0]).unwrap();
+            }
+            b.token_log
+        };
+        assert_eq!(mk(), mk());
+    }
+}

@@ -1,0 +1,246 @@
+//! Slot-paged KV tensors: one page pool shared across all serving slots.
+//!
+//! FlashInfer-style paged KV (arXiv 2501.01005): a slot's K/V cache is a
+//! list of fixed-size *pages* ([`PagedKv::block_tokens`] tokens each)
+//! drawn from a pool shared by every slot. Decode steps append one
+//! token's K/V in place — a new page is taken from the free list only at
+//! block boundaries, so steady-state appends never reallocate and
+//! releasing a request returns its pages for immediate reuse by any
+//! other slot. Page size doubles as the plan-cache bucket granule
+//! ([`crate::fusion::bucket_len`]): a gathered KV tensor is always a
+//! whole number of pages, which is exactly the padded shape the cached
+//! serving plans expect.
+//!
+//! Layout: within a page, token-major `[token][head][d]` (an append is
+//! one contiguous write); gathers produce the engine's head-major
+//! `[head][token][d]` layout with zero fill for the padded tail.
+
+/// Default page size in tokens — also the serving bucket granule.
+pub const DEFAULT_BLOCK_TOKENS: usize = 64;
+
+struct Page {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+struct SlotKv {
+    pages: Vec<usize>,
+    len: usize,
+}
+
+pub struct PagedKv {
+    block_tokens: usize,
+    heads: usize,
+    head_dim: usize,
+    pages: Vec<Page>,
+    free: Vec<usize>,
+    slots: Vec<SlotKv>,
+}
+
+impl PagedKv {
+    pub fn new(n_slots: usize, block_tokens: usize, heads: usize, head_dim: usize) -> Self {
+        PagedKv {
+            block_tokens: block_tokens.max(1),
+            heads,
+            head_dim,
+            pages: Vec::new(),
+            free: Vec::new(),
+            slots: (0..n_slots)
+                .map(|_| SlotKv {
+                    pages: Vec::new(),
+                    len: 0,
+                })
+                .collect(),
+        }
+    }
+
+    /// Tokens per page (the serving bucket granule).
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Per-token K/V vector length (`heads * head_dim`).
+    pub fn token_stride(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    /// Tokens currently cached for `slot`.
+    pub fn len(&self, slot: usize) -> usize {
+        self.slots[slot].len
+    }
+
+    pub fn is_empty(&self, slot: usize) -> bool {
+        self.slots[slot].len == 0
+    }
+
+    /// Pages ever allocated (the pool's high-water mark).
+    pub fn allocated_pages(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Pages currently on the free list.
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Append one token's K/V (`[head][d]` layout, `token_stride()`
+    /// floats each) to `slot`. Amortized allocation-free: a page is
+    /// taken from the free list (or freshly allocated) only every
+    /// `block_tokens` appends.
+    pub fn append(&mut self, slot: usize, k: &[f32], v: &[f32]) {
+        let stride = self.token_stride();
+        debug_assert_eq!(k.len(), stride);
+        debug_assert_eq!(v.len(), stride);
+        let len = self.slots[slot].len;
+        if len % self.block_tokens == 0 {
+            let cap = self.block_tokens * stride;
+            let pi = self.free.pop().unwrap_or_else(|| {
+                self.pages.push(Page {
+                    k: vec![0.0; cap],
+                    v: vec![0.0; cap],
+                });
+                self.pages.len() - 1
+            });
+            self.slots[slot].pages.push(pi);
+        }
+        let pi = *self.slots[slot].pages.last().expect("page just ensured");
+        let off = (len % self.block_tokens) * stride;
+        self.pages[pi].k[off..off + stride].copy_from_slice(k);
+        self.pages[pi].v[off..off + stride].copy_from_slice(v);
+        self.slots[slot].len = len + 1;
+    }
+
+    /// Gather `slot`'s cache into head-major `[head][padded_len][d]`
+    /// buffers (the engine's KV input layout), zero-filling positions
+    /// `>= len(slot)`. `padded_len` must be a bucketed length `>= len`.
+    pub fn gather(
+        &self,
+        slot: usize,
+        padded_len: usize,
+        k_out: &mut Vec<f32>,
+        v_out: &mut Vec<f32>,
+    ) {
+        let d = self.head_dim;
+        let stride = self.token_stride();
+        let sl = &self.slots[slot];
+        // A stale bucket (computed before an append) would silently drop
+        // the newest tokens; fail fast instead.
+        debug_assert!(
+            padded_len >= sl.len,
+            "gather with padded_len {padded_len} < cached len {}",
+            sl.len
+        );
+        let len = sl.len.min(padded_len);
+        k_out.clear();
+        v_out.clear();
+        k_out.reserve(self.heads * padded_len * d);
+        v_out.reserve(self.heads * padded_len * d);
+        for h in 0..self.heads {
+            for t in 0..len {
+                let page = &self.pages[sl.pages[t / self.block_tokens]];
+                let off = (t % self.block_tokens) * stride + h * d;
+                k_out.extend_from_slice(&page.k[off..off + d]);
+                v_out.extend_from_slice(&page.v[off..off + d]);
+            }
+            k_out.resize(k_out.len() + (padded_len - len) * d, 0.0);
+            v_out.resize(v_out.len() + (padded_len - len) * d, 0.0);
+        }
+    }
+
+    /// Free a slot's pages back to the shared pool.
+    pub fn release(&mut self, slot: usize) {
+        let pages = std::mem::take(&mut self.slots[slot].pages);
+        self.free.extend(pages);
+        self.slots[slot].len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn token_vec(seed: f32, stride: usize) -> Vec<f32> {
+        (0..stride).map(|i| seed + i as f32).collect()
+    }
+
+    #[test]
+    fn append_and_gather_round_trip_with_zero_padding() {
+        let (heads, d) = (2, 4);
+        let mut kv = PagedKv::new(2, 4, heads, d);
+        let stride = kv.token_stride();
+        for t in 0..6 {
+            let k = token_vec(100.0 + t as f32, stride);
+            let v = token_vec(200.0 + t as f32, stride);
+            kv.append(0, &k, &v);
+        }
+        assert_eq!(kv.len(0), 6);
+        let mut kb = Vec::new();
+        let mut vb = Vec::new();
+        kv.gather(0, 8, &mut kb, &mut vb);
+        assert_eq!(kb.len(), heads * 8 * d);
+        // head-major layout: [h][t][d]; token t of head h came from
+        // token_vec(100 + t)[h*d..]
+        for h in 0..heads {
+            for t in 0..8 {
+                let got = &kb[(h * 8 + t) * d..(h * 8 + t + 1) * d];
+                if t < 6 {
+                    let want: Vec<f32> =
+                        (0..d).map(|i| 100.0 + t as f32 + (h * d + i) as f32).collect();
+                    assert_eq!(got, &want[..], "h={h} t={t}");
+                } else {
+                    assert!(got.iter().all(|&x| x == 0.0), "padding must be zero");
+                }
+            }
+        }
+        assert_eq!(vb[(0 * 8 + 3) * d], 203.0);
+    }
+
+    #[test]
+    fn pages_grow_in_block_increments() {
+        let mut kv = PagedKv::new(1, 4, 1, 2);
+        let stride = kv.token_stride();
+        assert_eq!(kv.allocated_pages(), 0);
+        for t in 0..4 {
+            kv.append(0, &token_vec(t as f32, stride), &token_vec(t as f32, stride));
+        }
+        assert_eq!(kv.allocated_pages(), 1, "4 tokens fit one 4-token page");
+        kv.append(0, &token_vec(9.0, stride), &token_vec(9.0, stride));
+        assert_eq!(kv.allocated_pages(), 2, "5th token opens a second page");
+    }
+
+    #[test]
+    fn released_pages_are_reused_across_slots() {
+        let mut kv = PagedKv::new(2, 2, 1, 2);
+        let stride = kv.token_stride();
+        for _ in 0..4 {
+            kv.append(0, &token_vec(1.0, stride), &token_vec(1.0, stride));
+        }
+        assert_eq!(kv.allocated_pages(), 2);
+        kv.release(0);
+        assert_eq!(kv.len(0), 0);
+        assert_eq!(kv.free_pages(), 2);
+        // Slot 1 reuses the freed pages: no new allocation.
+        for _ in 0..4 {
+            kv.append(1, &token_vec(2.0, stride), &token_vec(2.0, stride));
+        }
+        assert_eq!(kv.allocated_pages(), 2, "pool must reuse freed pages");
+        assert_eq!(kv.free_pages(), 0);
+        // And the reused pages carry the new values, not the old ones.
+        let (mut kb, mut vb) = (Vec::new(), Vec::new());
+        kv.gather(1, 4, &mut kb, &mut vb);
+        assert!(kb.iter().take(4 * 2).all(|&x| x >= 2.0));
+    }
+
+    #[test]
+    fn gather_reuses_caller_buffers() {
+        let mut kv = PagedKv::new(1, 4, 1, 2);
+        let stride = kv.token_stride();
+        kv.append(0, &token_vec(1.0, stride), &token_vec(1.0, stride));
+        let mut kb = Vec::with_capacity(64);
+        let mut vb = Vec::with_capacity(64);
+        let cap = kb.capacity();
+        kv.gather(0, 4, &mut kb, &mut vb);
+        assert_eq!(kb.capacity(), cap, "gather must not grow a large buffer");
+        assert_eq!(kb.len(), 4 * 2);
+    }
+}

@@ -1,14 +1,20 @@
 //! Serving stack (paper §4.4): vLLM-style coordinator, simulated
-//! LLaMa-3.2-1B backend for Fig 5, and the real PJRT backend over the
-//! tiny AOT-compiled model.
+//! LLaMa-3.2-1B backend for Fig 5, the engine backend that executes
+//! requests on the real fused tiled engine (slot-paged KV + plan cache +
+//! cross-request grid scheduling — see `serve/README.md`), and the PJRT
+//! backend over the tiny AOT-compiled model.
 
 pub mod engine;
+pub mod engine_backend;
+pub mod kv;
 pub mod metrics;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod sim;
 
 pub use engine::{run_trace, Backend, SchedulerConfig};
+pub use engine_backend::{EngineBackend, EngineModel};
+pub use kv::PagedKv;
 pub use metrics::{summarize, RequestMetrics, Summary};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
@@ -130,10 +136,25 @@ pub fn bench_prefix_caching(spec: &GpuSpec) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `flashlight serve` CLI: run the coordinator on a trace with either
-/// the simulated backend or the real PJRT backend (fused vs naive).
-/// `par` is handed to backends that execute real plans (see
-/// [`SchedulerConfig::parallelism`]).
+/// Trace sized for the engine backend: prompt buckets the real tiled
+/// executor prefills comfortably on CPU, with a decode-heavy tail.
+pub fn engine_trace(n: usize) -> Vec<crate::tracegen::Request> {
+    generate(&TraceConfig {
+        n_requests: n,
+        rate: 50.0,
+        input_mu: 4.0, // ~55 tokens median prompt
+        input_sigma: 0.6,
+        mean_output: 10.0,
+        max_input: 192,
+        max_output: 24,
+        ..Default::default()
+    })
+}
+
+/// `flashlight serve` CLI: run the coordinator on a trace with the
+/// simulated backend, the real tiled-engine backend, or the PJRT
+/// backend (fused vs naive). `par` is handed to backends that execute
+/// real plans (see [`SchedulerConfig::parallelism`]).
 pub fn cli_serve(
     n_requests: usize,
     backend: &str,
@@ -146,9 +167,49 @@ pub fn cli_serve(
             let _ = (n_requests, par);
             Ok(())
         }
+        "engine" => serve_engine(n_requests, par),
         "pjrt" => serve_pjrt(n_requests, par),
-        other => anyhow::bail!("unknown backend {other} (sim|pjrt)"),
+        other => anyhow::bail!("unknown backend {other} (sim|engine|pjrt)"),
     }
+}
+
+/// Real tiled-engine serving run: batched decode on the fused executor
+/// with slot-paged KV and the fusion plan cache.
+fn serve_engine(n_requests: usize, par: crate::exec::Parallelism) -> anyhow::Result<()> {
+    let trace = engine_trace(n_requests);
+    let mut b = EngineBackend::default_server(par);
+    let vocab = b.model.vocab;
+    let cfg = SchedulerConfig {
+        parallelism: par,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let done = run_trace(&mut b, &trace, cfg, vocab)?;
+    let s = summarize(&done);
+    let cs = b.cache_stats();
+    let (pages_alloc, pages_free) = b.kv_pages();
+    println!(
+        "engine backend: {} reqs in {:.2}s wall | TTFT mean {:.1} ms p99 {:.1} ms | \
+         ITL mean {:.2} ms | {:.1} tok/s | {} threads",
+        s.n_requests,
+        t0.elapsed().as_secs_f64(),
+        s.ttft_mean_s * 1e3,
+        s.ttft_p99_s * 1e3,
+        s.itl_mean_s * 1e3,
+        s.tokens_per_s,
+        b.parallelism().num_threads,
+    );
+    println!(
+        "plan cache: {} hits / {} misses ({:.1}% hit rate, {} entries) | \
+         kv pages: {} allocated, {} free",
+        cs.hits,
+        cs.misses,
+        cs.hit_rate() * 100.0,
+        cs.entries,
+        pages_alloc,
+        pages_free,
+    );
+    Ok(())
 }
 
 /// Real PJRT serving run (fused vs naive attention).

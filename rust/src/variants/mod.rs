@@ -364,6 +364,99 @@ fn build_evoformer(shape: &AttnShape) -> Graph {
     b.finish(&[o])
 }
 
+/// Serving-step attention (prefill and incremental decode share one
+/// builder): `q_len` query rows `[1*, Hkv, G, q_len, D]` attend over a
+/// KV cache `[B, Hkv, 1, S, D]` whose `S` is a *padded bucket*, with two
+/// runtime scalar inputs —
+///
+/// * `kv_len`: the valid cache length (padded columns `ki >= kv_len` are
+///   masked out), and
+/// * `q_off`: the absolute position of query row 0 (decode passes
+///   `kv_len - 1`; prefill passes 0),
+///
+/// so one fused plan serves *every* sequence length in a bucket: the
+/// shape class, not the exact length, keys the
+/// [`PlanCache`](crate::fusion::PlanCache). `shape.seq` is the bucketed
+/// KV length; `q_len == 1` builds the decode-step graph over cached K/V.
+pub fn build_serving(variant: Variant, shape: &AttnShape, q_len: usize) -> Graph {
+    let mut b = GraphBuilder::new(if q_len == 1 {
+        "serve_decode"
+    } else {
+        "serve_prefill"
+    });
+    let g = shape.group();
+    let q = b.input(
+        "q",
+        &[shape.batch, shape.heads_kv, g, q_len, shape.head_dim],
+    );
+    let k = b.input("k", &shape.kv_shape());
+    let v = b.input("v", &shape.kv_shape());
+    let len_in = b.input("kv_len", &[1, 1, 1, 1, 1]);
+    let off_in = b.input("q_off", &[1, 1, 1, 1, 1]);
+    let scale = 1.0 / (shape.head_dim as f32).sqrt();
+    let s0 = b.matmul_nt(q, k);
+    let mut s = b.mul_scalar(s0, scale);
+    let score_shape = b.shape(s).clone();
+    let rank = score_shape.len();
+    let (q_ax, k_ax) = (rank - 2, rank - 1);
+    if let Variant::Softcap { cap } = variant {
+        let inner = b.mul_scalar(s, 1.0 / cap);
+        let t = b.tanh(inner);
+        s = b.mul_scalar(t, cap);
+    }
+    let ki = b.iota(&score_shape, k_ax);
+    let len_b = b.broadcast(len_in, &score_shape);
+    let in_cache = b.cmp(CmpOp::Lt, ki, len_b);
+    // Absolute query position = q_off + row index (built lazily: vanilla
+    // attention would otherwise leave dead index nodes in the graph).
+    let qabs_of = |b: &mut GraphBuilder| {
+        let qi = b.iota(&score_shape, q_ax);
+        let off_b = b.broadcast(off_in, &score_shape);
+        b.add(qi, off_b)
+    };
+    let keep = match variant {
+        Variant::Vanilla => in_cache,
+        Variant::Causal | Variant::Softcap { .. } => {
+            let qabs = qabs_of(&mut b);
+            let causal = b.cmp(CmpOp::Le, ki, qabs);
+            b.cmp(CmpOp::And, causal, in_cache)
+        }
+        Variant::SlidingWindow { window } => {
+            let qabs = qabs_of(&mut b);
+            let causal = b.cmp(CmpOp::Le, ki, qabs);
+            let dist = b.sub(qabs, ki);
+            let win = b.constant(window as f32, &score_shape);
+            let near = b.cmp(CmpOp::Le, dist, win);
+            let cw = b.cmp(CmpOp::And, causal, near);
+            b.cmp(CmpOp::And, cw, in_cache)
+        }
+        Variant::Alibi => {
+            let qabs = qabs_of(&mut b);
+            // slope(h) = 2^(-8 (h+1) / H) over the flattened head axes,
+            // exactly as in the full builder; distances use absolute
+            // positions so decode matches the full causal graph.
+            let hkv = b.iota(&score_shape, 1);
+            let gi = b.iota(&score_shape, 2);
+            let h1 = b.mul_scalar(hkv, g as f32);
+            let h = b.add(h1, gi);
+            let h = b.add_scalar(h, 1.0);
+            let e = b.mul_scalar(h, -8.0 / shape.heads_q as f32);
+            let e = b.mul_scalar(e, std::f32::consts::LN_2);
+            let slope = b.exp(e);
+            let dist = b.sub(qabs, ki);
+            let penalty = b.mul(slope, dist);
+            s = b.sub(s, penalty);
+            let causal = b.cmp(CmpOp::Le, ki, qabs);
+            b.cmp(CmpOp::And, causal, in_cache)
+        }
+        other => panic!("variant {} has no serving builder", other.name()),
+    };
+    let s = b.masked_fill_neg(s, keep);
+    let w = b.softmax(s, k_ax);
+    let o = b.matmul(w, v);
+    b.finish(&[o])
+}
+
 /// All variants at paper-default parameters (window 256, prefix 256,
 /// softcap 20, lambda 0.5).
 pub fn paper_variants() -> Vec<Variant> {
@@ -464,6 +557,183 @@ mod tests {
         assert!(w < c, "window must be sparser than causal at long seq");
         let p = Variant::PrefixLm { prefix: 256 }.density(4096);
         assert!(p > c, "prefix adds visibility over causal");
+    }
+
+    #[test]
+    fn serving_graphs_fuse_into_one_pipeline() {
+        use crate::fusion::{plan, FusionMode};
+        let shape = AttnShape {
+            batch: 1,
+            rows: 1,
+            heads_q: 4,
+            heads_kv: 2,
+            seq: 64,
+            head_dim: 16,
+        };
+        for v in [
+            Variant::Vanilla,
+            Variant::Causal,
+            Variant::Softcap { cap: 20.0 },
+            Variant::SlidingWindow { window: 16 },
+            Variant::Alibi,
+        ] {
+            for q_len in [1, 64] {
+                let g = build_serving(v, &shape, q_len);
+                let p = plan(&g, FusionMode::Flashlight);
+                assert_eq!(
+                    p.num_pipelines(),
+                    1,
+                    "{} q_len={q_len}: {}",
+                    v.name(),
+                    p.describe(&g)
+                );
+                assert_eq!(p.groups.len(), 1, "{} q_len={q_len}", v.name());
+            }
+        }
+    }
+
+    #[test]
+    fn serving_decode_matches_full_attention_last_row() {
+        // A decode step over a *padded* KV bucket with runtime kv_len /
+        // q_off must reproduce the last row of the full variant graph —
+        // for every serving-supported variant, not just causal (the
+        // serving arms rebuild the score mods from runtime positions, so
+        // each needs its own numeric parity check).
+        let s_real = 24;
+        let shape = AttnShape {
+            batch: 1,
+            rows: 1,
+            heads_q: 4,
+            heads_kv: 2,
+            seq: s_real,
+            head_dim: 8,
+        };
+        for variant in [
+            Variant::Causal,
+            Variant::Softcap { cap: 20.0 },
+            Variant::SlidingWindow { window: 7 },
+            Variant::Alibi,
+            Variant::Vanilla,
+        ] {
+            // Vanilla serving attends the whole cache; the full vanilla
+            // graph's last row does the same, so it is comparable too.
+            let g_full = build(variant, &shape);
+            let inputs = synthetic_inputs(&g_full, 3);
+            let (full, _) = eval(&g_full, &inputs);
+
+            let padded = AttnShape { seq: 32, ..shape };
+            let g_dec = build_serving(variant, &padded, 1);
+            let (hkv, grp, d) = (shape.heads_kv, shape.group(), shape.head_dim);
+            // q = last row of the full q; k/v zero-padded to the bucket.
+            let qf = &inputs["q"]; // [1, hkv, g, s, d]
+            let mut qlast = Vec::with_capacity(hkv * grp * d);
+            for h in 0..hkv * grp {
+                let off = (h * s_real + (s_real - 1)) * d;
+                qlast.extend_from_slice(&qf.data[off..off + d]);
+            }
+            let pad_kv = |t: &Tensor| {
+                let mut out = vec![0f32; hkv * 32 * d];
+                for h in 0..hkv {
+                    let src = h * s_real * d;
+                    let dst = h * 32 * d;
+                    out[dst..dst + s_real * d]
+                        .copy_from_slice(&t.data[src..src + s_real * d]);
+                }
+                Tensor::from_vec(&[1, hkv, 1, 32, d], out)
+            };
+            let mut dec_inputs = HashMap::new();
+            dec_inputs.insert(
+                "q".to_string(),
+                Tensor::from_vec(&[1, hkv, grp, 1, d], qlast),
+            );
+            dec_inputs.insert("k".to_string(), pad_kv(&inputs["k"]));
+            dec_inputs.insert("v".to_string(), pad_kv(&inputs["v"]));
+            dec_inputs.insert(
+                "kv_len".to_string(),
+                Tensor::from_vec(&[1, 1, 1, 1, 1], vec![s_real as f32]),
+            );
+            dec_inputs.insert(
+                "q_off".to_string(),
+                Tensor::from_vec(&[1, 1, 1, 1, 1], vec![(s_real - 1) as f32]),
+            );
+            let (dec, _) = eval(&g_dec, &dec_inputs);
+            // Compare against row s_real-1 of the full output per head.
+            for h in 0..hkv * grp {
+                let want = &full[0].data[(h * s_real + (s_real - 1)) * d..][..d];
+                let got = &dec[0].data[h * d..(h + 1) * d];
+                for (a, b) in want.iter().zip(got) {
+                    assert!(
+                        (a - b).abs() < 1e-5,
+                        "{} head {h}: decode {b} vs full {a}",
+                        variant.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn serving_prefill_padding_is_inert() {
+        // The same prompt through two bucket sizes must agree on the
+        // valid rows: padded columns are masked, padded rows ignored.
+        let shape64 = AttnShape {
+            batch: 1,
+            rows: 1,
+            heads_q: 2,
+            heads_kv: 2,
+            seq: 64,
+            head_dim: 8,
+        };
+        let shape32 = AttnShape { seq: 32, ..shape64 };
+        let s_real = 20;
+        let d = 8;
+        let mk_inputs = |bucket: usize| {
+            let mut m = HashMap::new();
+            let fill = |seed: u64, rows: usize, bucket: usize| {
+                // deterministic values for the first s_real rows, zeros after
+                let src = Tensor::synthetic(&[rows, s_real, d], seed);
+                let mut out = vec![0f32; rows * bucket * d];
+                for h in 0..rows {
+                    out[h * bucket * d..h * bucket * d + s_real * d]
+                        .copy_from_slice(&src.data[h * s_real * d..(h + 1) * s_real * d]);
+                }
+                out
+            };
+            m.insert(
+                "q".to_string(),
+                Tensor::from_vec(&[1, 2, 1, bucket, d], fill(1, 2, bucket)),
+            );
+            m.insert(
+                "k".to_string(),
+                Tensor::from_vec(&[1, 2, 1, bucket, d], fill(2, 2, bucket)),
+            );
+            m.insert(
+                "v".to_string(),
+                Tensor::from_vec(&[1, 2, 1, bucket, d], fill(3, 2, bucket)),
+            );
+            m.insert(
+                "kv_len".to_string(),
+                Tensor::from_vec(&[1, 1, 1, 1, 1], vec![s_real as f32]),
+            );
+            m.insert(
+                "q_off".to_string(),
+                Tensor::from_vec(&[1, 1, 1, 1, 1], vec![0.0]),
+            );
+            m
+        };
+        let g32 = build_serving(Variant::Causal, &shape32, 32);
+        let g64 = build_serving(Variant::Causal, &shape64, 64);
+        let (o32, _) = eval(&g32, &mk_inputs(32));
+        let (o64, _) = eval(&g64, &mk_inputs(64));
+        for h in 0..2 {
+            for r in 0..s_real {
+                let a = &o32[0].data[(h * 32 + r) * d..][..d];
+                let b = &o64[0].data[(h * 64 + r) * d..][..d];
+                for (x, y) in a.iter().zip(b) {
+                    assert!((x - y).abs() < 1e-6, "head {h} row {r}: {x} vs {y}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,9 +1,12 @@
 #!/usr/bin/env bash
 # Perf-regression driver: build release, run the compiler-micro and
-# fig2/fig3 benches, and record the parallel-engine trajectory
-# (sequential vs parallel wall clock per variant) in
-# BENCH_parallel_engine.json at the repo root, so future PRs have a
-# baseline to compare against.
+# fig2/fig3 benches, and record two perf trajectories at the repo root
+# so future PRs have a baseline to compare against:
+#   BENCH_parallel_engine.json  sequential vs parallel executor wall
+#                               clock per variant
+#   BENCH_serve_engine.json     engine-backend serve throughput (tok/s
+#                               at 1, 2, and all threads, with the
+#                               bit-identity gate and plan-cache stats)
 #
 # Usage: scripts/bench_regress.sh [THREADS]
 #   THREADS  worker threads for the parallel runs (default: all cores)
@@ -29,5 +32,12 @@ echo "== parallel engine: seq vs par per variant -> BENCH_parallel_engine.json =
 cargo run --release -- bench engine --threads "$THREADS"
 
 echo
+echo "== serve throughput: engine backend at 1/2/all threads -> BENCH_serve_engine.json =="
+cargo run --release -- bench serve_engine
+
+echo
 echo "wrote $(pwd)/BENCH_parallel_engine.json:"
 cat BENCH_parallel_engine.json
+echo
+echo "wrote $(pwd)/BENCH_serve_engine.json:"
+cat BENCH_serve_engine.json
