@@ -13,7 +13,12 @@ fn main() -> anyhow::Result<()> {
 
     if std::path::Path::new("artifacts/manifest.txt").exists() && cfg!(feature = "pjrt") {
         println!("\n== real PJRT serving (tiny model, fused vs naive) ==");
-        serve::cli_serve(16, "pjrt", flashlight::exec::Parallelism::available())?;
+        serve::cli_serve(
+            16,
+            "pjrt",
+            flashlight::exec::Parallelism::available(),
+            serve::EngineServeOpts::default(),
+        )?;
     } else {
         println!("artifacts or pjrt feature missing; skipping real PJRT serving bench");
     }

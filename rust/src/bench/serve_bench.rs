@@ -1,14 +1,25 @@
 //! Serve-throughput bench: the engine backend under the continuous
-//! batcher at 1 / 2 / all threads, with the bit-identity gate baked in
-//! (every thread count must emit the identical token stream).
+//! batcher across the serving matrix — chunked prefill on/off and
+//! L ∈ {1, 4} attention layers — each at 1 / 2 / all threads with the
+//! bit-identity gate baked in (every thread count must emit the
+//! identical token stream for its configuration).
+//!
+//! Also gates the two per-step perf bugs this bench originally
+//! surfaced: after plan-cache warmup a chunk-scheduled run builds zero
+//! plans (so zero `analyze()` calls reach the executor — the per-run
+//! `analyze_calls` field records the global counter delta) and decode
+//! gathers perform zero allocations (`gather_reallocs == 0`, enforced).
 //!
 //! Writes `BENCH_serve_engine.json` (via `scripts/bench_regress.sh`) so
-//! the perf trajectory covers the serve side: engine-backend tokens/s
-//! per thread count plus plan-cache hit rates.
+//! the perf trajectory covers the serve side: tokens/s and TTFT
+//! p50/p99 per (layers, chunked, threads) cell, plus plan-cache and
+//! prefix-cache stats.
 
 use crate::bench::harness::{json_f64, JsonArray};
 use crate::exec::Parallelism;
-use crate::serve::{engine_trace, run_trace, summarize, EngineBackend, SchedulerConfig};
+use crate::serve::{
+    engine_trace, run_trace, summarize, Backend, EngineBackend, EngineModel, SchedulerConfig,
+};
 
 /// Default entry point (`flashlight bench serve_engine`).
 pub fn run(out_path: &str) -> anyhow::Result<()> {
@@ -22,64 +33,106 @@ pub fn run_with(out_path: &str, n_requests: usize) -> anyhow::Result<()> {
     threads.sort_unstable();
     threads.dedup();
     println!(
-        "== serve throughput: engine backend, {} requests ==",
+        "== serve throughput: engine backend, {} requests, chunking x layers matrix ==",
         n_requests
     );
     println!(
-        "{:>7} {:>10} {:>10} {:>9} {:>9}  {}",
-        "threads", "tok/s", "wall(s)", "TTFT(ms)", "ITL(ms)", "bit-identical"
+        "{:>6} {:>7} {:>7} {:>9} {:>9} {:>9} {:>9} {:>8}  {}",
+        "layers", "chunked", "threads", "tok/s", "wall(s)", "TTFT p50", "TTFT p99", "ITL(ms)", "bit-identical"
     );
     let mut json = JsonArray::new(out_path);
-    let mut baseline: Option<Vec<u32>> = None;
-    for &t in &threads {
-        let par = Parallelism::with_threads(t);
-        let mut b = EngineBackend::default_server(par);
-        let vocab = b.model.vocab;
-        b.enable_token_log(); // the bit-identity gate needs the stream
-        let cfg = SchedulerConfig {
-            parallelism: par,
-            ..Default::default()
-        };
-        let t0 = std::time::Instant::now();
-        let done = run_trace(&mut b, &trace, cfg, vocab)?;
-        let wall = t0.elapsed().as_secs_f64();
-        let s = summarize(&done);
-        let cs = b.cache_stats();
-        // Bit-identity gate: the scheduler's call sequence is timing
-        // independent, so the token stream must match the 1-thread run
-        // exactly at every thread count.
-        let identical = match &baseline {
-            None => {
-                baseline = Some(b.token_log.clone());
-                true
-            }
-            Some(base) => base == &b.token_log,
-        };
-        anyhow::ensure!(
-            identical,
-            "engine serve diverged at {t} threads (token stream mismatch)"
-        );
-        println!(
-            "{:>7} {:>10.1} {:>10.2} {:>9.2} {:>9.3}  {}",
-            t,
-            s.tokens_per_s,
-            wall,
-            s.ttft_mean_s * 1e3,
-            s.itl_mean_s * 1e3,
-            identical
-        );
-        json.push_obj(&[
-            ("threads", t.to_string()),
-            ("tokens_per_s", json_f64(s.tokens_per_s)),
-            ("wall_s", json_f64(wall)),
-            ("ttft_mean_ms", json_f64(s.ttft_mean_s * 1e3)),
-            ("itl_mean_ms", json_f64(s.itl_mean_s * 1e3)),
-            ("bit_identical", identical.to_string()),
-            ("plan_cache_hits", cs.hits.to_string()),
-            ("plan_cache_misses", cs.misses.to_string()),
-            ("plan_cache_hit_rate", json_f64(cs.hit_rate())),
-            ("requests", n_requests.to_string()),
-        ]);
+    for (layers, chunked) in [(1usize, false), (1, true), (4, false), (4, true)] {
+        let mut baseline: Option<Vec<u32>> = None;
+        for &t in &threads {
+            let par = Parallelism::with_threads(t);
+            let mut b = EngineBackend::new(EngineModel::tiny_deep(layers), 8, 1024, par);
+            let vocab = b.model.vocab;
+            b.enable_token_log(); // the bit-identity gate needs the stream
+            let cfg = SchedulerConfig {
+                parallelism: par,
+                prefill_chunk_tokens: if chunked { 64 } else { 0 },
+                prefill_round_tokens: if chunked { 256 } else { 0 },
+                ..Default::default()
+            };
+            // Warmup (satellite gate): pre-build the bucket ladder, then
+            // count plans and analyze() calls the run itself adds.
+            b.configure(&cfg);
+            let warmed = b.warmup_plans(1024);
+            let misses0 = b.cache_stats().misses;
+            let analyze0 = crate::sketch::analyze_call_count();
+            let t0 = std::time::Instant::now();
+            let done = run_trace(&mut b, &trace, cfg, vocab)?;
+            let wall = t0.elapsed().as_secs_f64();
+            let analyze_run = crate::sketch::analyze_call_count() - analyze0;
+            let s = summarize(&done);
+            let cs = b.cache_stats();
+            let ps = b.prefix_stats();
+            let run_misses = cs.misses - misses0;
+            // Bit-identity gate: the scheduler's call sequence is timing
+            // independent, so the token stream must match the 1-thread
+            // run exactly at every thread count.
+            let identical = match &baseline {
+                None => {
+                    baseline = Some(b.token_log.clone());
+                    true
+                }
+                Some(base) => base == &b.token_log,
+            };
+            anyhow::ensure!(
+                identical,
+                "engine serve diverged at {t} threads (layers={layers} chunked={chunked})"
+            );
+            // Decode-gather allocation gate (satellite): per-slot scratch
+            // makes steady-state gathers allocation-free.
+            anyhow::ensure!(
+                b.gather_reallocs() == 0,
+                "decode gathers allocated ({} reallocs)",
+                b.gather_reallocs()
+            );
+            // Plan warmup gate: every serving shape class is in the
+            // warmed ladder (chunked: one q width per bucket; unchunked:
+            // the full q<=kv triangle, covering prefix-adopted suffix
+            // prefills), so the run itself must build zero plans — and
+            // therefore trigger zero per-step analyze() calls.
+            anyhow::ensure!(
+                run_misses == 0,
+                "post-warmup run built {run_misses} plans (layers={layers} chunked={chunked})"
+            );
+            println!(
+                "{:>6} {:>7} {:>7} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>8.3}  {}",
+                layers,
+                chunked,
+                t,
+                s.tokens_per_s,
+                wall,
+                s.ttft_p50_s * 1e3,
+                s.ttft_p99_s * 1e3,
+                s.itl_mean_s * 1e3,
+                identical
+            );
+            json.push_obj(&[
+                ("layers", layers.to_string()),
+                ("chunked", chunked.to_string()),
+                ("threads", t.to_string()),
+                ("tokens_per_s", json_f64(s.tokens_per_s)),
+                ("wall_s", json_f64(wall)),
+                ("ttft_mean_ms", json_f64(s.ttft_mean_s * 1e3)),
+                ("ttft_p50_ms", json_f64(s.ttft_p50_s * 1e3)),
+                ("ttft_p99_ms", json_f64(s.ttft_p99_s * 1e3)),
+                ("itl_mean_ms", json_f64(s.itl_mean_s * 1e3)),
+                ("bit_identical", identical.to_string()),
+                ("plan_cache_hits", cs.hits.to_string()),
+                ("plan_cache_misses", cs.misses.to_string()),
+                ("plan_cache_hit_rate", json_f64(cs.hit_rate())),
+                ("plans_warmed", warmed.to_string()),
+                ("post_warmup_plan_misses", run_misses.to_string()),
+                ("analyze_calls_during_run", analyze_run.to_string()),
+                ("gather_reallocs", b.gather_reallocs().to_string()),
+                ("prefix_hits", ps.hits.to_string()),
+                ("prefix_tokens_reused", ps.tokens_reused.to_string()),
+                ("requests", n_requests.to_string()),
+            ]);
+        }
     }
     let p = json.finish()?;
     println!("wrote {}", p.display());
@@ -100,5 +153,9 @@ mod tests {
         assert!(s.contains("\"tokens_per_s\""));
         assert!(s.contains("\"bit_identical\": true"));
         assert!(s.contains("\"plan_cache_hit_rate\""));
+        assert!(s.contains("\"ttft_p99_ms\""));
+        assert!(s.contains("\"chunked\": true"));
+        assert!(s.contains("\"layers\": 4"));
+        assert!(s.contains("\"gather_reallocs\": 0"));
     }
 }

@@ -839,11 +839,54 @@ fn run_single_group(
 /// its graph, inputs and tile schedule. Plans are borrowed (the serving
 /// layer holds them in `Arc<CachedPlan>`s from the plan cache), so a job
 /// is cheap to construct per decode step.
+///
+/// `analysis` / `consumers` are the graph metadata the executor needs;
+/// for cached serving plans they are immutable and computed once at
+/// plan-build time ([`crate::fusion::CachedPlan`] carries both) — pass
+/// them so steady-state serving rounds perform zero `analyze()` /
+/// `consumers()` recomputation. When absent they are derived per call.
 pub struct PlanJob<'a> {
     pub graph: &'a Graph,
     pub plan: &'a Plan,
     pub inputs: &'a HashMap<String, Tensor>,
     pub tile: TileConfig,
+    pub analysis: Option<&'a DimAnalysis>,
+    pub consumers: Option<&'a [Vec<NodeId>]>,
+}
+
+impl<'a> PlanJob<'a> {
+    /// A job without precomputed metadata (one-shot execution paths).
+    pub fn new(
+        graph: &'a Graph,
+        plan: &'a Plan,
+        inputs: &'a HashMap<String, Tensor>,
+        tile: TileConfig,
+    ) -> Self {
+        PlanJob {
+            graph,
+            plan,
+            inputs,
+            tile,
+            analysis: None,
+            consumers: None,
+        }
+    }
+
+    /// A job borrowing everything from a cached serving plan — the
+    /// allocation- and analysis-free per-step path.
+    pub fn from_cached(
+        entry: &'a crate::fusion::CachedPlan,
+        inputs: &'a HashMap<String, Tensor>,
+    ) -> Self {
+        PlanJob {
+            graph: &entry.graph,
+            plan: &entry.plan,
+            inputs,
+            tile: entry.tile,
+            analysis: Some(&entry.analysis),
+            consumers: Some(&entry.consumers),
+        }
+    }
 }
 
 /// Execute several plans as one batch over a **shared** worker pool.
@@ -865,8 +908,26 @@ pub fn execute_plans_batched(
     par: &Parallelism,
 ) -> Vec<(Vec<Tensor>, Counters)> {
     let n = jobs.len();
-    let analyses: Vec<DimAnalysis> = jobs.iter().map(|j| analyze(j.graph)).collect();
-    let cons: Vec<Vec<Vec<NodeId>>> = jobs.iter().map(|j| j.graph.consumers()).collect();
+    // Graph metadata: borrow what the jobs carry (cached serving plans
+    // precompute it), derive the rest once for this call.
+    let owned_analyses: Vec<Option<DimAnalysis>> = jobs
+        .iter()
+        .map(|j| j.analysis.is_none().then(|| analyze(j.graph)))
+        .collect();
+    let analyses: Vec<&DimAnalysis> = jobs
+        .iter()
+        .zip(&owned_analyses)
+        .map(|(j, o)| j.analysis.unwrap_or_else(|| o.as_ref().unwrap()))
+        .collect();
+    let owned_cons: Vec<Option<Vec<Vec<NodeId>>>> = jobs
+        .iter()
+        .map(|j| j.consumers.is_none().then(|| j.graph.consumers()))
+        .collect();
+    let cons: Vec<&[Vec<NodeId>]> = jobs
+        .iter()
+        .zip(&owned_cons)
+        .map(|(j, o)| j.consumers.unwrap_or_else(|| o.as_deref().unwrap()))
+        .collect();
     let outputs: Vec<HashSet<NodeId>> = jobs
         .iter()
         .map(|j| j.graph.outputs.iter().copied().collect())
@@ -891,7 +952,7 @@ pub fn execute_plans_batched(
                     jobs[j].plan,
                     next_group[j],
                     jobs[j].inputs,
-                    &cons[j],
+                    cons[j],
                     &outputs[j],
                     &mut values[j],
                     &mut counters[j],
@@ -918,7 +979,7 @@ pub fn execute_plans_batched(
                     };
                     PipelineRun::new(
                         jobs[j].graph,
-                        &analyses[j],
+                        analyses[j],
                         p,
                         jobs[j].tile,
                         jobs[j].inputs,
@@ -994,12 +1055,7 @@ pub fn execute_plan_par(
     tile: TileConfig,
     par: &Parallelism,
 ) -> (Vec<Tensor>, Counters) {
-    let job = PlanJob {
-        graph: g,
-        plan,
-        inputs,
-        tile,
-    };
+    let job = PlanJob::new(g, plan, inputs, tile);
     execute_plans_batched(std::slice::from_ref(&job), par)
         .pop()
         .expect("one job in, one result out")
@@ -1264,12 +1320,7 @@ mod tests {
             .map(|(g, (_, m))| plan(g, *m))
             .collect();
         let jobs: Vec<PlanJob> = (0..graphs.len())
-            .map(|i| PlanJob {
-                graph: &graphs[i],
-                plan: &plans[i],
-                inputs: &inputs[i],
-                tile,
-            })
+            .map(|i| PlanJob::new(&graphs[i], &plans[i], &inputs[i], tile))
             .collect();
         for threads in [1, 3] {
             let batched = execute_plans_batched(&jobs, &Parallelism::with_threads(threads));

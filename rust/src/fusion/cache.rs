@@ -16,7 +16,8 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::ir::Graph;
+use crate::ir::{Graph, NodeId};
+use crate::sketch::{analyze, DimAnalysis};
 
 use super::planner::{plan, FusionMode, Plan, TileConfig};
 
@@ -46,14 +47,23 @@ pub struct PlanKey {
     pub kv_len: usize,
 }
 
-/// One immutable cache entry: the graph, its fusion plan, and the tile
-/// schedule the autotuner picked. Shared by `Arc` so concurrent decode
-/// steps of many requests reuse one plan without copies.
-#[derive(Debug)]
+/// One immutable cache entry: the graph, its fusion plan, the tile
+/// schedule the autotuner picked, and the executor-side graph metadata
+/// (dimension analysis + consumer lists) that
+/// [`crate::exec::execute_plans_batched`] would otherwise recompute for
+/// every job of every call. Shared by `Arc` so concurrent decode steps
+/// of many requests reuse one plan without copies.
 pub struct CachedPlan {
     pub graph: Graph,
     pub plan: Plan,
     pub tile: TileConfig,
+    /// Dimension analysis of `graph`, computed once at build time —
+    /// hand it to [`crate::exec::PlanJob::analysis`] so per-step
+    /// execution performs zero `analyze()` calls.
+    pub analysis: DimAnalysis,
+    /// `graph.consumers()`, computed once at build time (the batched
+    /// executor's single-kernel path needs it per job).
+    pub consumers: Vec<Vec<NodeId>>,
 }
 
 /// Hit/miss counters, surfaced in serving metrics.
@@ -89,6 +99,13 @@ pub struct PlanCache {
     hits: u64,
     misses: u64,
     evictions: u64,
+    /// When set, autotune only considers tile schedules with this
+    /// `block_k`. The serving path pins it to the KV page granule so the
+    /// kv-tiling — and therefore the online-softmax rescale points — is
+    /// identical across every plan in the cache, which is what makes
+    /// chunked prefill bit-identical to one-shot prefill (per-row online
+    /// state only depends on the kv tile boundaries, never on `block_q`).
+    fixed_block_k: Option<usize>,
 }
 
 /// Candidate tile schedules searched by [`autotune_tile`].
@@ -106,9 +123,22 @@ const TILE_CANDIDATES: &[(usize, usize)] = &[
 /// (HBM + L2) with launch count as tie-breaker. Deterministic: candidates
 /// are scanned in a fixed order and strict improvement is required.
 pub fn autotune_tile(g: &Graph, p: &Plan) -> TileConfig {
-    let mut best = TileConfig::default();
+    autotune_tile_with(g, p, None)
+}
+
+/// [`autotune_tile`] restricted to candidates whose `block_k` equals
+/// `fixed_block_k` (when set). Falls back to a default-shaped tile with
+/// the pinned `block_k` if no candidate matches.
+pub fn autotune_tile_with(g: &Graph, p: &Plan, fixed_block_k: Option<usize>) -> TileConfig {
+    let mut best = TileConfig {
+        block_k: fixed_block_k.unwrap_or(TileConfig::default().block_k),
+        ..TileConfig::default()
+    };
     let mut best_cost = u64::MAX;
     for &(bq, bk) in TILE_CANDIDATES {
+        if fixed_block_k.is_some_and(|f| f != bk) {
+            continue;
+        }
         let tile = TileConfig {
             block_q: bq,
             block_k: bk,
@@ -133,6 +163,16 @@ impl PlanCache {
             hits: 0,
             misses: 0,
             evictions: 0,
+            fixed_block_k: None,
+        }
+    }
+
+    /// A cache whose autotune is pinned to `block_k` (the serving path
+    /// pins the KV page granule — see [`PlanCache::fixed_block_k`]).
+    pub fn with_block_k(capacity: usize, block_k: usize) -> Self {
+        PlanCache {
+            fixed_block_k: Some(block_k.max(1)),
+            ..PlanCache::new(capacity)
         }
     }
 
@@ -153,11 +193,15 @@ impl PlanCache {
         self.misses += 1;
         let graph = build_graph();
         let p = plan(&graph, FusionMode::Flashlight);
-        let tile = autotune_tile(&graph, &p);
+        let tile = autotune_tile_with(&graph, &p, self.fixed_block_k);
+        let analysis = analyze(&graph);
+        let consumers = graph.consumers();
         let entry = Arc::new(CachedPlan {
             graph,
             plan: p,
             tile,
+            analysis,
+            consumers,
         });
         if self.map.len() >= self.capacity {
             // Evict the least-recently-used entry.

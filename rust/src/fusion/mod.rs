@@ -9,7 +9,9 @@ mod cache;
 mod online;
 mod planner;
 
-pub use cache::{autotune_tile, bucket_len, CacheStats, CachedPlan, PlanCache, PlanKey};
+pub use cache::{
+    autotune_tile, autotune_tile_with, bucket_len, CacheStats, CachedPlan, PlanCache, PlanKey,
+};
 pub use online::{
     online_reduce, online_reduce_blocked, stable_reduce, ExpDiag, ExpHom, ExpReal,
     Mat2, OnlineRowState, Real, Ring,

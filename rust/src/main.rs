@@ -24,9 +24,14 @@ fn usage() -> ! {
          \x20     `serve_engine` measures engine-backend serve throughput\n\
          \x20     at 1/2/all threads with the bit-identity gate\n\
          \x20 serve [--requests N] [--backend sim|engine|pjrt] [--threads N]\n\
+         \x20       [--layers L] [--chunk N] [--prefill-budget N]\n\
          \x20     run the serving coordinator on a Mooncake-like trace;\n\
          \x20     `engine` executes requests on the real tiled engine\n\
-         \x20     (slot-paged KV, plan cache, batched decode)\n\
+         \x20     (slot-paged KV, pre-warmed plan cache, chunked prefill\n\
+         \x20     batched with decode, L-layer model, prefix reuse);\n\
+         \x20     --chunk 0 disables chunking; --prefill-budget bounds\n\
+         \x20     per-round prefill work in row-layer units (one prompt\n\
+         \x20     row through one layer, so tokens x L per full row)\n\
          \x20 selftest\n\
          \x20     load + execute every AOT artifact and cross-check"
     );
@@ -165,7 +170,19 @@ fn main() -> anyhow::Result<()> {
             let threads: usize = flag(&args, "--threads")
                 .map(|s| s.parse().unwrap())
                 .unwrap_or(1);
-            flashlight::serve::cli_serve(n, &backend, Parallelism::with_threads(threads))?;
+            let defaults = flashlight::serve::EngineServeOpts::default();
+            let opts = flashlight::serve::EngineServeOpts {
+                layers: flag(&args, "--layers")
+                    .map(|s| s.parse().unwrap())
+                    .unwrap_or(defaults.layers),
+                chunk_tokens: flag(&args, "--chunk")
+                    .map(|s| s.parse().unwrap())
+                    .unwrap_or(defaults.chunk_tokens),
+                round_tokens: flag(&args, "--prefill-budget")
+                    .map(|s| s.parse().unwrap())
+                    .unwrap_or(defaults.round_tokens),
+            };
+            flashlight::serve::cli_serve(n, &backend, Parallelism::with_threads(threads), opts)?;
         }
         "selftest" => {
             flashlight::runtime::selftest("artifacts")?;

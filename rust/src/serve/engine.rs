@@ -29,6 +29,48 @@ pub trait Backend {
     /// Virtual-time backends advance the clock by their returned times;
     /// wall-time backends (PJRT) also do, but arrivals are compressed.
     fn is_virtual_time(&self) -> bool;
+
+    // --- chunked prefill (vLLM-style), optional ---------------------
+    //
+    // Backends that can split prompt prefill into page-granule chunks
+    // implement the three methods below; the scheduler then drives
+    // *mixed rounds* where prefill chunks and decode steps batch into
+    // the same engine launches. The default implementations keep
+    // whole-prompt backends (sim, PJRT) on the legacy path.
+
+    /// Does this backend implement `begin_prefill` / `mixed_step`?
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
+    /// Stage a prompt for incremental (chunked) prefill into `slot`.
+    /// No engine work happens yet; [`Backend::mixed_step`] advances it.
+    fn begin_prefill(
+        &mut self,
+        _slot: usize,
+        _req: &Request,
+        _tokens: &[u32],
+    ) -> anyhow::Result<()> {
+        anyhow::bail!("this backend does not support chunked prefill")
+    }
+    /// Remaining prefill work for a staged slot, in q-row units (a
+    /// prompt row counts once per layer it still has to traverse).
+    /// 0 when nothing is staged.
+    fn staged_rows(&self, _slot: usize) -> usize {
+        0
+    }
+    /// One mixed scheduling round: advance each staged prefill in
+    /// `prefill` by up to its `(slot, row_allowance)` and run one decode
+    /// step over `active`, with prefill chunks and decode steps batched
+    /// into the same engine launches. Returns (elapsed seconds, prefills
+    /// that completed this round as `(slot, first_token)`, one decode
+    /// token per active slot).
+    fn mixed_step(
+        &mut self,
+        _prefill: &[(usize, usize)],
+        _active: &[usize],
+    ) -> anyhow::Result<(f64, Vec<(usize, u32)>, Vec<u32>)> {
+        anyhow::bail!("this backend does not support chunked prefill")
+    }
 }
 
 struct Active {
@@ -52,6 +94,19 @@ pub struct SchedulerConfig {
     /// simulated backend models a fully parallel device and the PJRT
     /// backend delegates threading to XLA, so both ignore it.
     pub parallelism: crate::exec::Parallelism,
+    /// Chunked prefill: split prompt prefill into chunks of this many
+    /// q rows (must be a KV-page-granule multiple), issued as engine
+    /// jobs that batch with decode steps in the same scheduling round.
+    /// 0 disables chunking (whole-prompt prefill, legacy path). Only
+    /// honored when [`Backend::supports_chunked_prefill`] is true.
+    pub prefill_chunk_tokens: usize,
+    /// Per-round prefill budget for the chunked path: at most this many
+    /// row-layer units advance per mixed round across all staged
+    /// prefills (0 = unbounded). One unit is one prompt row attended at
+    /// one layer — a full row costs `layers` units, so at L=1 this is a
+    /// plain token budget. Bounds per-round prefill work — and
+    /// therefore decode ITL jitter — under long prompts.
+    pub prefill_round_tokens: usize,
 }
 
 impl Default for SchedulerConfig {
@@ -59,20 +114,29 @@ impl Default for SchedulerConfig {
         SchedulerConfig {
             max_prefills_per_step: 1,
             parallelism: crate::exec::Parallelism::sequential(),
+            prefill_chunk_tokens: 0,
+            prefill_round_tokens: 0,
         }
     }
 }
 
 /// Synthesize a deterministic prompt for a request (the trace carries
-/// lengths, not text).
+/// lengths, not text). The stream is seeded by the *conversation* only,
+/// so a follow-up turn's (longer) prompt literally extends the previous
+/// turn's prompt — the property Mooncake-style prefix caching relies on
+/// (turn t+1 re-sends the turn-t history verbatim plus a new message).
 pub fn prompt_tokens(req: &Request, vocab: usize) -> Vec<u32> {
-    let mut rng = Rng::new(0x9E3779B9 ^ (req.conversation as u64) << 17 ^ req.turn as u64);
+    let mut rng = Rng::new(0x9E3779B9 ^ (req.conversation as u64) << 17);
     (0..req.input_tokens)
         .map(|_| (rng.next_u64() % vocab as u64) as u32)
         .collect()
 }
 
 /// Run the trace to completion. Returns per-request metrics.
+///
+/// With `cfg.prefill_chunk_tokens > 0` and a backend that supports it,
+/// the chunk-scheduled loop runs instead: prompts prefill incrementally,
+/// chunks batching with decode steps in the same engine rounds.
 pub fn run_trace(
     backend: &mut dyn Backend,
     trace: &[Request],
@@ -80,6 +144,9 @@ pub fn run_trace(
     vocab: usize,
 ) -> anyhow::Result<Vec<RequestMetrics>> {
     backend.configure(&cfg);
+    if cfg.prefill_chunk_tokens > 0 && backend.supports_chunked_prefill() {
+        return run_trace_chunked(backend, trace, cfg, vocab);
+    }
     let n_slots = backend.n_slots();
     let mut clock = 0.0f64;
     let mut pending: VecDeque<Request> = trace.to_vec().into();
@@ -173,6 +240,142 @@ pub fn run_trace(
             match pending.front() {
                 Some(r) => clock = clock.max(r.arrival_s), // idle until next arrival
                 None => break,
+            }
+        }
+    }
+
+    done.sort_by_key(|m| m.id);
+    Ok(done)
+}
+
+/// The chunk-scheduled serving loop: staged prefills advance by a
+/// per-round token budget while active slots decode, and the backend
+/// batches both kinds of work into the same engine rounds
+/// ([`Backend::mixed_step`]). TTFT is paid incrementally — a long prompt
+/// no longer stalls every decoding request for its whole prefill.
+fn run_trace_chunked(
+    backend: &mut dyn Backend,
+    trace: &[Request],
+    cfg: SchedulerConfig,
+    vocab: usize,
+) -> anyhow::Result<Vec<RequestMetrics>> {
+    let n_slots = backend.n_slots();
+    let mut clock = 0.0f64;
+    let mut pending: VecDeque<Request> = trace.to_vec().into();
+    let mut waiting: VecDeque<Request> = VecDeque::new();
+    // A slot is either decoding (`slots`), mid-prefill (`prefilling`,
+    // with FIFO admission order in `prefill_order`), or free.
+    let mut slots: Vec<Option<Active>> = (0..n_slots).map(|_| None).collect();
+    let mut prefilling: Vec<Option<(Request, f64)>> = (0..n_slots).map(|_| None).collect();
+    let mut prefill_order: Vec<usize> = Vec::new();
+    let mut done: Vec<RequestMetrics> = Vec::with_capacity(trace.len());
+    let compress_arrivals = !backend.is_virtual_time();
+
+    loop {
+        // Admit arrivals.
+        while let Some(r) = pending.front() {
+            if compress_arrivals || r.arrival_s <= clock {
+                waiting.push_back(pending.pop_front().unwrap());
+            } else {
+                break;
+            }
+        }
+
+        // Stage new prefills into free slots (prefill priority).
+        let mut admitted = 0;
+        for si in 0..n_slots {
+            if admitted >= cfg.max_prefills_per_step || waiting.is_empty() {
+                break;
+            }
+            if slots[si].is_some() || prefilling[si].is_some() {
+                continue;
+            }
+            let req = waiting.pop_front().unwrap();
+            if req.input_tokens + req.output_tokens > backend.max_context() {
+                anyhow::bail!("request {} exceeds context window", req.id);
+            }
+            let tokens = prompt_tokens(&req, vocab);
+            backend.begin_prefill(si, &req, &tokens)?;
+            let arrival = if compress_arrivals { clock } else { req.arrival_s };
+            prefilling[si] = Some((req, arrival));
+            prefill_order.push(si);
+            admitted += 1;
+        }
+
+        // Allocate the round's prefill budget FIFO over staged slots.
+        let mut budget = if cfg.prefill_round_tokens == 0 {
+            usize::MAX
+        } else {
+            cfg.prefill_round_tokens
+        };
+        let mut work: Vec<(usize, usize)> = Vec::new();
+        for &si in &prefill_order {
+            if budget == 0 {
+                break;
+            }
+            let rows = backend.staged_rows(si).min(budget);
+            if rows > 0 {
+                work.push((si, rows));
+                budget -= rows;
+            }
+        }
+
+        let active: Vec<usize> = slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_some())
+            .map(|(i, _)| i)
+            .collect();
+
+        if work.is_empty() && active.is_empty() {
+            match pending.front() {
+                Some(r) => clock = clock.max(r.arrival_s), // idle until next arrival
+                None if waiting.is_empty() => break,
+                None => continue,
+            }
+            continue;
+        }
+
+        // One mixed round: prefill chunks + the batched decode step.
+        let (dt, finished, _toks) = backend.mixed_step(&work, &active)?;
+        clock += dt;
+
+        for &si in &active {
+            let a = slots[si].as_mut().unwrap();
+            a.metrics.itls.push(clock - a.last_token_s);
+            a.last_token_s = clock;
+            a.generated += 1;
+            if a.generated >= a.req.output_tokens.max(1) {
+                let mut fin = slots[si].take().unwrap();
+                fin.metrics.done_s = clock;
+                backend.release(fin.slot);
+                done.push(fin.metrics);
+            }
+        }
+
+        for (si, _tok) in finished {
+            prefill_order.retain(|&s| s != si);
+            let (req, arrival) = prefilling[si].take().expect("finished an unstaged slot");
+            let metrics = RequestMetrics {
+                id: req.id,
+                arrival_s: arrival,
+                first_token_s: clock,
+                done_s: clock,
+                input_tokens: req.input_tokens,
+                output_tokens: req.output_tokens,
+                itls: vec![],
+            };
+            if req.output_tokens <= 1 {
+                backend.release(si);
+                done.push(metrics);
+            } else {
+                slots[si] = Some(Active {
+                    slot: si,
+                    generated: 1,
+                    last_token_s: clock,
+                    metrics,
+                    req,
+                });
             }
         }
     }

@@ -1,26 +1,52 @@
 //! The engine-backed serving backend: requests execute on the *real*
 //! fused tiled engine, not the cost model.
 //!
-//! Three pieces make a decode step cheap and batched:
+//! Five pieces make a serving round cheap, batched, and realistic:
 //!
-//! * **Slot-paged KV** ([`super::kv::PagedKv`]) — one page pool shared
-//!   across slots; appends are in-place, gathers produce the padded
-//!   bucketed tensors the cached plans expect.
+//! * **Slot-paged KV** ([`super::kv::PagedKv`]) — one refcounted page
+//!   pool shared across every (slot, layer) sequence; appends are
+//!   in-place, gathers produce the padded bucketed tensors the cached
+//!   plans expect, and whole-page prompt prefixes survive a request to
+//!   be re-adopted by the conversation's next turn.
 //! * **Plan cache** ([`crate::fusion::PlanCache`]) — fusion plans (and
 //!   their autotuned tile schedules) are keyed by shape class (variant +
 //!   heads + bucketed lengths), so steady-state decode re-plans nothing:
-//!   a step is a cache hit returning an `Arc<CachedPlan>`.
+//!   a step is a cache hit returning an `Arc<CachedPlan>` that also
+//!   carries the graph analysis the executor needs (zero per-step
+//!   `analyze()` / `consumers()` calls). [`EngineBackend::warmup_plans`]
+//!   pre-builds the bucket ladder so the first request per bucket does
+//!   not pay plan+autotune latency inline. Autotune is pinned to
+//!   `block_k ==` page granule — see the bit-identity note below.
+//! * **Multi-layer model** ([`EngineModel::layers`]) — a token step
+//!   traverses L stacked attention layers (layer 0 reads the token
+//!   embeddings; deeper layers project their Q/K/V elementwise from the
+//!   residual stream), all layers sharing the one page pool and the one
+//!   cached plan per shape class.
+//! * **Chunked prefill** — a prompt prefills in page-granule chunks
+//!   ([`Backend::begin_prefill`] / [`Backend::mixed_step`]), each chunk
+//!   an ordinary engine job, so prefill chunks and decode steps batch
+//!   into the *same* grid-scheduling rounds and a long prompt no longer
+//!   stalls every decoding request for its whole prefill.
 //! * **Cross-request grid scheduling**
-//!   ([`crate::exec::execute_plans_batched`]) — every active slot's
-//!   decode step contributes its `LogicalGrid` blocks as tagged work
-//!   items to one shared worker pool, so `SchedulerConfig::parallelism`
-//!   is filled by the *batch*, not by any single request's (tiny) grid.
+//!   ([`crate::exec::execute_plans_batched`]) — every job in a round
+//!   (decode steps at their current layer, prefill chunks at theirs)
+//!   contributes its `LogicalGrid` blocks as tagged work items to one
+//!   shared worker pool, so `SchedulerConfig::parallelism` is filled by
+//!   the *batch*, not by any single request's (tiny) grid.
 //!
-//! Determinism: K/V/q embeddings are pure functions of (token, position),
-//! plans are shape-keyed, and the batched executor merges per plan in
-//! block order — so the token stream is bitwise identical whether slots
-//! decode together or one at a time, at any thread count (asserted by
-//! the tests below and gated in the serve bench).
+//! ## Bit-identity
+//!
+//! K/V/q embeddings are pure functions of (token, position), plans are
+//! shape-keyed, and the batched executor merges per plan in block order —
+//! so the token stream is bitwise identical whether slots decode together
+//! or one at a time, at any thread count. Chunked prefill is bitwise
+//! identical to one-shot prefill, and a prefix-reusing turn is bitwise
+//! identical to a cold re-prefill, because each query row's online-
+//! softmax state depends only on the kv *tile boundaries* (pinned: the
+//! serving plan cache fixes `block_k` to the page granule, and every
+//! bucket is a granule multiple) and on the K/V values themselves (pure
+//! per-position functions, identical however the rows were batched into
+//! chunks). Asserted by the tests below and gated in the serve bench.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -34,12 +60,18 @@ use crate::variants::{build_serving, AttnShape, Variant};
 use super::engine::{Backend, SchedulerConfig};
 use super::kv::{PagedKv, DEFAULT_BLOCK_TOKENS};
 
-/// The tiny attention model the engine backend serves: one attention
-/// layer per step with deterministic token embeddings (the repo's scope
-/// is the attention path; the transformer backbone stays out of it).
+/// The tiny attention model the engine backend serves: `layers` stacked
+/// attention layers per token step with deterministic token embeddings
+/// and cheap-but-real per-layer Q/K/V projections (the repo's scope is
+/// the attention path; dense FFNs stay out of it).
 #[derive(Debug, Clone, Copy)]
 pub struct EngineModel {
     pub variant: Variant,
+    /// Attention layers per token step. Layer 0 reads the token
+    /// embeddings directly; each deeper layer projects its Q/K/V
+    /// elementwise from the residual stream, so the serve bench's
+    /// arithmetic intensity scales like a real L-layer model.
+    pub layers: usize,
     pub heads_q: usize,
     pub heads_kv: usize,
     pub head_dim: usize,
@@ -51,10 +83,19 @@ impl EngineModel {
     pub fn tiny() -> Self {
         EngineModel {
             variant: Variant::Causal,
+            layers: 1,
             heads_q: 4,
             heads_kv: 2,
             head_dim: 16,
             vocab: 512,
+        }
+    }
+
+    /// [`EngineModel::tiny`] with `layers` stacked attention layers.
+    pub fn tiny_deep(layers: usize) -> Self {
+        EngineModel {
+            layers: layers.max(1),
+            ..EngineModel::tiny()
         }
     }
 }
@@ -62,6 +103,7 @@ impl EngineModel {
 const K_SALT: u64 = 0x4B56_0001;
 const V_SALT: u64 = 0x4B56_0002;
 const Q_SALT: u64 = 0x4B56_0003;
+const W_SALT: u64 = 0x4B56_0004;
 
 /// Deterministic per-(token, position) embedding in [-0.5, 0.5).
 fn embed(salt: u64, token: u32, pos: usize, n: usize) -> Vec<f32> {
@@ -83,14 +125,118 @@ fn sample_token(data: &[f32], vocab: usize) -> u32 {
     h % vocab.max(1) as u32
 }
 
+/// Per-layer projection weights (deterministic, fixed at model build).
+/// All three are `[heads_q * head_dim]` vectors applied elementwise:
+/// Q keeps the full width, K/V fold the query-head groups down to the
+/// kv-head width (a diagonal stand-in for the dense projections — cheap,
+/// but the data really flows layer to layer).
+struct LayerProj {
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+}
+
+/// Reusable per-slot K/V gather buffers: steady-state decode gathers are
+/// allocation-free (buffers round-trip through the input tensors and
+/// come back after every launch). `valid_for` identifies the gather the
+/// buffers currently hold — successive chunks of one prefill layer read
+/// the same immutable appended K/V, so the copy is skipped entirely on
+/// a key match (the executor never mutates job inputs).
+#[derive(Default)]
+struct GatherScratch {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// (sequence, cached len, padded bucket) the buffers were filled
+    /// for; cleared whenever the slot's cache identity changes.
+    valid_for: Option<(usize, usize, usize)>,
+}
+
+/// A conversation's parked KV prefix: whole pages per layer, plus the
+/// prompt tokens they cache (verified against the next turn's prompt
+/// before adoption) and an LRU tick.
+struct ParkedPrefix {
+    tokens: Vec<u32>,
+    /// Page lists, one per layer; all the same length.
+    pages: Vec<Vec<usize>>,
+    tick: u64,
+}
+
+/// Prefix-cache counters, surfaced in serving metrics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// Prefills that adopted a parked prefix.
+    pub hits: u64,
+    /// Prompt tokens whose prefill was skipped via adoption.
+    pub tokens_reused: u64,
+    /// Parked conversations currently held.
+    pub entries: usize,
+    /// Pages (across all layers) pinned by parked prefixes.
+    pub parked_pages: usize,
+}
+
+/// In-flight chunked prefill of one slot: the layer-staged state
+/// machine. All *new* rows' K/V for the current layer are appended at
+/// layer entry (from embeddings at layer 0, from the residual stream
+/// `x` above), then the rows are attended chunk by chunk with the
+/// runtime `kv_len`/`q_off` scalars; when the cursor wraps, the next
+/// layer begins. This ordering serves causal *and* bidirectional
+/// variants: a chunk's kernel sees the full (masked) key range exactly
+/// as a one-shot prefill would.
+struct PrefillState {
+    conversation: usize,
+    /// Full prompt, including any adopted prefix.
+    prompt: Vec<u32>,
+    /// Adopted prefix length in tokens (q_off of new row 0).
+    base: usize,
+    layer: usize,
+    /// New rows completed at the current layer.
+    cursor: usize,
+    /// Residual stream entering the current layer: `[n_new][hq*d]`
+    /// (unused at layer 0, where embeddings feed the kernel directly).
+    x: Vec<f32>,
+    /// Residual stream being produced for the next layer.
+    x_next: Vec<f32>,
+}
+
+/// Parked metadata of a slot whose prefill completed (needed to park
+/// the conversation prefix at release time).
+struct SlotMeta {
+    conversation: usize,
+    prompt: Vec<u32>,
+}
+
+/// Who owns a job in one mixed sub-round.
+enum Owner {
+    /// Index into the round's decode states.
+    Dec(usize),
+    /// (slot, rows in this chunk).
+    Pre(usize, usize),
+}
+
 pub struct EngineBackend {
     pub model: EngineModel,
     n_slots: usize,
     max_context: usize,
+    /// One sequence per (slot, layer): sequence `slot * layers + layer`.
     kv: PagedKv,
     last_token: Vec<u32>,
     plans: PlanCache,
     par: Parallelism,
+    /// Prefill chunk size in q rows (page-granule multiple); 0 = the
+    /// whole prompt in one chunk.
+    chunk_tokens: usize,
+    prefix_caching: bool,
+    /// LRU budget for parked prefix pages (across all layers).
+    prefix_cache_pages: usize,
+    proj: Vec<LayerProj>,
+    staged: Vec<Option<PrefillState>>,
+    slot_meta: Vec<Option<SlotMeta>>,
+    prefix_cache: HashMap<usize, ParkedPrefix>,
+    prefix_tick: u64,
+    prefix_hits: u64,
+    prefix_tokens_reused: u64,
+    scratch: Vec<GatherScratch>,
+    gather_reallocs: u64,
     log_tokens: bool,
     /// Every emitted token in backend-call order (prefill first tokens,
     /// then decode tokens batch by batch) — the serve bench's
@@ -102,29 +248,66 @@ pub struct EngineBackend {
 
 impl EngineBackend {
     pub fn new(model: EngineModel, n_slots: usize, max_context: usize, par: Parallelism) -> Self {
+        let model = EngineModel {
+            layers: model.layers.max(1),
+            ..model
+        };
+        let w = model.heads_q * model.head_dim;
+        let proj = (1..model.layers)
+            .map(|l| LayerProj {
+                wq: embed(W_SALT, l as u32, 0, w),
+                wk: embed(W_SALT, l as u32, 1, w),
+                wv: embed(W_SALT, l as u32, 2, w),
+            })
+            .collect();
+        // Pre-size the gather scratch for the largest bucket so
+        // steady-state decode performs zero gather allocations.
+        let max_gather =
+            model.heads_kv * model.head_dim * bucket_len(max_context, DEFAULT_BLOCK_TOKENS);
+        let scratch = (0..n_slots)
+            .map(|_| GatherScratch {
+                k: Vec::with_capacity(max_gather),
+                v: Vec::with_capacity(max_gather),
+                valid_for: None,
+            })
+            .collect();
+        let buckets = max_context.max(1).div_ceil(DEFAULT_BLOCK_TOKENS);
+        let plan_capacity = buckets + buckets * (buckets + 1) / 2 + 8;
         EngineBackend {
-            model,
             n_slots,
             max_context,
             kv: PagedKv::new(
-                n_slots,
+                n_slots * model.layers,
                 DEFAULT_BLOCK_TOKENS,
                 model.heads_kv,
                 model.head_dim,
             ),
             last_token: vec![0; n_slots],
-            plans: PlanCache::new(64),
+            // Autotune pinned to the page granule: the kv tiling must be
+            // identical across every bucket for chunked prefill and
+            // prefix reuse to stay bit-identical to one-shot prefill.
+            // Capacity covers the worst-case warmup for this context
+            // window — the decode ladder plus the unchunked prefill
+            // triangle (every q_bucket <= kv_bucket pair) — so warming
+            // never evicts what it just built.
+            plans: PlanCache::with_block_k(plan_capacity, DEFAULT_BLOCK_TOKENS),
             par,
+            chunk_tokens: 0,
+            prefix_caching: true,
+            prefix_cache_pages: 256,
+            proj,
+            staged: (0..n_slots).map(|_| None).collect(),
+            slot_meta: (0..n_slots).map(|_| None).collect(),
+            prefix_cache: HashMap::new(),
+            prefix_tick: 0,
+            prefix_hits: 0,
+            prefix_tokens_reused: 0,
+            scratch,
+            gather_reallocs: 0,
             log_tokens: false,
             token_log: Vec::new(),
+            model,
         }
-    }
-
-    /// The serving configuration shared by `serve --backend engine` and
-    /// the serve-throughput bench, so the CLI path and the recorded perf
-    /// trajectory always measure the same setup.
-    pub fn default_server(par: Parallelism) -> Self {
-        EngineBackend::new(EngineModel::tiny(), 8, 1024, par)
     }
 
     /// Record every emitted token into [`Self::token_log`] (the serve
@@ -139,6 +322,31 @@ impl EngineBackend {
         }
     }
 
+    /// Prefill chunk size in q rows; rounded up to the page granule
+    /// (0 = whole-prompt chunks).
+    pub fn set_chunk_tokens(&mut self, chunk: usize) {
+        self.chunk_tokens = if chunk == 0 {
+            0
+        } else {
+            bucket_len(chunk, self.kv.block_tokens())
+        };
+    }
+
+    /// Enable/disable conversation prefix retention (existing parked
+    /// prefixes stay until [`Self::clear_prefix_cache`]).
+    pub fn set_prefix_caching(&mut self, on: bool) {
+        self.prefix_caching = on;
+    }
+
+    /// Release every parked conversation prefix back to the page pool.
+    pub fn clear_prefix_cache(&mut self) {
+        for (_, p) in self.prefix_cache.drain() {
+            for pl in &p.pages {
+                self.kv.release_prefix(pl);
+            }
+        }
+    }
+
     /// Plan-cache hit/miss counters (surfaced in serving metrics).
     pub fn cache_stats(&self) -> CacheStats {
         self.plans.stats()
@@ -149,9 +357,101 @@ impl EngineBackend {
         (self.kv.allocated_pages(), self.kv.free_pages())
     }
 
+    /// Prefix-cache counters.
+    pub fn prefix_stats(&self) -> PrefixStats {
+        PrefixStats {
+            hits: self.prefix_hits,
+            tokens_reused: self.prefix_tokens_reused,
+            entries: self.prefix_cache.len(),
+            parked_pages: self.parked_pages(),
+        }
+    }
+
+    fn parked_pages(&self) -> usize {
+        self.prefix_cache
+            .values()
+            .map(|p| p.pages.iter().map(Vec::len).sum::<usize>())
+            .sum()
+    }
+
+    /// How many times a K/V gather had to grow its scratch buffer. The
+    /// scratch is pre-sized for the context window, so this stays 0 —
+    /// steady-state decode gathers are allocation-free (gated in the
+    /// serve bench).
+    pub fn gather_reallocs(&self) -> u64 {
+        self.gather_reallocs
+    }
+
     /// The execution parallelism in effect (set via [`Backend::configure`]).
     pub fn parallelism(&self) -> Parallelism {
         self.par
+    }
+
+    /// Pre-build (plan + autotune) the serving bucket ladder up to
+    /// `max_len` tokens: the decode plan and every prefill shape class
+    /// for every KV bucket. With chunking on, prefill needs one q width
+    /// (the chunk size) per bucket; with chunking off, a prefix-adopting
+    /// turn prefills only its suffix, so every `q_bucket <= kv_bucket`
+    /// pair can occur and the whole triangle is warmed. Returns the
+    /// number of plans built, so callers can subtract warmup misses from
+    /// steady-state stats. Run it at server start — no request then pays
+    /// plan+autotune latency inline (gated in `bench serve_engine`).
+    pub fn warmup_plans(&mut self, max_len: usize) -> u64 {
+        let block = self.kv.block_tokens();
+        let chunk = self.chunk_tokens;
+        let before = self.plans.stats().misses;
+        let top = bucket_len(max_len.clamp(1, self.max_context), block);
+        let mut bucket = block;
+        while bucket <= top {
+            self.plan_entry("decode", 1, bucket);
+            if chunk == 0 {
+                let mut qb = block;
+                while qb <= bucket {
+                    self.plan_entry("prefill", qb, bucket);
+                    qb += block;
+                }
+            } else {
+                self.plan_entry("prefill", chunk, bucket);
+            }
+            bucket += block;
+        }
+        self.plans.stats().misses - before
+    }
+
+    /// Sequence index of (slot, layer) in the shared page pool.
+    fn seq(&self, slot: usize, layer: usize) -> usize {
+        slot * self.model.layers + layer
+    }
+
+    /// Elementwise Q projection of a residual-stream row (layer >= 1).
+    fn proj_q(&self, layer: usize, x: &[f32]) -> Vec<f32> {
+        let w = &self.proj[layer - 1].wq;
+        x.iter().zip(w).map(|(a, b)| a * b).collect()
+    }
+
+    /// Group-folding K/V projection: `[hq*d] -> [hkv*d]`, each kv head
+    /// the weighted sum of its query-head group.
+    fn proj_kv(&self, weights: &[f32], x: &[f32]) -> Vec<f32> {
+        let (hkv, d) = (self.model.heads_kv, self.model.head_dim);
+        let group = self.model.heads_q / hkv;
+        let mut out = vec![0f32; hkv * d];
+        for h in 0..hkv {
+            for g in 0..group {
+                let src = (h * group + g) * d;
+                for i in 0..d {
+                    out[h * d + i] += weights[src + i] * x[src + i];
+                }
+            }
+        }
+        out
+    }
+
+    fn proj_k(&self, layer: usize, x: &[f32]) -> Vec<f32> {
+        self.proj_kv(&self.proj[layer - 1].wk, x)
+    }
+
+    fn proj_v(&self, layer: usize, x: &[f32]) -> Vec<f32> {
+        self.proj_kv(&self.proj[layer - 1].wv, x)
     }
 
     /// Fetch (or build + autotune) the plan for one shape class.
@@ -179,20 +479,33 @@ impl EngineBackend {
         })
     }
 
-    /// Assemble the engine inputs for one slot: gathered padded K/V plus
-    /// the runtime `kv_len` / `q_off` scalars.
+    /// Assemble the engine inputs for one (slot, layer) job: gathered
+    /// padded K/V from the per-slot scratch plus the runtime `kv_len` /
+    /// `q_off` scalars. The scratch buffers travel inside the returned
+    /// tensors and come home via [`Self::reclaim_scratch`].
     fn attn_inputs(
-        &self,
+        &mut self,
         slot: usize,
+        layer: usize,
         q: Tensor,
         bucket: usize,
         len: usize,
         q_off: usize,
     ) -> HashMap<String, Tensor> {
         let (hkv, d) = (self.model.heads_kv, self.model.head_dim);
-        let mut kbuf = Vec::new();
-        let mut vbuf = Vec::new();
-        self.kv.gather(slot, bucket, &mut kbuf, &mut vbuf);
+        let seq = self.seq(slot, layer);
+        let key = (seq, self.kv.len(seq), bucket);
+        let mut kbuf = std::mem::take(&mut self.scratch[slot].k);
+        let mut vbuf = std::mem::take(&mut self.scratch[slot].v);
+        if self.scratch[slot].valid_for != Some(key) {
+            let caps = (kbuf.capacity(), vbuf.capacity());
+            self.kv.gather(seq, bucket, &mut kbuf, &mut vbuf);
+            if kbuf.capacity() != caps.0 || vbuf.capacity() != caps.1 {
+                self.gather_reallocs += 1;
+            }
+            self.scratch[slot].valid_for = Some(key);
+        }
+        debug_assert_eq!(kbuf.len(), hkv * bucket * d);
         let mut m = HashMap::new();
         m.insert("q".to_string(), q);
         m.insert(
@@ -213,6 +526,62 @@ impl EngineBackend {
         );
         m
     }
+
+    /// Take the K/V buffers back out of a finished job's inputs so the
+    /// next gather for this slot reuses them (allocation-free).
+    fn reclaim_scratch(&mut self, slot: usize, inputs: &mut HashMap<String, Tensor>) {
+        if let Some(t) = inputs.remove("k") {
+            self.scratch[slot].k = t.data;
+        }
+        if let Some(t) = inputs.remove("v") {
+            self.scratch[slot].v = t.data;
+        }
+    }
+
+    /// Park a finished slot's conversation prefix (whole pages covering
+    /// its prompt) instead of freeing it, evicting LRU conversations
+    /// beyond the page budget.
+    fn park_slot(&mut self, slot: usize, meta: SlotMeta) {
+        let layers = self.model.layers;
+        let block = self.kv.block_tokens();
+        let keep = (meta.prompt.len() / block) * block;
+        if keep == 0 {
+            for l in 0..layers {
+                let s = self.seq(slot, l);
+                self.kv.release(s);
+            }
+            return;
+        }
+        let mut pages = Vec::with_capacity(layers);
+        for l in 0..layers {
+            let s = self.seq(slot, l);
+            pages.push(self.kv.park(s, keep));
+        }
+        self.prefix_tick += 1;
+        let parked = ParkedPrefix {
+            tokens: meta.prompt[..keep].to_vec(),
+            pages,
+            tick: self.prefix_tick,
+        };
+        if let Some(old) = self.prefix_cache.insert(meta.conversation, parked) {
+            for pl in &old.pages {
+                self.kv.release_prefix(pl);
+            }
+        }
+        // LRU eviction down to the page budget.
+        while self.parked_pages() > self.prefix_cache_pages {
+            let victim = self
+                .prefix_cache
+                .iter()
+                .min_by_key(|(_, p)| p.tick)
+                .map(|(c, _)| *c);
+            let Some(conv) = victim else { break };
+            let p = self.prefix_cache.remove(&conv).unwrap();
+            for pl in &p.pages {
+                self.kv.release_prefix(pl);
+            }
+        }
+    }
 }
 
 impl Backend for EngineBackend {
@@ -226,121 +595,387 @@ impl Backend for EngineBackend {
 
     fn configure(&mut self, cfg: &SchedulerConfig) {
         self.par = cfg.parallelism;
+        self.set_chunk_tokens(cfg.prefill_chunk_tokens);
     }
 
-    fn prefill(
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    fn begin_prefill(
         &mut self,
         slot: usize,
-        _req: &Request,
+        req: &Request,
         tokens: &[u32],
-    ) -> anyhow::Result<(f64, u32)> {
-        let t0 = Instant::now();
-        anyhow::ensure!(self.kv.is_empty(slot), "prefill into a non-empty slot {slot}");
+    ) -> anyhow::Result<()> {
+        let layers = self.model.layers;
+        anyhow::ensure!(
+            self.staged[slot].is_none(),
+            "prefill into a slot {slot} already mid-prefill"
+        );
+        for l in 0..layers {
+            anyhow::ensure!(
+                self.kv.is_empty(self.seq(slot, l)),
+                "prefill into a non-empty slot {slot}"
+            );
+        }
         anyhow::ensure!(
             tokens.len() <= self.max_context,
             "prompt of {} tokens exceeds context window {}",
             tokens.len(),
             self.max_context
         );
-        let bos = [0u32];
-        let toks: &[u32] = if tokens.is_empty() { &bos } else { tokens };
-        let (hq, d) = (self.model.heads_q, self.model.head_dim);
-        let stride = self.kv.token_stride();
-        for (pos, &tok) in toks.iter().enumerate() {
-            let k = embed(K_SALT, tok, pos, stride);
-            let v = embed(V_SALT, tok, pos, stride);
-            self.kv.append(slot, &k, &v);
-        }
-        let s = toks.len();
-        let bucket = bucket_len(s, self.kv.block_tokens());
-        let entry = self.plan_entry("prefill", bucket, bucket);
-        // q rows: one per prompt token (head-major, zero-padded rows).
-        let mut q = vec![0f32; hq * bucket * d];
-        for (pos, &tok) in toks.iter().enumerate() {
-            let qe = embed(Q_SALT, tok, pos, hq * d); // [hq][d]
-            for h in 0..hq {
-                let dst = (h * bucket + pos) * d;
-                q[dst..dst + d].copy_from_slice(&qe[h * d..(h + 1) * d]);
+        let prompt: Vec<u32> = if tokens.is_empty() {
+            vec![0]
+        } else {
+            tokens.to_vec()
+        };
+        // The slot's cache identity changes: stale gather scratch from a
+        // previous occupant (whose freed pages may since have been
+        // rewritten) must not be trusted.
+        self.scratch[slot].valid_for = None;
+        // Prefix adoption: graft the conversation's parked whole-page
+        // prefix (verified token-for-token) and prefill only the rest.
+        // At least one fresh row is kept so the first token has a query.
+        // Only causal serving arms park/adopt (see Variant::causal_serving).
+        let block = self.kv.block_tokens();
+        let mut base = 0usize;
+        if self.prefix_caching && self.model.variant.causal_serving() {
+            if let Some(p) = self.prefix_cache.get_mut(&req.conversation) {
+                let adopt_pages = p.pages[0].len().min((prompt.len() - 1) / block);
+                let adopt = adopt_pages * block;
+                if adopt_pages > 0 && p.tokens[..adopt] == prompt[..adopt] {
+                    self.prefix_tick += 1;
+                    p.tick = self.prefix_tick;
+                    let page_lists: Vec<Vec<usize>> = p
+                        .pages
+                        .iter()
+                        .map(|pl| pl[..adopt_pages].to_vec())
+                        .collect();
+                    for (l, pl) in page_lists.iter().enumerate() {
+                        let s = self.seq(slot, l);
+                        self.kv.adopt(s, pl);
+                    }
+                    base = adopt;
+                    self.prefix_hits += 1;
+                    self.prefix_tokens_reused += adopt as u64;
+                }
             }
         }
-        let q = Tensor::from_vec(
-            &[1, self.model.heads_kv, hq / self.model.heads_kv, bucket, d],
-            q,
-        );
-        let inputs = self.attn_inputs(slot, q, bucket, s, 0);
-        let (outs, _c) = entry
-            .plan
-            .execute(&entry.graph, &inputs, entry.tile, self.par);
-        // First token from the last valid q row across all heads.
-        let out = &outs[0]; // [1, hkv, g, bucket, d] == [hq][bucket][d]
-        let mut row = Vec::with_capacity(hq * d);
-        for h in 0..hq {
-            let off = (h * bucket + (s - 1)) * d;
-            row.extend_from_slice(&out.data[off..off + d]);
+        // Enter layer 0: its K/V come straight from the token embeddings.
+        let n_new = prompt.len() - base;
+        let stride = self.kv.token_stride();
+        let seq0 = self.seq(slot, 0);
+        for r in 0..n_new {
+            let pos = base + r;
+            let k = embed(K_SALT, prompt[pos], pos, stride);
+            let v = embed(V_SALT, prompt[pos], pos, stride);
+            self.kv.append(seq0, &k, &v);
         }
-        let tok = sample_token(&row, self.model.vocab);
-        self.last_token[slot] = tok;
-        self.log_token(tok);
-        Ok((t0.elapsed().as_secs_f64(), tok))
+        let w = self.model.heads_q * self.model.head_dim;
+        self.staged[slot] = Some(PrefillState {
+            conversation: req.conversation,
+            prompt,
+            base,
+            layer: 0,
+            cursor: 0,
+            x: vec![0.0; n_new * w],
+            x_next: vec![0.0; n_new * w],
+        });
+        self.slot_meta[slot] = None;
+        Ok(())
     }
 
-    fn decode(&mut self, active: &[usize]) -> anyhow::Result<(f64, Vec<u32>)> {
+    fn staged_rows(&self, slot: usize) -> usize {
+        match &self.staged[slot] {
+            Some(st) => {
+                let n_new = st.prompt.len() - st.base;
+                (self.model.layers - st.layer) * n_new - st.cursor
+            }
+            None => 0,
+        }
+    }
+
+    /// One mixed round. Runs as a sequence of *sub-rounds*: in each,
+    /// every active decode slot contributes its current-layer job and
+    /// every budgeted prefill slot contributes its next chunk, all
+    /// executed as one batched launch over the shared worker pool.
+    /// Decode slots advance one layer per sub-round; prefill slots one
+    /// chunk (crossing layer boundaries as their cursor wraps).
+    fn mixed_step(
+        &mut self,
+        prefill: &[(usize, usize)],
+        active: &[usize],
+    ) -> anyhow::Result<(f64, Vec<(usize, u32)>, Vec<u32>)> {
         let t0 = Instant::now();
+        let layers = self.model.layers;
         let (hq, hkv, d) = (
             self.model.heads_q,
             self.model.heads_kv,
             self.model.head_dim,
         );
+        let w = hq * d;
+        let block = self.kv.block_tokens();
         let stride = self.kv.token_stride();
-        // Phase 1 (per slot, scheduler thread): append the pending
-        // token's K/V, gather padded inputs, fetch the bucketed plan.
-        let mut per_slot: Vec<(Arc<CachedPlan>, HashMap<String, Tensor>)> =
-            Vec::with_capacity(active.len());
+
+        // Decode init: append the pending token's layer-0 K/V.
+        struct DecState {
+            slot: usize,
+            tok: u32,
+            pos: usize,
+            x: Vec<f32>,
+            layer: usize,
+        }
+        let mut dec: Vec<DecState> = Vec::with_capacity(active.len());
         for &slot in active {
-            anyhow::ensure!(!self.kv.is_empty(slot), "decoding an unprefilled slot {slot}");
+            anyhow::ensure!(
+                self.staged[slot].is_none(),
+                "decoding a slot {slot} still mid-prefill"
+            );
+            let seq0 = self.seq(slot, 0);
+            anyhow::ensure!(!self.kv.is_empty(seq0), "decoding an unprefilled slot {slot}");
             let tok = self.last_token[slot];
-            let pos = self.kv.len(slot);
+            let pos = self.kv.len(seq0);
             anyhow::ensure!(pos < self.max_context, "slot {slot} exceeds context");
             let k = embed(K_SALT, tok, pos, stride);
             let v = embed(V_SALT, tok, pos, stride);
-            self.kv.append(slot, &k, &v);
-            let len = pos + 1;
-            let bucket = bucket_len(len, self.kv.block_tokens());
-            let entry = self.plan_entry("decode", 1, bucket);
-            // q for the single new position: [1, hkv, g, 1, d] is the
-            // same flat layout as embed's [hq][d].
-            let q = Tensor::from_vec(
-                &[1, hkv, hq / hkv, 1, d],
-                embed(Q_SALT, tok, pos, hq * d),
-            );
-            let inputs = self.attn_inputs(slot, q, bucket, len, len - 1);
-            per_slot.push((entry, inputs));
+            self.kv.append(seq0, &k, &v);
+            dec.push(DecState {
+                slot,
+                tok,
+                pos,
+                x: Vec::new(),
+                layer: 0,
+            });
         }
-        // Phase 2: all slots' grid blocks through ONE shared worker pool.
-        let jobs: Vec<PlanJob> = per_slot
-            .iter()
-            .map(|(e, inp)| PlanJob {
-                graph: &e.graph,
-                plan: &e.plan,
-                inputs: inp,
-                tile: e.tile,
-            })
-            .collect();
-        let results = execute_plans_batched(&jobs, &self.par);
-        drop(jobs);
-        let mut toks = Vec::with_capacity(active.len());
-        for (i, &slot) in active.iter().enumerate() {
-            let out = &results[i].0[0];
-            let tok = sample_token(&out.data, self.model.vocab);
-            self.last_token[slot] = tok;
-            self.log_token(tok);
+
+        let mut allow: Vec<(usize, usize)> = prefill.to_vec();
+        let mut completions: Vec<(usize, u32)> = Vec::new();
+
+        loop {
+            // --- build this sub-round's jobs (decode first, then chunks)
+            let mut built: Vec<(Owner, Arc<CachedPlan>, HashMap<String, Tensor>)> = Vec::new();
+            for di in 0..dec.len() {
+                if dec[di].layer >= layers {
+                    continue;
+                }
+                let (slot, layer, pos) = (dec[di].slot, dec[di].layer, dec[di].pos);
+                let q_vec = if layer == 0 {
+                    embed(Q_SALT, dec[di].tok, pos, w)
+                } else {
+                    self.proj_q(layer, &dec[di].x)
+                };
+                let len = pos + 1;
+                let bucket = bucket_len(len, block);
+                let entry = self.plan_entry("decode", 1, bucket);
+                let q = Tensor::from_vec(&[1, hkv, hq / hkv, 1, d], q_vec);
+                let inputs = self.attn_inputs(slot, layer, q, bucket, len, len - 1);
+                built.push((Owner::Dec(di), entry, inputs));
+            }
+            for ai in 0..allow.len() {
+                let (slot, rem) = allow[ai];
+                if rem == 0 {
+                    continue;
+                }
+                let Some(st) = self.staged[slot].take() else {
+                    continue;
+                };
+                let n_new = st.prompt.len() - st.base;
+                let rows_left = n_new - st.cursor;
+                let chunk_cap = if self.chunk_tokens == 0 {
+                    n_new
+                } else {
+                    self.chunk_tokens
+                };
+                let c = rows_left.min(chunk_cap).min(rem);
+                if c == 0 || st.layer >= layers {
+                    self.staged[slot] = Some(st);
+                    continue;
+                }
+                // One plan class per (chunk size, kv bucket): real rows
+                // zero-padded up to the chunk width, pad outputs ignored.
+                let qb = if self.chunk_tokens == 0 {
+                    bucket_len(n_new, block)
+                } else {
+                    self.chunk_tokens
+                };
+                let total = st.prompt.len();
+                let kvb = bucket_len(total, block);
+                let mut qdata = vec![0f32; hq * qb * d];
+                for i in 0..c {
+                    let r = st.cursor + i;
+                    let abs = st.base + r;
+                    let qrow = if st.layer == 0 {
+                        embed(Q_SALT, st.prompt[abs], abs, w)
+                    } else {
+                        self.proj_q(st.layer, &st.x[r * w..(r + 1) * w])
+                    };
+                    for h in 0..hq {
+                        let dst = (h * qb + i) * d;
+                        qdata[dst..dst + d].copy_from_slice(&qrow[h * d..(h + 1) * d]);
+                    }
+                }
+                let entry = self.plan_entry("prefill", qb, kvb);
+                let q = Tensor::from_vec(&[1, hkv, hq / hkv, qb, d], qdata);
+                let q_off = st.base + st.cursor;
+                let inputs = self.attn_inputs(slot, st.layer, q, kvb, total, q_off);
+                allow[ai].1 = rem - c;
+                self.staged[slot] = Some(st);
+                built.push((Owner::Pre(slot, c), entry, inputs));
+            }
+            if built.is_empty() {
+                break;
+            }
+
+            // --- one batched launch over the shared worker pool
+            let results = {
+                let jobs: Vec<PlanJob> = built
+                    .iter()
+                    .map(|(_, e, inp)| PlanJob::from_cached(e.as_ref(), inp))
+                    .collect();
+                execute_plans_batched(&jobs, &self.par)
+            };
+
+            // --- fold results back into the per-slot state machines
+            for ((owner, _entry, mut inputs), (mut outs, _c)) in
+                built.into_iter().zip(results)
+            {
+                match owner {
+                    Owner::Dec(di) => {
+                        self.reclaim_scratch(dec[di].slot, &mut inputs);
+                        if dec[di].layer == 0 {
+                            // The results are owned here: move the
+                            // output buffer into the residual stream.
+                            dec[di].x = outs.swap_remove(0).data;
+                        } else {
+                            for (a, b) in dec[di].x.iter_mut().zip(&outs[0].data) {
+                                *a += b;
+                            }
+                        }
+                        dec[di].layer += 1;
+                        let l = dec[di].layer;
+                        if l < layers {
+                            let k = self.proj_k(l, &dec[di].x);
+                            let v = self.proj_v(l, &dec[di].x);
+                            let s = self.seq(dec[di].slot, l);
+                            self.kv.append(s, &k, &v);
+                        }
+                    }
+                    Owner::Pre(slot, c) => {
+                        self.reclaim_scratch(slot, &mut inputs);
+                        let out = &outs[0];
+                        let mut st = self.staged[slot].take().expect("state parked");
+                        let n_new = st.prompt.len() - st.base;
+                        let qb = out.numel() / w;
+                        for i in 0..c {
+                            let r = st.cursor + i;
+                            let (x, x_next) = (&st.x, &mut st.x_next);
+                            let dst = &mut x_next[r * w..(r + 1) * w];
+                            for h in 0..hq {
+                                let src = (h * qb + i) * d;
+                                let seg = &out.data[src..src + d];
+                                if st.layer == 0 {
+                                    dst[h * d..(h + 1) * d].copy_from_slice(seg);
+                                } else {
+                                    let base = r * w + h * d;
+                                    for j in 0..d {
+                                        dst[h * d + j] = x[base + j] + seg[j];
+                                    }
+                                }
+                            }
+                        }
+                        st.cursor += c;
+                        if st.cursor == n_new {
+                            st.layer += 1;
+                            st.cursor = 0;
+                            std::mem::swap(&mut st.x, &mut st.x_next);
+                            if st.layer == layers {
+                                // Prefill complete: sample the first
+                                // token from the final stream's last row.
+                                let last = &st.x[(n_new - 1) * w..n_new * w];
+                                let tok = sample_token(last, self.model.vocab);
+                                self.last_token[slot] = tok;
+                                completions.push((slot, tok));
+                                self.slot_meta[slot] = Some(SlotMeta {
+                                    conversation: st.conversation,
+                                    prompt: std::mem::take(&mut st.prompt),
+                                });
+                            } else {
+                                // Enter the next layer: append its K/V
+                                // for every new row from the stream.
+                                for r in 0..n_new {
+                                    let xr = &st.x[r * w..(r + 1) * w];
+                                    let k = self.proj_k(st.layer, xr);
+                                    let v = self.proj_v(st.layer, xr);
+                                    let s = self.seq(slot, st.layer);
+                                    self.kv.append(s, &k, &v);
+                                }
+                                self.staged[slot] = Some(st);
+                            }
+                        } else {
+                            self.staged[slot] = Some(st);
+                        }
+                    }
+                }
+            }
+        }
+
+        // Emit tokens: prefill completions first (in completion order —
+        // the sub-round each finished in, then job order within it),
+        // then the decode batch (active order). Both orders depend only
+        // on the scheduler's call sequence, never on thread timing, so
+        // the bit-identity gate holds.
+        let mut toks = Vec::with_capacity(dec.len());
+        for ds in &dec {
+            let tok = sample_token(&ds.x, self.model.vocab);
+            self.last_token[ds.slot] = tok;
             toks.push(tok);
         }
-        Ok((t0.elapsed().as_secs_f64(), toks))
+        for &(_, tok) in &completions {
+            self.log_token(tok);
+        }
+        for &tok in &toks {
+            self.log_token(tok);
+        }
+        Ok((t0.elapsed().as_secs_f64(), completions, toks))
+    }
+
+    fn prefill(
+        &mut self,
+        slot: usize,
+        req: &Request,
+        tokens: &[u32],
+    ) -> anyhow::Result<(f64, u32)> {
+        let t0 = Instant::now();
+        self.begin_prefill(slot, req, tokens)?;
+        loop {
+            let (_dt, fin, _toks) = self.mixed_step(&[(slot, usize::MAX)], &[])?;
+            if let Some(&(s, tok)) = fin.first() {
+                debug_assert_eq!(s, slot);
+                return Ok((t0.elapsed().as_secs_f64(), tok));
+            }
+        }
+    }
+
+    fn decode(&mut self, active: &[usize]) -> anyhow::Result<(f64, Vec<u32>)> {
+        let (dt, fin, toks) = self.mixed_step(&[], active)?;
+        debug_assert!(fin.is_empty());
+        Ok((dt, toks))
     }
 
     fn release(&mut self, slot: usize) {
-        self.kv.release(slot);
+        self.staged[slot] = None;
+        self.scratch[slot].valid_for = None;
+        let parkable = self.prefix_caching && self.model.variant.causal_serving();
+        match (parkable, self.slot_meta[slot].take()) {
+            (true, Some(meta)) => self.park_slot(slot, meta),
+            _ => {
+                for l in 0..self.model.layers {
+                    let s = self.seq(slot, l);
+                    self.kv.release(s);
+                }
+            }
+        }
         self.last_token[slot] = 0;
     }
 
@@ -370,6 +1005,18 @@ mod tests {
         EngineBackend::new(EngineModel::tiny(), 4, 1024, par)
     }
 
+    /// prefill + `steps` decodes of one request in one slot; the stream.
+    fn run_one(b: &mut EngineBackend, slot: usize, r: &Request, steps: usize) -> Vec<u32> {
+        let toks = prompt_tokens(r, b.model.vocab);
+        let (_, first) = b.prefill(slot, r, &toks).unwrap();
+        let mut out = vec![first];
+        for _ in 0..steps {
+            let (_, t) = b.decode(&[slot]).unwrap();
+            out.push(t[0]);
+        }
+        out
+    }
+
     #[test]
     fn batched_decode_is_bitwise_identical_to_sequential_requests() {
         // N slots decoded together must emit exactly the tokens each
@@ -382,15 +1029,7 @@ mod tests {
             .enumerate()
             .map(|(i, &plen)| {
                 let mut b = backend(Parallelism::sequential());
-                let r = req(i, plen);
-                let toks = prompt_tokens(&r, b.model.vocab);
-                let (_, first) = b.prefill(0, &r, &toks).unwrap();
-                let mut out = vec![first];
-                for _ in 0..steps {
-                    let (_, t) = b.decode(&[0]).unwrap();
-                    out.push(t[0]);
-                }
-                out
+                run_one(&mut b, 0, &req(i, plen), steps)
             })
             .collect();
         for threads in [1, 2, 4] {
@@ -413,6 +1052,222 @@ mod tests {
     }
 
     #[test]
+    fn chunked_prefill_is_bit_identical_to_one_shot() {
+        // Chunk-scheduled prefill must emit the exact token stream of
+        // whole-prompt prefill — for every serving-supported variant,
+        // across bucket-crossing prompt lengths, including ragged
+        // budget-limited chunks.
+        for variant in crate::variants::serving_variants() {
+            // a window shorter than the prompts so the mask has teeth
+            let variant = match variant {
+                Variant::SlidingWindow { .. } => Variant::SlidingWindow { window: 40 },
+                v => v,
+            };
+            let model = EngineModel {
+                variant,
+                layers: 2,
+                ..EngineModel::tiny()
+            };
+            for plen in [9usize, 64, 100, 150] {
+                let r = req(0, plen);
+                let mut cold = EngineBackend::new(model, 2, 1024, Parallelism::sequential());
+                let want = run_one(&mut cold, 0, &r, 4);
+
+                // chunk = one page, whole budget per round
+                let mut chunked =
+                    EngineBackend::new(model, 2, 1024, Parallelism::sequential());
+                chunked.set_chunk_tokens(64);
+                let got = run_one(&mut chunked, 0, &r, 4);
+                assert_eq!(got, want, "{} plen={plen} chunked", variant.name());
+
+                // ragged: 7-row allowances through mixed_step directly
+                let mut ragged =
+                    EngineBackend::new(model, 2, 1024, Parallelism::sequential());
+                ragged.set_chunk_tokens(64);
+                let toks = prompt_tokens(&r, ragged.model.vocab);
+                ragged.begin_prefill(0, &r, &toks).unwrap();
+                let first = loop {
+                    let (_, fin, _) = ragged.mixed_step(&[(0, 7)], &[]).unwrap();
+                    if let Some(&(_, tok)) = fin.first() {
+                        break tok;
+                    }
+                };
+                let mut got = vec![first];
+                for _ in 0..4 {
+                    let (_, t) = ragged.decode(&[0]).unwrap();
+                    got.push(t[0]);
+                }
+                assert_eq!(got, want, "{} plen={plen} ragged", variant.name());
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_reuse_matches_a_cold_reprefill() {
+        // Turn 2 of a conversation adopts the parked turn-1 prefix; its
+        // token stream must be bitwise identical to a cold re-prefill of
+        // the full turn-2 prompt — multi-layer, chunked.
+        let model = EngineModel::tiny_deep(2);
+        let turn1 = Request {
+            conversation: 5,
+            turn: 0,
+            ..req(0, 70)
+        };
+        let turn2 = Request {
+            conversation: 5,
+            turn: 1,
+            ..req(1, 130)
+        };
+
+        let mut warm = EngineBackend::new(model, 2, 1024, Parallelism::sequential());
+        warm.set_chunk_tokens(64);
+        let _ = run_one(&mut warm, 0, &turn1, 3);
+        warm.release(0);
+        assert!(warm.prefix_stats().parked_pages > 0, "turn 1 must park pages");
+        let got = run_one(&mut warm, 1, &turn2, 3);
+        let ps = warm.prefix_stats();
+        assert_eq!(ps.hits, 1, "turn 2 must adopt the parked prefix");
+        assert_eq!(ps.tokens_reused, 64, "70-token prompt parks one full page");
+
+        let mut cold = EngineBackend::new(model, 2, 1024, Parallelism::sequential());
+        cold.set_chunk_tokens(64);
+        let want = run_one(&mut cold, 0, &turn2, 3);
+        assert_eq!(got, want, "prefix reuse must not change the stream");
+    }
+
+    #[test]
+    fn multi_layer_l1_matches_single_layer_reference() {
+        // The L=1 model must reproduce the plain single-attention-layer
+        // path built by hand from the same public pieces (plan cache
+        // with granule-pinned autotune, paged KV, batched executor).
+        let r = req(3, 33);
+        let steps = 4;
+        let mut b = backend(Parallelism::sequential());
+        assert_eq!(b.model.layers, 1);
+        let got = run_one(&mut b, 0, &r, steps);
+
+        // Hand-rolled single-layer serving loop.
+        let m = EngineModel::tiny();
+        let (hq, hkv, d) = (m.heads_q, m.heads_kv, m.head_dim);
+        let mut plans = PlanCache::with_block_k(16, DEFAULT_BLOCK_TOKENS);
+        let mut kv = PagedKv::new(1, DEFAULT_BLOCK_TOKENS, hkv, d);
+        let stride = kv.token_stride();
+        let prompt = prompt_tokens(&r, m.vocab);
+        let entry = |plans: &mut PlanCache, tag, q_len: usize, kv_len: usize| {
+            plans.get_or_build(
+                PlanKey {
+                    tag,
+                    variant: m.variant.name(),
+                    heads_q: hq,
+                    heads_kv: hkv,
+                    head_dim: d,
+                    q_len,
+                    kv_len,
+                },
+                || {
+                    build_serving(
+                        m.variant,
+                        &AttnShape {
+                            batch: 1,
+                            rows: 1,
+                            heads_q: hq,
+                            heads_kv: hkv,
+                            seq: kv_len,
+                            head_dim: d,
+                        },
+                        q_len,
+                    )
+                },
+            )
+        };
+        let attn = |kv: &PagedKv, q: Tensor, bucket: usize, len: usize, q_off: usize| {
+            let mut kb = Vec::new();
+            let mut vb = Vec::new();
+            kv.gather(0, bucket, &mut kb, &mut vb);
+            let mut inp = HashMap::new();
+            inp.insert("q".to_string(), q);
+            inp.insert("k".to_string(), Tensor::from_vec(&[1, hkv, 1, bucket, d], kb));
+            inp.insert("v".to_string(), Tensor::from_vec(&[1, hkv, 1, bucket, d], vb));
+            inp.insert(
+                "kv_len".to_string(),
+                Tensor::from_vec(&[1, 1, 1, 1, 1], vec![len as f32]),
+            );
+            inp.insert(
+                "q_off".to_string(),
+                Tensor::from_vec(&[1, 1, 1, 1, 1], vec![q_off as f32]),
+            );
+            inp
+        };
+        for (pos, &tok) in prompt.iter().enumerate() {
+            kv.append(0, &embed(K_SALT, tok, pos, stride), &embed(V_SALT, tok, pos, stride));
+        }
+        let s = prompt.len();
+        let bucket = bucket_len(s, DEFAULT_BLOCK_TOKENS);
+        let e = entry(&mut plans, "prefill", bucket, bucket);
+        let mut qdata = vec![0f32; hq * bucket * d];
+        for (pos, &tok) in prompt.iter().enumerate() {
+            let qe = embed(Q_SALT, tok, pos, hq * d);
+            for h in 0..hq {
+                let dst = (h * bucket + pos) * d;
+                qdata[dst..dst + d].copy_from_slice(&qe[h * d..(h + 1) * d]);
+            }
+        }
+        let q = Tensor::from_vec(&[1, hkv, hq / hkv, bucket, d], qdata);
+        let inputs = attn(&kv, q, bucket, s, 0);
+        let job = PlanJob::from_cached(e.as_ref(), &inputs);
+        let (outs, _) = execute_plans_batched(
+            std::slice::from_ref(&job),
+            &Parallelism::sequential(),
+        )
+        .pop()
+        .unwrap();
+        drop(job);
+        let out = &outs[0];
+        let mut row = Vec::with_capacity(hq * d);
+        for h in 0..hq {
+            let off = (h * bucket + (s - 1)) * d;
+            row.extend_from_slice(&out.data[off..off + d]);
+        }
+        let mut want = vec![sample_token(&row, m.vocab)];
+        let mut last = want[0];
+        for _ in 0..steps {
+            let pos = kv.len(0);
+            kv.append(
+                0,
+                &embed(K_SALT, last, pos, stride),
+                &embed(V_SALT, last, pos, stride),
+            );
+            let len = pos + 1;
+            let bucket = bucket_len(len, DEFAULT_BLOCK_TOKENS);
+            let e = entry(&mut plans, "decode", 1, bucket);
+            let q = Tensor::from_vec(&[1, hkv, hq / hkv, 1, d], embed(Q_SALT, last, pos, hq * d));
+            let inputs = attn(&kv, q, bucket, len, len - 1);
+            let job = PlanJob::from_cached(e.as_ref(), &inputs);
+            let (outs, _) = execute_plans_batched(
+                std::slice::from_ref(&job),
+                &Parallelism::sequential(),
+            )
+            .pop()
+            .unwrap();
+            drop(job);
+            last = sample_token(&outs[0].data, m.vocab);
+            want.push(last);
+        }
+        assert_eq!(got, want, "L=1 must match the plain single-layer path");
+    }
+
+    #[test]
+    fn deeper_models_change_the_stream() {
+        // L=4 must actually flow data through the extra layers (if the
+        // projections or residual stream were dead, the streams would
+        // coincide).
+        let r = req(0, 40);
+        let mut b1 = EngineBackend::new(EngineModel::tiny_deep(1), 2, 1024, Parallelism::sequential());
+        let mut b4 = EngineBackend::new(EngineModel::tiny_deep(4), 2, 1024, Parallelism::sequential());
+        assert_ne!(run_one(&mut b1, 0, &r, 5), run_one(&mut b4, 0, &r, 5));
+    }
+
+    #[test]
     fn plan_cache_hit_rate_exceeds_90_percent_at_steady_state() {
         let mut b = backend(Parallelism::sequential());
         for (i, plen) in [40usize, 55, 62, 70].into_iter().enumerate() {
@@ -429,6 +1284,35 @@ mod tests {
             "steady-state decode hit rate {:.3} too low: {s:?}",
             s.hit_rate()
         );
+    }
+
+    #[test]
+    fn warmup_covers_the_bucket_ladder() {
+        // After warm-up, a chunk-scheduled serving run must build zero
+        // new plans — and therefore run zero analyze() calls and zero
+        // gather reallocations (the two per-step bug gates).
+        let mut b = EngineBackend::new(EngineModel::tiny_deep(2), 4, 512, Parallelism::sequential());
+        b.set_chunk_tokens(64);
+        let warmed = b.warmup_plans(512);
+        assert!(warmed >= 2, "warmup must build the ladder ({warmed})");
+        let misses0 = b.cache_stats().misses;
+        for (i, plen) in [40usize, 70, 130, 200].into_iter().enumerate() {
+            let r = req(i, plen);
+            let toks = prompt_tokens(&r, b.model.vocab);
+            b.begin_prefill(i, &r, &toks).unwrap();
+            while b.staged_rows(i) > 0 {
+                b.mixed_step(&[(i, 64)], &[]).unwrap();
+            }
+        }
+        for _ in 0..30 {
+            b.decode(&[0, 1, 2, 3]).unwrap();
+        }
+        // Zero new plans after warmup. Because every serving job carries
+        // its CachedPlan's precomputed analysis/consumers, zero misses
+        // also means zero per-step analyze() calls (the global counter
+        // is reported by `bench serve_engine`, which runs isolated).
+        assert_eq!(b.cache_stats().misses, misses0, "warmup missed a shape class");
+        assert_eq!(b.gather_reallocs(), 0, "decode gathers must be allocation-free");
     }
 
     #[test]
@@ -458,27 +1342,114 @@ mod tests {
         // SchedulerConfig.parallelism reached the backend (satellite:
         // --threads flows end to end through configure()).
         assert_eq!(b.parallelism().num_threads, 2);
-        // All slots were released: every page is back on the free list.
+        // Page accounting balances: everything not parked is free, and
+        // clearing the prefix cache frees the rest.
+        let (allocated, free) = b.kv_pages();
+        assert_eq!(allocated, free + b.prefix_stats().parked_pages);
+        b.clear_prefix_cache();
         let (allocated, free) = b.kv_pages();
         assert_eq!(allocated, free);
     }
 
     #[test]
-    fn kv_pages_are_shared_and_released() {
+    fn chunk_scheduled_trace_completes_with_budget() {
+        // The chunked scheduling loop (mixed rounds, budgeted prefill)
+        // must complete a multi-layer trace with correct token counts.
+        let trace = generate(&TraceConfig {
+            n_requests: 10,
+            rate: 100.0,
+            input_mu: 3.5,
+            input_sigma: 0.5,
+            mean_output: 4.0,
+            max_input: 150,
+            max_output: 6,
+            ..Default::default()
+        });
+        let mut b = EngineBackend::new(EngineModel::tiny_deep(2), 4, 1024, Parallelism::sequential());
+        let vocab = b.model.vocab;
+        let cfg = SchedulerConfig {
+            parallelism: Parallelism::with_threads(2),
+            prefill_chunk_tokens: 64,
+            prefill_round_tokens: 128,
+            ..Default::default()
+        };
+        let done = run_trace(&mut b, &trace, cfg, vocab).unwrap();
+        assert_eq!(done.len(), trace.len());
+        for (m, r) in done.iter().zip(&trace) {
+            assert_eq!(m.id, r.id);
+            assert_eq!(m.itls.len(), r.output_tokens.max(1) - 1);
+            assert!(m.first_token_s >= m.arrival_s);
+        }
+    }
+
+    #[test]
+    fn kv_pages_are_shared_parked_and_adopted() {
         let mut b = backend(Parallelism::sequential());
         let r = req(0, 100);
         let toks = prompt_tokens(&r, b.model.vocab);
         b.prefill(0, &r, &toks).unwrap();
         let (alloc_after_prefill, _) = b.kv_pages();
         assert_eq!(alloc_after_prefill, 2, "100 tokens = 2 pages of 64");
+        // Release parks the whole-page prefix (1 page) and frees the
+        // partial tail.
         b.release(0);
         let (_, free) = b.kv_pages();
-        assert_eq!(free, 2);
-        // A new request reuses the freed pages.
+        assert_eq!(free, 1);
+        assert_eq!(b.prefix_stats().parked_pages, 1);
+        // The same conversation prefills again: the parked page is
+        // adopted, the freed page is reused — no new allocation.
         b.prefill(1, &r, &toks).unwrap();
         let (alloc2, free2) = b.kv_pages();
         assert_eq!(alloc2, 2);
         assert_eq!(free2, 0);
+        assert_eq!(b.prefix_stats().hits, 1);
+        // With prefix caching off, release frees everything.
+        b.set_prefix_caching(false);
+        b.release(1);
+        b.clear_prefix_cache();
+        let (alloc3, free3) = b.kv_pages();
+        assert_eq!(alloc3, free3);
+    }
+
+    #[test]
+    fn prefix_cache_evicts_lru_beyond_the_page_budget() {
+        let mut b = backend(Parallelism::sequential());
+        b.prefix_cache_pages = 2;
+        for conv in 0..3 {
+            let r = Request {
+                conversation: conv,
+                ..req(conv, 70)
+            };
+            let toks = prompt_tokens(&r, b.model.vocab);
+            b.prefill(0, &r, &toks).unwrap();
+            b.release(0); // parks 1 page per conversation
+        }
+        let ps = b.prefix_stats();
+        assert_eq!(ps.entries, 2, "third park must evict the LRU conversation");
+        assert_eq!(ps.parked_pages, 2);
+    }
+
+    #[test]
+    fn non_causal_variants_never_park_prefixes() {
+        // Vanilla serving attends the whole growing cache, so a cached
+        // row's deeper-layer K/V would change under a longer sequence —
+        // its prefixes are not reusable and must not be parked.
+        let mut b = EngineBackend::new(
+            EngineModel {
+                variant: Variant::Vanilla,
+                ..EngineModel::tiny()
+            },
+            2,
+            1024,
+            Parallelism::sequential(),
+        );
+        let r = req(0, 100);
+        let toks = prompt_tokens(&r, b.model.vocab);
+        b.prefill(0, &r, &toks).unwrap();
+        b.release(0);
+        assert_eq!(b.prefix_stats().entries, 0);
+        let (alloc, free) = b.kv_pages();
+        assert_eq!(alloc, free, "vanilla release must free everything");
     }
 
     #[test]

@@ -1,15 +1,30 @@
-//! Slot-paged KV tensors: one page pool shared across all serving slots.
+//! Sequence-paged KV tensors: one refcounted page pool shared across all
+//! serving sequences.
 //!
-//! FlashInfer-style paged KV (arXiv 2501.01005): a slot's K/V cache is a
-//! list of fixed-size *pages* ([`PagedKv::block_tokens`] tokens each)
-//! drawn from a pool shared by every slot. Decode steps append one
-//! token's K/V in place — a new page is taken from the free list only at
-//! block boundaries, so steady-state appends never reallocate and
-//! releasing a request returns its pages for immediate reuse by any
-//! other slot. Page size doubles as the plan-cache bucket granule
+//! FlashInfer-style paged KV (arXiv 2501.01005): a sequence's K/V cache
+//! is a list of fixed-size *pages* ([`PagedKv::block_tokens`] tokens
+//! each) drawn from a pool shared by every sequence. Decode steps append
+//! one token's K/V in place — a new page is taken from the free list
+//! only at block boundaries, so steady-state appends never reallocate
+//! and releasing a request returns its pages for immediate reuse. Page
+//! size doubles as the plan-cache bucket granule
 //! ([`crate::fusion::bucket_len`]): a gathered KV tensor is always a
 //! whole number of pages, which is exactly the padded shape the cached
 //! serving plans expect.
+//!
+//! A *sequence* is one (slot, layer) cache: the multi-layer engine
+//! backend maps slot `s`, layer `l` onto sequence `s * layers + l`, all
+//! drawing from this single pool.
+//!
+//! **Prefix reuse (Mooncake-style):** pages carry reference counts so a
+//! conversation's prompt prefix can outlive its request. [`Self::park`]
+//! detaches a whole-page prefix from a finished sequence (the partial
+//! tail page — which mixes prompt and generated tokens — is freed, never
+//! shared); [`Self::adopt`] grafts a parked prefix into a fresh sequence
+//! by bumping refcounts, so a follow-up turn skips re-prefilling the
+//! shared history. Shared pages are always *full* and therefore
+//! immutable: appends only ever write pages this sequence allocated
+//! itself (asserted), so copy-on-write is never needed.
 //!
 //! Layout: within a page, token-major `[token][head][d]` (an append is
 //! one contiguous write); gathers produce the engine's head-major
@@ -21,9 +36,12 @@ pub const DEFAULT_BLOCK_TOKENS: usize = 64;
 struct Page {
     k: Vec<f32>,
     v: Vec<f32>,
+    /// Live references: one per sequence holding the page plus one per
+    /// parked prefix. 0 = on the free list.
+    rc: u32,
 }
 
-struct SlotKv {
+struct SeqKv {
     pages: Vec<usize>,
     len: usize,
 }
@@ -34,19 +52,19 @@ pub struct PagedKv {
     head_dim: usize,
     pages: Vec<Page>,
     free: Vec<usize>,
-    slots: Vec<SlotKv>,
+    seqs: Vec<SeqKv>,
 }
 
 impl PagedKv {
-    pub fn new(n_slots: usize, block_tokens: usize, heads: usize, head_dim: usize) -> Self {
+    pub fn new(n_seqs: usize, block_tokens: usize, heads: usize, head_dim: usize) -> Self {
         PagedKv {
             block_tokens: block_tokens.max(1),
             heads,
             head_dim,
             pages: Vec::new(),
             free: Vec::new(),
-            slots: (0..n_slots)
-                .map(|_| SlotKv {
+            seqs: (0..n_seqs)
+                .map(|_| SeqKv {
                     pages: Vec::new(),
                     len: 0,
                 })
@@ -64,13 +82,13 @@ impl PagedKv {
         self.heads * self.head_dim
     }
 
-    /// Tokens currently cached for `slot`.
-    pub fn len(&self, slot: usize) -> usize {
-        self.slots[slot].len
+    /// Tokens currently cached for `seq`.
+    pub fn len(&self, seq: usize) -> usize {
+        self.seqs[seq].len
     }
 
-    pub fn is_empty(&self, slot: usize) -> bool {
-        self.slots[slot].len == 0
+    pub fn is_empty(&self, seq: usize) -> bool {
+        self.seqs[seq].len == 0
     }
 
     /// Pages ever allocated (the pool's high-water mark).
@@ -84,45 +102,54 @@ impl PagedKv {
     }
 
     /// Append one token's K/V (`[head][d]` layout, `token_stride()`
-    /// floats each) to `slot`. Amortized allocation-free: a page is
+    /// floats each) to `seq`. Amortized allocation-free: a page is
     /// taken from the free list (or freshly allocated) only every
-    /// `block_tokens` appends.
-    pub fn append(&mut self, slot: usize, k: &[f32], v: &[f32]) {
+    /// `block_tokens` appends. Only pages owned exclusively by this
+    /// sequence are ever written (adopted prefix pages are full, so the
+    /// write cursor never lands inside one).
+    pub fn append(&mut self, seq: usize, k: &[f32], v: &[f32]) {
         let stride = self.token_stride();
         debug_assert_eq!(k.len(), stride);
         debug_assert_eq!(v.len(), stride);
-        let len = self.slots[slot].len;
+        let len = self.seqs[seq].len;
         if len % self.block_tokens == 0 {
             let cap = self.block_tokens * stride;
             let pi = self.free.pop().unwrap_or_else(|| {
                 self.pages.push(Page {
                     k: vec![0.0; cap],
                     v: vec![0.0; cap],
+                    rc: 0,
                 });
                 self.pages.len() - 1
             });
-            self.slots[slot].pages.push(pi);
+            debug_assert_eq!(self.pages[pi].rc, 0, "free page with live references");
+            self.pages[pi].rc = 1;
+            self.seqs[seq].pages.push(pi);
         }
-        let pi = *self.slots[slot].pages.last().expect("page just ensured");
+        let pi = *self.seqs[seq].pages.last().expect("page just ensured");
+        debug_assert_eq!(
+            self.pages[pi].rc, 1,
+            "appending into a shared page would corrupt other readers"
+        );
         let off = (len % self.block_tokens) * stride;
         self.pages[pi].k[off..off + stride].copy_from_slice(k);
         self.pages[pi].v[off..off + stride].copy_from_slice(v);
-        self.slots[slot].len = len + 1;
+        self.seqs[seq].len = len + 1;
     }
 
-    /// Gather `slot`'s cache into head-major `[head][padded_len][d]`
+    /// Gather `seq`'s cache into head-major `[head][padded_len][d]`
     /// buffers (the engine's KV input layout), zero-filling positions
-    /// `>= len(slot)`. `padded_len` must be a bucketed length `>= len`.
+    /// `>= len(seq)`. `padded_len` must be a bucketed length `>= len`.
     pub fn gather(
         &self,
-        slot: usize,
+        seq: usize,
         padded_len: usize,
         k_out: &mut Vec<f32>,
         v_out: &mut Vec<f32>,
     ) {
         let d = self.head_dim;
         let stride = self.token_stride();
-        let sl = &self.slots[slot];
+        let sl = &self.seqs[seq];
         // A stale bucket (computed before an append) would silently drop
         // the newest tokens; fail fast instead.
         debug_assert!(
@@ -147,11 +174,60 @@ impl PagedKv {
         }
     }
 
-    /// Free a slot's pages back to the shared pool.
-    pub fn release(&mut self, slot: usize) {
-        let pages = std::mem::take(&mut self.slots[slot].pages);
-        self.free.extend(pages);
-        self.slots[slot].len = 0;
+    fn unref(&mut self, pi: usize) {
+        let page = &mut self.pages[pi];
+        debug_assert!(page.rc > 0, "double release of page {pi}");
+        page.rc -= 1;
+        if page.rc == 0 {
+            self.free.push(pi);
+        }
+    }
+
+    /// Drop a sequence's reference to its pages (freeing unshared ones)
+    /// and reset it to empty.
+    pub fn release(&mut self, seq: usize) {
+        let pages = std::mem::take(&mut self.seqs[seq].pages);
+        for pi in pages {
+            self.unref(pi);
+        }
+        self.seqs[seq].len = 0;
+    }
+
+    /// Detach a whole-page prefix covering at most `keep_tokens` tokens
+    /// from `seq`, returning the kept page list (the sequence's
+    /// reference on those pages transfers to the returned prefix — drop
+    /// it later with [`Self::release_prefix`]). Everything past the
+    /// prefix — including the partial tail page — is released, and the
+    /// sequence is reset to empty.
+    pub fn park(&mut self, seq: usize, keep_tokens: usize) -> Vec<usize> {
+        let keep_pages = keep_tokens.min(self.seqs[seq].len) / self.block_tokens;
+        let mut pages = std::mem::take(&mut self.seqs[seq].pages);
+        for pi in pages.drain(keep_pages.min(pages.len())..) {
+            self.unref(pi);
+        }
+        self.seqs[seq].len = 0;
+        pages
+    }
+
+    /// Graft a parked prefix into an empty sequence: every page gains a
+    /// reference, and the sequence continues appending *after* the
+    /// prefix (the prefix pages are full, so the next append opens a
+    /// fresh page — shared pages are never written).
+    pub fn adopt(&mut self, seq: usize, pages: &[usize]) {
+        assert!(self.seqs[seq].pages.is_empty(), "adopt into non-empty seq {seq}");
+        for &pi in pages {
+            debug_assert!(self.pages[pi].rc > 0, "adopting a freed page {pi}");
+            self.pages[pi].rc += 1;
+        }
+        self.seqs[seq].pages = pages.to_vec();
+        self.seqs[seq].len = pages.len() * self.block_tokens;
+    }
+
+    /// Drop a parked prefix's references (LRU eviction / replacement).
+    pub fn release_prefix(&mut self, pages: &[usize]) {
+        for &pi in pages {
+            self.unref(pi);
+        }
     }
 }
 
@@ -209,7 +285,7 @@ mod tests {
     }
 
     #[test]
-    fn released_pages_are_reused_across_slots() {
+    fn released_pages_are_reused_across_seqs() {
         let mut kv = PagedKv::new(2, 2, 1, 2);
         let stride = kv.token_stride();
         for _ in 0..4 {
@@ -219,7 +295,7 @@ mod tests {
         kv.release(0);
         assert_eq!(kv.len(0), 0);
         assert_eq!(kv.free_pages(), 2);
-        // Slot 1 reuses the freed pages: no new allocation.
+        // Seq 1 reuses the freed pages: no new allocation.
         for _ in 0..4 {
             kv.append(1, &token_vec(2.0, stride), &token_vec(2.0, stride));
         }
@@ -242,5 +318,71 @@ mod tests {
         kv.gather(0, 4, &mut kb, &mut vb);
         assert_eq!(kb.capacity(), cap, "gather must not grow a large buffer");
         assert_eq!(kb.len(), 4 * 2);
+    }
+
+    #[test]
+    fn park_keeps_whole_pages_and_frees_the_tail() {
+        // 2-token pages; 5 appended tokens = 3 pages (last partial).
+        let mut kv = PagedKv::new(1, 2, 1, 2);
+        let stride = kv.token_stride();
+        for t in 0..5 {
+            kv.append(0, &token_vec(t as f32, stride), &token_vec(t as f32, stride));
+        }
+        assert_eq!(kv.allocated_pages(), 3);
+        // Park a 5-token prefix: only 2 full pages (4 tokens) survive.
+        let prefix = kv.park(0, 5);
+        assert_eq!(prefix.len(), 2);
+        assert_eq!(kv.len(0), 0);
+        assert_eq!(kv.free_pages(), 1, "partial tail page must be freed");
+        kv.release_prefix(&prefix);
+        assert_eq!(kv.free_pages(), 3);
+    }
+
+    #[test]
+    fn adopted_prefix_is_shared_until_all_refs_drop() {
+        let mut kv = PagedKv::new(2, 2, 1, 2);
+        let stride = kv.token_stride();
+        for t in 0..4 {
+            kv.append(0, &token_vec(t as f32, stride), &token_vec(t as f32, stride));
+        }
+        let prefix = kv.park(0, 4); // 2 full pages
+        assert_eq!(prefix.len(), 2);
+        // Adopt into seq 1 and extend it.
+        kv.adopt(1, &prefix);
+        assert_eq!(kv.len(1), 4);
+        kv.append(1, &token_vec(9.0, stride), &token_vec(9.0, stride));
+        assert_eq!(kv.len(1), 5);
+        // Releasing the sequence keeps the parked prefix alive...
+        kv.release(1);
+        let (mut kb, mut vb) = (Vec::new(), Vec::new());
+        kv.adopt(1, &prefix);
+        kv.gather(1, 4, &mut kb, &mut vb);
+        assert_eq!(kb[0], 0.0); // token 0 still intact
+        assert_eq!(kb[2 * 2], 2.0); // token 2 (page 1) intact
+        kv.release(1);
+        // ...and dropping the prefix frees everything.
+        kv.release_prefix(&prefix);
+        assert_eq!(kv.free_pages(), kv.allocated_pages());
+    }
+
+    #[test]
+    fn append_after_adoption_opens_a_fresh_page() {
+        let mut kv = PagedKv::new(2, 2, 1, 2);
+        let stride = kv.token_stride();
+        for t in 0..2 {
+            kv.append(0, &token_vec(t as f32, stride), &token_vec(t as f32, stride));
+        }
+        let prefix = kv.park(0, 2);
+        kv.adopt(0, &prefix);
+        let before = kv.allocated_pages();
+        kv.append(0, &token_vec(7.0, stride), &token_vec(7.0, stride));
+        // The shared page is full, so the append must not touch it.
+        assert!(kv.allocated_pages() > before || kv.free_pages() == 0);
+        let (mut kb, mut vb) = (Vec::new(), Vec::new());
+        kv.gather(0, 4, &mut kb, &mut vb);
+        assert_eq!(kb[2 * 2], 7.0);
+        kv.release(0);
+        kv.release_prefix(&prefix);
+        assert_eq!(kv.free_pages(), kv.allocated_pages());
     }
 }

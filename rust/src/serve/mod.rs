@@ -13,7 +13,7 @@ pub mod pjrt;
 pub mod sim;
 
 pub use engine::{run_trace, Backend, SchedulerConfig};
-pub use engine_backend::{EngineBackend, EngineModel};
+pub use engine_backend::{EngineBackend, EngineModel, PrefixStats};
 pub use kv::PagedKv;
 pub use metrics::{summarize, RequestMetrics, Summary};
 #[cfg(feature = "pjrt")]
@@ -151,14 +151,41 @@ pub fn engine_trace(n: usize) -> Vec<crate::tracegen::Request> {
     })
 }
 
+/// Knobs for `serve --backend engine`. Defaults match the serve
+/// bench's chunked *single-layer* cell (layers 1, chunk 64); pass
+/// `--layers 4` to reproduce the bench's deep rows.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineServeOpts {
+    /// Attention layers per token step.
+    pub layers: usize,
+    /// Prefill chunk size in tokens (0 = whole-prompt prefill).
+    pub chunk_tokens: usize,
+    /// Per-round prefill budget in row-layer units — one unit advances
+    /// one prompt row through one layer, so a full row costs `layers`
+    /// units (0 = unbounded).
+    pub round_tokens: usize,
+}
+
+impl Default for EngineServeOpts {
+    fn default() -> Self {
+        EngineServeOpts {
+            layers: 1,
+            chunk_tokens: 64,
+            round_tokens: 256,
+        }
+    }
+}
+
 /// `flashlight serve` CLI: run the coordinator on a trace with the
 /// simulated backend, the real tiled-engine backend, or the PJRT
 /// backend (fused vs naive). `par` is handed to backends that execute
-/// real plans (see [`SchedulerConfig::parallelism`]).
+/// real plans (see [`SchedulerConfig::parallelism`]); `opts` only
+/// applies to the engine backend.
 pub fn cli_serve(
     n_requests: usize,
     backend: &str,
     par: crate::exec::Parallelism,
+    opts: EngineServeOpts,
 ) -> anyhow::Result<()> {
     match backend {
         "sim" => {
@@ -167,30 +194,42 @@ pub fn cli_serve(
             let _ = (n_requests, par);
             Ok(())
         }
-        "engine" => serve_engine(n_requests, par),
+        "engine" => serve_engine(n_requests, par, opts),
         "pjrt" => serve_pjrt(n_requests, par),
         other => anyhow::bail!("unknown backend {other} (sim|engine|pjrt)"),
     }
 }
 
-/// Real tiled-engine serving run: batched decode on the fused executor
-/// with slot-paged KV and the fusion plan cache.
-fn serve_engine(n_requests: usize, par: crate::exec::Parallelism) -> anyhow::Result<()> {
+/// Real tiled-engine serving run: chunk-scheduled multi-layer serving
+/// on the fused executor with slot-paged KV, conversation prefix reuse,
+/// and the pre-warmed fusion plan cache.
+fn serve_engine(
+    n_requests: usize,
+    par: crate::exec::Parallelism,
+    opts: EngineServeOpts,
+) -> anyhow::Result<()> {
     let trace = engine_trace(n_requests);
-    let mut b = EngineBackend::default_server(par);
+    let mut b = EngineBackend::new(EngineModel::tiny_deep(opts.layers), 8, 1024, par);
     let vocab = b.model.vocab;
     let cfg = SchedulerConfig {
         parallelism: par,
+        prefill_chunk_tokens: opts.chunk_tokens,
+        prefill_round_tokens: opts.round_tokens,
         ..Default::default()
     };
+    // Plan-cache warmup: build the whole bucket ladder up front so the
+    // first request per bucket pays no plan+autotune latency inline.
+    b.configure(&cfg);
+    let warmed = b.warmup_plans(1024);
     let t0 = std::time::Instant::now();
     let done = run_trace(&mut b, &trace, cfg, vocab)?;
     let s = summarize(&done);
     let cs = b.cache_stats();
+    let ps = b.prefix_stats();
     let (pages_alloc, pages_free) = b.kv_pages();
     println!(
         "engine backend: {} reqs in {:.2}s wall | TTFT mean {:.1} ms p99 {:.1} ms | \
-         ITL mean {:.2} ms | {:.1} tok/s | {} threads",
+         ITL mean {:.2} ms | {:.1} tok/s | {} threads | {} layers | chunk {}",
         s.n_requests,
         t0.elapsed().as_secs_f64(),
         s.ttft_mean_s * 1e3,
@@ -198,16 +237,28 @@ fn serve_engine(n_requests: usize, par: crate::exec::Parallelism) -> anyhow::Res
         s.itl_mean_s * 1e3,
         s.tokens_per_s,
         b.parallelism().num_threads,
+        b.model.layers,
+        opts.chunk_tokens,
     );
     println!(
-        "plan cache: {} hits / {} misses ({:.1}% hit rate, {} entries) | \
-         kv pages: {} allocated, {} free",
+        "plan cache: {} warmed, {} hits / {} misses ({:.1}% hit rate, {} entries) | \
+         kv pages: {} allocated, {} free, {} parked",
+        warmed,
         cs.hits,
         cs.misses,
         cs.hit_rate() * 100.0,
         cs.entries,
         pages_alloc,
         pages_free,
+        ps.parked_pages,
+    );
+    println!(
+        "prefix cache: {} adoptions, {} tokens re-used, {} conversations parked | \
+         gather reallocs: {}",
+        ps.hits,
+        ps.tokens_reused,
+        ps.entries,
+        b.gather_reallocs(),
     );
     Ok(())
 }

@@ -11,8 +11,20 @@
 //! ops, broadcasts, reductions and matmuls.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::ir::{Graph, NodeId, Op, ReduceOp};
+
+/// Process-wide count of [`analyze`] invocations. Serving gates on this:
+/// cached plans carry their analysis, so steady-state decode must not
+/// re-analyze — `bench serve_engine` asserts the count stays flat across
+/// post-warmup serving rounds.
+static ANALYZE_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// How many times [`analyze`] has run in this process.
+pub fn analyze_call_count() -> u64 {
+    ANALYZE_CALLS.load(Ordering::Relaxed)
+}
 
 /// A canonical dimension class (equivalence class of `(node, axis)`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -87,6 +99,7 @@ impl UnionFind {
 /// * slice: the sliced axis gets a fresh class (different extent); the
 ///   other axes keep the input's identity.
 pub fn analyze(g: &Graph) -> DimAnalysis {
+    ANALYZE_CALLS.fetch_add(1, Ordering::Relaxed);
     let mut uf = UnionFind::new();
     // Assign provisional classes: one fresh id per (node, axis).
     let mut raw: Vec<Vec<u32>> = g

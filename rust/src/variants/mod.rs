@@ -54,6 +54,22 @@ impl Variant {
         )
     }
 
+    /// Is this variant's serving arm causal in absolute positions — i.e.
+    /// a cached row's attention (and therefore any deeper layer's K/V
+    /// derived from it) never changes as the sequence grows? This is the
+    /// precondition for conversation prefix reuse: vanilla serving
+    /// attends the whole (growing) cache, so its prefixes are not
+    /// reusable and the engine backend skips parking them.
+    pub fn causal_serving(&self) -> bool {
+        matches!(
+            self,
+            Variant::Causal
+                | Variant::Softcap { .. }
+                | Variant::SlidingWindow { .. }
+                | Variant::Alibi
+        )
+    }
+
     /// Uses FlexAttention's `mask_mod`/`block_mask` path (vs `score_mod`)?
     pub fn is_mask_variant(&self) -> bool {
         matches!(
@@ -372,7 +388,8 @@ fn build_evoformer(shape: &AttnShape) -> Graph {
 /// * `kv_len`: the valid cache length (padded columns `ki >= kv_len` are
 ///   masked out), and
 /// * `q_off`: the absolute position of query row 0 (decode passes
-///   `kv_len - 1`; prefill passes 0),
+///   `kv_len - 1`; whole-prompt prefill passes 0; a chunked-prefill or
+///   prefix-reusing chunk passes the chunk's absolute start),
 ///
 /// so one fused plan serves *every* sequence length in a bucket: the
 /// shape class, not the exact length, keys the
@@ -455,6 +472,20 @@ pub fn build_serving(variant: Variant, shape: &AttnShape, q_len: usize) -> Graph
     let w = b.softmax(s, k_ax);
     let o = b.matmul(w, v);
     b.finish(&[o])
+}
+
+/// The variants [`build_serving`] supports (the ones with a serving-arm
+/// rewrite of their score mods over runtime `kv_len`/`q_off`): the
+/// engine backend's warmup and the chunked-prefill parity tests iterate
+/// exactly this set.
+pub fn serving_variants() -> Vec<Variant> {
+    vec![
+        Variant::Vanilla,
+        Variant::Causal,
+        Variant::Softcap { cap: 20.0 },
+        Variant::SlidingWindow { window: 256 },
+        Variant::Alibi,
+    ]
 }
 
 /// All variants at paper-default parameters (window 256, prefix 256,

@@ -4,9 +4,13 @@
 # so future PRs have a baseline to compare against:
 #   BENCH_parallel_engine.json  sequential vs parallel executor wall
 #                               clock per variant
-#   BENCH_serve_engine.json     engine-backend serve throughput (tok/s
-#                               at 1, 2, and all threads, with the
-#                               bit-identity gate and plan-cache stats)
+#   BENCH_serve_engine.json     engine-backend serve matrix: tok/s and
+#                               TTFT p50/p99 for chunked prefill on/off
+#                               x L in {1,4} layers, each at 1/2/all
+#                               threads with the bit-identity gate,
+#                               plan-cache warmup stats, and the
+#                               zero-gather-alloc / zero-post-warmup-
+#                               plan-build gates
 #
 # Usage: scripts/bench_regress.sh [THREADS]
 #   THREADS  worker threads for the parallel runs (default: all cores)
@@ -32,7 +36,7 @@ echo "== parallel engine: seq vs par per variant -> BENCH_parallel_engine.json =
 cargo run --release -- bench engine --threads "$THREADS"
 
 echo
-echo "== serve throughput: engine backend at 1/2/all threads -> BENCH_serve_engine.json =="
+echo "== serve throughput: engine backend, chunking x layers matrix -> BENCH_serve_engine.json =="
 cargo run --release -- bench serve_engine
 
 echo
