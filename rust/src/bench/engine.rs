@@ -8,6 +8,7 @@
 use std::collections::HashMap;
 
 use crate::bench::harness::{bench_median_ms, json_f64, json_str, JsonArray};
+use crate::exec::simd::{self, SimdLevel};
 use crate::exec::{eval, execute_plan, execute_plan_par, Parallelism, Tensor};
 use crate::fusion::{plan, FusionMode, TileConfig};
 use crate::ir::{Graph, Op};
@@ -136,6 +137,7 @@ pub fn run_with(
             ("head_dim", shape.head_dim.to_string()),
         ]);
     }
+    microbench_into(&mut json, warmup, iters);
     let p = json.finish()?;
     println!(
         "worst speedup {:.2}x over {} threads; wrote {}",
@@ -144,6 +146,100 @@ pub fn run_with(
         p.display()
     );
     Ok(())
+}
+
+/// GEMM/softmax microkernel microbench: GFLOP/s per kernel, scalar tier
+/// vs the dispatched tier, appended to the engine trajectory JSON so
+/// kernel PRs have a per-kernel baseline. Pointwise kernels (exp) are
+/// counted at one flop per element.
+fn microbench_into(json: &mut JsonArray, warmup: usize, iters: usize) {
+    let lvl = simd::level();
+    println!("\n== microkernels: scalar vs {} ==", lvl.name());
+    println!(
+        "{:<12} {:>14} {:>14} {:>8}",
+        "kernel", "scalar GF/s", "simd GF/s", "speedup"
+    );
+    let mut push = |kernel: &str, flops: f64, mut run: Box<dyn FnMut(SimdLevel)>| {
+        let scalar_ms = bench_median_ms(warmup, iters, || run(SimdLevel::Scalar));
+        let simd_ms = bench_median_ms(warmup, iters, || run(lvl));
+        let scalar_gfs = flops / (scalar_ms * 1e6);
+        let simd_gfs = flops / (simd_ms * 1e6);
+        println!(
+            "{:<12} {:>14.2} {:>14.2} {:>8.2}",
+            kernel,
+            scalar_gfs,
+            simd_gfs,
+            scalar_ms / simd_ms
+        );
+        json.push_obj(&[
+            ("kernel", json_str(kernel)),
+            ("level", json_str(lvl.name())),
+            ("scalar_gflops", json_f64(scalar_gfs)),
+            ("simd_gflops", json_f64(simd_gfs)),
+            ("speedup", json_f64(scalar_ms / simd_ms)),
+        ]);
+    };
+
+    // NT (QKᵀ): one q-tile row block against a kv span.
+    let (m, n, k) = (64, 256, 64);
+    let a = Tensor::synthetic(&[m, k], 31).data;
+    let b = Tensor::synthetic(&[n, k], 32).data;
+    let mut c = vec![0.0f32; m * n];
+    push(
+        "gemm_nt",
+        (2 * m * n * k) as f64,
+        Box::new(move |l| simd::gemm_nt_with(l, &a, &b, &mut c, m, n, k)),
+    );
+
+    // NN (PV): scores x V, accumulator zero-filled per run (the
+    // memset is part of the timed body; it is <2% of the flops).
+    let (m, n, k) = (64, 64, 256);
+    let a = Tensor::synthetic(&[m, k], 33).data;
+    let b = Tensor::synthetic(&[k, n], 34).data;
+    let mut c = vec![0.0f32; m * n];
+    push(
+        "gemm_nn",
+        (2 * m * n * k) as f64,
+        Box::new(move |l| {
+            c.iter_mut().for_each(|x| *x = 0.0);
+            simd::gemm_nn_with(l, &a, &b, &mut c, m, n, k)
+        }),
+    );
+
+    // Online-softmax exp over a score tile's worth of elements.
+    let n = 16 * 1024;
+    let x: Vec<f32> = Tensor::synthetic(&[n], 35).data.iter().map(|v| v * 8.0).collect();
+    let mut e = vec![0.0f32; n];
+    push(
+        "exp",
+        n as f64,
+        Box::new(move |l| simd::vexp_shift_with(l, &mut e, &x, -0.25)),
+    );
+
+    // Row reduction (softmax denominator / running max).
+    let x = Tensor::synthetic(&[16 * 1024], 36).data;
+    push(
+        "row_sum",
+        x.len() as f64,
+        Box::new(move |l| {
+            std::hint::black_box(simd::row_sum_with(l, &x));
+        }),
+    );
+
+    // PV row fold (acc += p * v) across a tile of rows.
+    let rows = 256;
+    let d = 64;
+    let v = Tensor::synthetic(&[rows * d], 37).data;
+    let mut acc = vec![0.0f32; d];
+    push(
+        "axpy",
+        (2 * rows * d) as f64,
+        Box::new(move |l| {
+            for j in 0..rows {
+                simd::axpy_with(l, &mut acc, 0.5, &v[j * d..(j + 1) * d]);
+            }
+        }),
+    );
 }
 
 #[cfg(test)]

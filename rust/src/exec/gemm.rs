@@ -1,114 +1,46 @@
-//! Cache-blocked, autovectorizer-friendly f32 GEMM microkernels.
+//! f32 GEMM entry points for both executors — thin wrappers over the
+//! runtime-dispatched SIMD kernel tier ([`crate::exec::simd`]).
 //!
-//! Both executors' matmuls land here. The kernels are written against
-//! contiguous slices with zipped iterators so LLVM can elide bounds
-//! checks and vectorize, and they break the serial FP dependency chains
-//! the naive loops had:
+//! * NT (`C = A · Bᵀ`, both operands row-major over k, the QKᵀ form):
+//!   register-blocked microkernels over **packed B panels** (8 rows ×
+//!   two vectors of accumulators on the vector tiers). The m = 1 form
+//!   (serving decode) skips packing and runs a striped dot along k.
+//!   Callers that revisit the same B tile (the tiled executor's k-loop
+//!   across q-tiles) amortize packing through the
+//!   [`TilePool`](crate::exec::pool::TilePool) panel cache and call
+//!   [`gemm_nt_packed`]; the plain entry packs per call into a
+//!   per-thread scratch.
+//! * NN (`C += A · B`, the PV form): B rows are already contiguous, so
+//!   the kernel streams them two vectors at a time under [`KC`]-row
+//!   contraction panels, preserving the exact-zero skip for masked
+//!   attention scores.
 //!
-//! * NT (`C = A · Bᵀ`, both operands row-major over k): 4-wide register
-//!   blocking over output columns (each `A` row is re-used across four
-//!   `B` rows from registers) and a 4-accumulator dot for the tail.
-//! * NN (`C += A · B`): the contraction is blocked into panels of
-//!   [`KC`] rows of `B` so the streamed panel stays cache-resident
-//!   across all `m` output rows; two contraction steps are fused per
-//!   pass over the output row to halve its load/store traffic. Zero
-//!   `A` entries (masked-out attention scores) skip their panel rows,
-//!   preserving the sparse shortcut of the original executor.
+//! Every tier produces bit-identical results (the per-element FMA
+//! chains are fixed; see `exec/simd/mod.rs`), so dispatch never affects
+//! the engine's determinism gates.
 
+use crate::exec::simd;
+pub use crate::exec::simd::{PackedB, KC};
 use crate::exec::tensor::Tensor;
-
-/// Contraction-panel height for the NN kernel: KC · n floats of B are
-/// kept hot across all m rows of A (KC=128, n=64 → 32 KiB, L1-sized).
-pub const KC: usize = 128;
-
-#[inline]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 4];
-    let mut ai = a.chunks_exact(4);
-    let mut bi = b.chunks_exact(4);
-    for (a4, b4) in (&mut ai).zip(&mut bi) {
-        acc[0] += a4[0] * b4[0];
-        acc[1] += a4[1] * b4[1];
-        acc[2] += a4[2] * b4[2];
-        acc[3] += a4[3] * b4[3];
-    }
-    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-    for (x, y) in ai.remainder().iter().zip(bi.remainder()) {
-        s += x * y;
-    }
-    s
-}
 
 /// `C[m×n] = A[m×k] · B[n×k]ᵀ` — the QKᵀ form (both operands row-major
 /// with k contiguous). Overwrites `c`.
 pub fn gemm_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
     debug_assert!(a.len() >= m * k && b.len() >= n * k && c.len() >= m * n);
-    for (i, a_row) in a.chunks_exact(k).take(m).enumerate() {
-        let c_row = &mut c[i * n..(i + 1) * n];
-        let mut j = 0;
-        while j + 4 <= n {
-            let b0 = &b[j * k..(j + 1) * k];
-            let b1 = &b[(j + 1) * k..(j + 2) * k];
-            let b2 = &b[(j + 2) * k..(j + 3) * k];
-            let b3 = &b[(j + 3) * k..(j + 4) * k];
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-            for ((((&av, &v0), &v1), &v2), &v3) in
-                a_row.iter().zip(b0).zip(b1).zip(b2).zip(b3)
-            {
-                s0 += av * v0;
-                s1 += av * v1;
-                s2 += av * v2;
-                s3 += av * v3;
-            }
-            c_row[j] = s0;
-            c_row[j + 1] = s1;
-            c_row[j + 2] = s2;
-            c_row[j + 3] = s3;
-            j += 4;
-        }
-        while j < n {
-            c_row[j] = dot(a_row, &b[j * k..(j + 1) * k]);
-            j += 1;
-        }
-    }
+    simd::gemm_nt(a, b, c, m, n, k)
+}
+
+/// [`gemm_nt`] over a pre-packed B (the tiled executor's panel-cache
+/// path — K/V tiles are packed once per k-tile, not per q-tile).
+pub fn gemm_nt_packed(a: &[f32], bp: &PackedB, c: &mut [f32], m: usize, n: usize, k: usize) {
+    simd::gemm_nt_packed(a, bp, c, m, n, k)
 }
 
 /// `C[m×n] += A[m×k] · B[k×n]` — the PV form. Accumulates into `c`
 /// (callers pass a zeroed or carried accumulator).
 pub fn gemm_nn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
     debug_assert!(a.len() >= m * k && b.len() >= k * n && c.len() >= m * n);
-    let mut p0 = 0;
-    while p0 < k {
-        let pc = KC.min(k - p0);
-        let b_panel = &b[p0 * n..(p0 + pc) * n];
-        for i in 0..m {
-            let a_row = &a[i * k + p0..i * k + p0 + pc];
-            let c_row = &mut c[i * n..(i + 1) * n];
-            let mut p = 0;
-            while p + 2 <= pc {
-                let (a0, a1) = (a_row[p], a_row[p + 1]);
-                if a0 != 0.0 || a1 != 0.0 {
-                    let b0 = &b_panel[p * n..(p + 1) * n];
-                    let b1 = &b_panel[(p + 1) * n..(p + 2) * n];
-                    for ((cv, &v0), &v1) in c_row.iter_mut().zip(b0).zip(b1) {
-                        *cv += a0 * v0 + a1 * v1;
-                    }
-                }
-                p += 2;
-            }
-            if p < pc {
-                let a0 = a_row[p];
-                if a0 != 0.0 {
-                    let b0 = &b_panel[p * n..(p + 1) * n];
-                    for (cv, &v0) in c_row.iter_mut().zip(b0) {
-                        *cv += a0 * v0;
-                    }
-                }
-            }
-        }
-        p0 += pc;
-    }
+    simd::gemm_nn(a, b, c, m, n, k)
 }
 
 /// Batched matmul with size-1 batch-dim broadcasting (the IR `Matmul`
@@ -194,7 +126,7 @@ mod tests {
 
     #[test]
     fn nt_matches_naive_over_odd_shapes() {
-        for (m, n, k) in [(1, 1, 1), (3, 5, 7), (8, 8, 8), (5, 9, 130), (17, 4, 33)] {
+        for (m, n, k) in [(1, 1, 1), (3, 5, 7), (8, 8, 8), (5, 9, 130), (17, 4, 33), (1, 9, 40)] {
             let a = fill(m * k, 1);
             let b = fill(n * k, 2);
             let mut c = vec![0.0; m * n];
@@ -202,6 +134,23 @@ mod tests {
             let want = naive_nt(&a, &b, m, n, k);
             for (x, y) in c.iter().zip(&want) {
                 assert!((x - y).abs() <= 1e-4, "{m}x{n}x{k}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn nt_packed_matches_unpacked_bitwise() {
+        use crate::exec::simd::{self, PackedB};
+        for (m, n, k) in [(2, 3, 5), (8, 16, 64), (9, 17, 33)] {
+            let a = fill(m * k, 7);
+            let b = fill(n * k, 8);
+            let mut c1 = vec![0.0; m * n];
+            gemm_nt(&a, &b, &mut c1, m, n, k);
+            let bp = PackedB::pack_with(simd::level(), &b, n, k, Vec::new());
+            let mut c2 = vec![0.0; m * n];
+            gemm_nt_packed(&a, &bp, &mut c2, m, n, k);
+            for (x, y) in c1.iter().zip(&c2) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{m}x{n}x{k}");
             }
         }
     }

@@ -6,21 +6,28 @@
 //! The tiled executor is a data-parallel engine: pipeline groups run
 //! their (batch, head, q-tile) launch grid across threads
 //! ([`Parallelism`]) with per-thread scratch pools ([`TilePool`]), and
-//! both executors' matmuls go through the cache-blocked microkernels in
-//! [`gemm`]. See `rust/src/exec/README.md` for the architecture.
+//! both executors' numerics land on the runtime-dispatched SIMD kernel
+//! tier ([`simd`]: AVX2+FMA / NEON / scalar, `FLASHLIGHT_SIMD=0` kill
+//! switch) through the GEMM wrappers in [`gemm`], the shared
+//! exp/sigmoid kernels, and the striped row reductions. Scalar and
+//! vector tiers are bit-identical by construction, so dispatch never
+//! perturbs the determinism gates. See `rust/src/exec/README.md` for
+//! the architecture.
 
 mod counters;
 mod gemm;
 mod parallel;
 mod pool;
 mod reference;
+pub mod simd;
 mod tensor;
 pub mod tiled;
 
 pub use counters::Counters;
-pub use gemm::{batched_matmul, gemm_nn, gemm_nt};
+pub use gemm::{batched_matmul, gemm_nn, gemm_nt, gemm_nt_packed, PackedB};
 pub use parallel::{parallel_map_with, Parallelism};
 pub use pool::TilePool;
 pub use reference::{eager_counters, eval, eval_node, eval_pw, node_flops};
+pub use simd::SimdLevel;
 pub use tensor::{flat_index, for_each_index, for_each_row, strides_of, Tensor, NEG_INF};
 pub use tiled::{execute_plan, execute_plan_par, execute_plans_batched, PlanJob};

@@ -8,8 +8,19 @@
 //! q-tiles very different amounts of unmasked work), then returns the
 //! results **in block order** so the caller's merge is deterministic and
 //! bit-identical to a sequential run.
+//!
+//! Workers claim the cursor in small chunks ([`CLAIM_CHUNK`] blocks per
+//! CAS) to cut contention on fine-grained grids — one `fetch_add` per
+//! block made the cursor line the hottest word in the process on
+//! many-core hosts. The final `workers · CLAIM_CHUNK` items degrade to
+//! single-block claims so the tail stays load-balanced; either way each
+//! index is claimed exactly once and results are reassembled in index
+//! order, so the deterministic block-order merge is untouched.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Blocks handed out per cursor claim away from the tail.
+const CLAIM_CHUNK: usize = 4;
 
 /// How many OS threads the execution engine may use. `num_threads == 1`
 /// is the exact sequential path (no threads are spawned).
@@ -84,6 +95,9 @@ where
     }
 
     let cursor = AtomicUsize::new(0);
+    // Chunked claims degrade to one block each inside the tail window,
+    // so no worker sits on a multi-block claim while others idle.
+    let tail_start = n.saturating_sub(workers * CLAIM_CHUNK);
     let mut shards: Vec<Vec<(usize, T)>> = Vec::with_capacity(workers);
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(workers);
@@ -92,11 +106,31 @@ where
                 let mut state = init();
                 let mut local: Vec<(usize, T)> = Vec::new();
                 loop {
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
+                    let start = cursor.load(Ordering::Relaxed);
+                    if start >= n {
                         break;
                     }
-                    local.push((i, f(&mut state, i)));
+                    // Clamp chunks at the tail boundary so the last
+                    // `workers * CLAIM_CHUNK` items go out one by one.
+                    let take = if start < tail_start {
+                        CLAIM_CHUNK.min(tail_start - start)
+                    } else {
+                        1
+                    };
+                    if cursor
+                        .compare_exchange_weak(
+                            start,
+                            start + take,
+                            Ordering::Relaxed,
+                            Ordering::Relaxed,
+                        )
+                        .is_err()
+                    {
+                        continue; // lost the race (or spurious) — retry
+                    }
+                    for i in start..start + take {
+                        local.push((i, f(&mut state, i)));
+                    }
                 }
                 local
             }));

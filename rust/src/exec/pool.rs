@@ -11,6 +11,10 @@
 //! Each worker thread of the parallel engine owns its own pool; nothing
 //! here is synchronized.
 
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use crate::exec::simd::{self, PackedB};
 use crate::exec::tensor::Tensor;
 
 /// Retired buffers kept for reuse. Bounded so pathological plans cannot
@@ -18,14 +22,70 @@ use crate::exec::tensor::Tensor;
 /// teardown (score chain × k-tiles) fits without dropping buffers.
 const MAX_POOLED: usize = 256;
 
+/// Packed-panel cache bound: at most this many distinct (plan, node,
+/// region) K-tile panels are held per worker before the cache resets.
+/// Eviction is pure perf — panels are derived data, so correctness and
+/// the bit-identity gates never depend on hits.
+const MAX_PANELS: usize = 128;
+
+/// Identity of a packed NT panel: (plan tag, node id, operand region).
+/// Valid for the lifetime of one pipeline launch — worker pools are
+/// created fresh per launch, and the tag keeps plans of one batched
+/// launch apart.
+pub type PanelKey = (u64, u32, Vec<(usize, usize)>);
+
 #[derive(Debug, Default)]
 pub struct TilePool {
     free: Vec<Vec<f32>>,
+    panels: HashMap<PanelKey, Rc<PackedB>>,
 }
 
 impl TilePool {
     pub fn new() -> Self {
-        TilePool { free: Vec::new() }
+        TilePool::default()
+    }
+
+    /// The packed panels for NT operand tile `b[n × k]` under `key`,
+    /// packing (once) on miss — this is how K tiles are packed once per
+    /// k-tile rather than once per (q-tile, k-tile) pair. The caller
+    /// still gathers (and touch-logs) the raw tile exactly as before,
+    /// so HBM/L2 counters are byte-identical with the cache cold or
+    /// warm, at any thread count.
+    pub fn packed_nt_panel(&mut self, key: PanelKey, b: &[f32], n: usize, k: usize) -> Rc<PackedB> {
+        if let Some(p) = self.panels.get(&key) {
+            if p.n == n && p.k == k {
+                return p.clone();
+            }
+        }
+        if self.panels.len() >= MAX_PANELS {
+            self.clear_panels();
+        }
+        let nr = simd::panel_width(simd::level());
+        let buf = self.take((n + nr - 1) / nr * k * nr);
+        let p = Rc::new(PackedB::pack_with(simd::level(), b, n, k, buf));
+        self.panels.insert(key, p.clone());
+        p
+    }
+
+    /// Drop all cached panels, retiring sole-owned storage into the
+    /// free list.
+    pub fn clear_panels(&mut self) {
+        for (_, p) in self.panels.drain() {
+            if let Ok(p) = Rc::try_unwrap(p) {
+                self.free_put(p.data);
+            }
+        }
+    }
+
+    /// Number of cached panels (tests/diagnostics).
+    pub fn cached_panels(&self) -> usize {
+        self.panels.len()
+    }
+
+    fn free_put(&mut self, buf: Vec<f32>) {
+        if self.free.len() < MAX_POOLED && buf.capacity() > 0 {
+            self.free.push(buf);
+        }
     }
 
     /// An empty buffer with capacity for at least `n` elements. The
@@ -68,9 +128,7 @@ impl TilePool {
 
     /// Return a buffer's storage to the pool.
     pub fn put(&mut self, buf: Vec<f32>) {
-        if self.free.len() < MAX_POOLED && buf.capacity() > 0 {
-            self.free.push(buf);
-        }
+        self.free_put(buf);
     }
 
     /// Retire a whole tensor, keeping its storage.
@@ -158,5 +216,35 @@ mod tests {
             pool.put(vec![0.0; 4]);
         }
         assert_eq!(pool.idle_buffers(), MAX_POOLED);
+    }
+
+    #[test]
+    fn panel_cache_packs_once_per_key() {
+        let mut pool = TilePool::new();
+        let (n, k) = (6, 4);
+        let b: Vec<f32> = (0..n * k).map(|i| i as f32).collect();
+        let key: PanelKey = (0, 42, vec![(0, n), (0, k)]);
+        let p1 = pool.packed_nt_panel(key.clone(), &b, n, k);
+        let p2 = pool.packed_nt_panel(key, &b, n, k);
+        assert!(Rc::ptr_eq(&p1, &p2), "second lookup must hit the cache");
+        assert_eq!(pool.cached_panels(), 1);
+        // a different q-tile's key for the same node misses
+        let p3 = pool.packed_nt_panel((0, 42, vec![(1, n), (0, k)]), &b, n, k);
+        assert!(!Rc::ptr_eq(&p1, &p3));
+        assert_eq!(pool.cached_panels(), 2);
+        drop((p1, p2, p3));
+        pool.clear_panels();
+        assert_eq!(pool.cached_panels(), 0);
+        assert!(pool.idle_buffers() >= 1, "panel storage retires to the free list");
+    }
+
+    #[test]
+    fn panel_cache_is_bounded() {
+        let mut pool = TilePool::new();
+        let b = vec![1.0f32; 8];
+        for i in 0..(MAX_PANELS + 5) {
+            let _ = pool.packed_nt_panel((0, i as u32, vec![]), &b, 2, 4);
+        }
+        assert!(pool.cached_panels() <= MAX_PANELS + 1);
     }
 }

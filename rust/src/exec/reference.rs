@@ -8,6 +8,7 @@
 use std::collections::HashMap;
 
 use crate::exec::counters::Counters;
+use crate::exec::simd;
 use crate::exec::tensor::{for_each_row, Tensor};
 use crate::ir::{CmpOp, Graph, NodeId, Op, PwOp, ReduceOp};
 
@@ -50,10 +51,13 @@ where
 }
 
 /// Row-contiguous reduction of `src` along `axis` into `out`, which the
-/// caller pre-fills with the reduce identity. The combine order —
-/// ascending along `axis`, row-major inner walk — is the bit-stability
-/// contract shared by the eager and fused executors: both call this one
-/// implementation, so fused-vs-eager parity can never drift.
+/// caller pre-fills with the reduce identity. The combine order is the
+/// bit-stability contract shared by the eager and fused executors: both
+/// call this one implementation, so fused-vs-eager parity can never
+/// drift. When the reduced axis is innermost, rows fold through the
+/// SIMD tier's striped-8 reduction (`simd::row_sum` / `simd::row_max`);
+/// otherwise the inner dimension folds element-wise row by row — both
+/// bit-identical at every dispatch level.
 pub(crate) fn reduce_rows_into(src: &Tensor, axis: usize, op: ReduceOp, out: &mut [f32]) {
     let inner: usize = src.shape[axis + 1..].iter().product();
     let count = src.shape[axis];
@@ -61,11 +65,11 @@ pub(crate) fn reduce_rows_into(src: &Tensor, axis: usize, op: ReduceOp, out: &mu
     if inner == 1 {
         for o in 0..outer {
             let row = &src.data[o * count..(o + 1) * count];
-            let mut acc = out[o];
-            for &x in row {
-                acc = op.combine(acc, x);
-            }
-            out[o] = acc;
+            let reduced = match op {
+                ReduceOp::Sum => simd::row_sum(row),
+                ReduceOp::Max => simd::row_max(row),
+            };
+            out[o] = op.combine(out[o], reduced);
         }
     } else {
         for o in 0..outer {
@@ -73,8 +77,9 @@ pub(crate) fn reduce_rows_into(src: &Tensor, axis: usize, op: ReduceOp, out: &mu
             for j in 0..count {
                 let s_off = (o * count + j) * inner;
                 let row = &src.data[s_off..s_off + inner];
-                for (d, &x) in dst.iter_mut().zip(row) {
-                    *d = op.combine(*d, x);
+                match op {
+                    ReduceOp::Sum => simd::vadd_assign(dst, row),
+                    ReduceOp::Max => simd::vmax_assign(dst, row),
                 }
             }
         }
@@ -88,10 +93,13 @@ pub fn eval_pw(op: PwOp, args: &[f32]) -> f32 {
         PwOp::Mul => args[0] * args[1],
         PwOp::Div => args[0] / args[1],
         PwOp::Neg => -args[0],
-        PwOp::Exp => args[0].exp(),
+        // exp/sigmoid land on the shared SIMD-tier kernel (one
+        // polynomial for every executor and dispatch level, so parity
+        // between eager, fused, scalar, and vector paths is bitwise).
+        PwOp::Exp => simd::exp_f32(args[0]),
         PwOp::Exp2 => args[0].exp2(),
         PwOp::Tanh => args[0].tanh(),
-        PwOp::Sigmoid => 1.0 / (1.0 + (-args[0]).exp()),
+        PwOp::Sigmoid => simd::sigmoid_f32(args[0]),
         PwOp::Recip => 1.0 / args[0],
         PwOp::Sqrt => args[0].sqrt(),
         PwOp::Rsqrt => 1.0 / args[0].sqrt(),
@@ -142,7 +150,13 @@ pub fn eval_node(node_op: &Op, shape: &[usize], operands: &[&Tensor]) -> Tensor 
         Op::Pointwise { op, .. } => {
             let n: usize = shape.iter().product();
             let mut data = Vec::with_capacity(n);
-            pointwise_fill(&mut data, *op, operands, n);
+            // Unary exp/sigmoid take the vectorized slice kernel
+            // (bit-identical to the per-element generic loop).
+            match (operands.len(), *op) {
+                (1, PwOp::Exp) => simd::vexp_append(&mut data, &operands[0].data),
+                (1, PwOp::Sigmoid) => simd::vsigmoid_append(&mut data, &operands[0].data),
+                _ => pointwise_fill(&mut data, *op, operands, n),
+            }
             Tensor::from_vec(shape, data)
         }
         Op::Broadcast { .. } => operands[0].broadcast_to(shape),

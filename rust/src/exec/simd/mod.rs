@@ -1,0 +1,602 @@
+//! SIMD kernel tier: runtime-dispatched vector microkernels for the
+//! engine's three hot paths — register-blocked GEMM (NT over packed B
+//! panels, NN over contiguous rows), the online-softmax `exp`/rescale,
+//! and row reductions (max / striped sum).
+//!
+//! ## Dispatch
+//!
+//! [`level()`] resolves the tier once per process: AVX2+FMA on x86_64
+//! hosts that report both features, NEON on aarch64 (baseline there),
+//! scalar everywhere else. `FLASHLIGHT_SIMD=0` (also `off` / `scalar`)
+//! is the kill switch — it forces the scalar tier; only downgrades are
+//! honored because forcing an ISA the host lacks would be unsound.
+//! Callers that need an explicit tier (benches, property tests) use the
+//! `*_with` entry points.
+//!
+//! ## The bit-exactness contract
+//!
+//! Scalar and vector tiers produce **bit-identical** results (property
+//! tests in `rust/tests/simd_kernels.rs` assert `to_bits` equality, not
+//! tolerance). That holds by construction:
+//!
+//! * element-wise kernels (`exp`, `sigmoid`, scale, axpy) perform the
+//!   same IEEE ops per lane — the scalar tier uses `f32::mul_add`
+//!   (fused, single rounding) wherever a vector tier issues an FMA;
+//! * GEMM output elements are single sequential FMA chains over the
+//!   contraction index, so neither the panel layout nor the register
+//!   blocking changes the association;
+//! * reductions are pinned to a fixed **8-lane striped** accumulation
+//!   (`lane[i % 8]`) with the shared [`hsum8_tree`] / [`hmax8_tree`]
+//!   combine, implemented as one YMM register on AVX2, a `float32x4`
+//!   pair on NEON, and an `[f32; 8]` array in the scalar tier;
+//! * the m = 1 NT form (serving decode) instead vectorizes the dot
+//!   product along k with the same striped-8 scheme — a static split on
+//!   shape, so every tier takes it for exactly the same calls.
+//!
+//! Caveats (documented, not defended): NaN propagation and the sign of
+//! zero follow the ISA's `max`/blend semantics (attention graphs
+//! produce neither), `exp` overflows to `+inf` slightly early (above
+//! ~88.38 rather than 88.72), and the default round-to-nearest mode is
+//! assumed.
+//!
+//! Adding a tier for a new ISA: implement the kernel set in a new
+//! `exec/simd/<isa>.rs` mirroring `scalar.rs` lane-for-lane (see
+//! `exec/README.md` for the checklist), add a [`SimdLevel`] variant,
+//! and wire the `*_with` match arms + [`detect`].
+
+pub mod scalar;
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+#[cfg(target_arch = "x86_64")]
+pub mod x86;
+
+use std::sync::OnceLock;
+
+/// Contraction-panel height for the NN kernel: KC rows of B are kept
+/// hot across all m rows of A (KC=128, n=64 → 32 KiB, L1-sized). Pure
+/// cache blocking — the per-element FMA chains are association-blind to
+/// it, so it never affects bits.
+pub const KC: usize = 128;
+
+/// A resolved kernel tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable fallback; also the semantic reference the vector tiers
+    /// are property-tested against.
+    Scalar,
+    /// x86_64 with AVX2 + FMA3 (8-lane f32).
+    Avx2Fma,
+    /// aarch64 NEON (4-lane f32, paired to emulate the 8-lane contract).
+    Neon,
+}
+
+impl SimdLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2Fma => "avx2+fma",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    /// Whether the NT kernels of this tier read packed B panels (the
+    /// scalar tier reads the row-major operand directly).
+    pub fn uses_panels(self) -> bool {
+        !matches!(self, SimdLevel::Scalar)
+    }
+}
+
+/// Best tier the host supports (ignores the env kill switch).
+#[allow(unreachable_code)]
+pub fn detect() -> SimdLevel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma") {
+            return SimdLevel::Avx2Fma;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON is part of the aarch64 baseline ABI.
+        return SimdLevel::Neon;
+    }
+    SimdLevel::Scalar
+}
+
+/// Resolve a `FLASHLIGHT_SIMD` override: `0` / `off` / `scalar` force
+/// the scalar tier, anything else (or unset) auto-detects.
+pub fn resolve(env: Option<&str>) -> SimdLevel {
+    match env.map(str::trim) {
+        Some("0") | Some("off") | Some("scalar") => SimdLevel::Scalar,
+        _ => detect(),
+    }
+}
+
+static LEVEL: OnceLock<SimdLevel> = OnceLock::new();
+
+/// Process-wide dispatch tier, resolved once at first use.
+pub fn level() -> SimdLevel {
+    *LEVEL.get_or_init(|| resolve(std::env::var("FLASHLIGHT_SIMD").ok().as_deref()))
+}
+
+// ---------------------------------------------------------------------
+// Shared exp kernel (Cephes-style expf). Every tier runs exactly these
+// operations per lane; `exp_f32` *is* the single-lane instance.
+// ---------------------------------------------------------------------
+
+/// Above this the one-step 2^n scaling overflows: result is `+inf`.
+pub(crate) const EXP_HI: f32 = 88.722_84;
+/// Below this the result underflows: pinned to exactly `0.0` (so the
+/// `-1e30` mask sentinel and `-inf` both softmax to zero weight).
+pub(crate) const EXP_LO: f32 = -87.336_55;
+pub(crate) const LOG2E: f32 = 1.442_695;
+pub(crate) const LN2_HI: f32 = 0.693_359_4;
+pub(crate) const LN2_LO: f32 = -2.121_944_4e-4;
+pub(crate) const EXP_P0: f32 = 1.987_569_1e-4;
+pub(crate) const EXP_P1: f32 = 1.398_199_9e-3;
+pub(crate) const EXP_P2: f32 = 8.333_452e-3;
+pub(crate) const EXP_P3: f32 = 4.166_579_6e-2;
+pub(crate) const EXP_P4: f32 = 1.666_666_5e-1;
+pub(crate) const EXP_P5: f32 = 5.000_000_1e-1;
+/// 1.5 · 2²³: add-then-subtract forces round-to-nearest-even, the
+/// branch-free `rint` every tier shares (magic-number rounding).
+pub(crate) const EXP_MAGIC: f32 = 12_582_912.0;
+
+/// `a > b ? a : b` — the max every tier implements (x86 `maxps`
+/// semantics: returns `b` on equal-or-unordered).
+#[inline(always)]
+pub(crate) fn mx(a: f32, b: f32) -> f32 {
+    if a > b {
+        a
+    } else {
+        b
+    }
+}
+
+/// One lane of the shared `exp` kernel; bit-identical to every vector
+/// tier's per-lane computation. ~2 ulp over the finite range; exactly
+/// `0.0` below [`EXP_LO`], `+inf` above ~88.38, `exp(0) == 1.0`.
+#[inline]
+pub fn exp_f32(x: f32) -> f32 {
+    // Clamp mirrors vmax(x, lo) then vmin(·, hi).
+    let t = if x > EXP_LO { x } else { EXP_LO };
+    let xc = if t < EXP_HI { t } else { EXP_HI };
+    let n = xc.mul_add(LOG2E, EXP_MAGIC) - EXP_MAGIC;
+    let r = n.mul_add(-LN2_HI, xc);
+    let r = n.mul_add(-LN2_LO, r);
+    let z = r * r;
+    let mut y = EXP_P0;
+    y = y.mul_add(r, EXP_P1);
+    y = y.mul_add(r, EXP_P2);
+    y = y.mul_add(r, EXP_P3);
+    y = y.mul_add(r, EXP_P4);
+    y = y.mul_add(r, EXP_P5);
+    let y = y.mul_add(z, r) + 1.0;
+    // n ∈ [-126, 128] ⇒ biased exponent ∈ [1, 255]; 255 is +inf.
+    let bits = (((n as i32) + 127) as u32) << 23;
+    let out = y * f32::from_bits(bits);
+    if x < EXP_LO {
+        0.0
+    } else {
+        out
+    }
+}
+
+/// One lane of the shared logistic kernel: `1 / (1 + exp(-x))`.
+#[inline]
+pub fn sigmoid_f32(x: f32) -> f32 {
+    1.0 / (1.0 + exp_f32(-x))
+}
+
+/// The fixed reduction tree over the 8 striped lanes (matches the
+/// AVX2 128-bit-halves + movehl horizontal add).
+#[inline(always)]
+pub fn hsum8_tree(l: &[f32; 8]) -> f32 {
+    let b0 = l[0] + l[4];
+    let b1 = l[1] + l[5];
+    let b2 = l[2] + l[6];
+    let b3 = l[3] + l[7];
+    (b0 + b2) + (b1 + b3)
+}
+
+/// The same tree under max.
+#[inline(always)]
+pub fn hmax8_tree(l: &[f32; 8]) -> f32 {
+    let b0 = mx(l[0], l[4]);
+    let b1 = mx(l[1], l[5]);
+    let b2 = mx(l[2], l[6]);
+    let b3 = mx(l[3], l[7]);
+    mx(mx(b0, b2), mx(b1, b3))
+}
+
+// ---------------------------------------------------------------------
+// Packed B panels for the NT (QKᵀ) microkernel.
+// ---------------------------------------------------------------------
+
+/// Panel width (output columns per packed panel) of a tier's NT
+/// microkernel: two vectors wide on the vector tiers.
+pub fn panel_width(l: SimdLevel) -> usize {
+    match l {
+        SimdLevel::Avx2Fma => 16,
+        SimdLevel::Neon | SimdLevel::Scalar => 8,
+    }
+}
+
+/// The NT operand `B[n × k]` (row-major, k contiguous — the QKᵀ form's
+/// K tile) repacked so the microkernel loads contiguous vectors:
+/// `packed[jp][p][jj] = b[(jp·nr + jj)·k + p]`, panels zero-padded to
+/// `nr` columns. Pure data movement — never affects bits.
+#[derive(Debug)]
+pub struct PackedB {
+    pub data: Vec<f32>,
+    pub n: usize,
+    pub k: usize,
+    pub nr: usize,
+}
+
+impl PackedB {
+    /// Pack `b` for tier `l`, reusing `buf`'s storage.
+    pub fn pack_with(l: SimdLevel, b: &[f32], n: usize, k: usize, buf: Vec<f32>) -> PackedB {
+        let nr = panel_width(l);
+        let mut data = buf;
+        pack_nt(b, n, k, nr, &mut data);
+        PackedB { data, n, k, nr }
+    }
+
+    /// Bytes the packed panels occupy (diagnostics / cache bounds).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// Panel-pack `b[n × k]` into `out` at width `nr` (see [`PackedB`]).
+pub fn pack_nt(b: &[f32], n: usize, k: usize, nr: usize, out: &mut Vec<f32>) {
+    debug_assert!(b.len() >= n * k);
+    let panels = (n + nr - 1) / nr.max(1);
+    out.clear();
+    out.resize(panels * k * nr, 0.0);
+    for jp in 0..panels {
+        let base = jp * k * nr;
+        let cols = nr.min(n - jp * nr);
+        for jj in 0..cols {
+            let row = &b[(jp * nr + jj) * k..(jp * nr + jj + 1) * k];
+            for (p, &v) in row.iter().enumerate() {
+                out[base + p * nr + jj] = v;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dispatched kernel entry points. The `*_with` forms take an explicit
+// tier (benches, property tests); the short forms use `level()`.
+// ---------------------------------------------------------------------
+
+/// `C[m×n] = A[m×k] · B[n×k]ᵀ` (the QKᵀ form). Overwrites `c`.
+pub fn gemm_nt_with(l: SimdLevel, a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert!(a.len() >= m * k && b.len() >= n * k && c.len() >= m * n);
+    match l {
+        SimdLevel::Scalar => scalar::gemm_nt(a, b, c, m, n, k),
+        _ => {
+            if m == 1 {
+                nt_row_with(l, &a[..k], b, c, n, k);
+                return;
+            }
+            PACK_SCRATCH.with(|cell| {
+                let mut slot = cell.borrow_mut();
+                let bp = PackedB::pack_with(l, b, n, k, std::mem::take(&mut *slot));
+                gemm_nt_packed_with(l, a, &bp, c, m, n, k);
+                *slot = bp.data;
+            });
+        }
+    }
+}
+
+std::thread_local! {
+    /// Per-thread pack buffer for the unpacked [`gemm_nt_with`] entry
+    /// (callers that amortize packing use [`PackedB`] + the
+    /// `TilePool` panel cache instead).
+    static PACK_SCRATCH: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// NT over a caller-packed panel set (the tiled executor's panel-cache
+/// path). Bit-identical to [`gemm_nt_with`] at every tier.
+pub fn gemm_nt_packed_with(
+    l: SimdLevel,
+    a: &[f32],
+    bp: &PackedB,
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    debug_assert!(bp.n == n && bp.k == k);
+    debug_assert!(a.len() >= m * k && c.len() >= m * n);
+    if m == 1 {
+        // The decode form never packs; read the panels back out so the
+        // striped-dot semantics stay shape-only. Cold path: callers gate
+        // the panel cache on m ≥ 2.
+        return scalar::nt_row_packed(&a[..k], bp, c, n, k);
+    }
+    // A panel packed for a different tier width still executes
+    // correctly (the layout is bit-neutral): read it back scalar-wise.
+    if bp.nr != panel_width(l) {
+        return scalar::gemm_nt_packed(a, bp, c, m, n, k);
+    }
+    match l {
+        SimdLevel::Scalar => scalar::gemm_nt_packed(a, bp, c, m, n, k),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2Fma => unsafe { x86::gemm_nt_packed(a, bp, c, m, n, k) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => neon::gemm_nt_packed(a, bp, c, m, n, k),
+        #[allow(unreachable_patterns)]
+        _ => scalar::gemm_nt_packed(a, bp, c, m, n, k),
+    }
+}
+
+/// The m = 1 NT form (one query row — serving decode): `c[j] = a · bⱼ`,
+/// a striped-8 dot along k per output column.
+fn nt_row_with(l: SimdLevel, a: &[f32], b: &[f32], c: &mut [f32], n: usize, k: usize) {
+    match l {
+        SimdLevel::Scalar => scalar::nt_row(a, b, c, n, k),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2Fma => unsafe { x86::nt_row(a, b, c, n, k) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => neon::nt_row(a, b, c, n, k),
+        #[allow(unreachable_patterns)]
+        _ => scalar::nt_row(a, b, c, n, k),
+    }
+}
+
+/// `C[m×n] += A[m×k] · B[k×n]` (the PV / epilogue form). Accumulates
+/// into `c`; rows of `B` are already contiguous so no packing is
+/// needed. Exact-zero A entries (masked scores) skip their row step in
+/// every tier (bit-neutral for finite B).
+pub fn gemm_nn_with(l: SimdLevel, a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n && c.len() >= m * n);
+    match l {
+        SimdLevel::Scalar => scalar::gemm_nn(a, b, c, m, n, k),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2Fma => unsafe { x86::gemm_nn(a, b, c, m, n, k) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => neon::gemm_nn(a, b, c, m, n, k),
+        #[allow(unreachable_patterns)]
+        _ => scalar::gemm_nn(a, b, c, m, n, k),
+    }
+}
+
+/// `dst[i] = exp(src[i] + shift)` — the online-softmax probability
+/// kernel (`shift = -m_new`) and, at `shift = 0`, the `PwOp::Exp` loop.
+pub fn vexp_shift_with(l: SimdLevel, dst: &mut [f32], src: &[f32], shift: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    match l {
+        SimdLevel::Scalar => scalar::vexp_shift(dst, src, shift),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2Fma => unsafe { x86::vexp_shift(dst, src, shift) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => neon::vexp_shift(dst, src, shift),
+        #[allow(unreachable_patterns)]
+        _ => scalar::vexp_shift(dst, src, shift),
+    }
+}
+
+/// `dst[i] = 1 / (1 + exp(-src[i]))`.
+pub fn vsigmoid_with(l: SimdLevel, dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    match l {
+        SimdLevel::Scalar => scalar::vsigmoid(dst, src),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2Fma => unsafe { x86::vsigmoid(dst, src) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => neon::vsigmoid(dst, src),
+        #[allow(unreachable_patterns)]
+        _ => scalar::vsigmoid(dst, src),
+    }
+}
+
+/// Striped-8 sum of `x` with the [`hsum8_tree`] combine.
+pub fn row_sum_with(l: SimdLevel, x: &[f32]) -> f32 {
+    match l {
+        SimdLevel::Scalar => scalar::row_sum(x),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2Fma => unsafe { x86::row_sum(x) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => neon::row_sum(x),
+        #[allow(unreachable_patterns)]
+        _ => scalar::row_sum(x),
+    }
+}
+
+/// Striped-8 max of `x` (identity [`f32::NEG_INFINITY`] for empty).
+pub fn row_max_with(l: SimdLevel, x: &[f32]) -> f32 {
+    match l {
+        SimdLevel::Scalar => scalar::row_max(x),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2Fma => unsafe { x86::row_max(x) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => neon::row_max(x),
+        #[allow(unreachable_patterns)]
+        _ => scalar::row_max(x),
+    }
+}
+
+/// `acc[i] *= alpha` — the online-softmax rescale.
+pub fn scale_with(l: SimdLevel, acc: &mut [f32], alpha: f32) {
+    match l {
+        SimdLevel::Scalar => scalar::scale(acc, alpha),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2Fma => unsafe { x86::scale(acc, alpha) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => neon::scale(acc, alpha),
+        #[allow(unreachable_patterns)]
+        _ => scalar::scale(acc, alpha),
+    }
+}
+
+/// `acc[i] = fma(p, v[i], acc[i])` — the online-softmax PV row fold.
+pub fn axpy_with(l: SimdLevel, acc: &mut [f32], p: f32, v: &[f32]) {
+    debug_assert_eq!(acc.len(), v.len());
+    match l {
+        SimdLevel::Scalar => scalar::axpy(acc, p, v),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2Fma => unsafe { x86::axpy(acc, p, v) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => neon::axpy(acc, p, v),
+        #[allow(unreachable_patterns)]
+        _ => scalar::axpy(acc, p, v),
+    }
+}
+
+/// `dst[i] += src[i]` — the inner>1 Sum reduce row fold.
+pub fn vadd_assign_with(l: SimdLevel, dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    match l {
+        SimdLevel::Scalar => scalar::vadd_assign(dst, src),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2Fma => unsafe { x86::vadd_assign(dst, src) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => neon::vadd_assign(dst, src),
+        #[allow(unreachable_patterns)]
+        _ => scalar::vadd_assign(dst, src),
+    }
+}
+
+/// `dst[i] = max(dst[i], src[i])` — the inner>1 Max reduce row fold.
+pub fn vmax_assign_with(l: SimdLevel, dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    match l {
+        SimdLevel::Scalar => scalar::vmax_assign(dst, src),
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2Fma => unsafe { x86::vmax_assign(dst, src) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => neon::vmax_assign(dst, src),
+        #[allow(unreachable_patterns)]
+        _ => scalar::vmax_assign(dst, src),
+    }
+}
+
+// ---- level()-dispatched conveniences --------------------------------
+
+pub fn gemm_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    gemm_nt_with(level(), a, b, c, m, n, k)
+}
+
+pub fn gemm_nt_packed(a: &[f32], bp: &PackedB, c: &mut [f32], m: usize, n: usize, k: usize) {
+    gemm_nt_packed_with(level(), a, bp, c, m, n, k)
+}
+
+pub fn gemm_nn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    gemm_nn_with(level(), a, b, c, m, n, k)
+}
+
+pub fn vexp_shift(dst: &mut [f32], src: &[f32], shift: f32) {
+    vexp_shift_with(level(), dst, src, shift)
+}
+
+/// Append `exp(src)` to `dst` (pooled-buffer call shape of the
+/// executors' pointwise fast paths). The zero-fill `resize` is the
+/// price of handing the kernels a safe initialized slice; the kernel
+/// then overwrites every element (one extra L1-resident write pass).
+pub fn vexp_append(dst: &mut Vec<f32>, src: &[f32]) {
+    let start = dst.len();
+    dst.resize(start + src.len(), 0.0);
+    vexp_shift_with(level(), &mut dst[start..], src, 0.0);
+}
+
+/// Append `sigmoid(src)` to `dst`.
+pub fn vsigmoid_append(dst: &mut Vec<f32>, src: &[f32]) {
+    let start = dst.len();
+    dst.resize(start + src.len(), 0.0);
+    vsigmoid_with(level(), &mut dst[start..], src);
+}
+
+pub fn row_sum(x: &[f32]) -> f32 {
+    row_sum_with(level(), x)
+}
+
+pub fn row_max(x: &[f32]) -> f32 {
+    row_max_with(level(), x)
+}
+
+pub fn scale(acc: &mut [f32], alpha: f32) {
+    scale_with(level(), acc, alpha)
+}
+
+pub fn axpy(acc: &mut [f32], p: f32, v: &[f32]) {
+    axpy_with(level(), acc, p, v)
+}
+
+pub fn vadd_assign(dst: &mut [f32], src: &[f32]) {
+    vadd_assign_with(level(), dst, src)
+}
+
+pub fn vmax_assign(dst: &mut [f32], src: &[f32]) {
+    vmax_assign_with(level(), dst, src)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kill_switch_parses() {
+        assert_eq!(resolve(Some("0")), SimdLevel::Scalar);
+        assert_eq!(resolve(Some("off")), SimdLevel::Scalar);
+        assert_eq!(resolve(Some("scalar")), SimdLevel::Scalar);
+        assert_eq!(resolve(Some(" 0 ")), SimdLevel::Scalar);
+        assert_eq!(resolve(None), detect());
+        assert_eq!(resolve(Some("1")), detect());
+        // level() is either the kill switch or auto-detect, never an
+        // unsupported tier.
+        assert!(level() == SimdLevel::Scalar || level() == detect());
+    }
+
+    #[test]
+    fn exp_pins_the_boundaries() {
+        assert_eq!(exp_f32(0.0), 1.0);
+        assert_eq!(exp_f32(f32::NEG_INFINITY), 0.0);
+        assert_eq!(exp_f32(-1e30), 0.0); // the NEG_INF mask sentinel
+        assert_eq!(exp_f32(-100.0), 0.0);
+        assert_eq!(exp_f32(1e30), f32::INFINITY);
+        assert_eq!(exp_f32(f32::INFINITY), f32::INFINITY);
+        assert!(exp_f32(1.0) > 2.718 && exp_f32(1.0) < 2.7183);
+    }
+
+    #[test]
+    fn exp_tracks_f64_reference() {
+        for i in -2000..=2000 {
+            let x = i as f32 * 0.01; // [-20, 20]
+            let got = exp_f32(x) as f64;
+            let want = (x as f64).exp();
+            let rel = ((got - want) / want).abs();
+            assert!(rel < 4e-7, "exp({x}): {got} vs {want} (rel {rel})");
+        }
+    }
+
+    #[test]
+    fn sigmoid_saturates_cleanly() {
+        assert_eq!(sigmoid_f32(0.0), 0.5);
+        assert_eq!(sigmoid_f32(1e30), 1.0);
+        assert_eq!(sigmoid_f32(-1e30), 0.0);
+        let s = sigmoid_f32(2.0);
+        assert!((s - 0.880797).abs() < 1e-5);
+    }
+
+    #[test]
+    fn packing_round_trips() {
+        let (n, k, nr) = (5, 3, 4);
+        let b: Vec<f32> = (0..n * k).map(|i| i as f32).collect();
+        let mut out = Vec::new();
+        pack_nt(&b, n, k, nr, &mut out);
+        assert_eq!(out.len(), 2 * k * nr); // two panels, zero-padded
+        for j in 0..n {
+            for p in 0..k {
+                let (jp, jj) = (j / nr, j % nr);
+                assert_eq!(out[jp * k * nr + p * nr + jj], b[j * k + p]);
+            }
+        }
+        // padding is exactly zero
+        assert_eq!(out[k * nr + 0 * nr + 1], 0.0);
+    }
+}

@@ -1,0 +1,365 @@
+//! aarch64 NEON tier (4-lane f32, paired to honor the 8-lane striping
+//! contract).
+//!
+//! Lane-for-lane mirror of `scalar.rs`: element-wise kernels run the
+//! same IEEE ops per lane (`vfmaq` where the scalar tier uses
+//! `mul_add`), reductions keep a `float32x4` *pair* so the striping and
+//! the shared `hsum8_tree`/`hmax8_tree` combine match the scalar and
+//! AVX2 tiers exactly, and max is spelled `vbsl(vcgt(a, b), a, b)` so
+//! it matches the scalar `a > b ? a : b` (NEON's own `vmax` differs on
+//! the sign of zero).
+//!
+//! NEON is part of the aarch64 baseline ABI, so these are safe `fn`s
+//! with internal `unsafe` blocks around the intrinsics; the module is
+//! only compiled on aarch64.
+
+use core::arch::aarch64::*;
+
+use super::{hmax8_tree, hsum8_tree, mx, PackedB, KC};
+
+const NR: usize = 8; // panel width: two q-vectors
+const MR: usize = 8; // accumulator tile rows
+
+#[inline(always)]
+unsafe fn vmax_mirror(a: float32x4_t, b: float32x4_t) -> float32x4_t {
+    // a > b ? a : b — bitwise the scalar `mx` for every input class.
+    vbslq_f32(vcgtq_f32(a, b), a, b)
+}
+
+#[inline(always)]
+unsafe fn vmin_mirror(a: float32x4_t, b: float32x4_t) -> float32x4_t {
+    // a < b ? a : b — mirrors the scalar clamp upper bound.
+    vbslq_f32(vcltq_f32(a, b), a, b)
+}
+
+/// `C[m×n] = A[m×k] · B[n×k]ᵀ` over packed panels (`bp.nr == 8`).
+pub fn gemm_nt_packed(a: &[f32], bp: &PackedB, c: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(bp.nr, NR);
+    debug_assert!(a.len() >= m * k && c.len() >= m * n);
+    let panels = (n + NR - 1) / NR;
+    unsafe {
+        for jp in 0..panels {
+            let jbase = jp * NR;
+            let cols = NR.min(n - jbase);
+            let pb = bp.data.as_ptr().add(jp * k * NR);
+            let mut i = 0;
+            while i + MR <= m {
+                nt_block(a.as_ptr().add(i * k), MR, k, pb, c, i, jbase, n, cols);
+                i += MR;
+            }
+            if i < m {
+                nt_block(a.as_ptr().add(i * k), m - i, k, pb, c, i, jbase, n, cols);
+            }
+        }
+    }
+}
+
+/// `mr`-row block (mr ≤ 8): 2·mr q-register accumulators, broadcast-A
+/// FMA per k step.
+#[allow(clippy::too_many_arguments)]
+unsafe fn nt_block(
+    a: *const f32,
+    mr: usize,
+    k: usize,
+    pb: *const f32,
+    c: &mut [f32],
+    i0: usize,
+    jbase: usize,
+    ldc: usize,
+    cols: usize,
+) {
+    let zero = vdupq_n_f32(0.0);
+    let mut acc0 = [zero; MR];
+    let mut acc1 = [zero; MR];
+    for p in 0..k {
+        let b0 = vld1q_f32(pb.add(p * NR));
+        let b1 = vld1q_f32(pb.add(p * NR + 4));
+        for r in 0..mr {
+            let av = vdupq_n_f32(*a.add(r * k + p));
+            acc0[r] = vfmaq_f32(acc0[r], av, b0);
+            acc1[r] = vfmaq_f32(acc1[r], av, b1);
+        }
+    }
+    for r in 0..mr {
+        let off = (i0 + r) * ldc + jbase;
+        if cols == NR {
+            vst1q_f32(c.as_mut_ptr().add(off), acc0[r]);
+            vst1q_f32(c.as_mut_ptr().add(off + 4), acc1[r]);
+        } else {
+            let mut buf = [0.0f32; NR];
+            vst1q_f32(buf.as_mut_ptr(), acc0[r]);
+            vst1q_f32(buf.as_mut_ptr().add(4), acc1[r]);
+            c[off..off + cols].copy_from_slice(&buf[..cols]);
+        }
+    }
+}
+
+/// Striped-8 dot as a q-vector pair (m = 1 NT decode form).
+unsafe fn dot8(a: *const f32, b: *const f32, k: usize) -> f32 {
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut i = 0;
+    while i + 8 <= k {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(a.add(i)), vld1q_f32(b.add(i)));
+        acc1 = vfmaq_f32(acc1, vld1q_f32(a.add(i + 4)), vld1q_f32(b.add(i + 4)));
+        i += 8;
+    }
+    let mut lanes = [0.0f32; 8];
+    vst1q_f32(lanes.as_mut_ptr(), acc0);
+    vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+    for l in 0..k - i {
+        lanes[l] = (*a.add(i + l)).mul_add(*b.add(i + l), lanes[l]);
+    }
+    hsum8_tree(&lanes)
+}
+
+/// `c[j] = a · b[j]` (m = 1 NT).
+pub fn nt_row(a: &[f32], b: &[f32], c: &mut [f32], n: usize, k: usize) {
+    debug_assert!(a.len() >= k && b.len() >= n * k && c.len() >= n);
+    unsafe {
+        for j in 0..n {
+            c[j] = dot8(a.as_ptr(), b.as_ptr().add(j * k), k);
+        }
+    }
+}
+
+/// `C[m×n] += A[m×k] · B[k×n]` — contiguous B rows, [`KC`]-panel
+/// contraction blocking, exact-zero skip.
+pub fn gemm_nn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n && c.len() >= m * n);
+    unsafe {
+        let mut p0 = 0;
+        while p0 < k {
+            let pc = KC.min(k - p0);
+            for i in 0..m {
+                let a_row = a.as_ptr().add(i * k + p0);
+                let c_row = c.as_mut_ptr().add(i * n);
+                let mut j = 0;
+                while j + 8 <= n {
+                    let mut acc0 = vld1q_f32(c_row.add(j));
+                    let mut acc1 = vld1q_f32(c_row.add(j + 4));
+                    for p in 0..pc {
+                        let av = *a_row.add(p);
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let avv = vdupq_n_f32(av);
+                        let brow = b.as_ptr().add((p0 + p) * n + j);
+                        acc0 = vfmaq_f32(acc0, avv, vld1q_f32(brow));
+                        acc1 = vfmaq_f32(acc1, avv, vld1q_f32(brow.add(4)));
+                    }
+                    vst1q_f32(c_row.add(j), acc0);
+                    vst1q_f32(c_row.add(j + 4), acc1);
+                    j += 8;
+                }
+                while j + 4 <= n {
+                    let mut acc = vld1q_f32(c_row.add(j));
+                    for p in 0..pc {
+                        let av = *a_row.add(p);
+                        if av == 0.0 {
+                            continue;
+                        }
+                        acc = vfmaq_f32(
+                            acc,
+                            vdupq_n_f32(av),
+                            vld1q_f32(b.as_ptr().add((p0 + p) * n + j)),
+                        );
+                    }
+                    vst1q_f32(c_row.add(j), acc);
+                    j += 4;
+                }
+                while j < n {
+                    let mut acc = *c_row.add(j);
+                    for p in 0..pc {
+                        let av = *a_row.add(p);
+                        if av != 0.0 {
+                            acc = av.mul_add(*b.as_ptr().add((p0 + p) * n + j), acc);
+                        }
+                    }
+                    *c_row.add(j) = acc;
+                    j += 1;
+                }
+            }
+            p0 += pc;
+        }
+    }
+}
+
+/// Four lanes of the shared exp kernel (see `exp_f32`).
+unsafe fn exp4(x: float32x4_t) -> float32x4_t {
+    let lo = vdupq_n_f32(super::EXP_LO);
+    let hi = vdupq_n_f32(super::EXP_HI);
+    let xc = vmin_mirror(vmax_mirror(x, lo), hi);
+    let magic = vdupq_n_f32(super::EXP_MAGIC);
+    let n = vsubq_f32(vfmaq_f32(magic, xc, vdupq_n_f32(super::LOG2E)), magic);
+    let r = vfmaq_f32(xc, n, vdupq_n_f32(-super::LN2_HI));
+    let r = vfmaq_f32(r, n, vdupq_n_f32(-super::LN2_LO));
+    let z = vmulq_f32(r, r);
+    let mut y = vdupq_n_f32(super::EXP_P0);
+    y = vfmaq_f32(vdupq_n_f32(super::EXP_P1), y, r);
+    y = vfmaq_f32(vdupq_n_f32(super::EXP_P2), y, r);
+    y = vfmaq_f32(vdupq_n_f32(super::EXP_P3), y, r);
+    y = vfmaq_f32(vdupq_n_f32(super::EXP_P4), y, r);
+    y = vfmaq_f32(vdupq_n_f32(super::EXP_P5), y, r);
+    let y = vaddq_f32(vfmaq_f32(r, y, z), vdupq_n_f32(1.0));
+    let ni = vcvtq_s32_f32(n);
+    let bits = vshlq_n_s32::<23>(vaddq_s32(ni, vdupq_n_s32(127)));
+    let out = vmulq_f32(y, vreinterpretq_f32_s32(bits));
+    let under = vcltq_f32(x, lo);
+    vbslq_f32(under, vdupq_n_f32(0.0), out)
+}
+
+/// `dst[i] = exp(src[i] + shift)`.
+pub fn vexp_shift(dst: &mut [f32], src: &[f32], shift: f32) {
+    let n = src.len();
+    unsafe {
+        let sh = vdupq_n_f32(shift);
+        let mut i = 0;
+        while i + 4 <= n {
+            let x = vaddq_f32(vld1q_f32(src.as_ptr().add(i)), sh);
+            vst1q_f32(dst.as_mut_ptr().add(i), exp4(x));
+            i += 4;
+        }
+        if i < n {
+            let mut xb = [0.0f32; 4];
+            xb[..n - i].copy_from_slice(&src[i..]);
+            let x = vaddq_f32(vld1q_f32(xb.as_ptr()), sh);
+            let mut eb = [0.0f32; 4];
+            vst1q_f32(eb.as_mut_ptr(), exp4(x));
+            dst[i..].copy_from_slice(&eb[..n - i]);
+        }
+    }
+}
+
+/// `dst[i] = 1 / (1 + exp(-src[i]))`.
+pub fn vsigmoid(dst: &mut [f32], src: &[f32]) {
+    let n = src.len();
+    unsafe {
+        let one = vdupq_n_f32(1.0);
+        let mut i = 0;
+        while i + 4 <= n {
+            let x = vld1q_f32(src.as_ptr().add(i));
+            let e = exp4(vnegq_f32(x));
+            vst1q_f32(dst.as_mut_ptr().add(i), vdivq_f32(one, vaddq_f32(one, e)));
+            i += 4;
+        }
+        if i < n {
+            let mut xb = [0.0f32; 4];
+            xb[..n - i].copy_from_slice(&src[i..]);
+            let e = exp4(vnegq_f32(vld1q_f32(xb.as_ptr())));
+            let mut ob = [0.0f32; 4];
+            vst1q_f32(ob.as_mut_ptr(), vdivq_f32(one, vaddq_f32(one, e)));
+            dst[i..].copy_from_slice(&ob[..n - i]);
+        }
+    }
+}
+
+/// Striped-8 sum as a q-vector pair, shared tree combine.
+pub fn row_sum(x: &[f32]) -> f32 {
+    let n = x.len();
+    unsafe {
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 8 <= n {
+            acc0 = vaddq_f32(acc0, vld1q_f32(x.as_ptr().add(i)));
+            acc1 = vaddq_f32(acc1, vld1q_f32(x.as_ptr().add(i + 4)));
+            i += 8;
+        }
+        let mut lanes = [0.0f32; 8];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        for l in 0..n - i {
+            lanes[l] += x[i + l];
+        }
+        hsum8_tree(&lanes)
+    }
+}
+
+/// Striped-8 max as a q-vector pair, shared tree combine.
+pub fn row_max(x: &[f32]) -> f32 {
+    let n = x.len();
+    unsafe {
+        let mut acc0 = vdupq_n_f32(f32::NEG_INFINITY);
+        let mut acc1 = vdupq_n_f32(f32::NEG_INFINITY);
+        let mut i = 0;
+        while i + 8 <= n {
+            acc0 = vmax_mirror(acc0, vld1q_f32(x.as_ptr().add(i)));
+            acc1 = vmax_mirror(acc1, vld1q_f32(x.as_ptr().add(i + 4)));
+            i += 8;
+        }
+        let mut lanes = [f32::NEG_INFINITY; 8];
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(4), acc1);
+        for l in 0..n - i {
+            lanes[l] = mx(lanes[l], x[i + l]);
+        }
+        hmax8_tree(&lanes)
+    }
+}
+
+/// `acc[i] *= alpha`.
+pub fn scale(acc: &mut [f32], alpha: f32) {
+    let n = acc.len();
+    unsafe {
+        let av = vdupq_n_f32(alpha);
+        let mut i = 0;
+        while i + 4 <= n {
+            let p = acc.as_mut_ptr().add(i);
+            vst1q_f32(p, vmulq_f32(vld1q_f32(p), av));
+            i += 4;
+        }
+        for v in &mut acc[i..] {
+            *v *= alpha;
+        }
+    }
+}
+
+/// `acc[i] = fma(p, v[i], acc[i])`.
+pub fn axpy(acc: &mut [f32], p: f32, v: &[f32]) {
+    let n = acc.len();
+    unsafe {
+        let pv = vdupq_n_f32(p);
+        let mut i = 0;
+        while i + 4 <= n {
+            let ap = acc.as_mut_ptr().add(i);
+            vst1q_f32(ap, vfmaq_f32(vld1q_f32(ap), pv, vld1q_f32(v.as_ptr().add(i))));
+            i += 4;
+        }
+        for (av, &vv) in acc[i..].iter_mut().zip(&v[i..]) {
+            *av = p.mul_add(vv, *av);
+        }
+    }
+}
+
+/// `dst[i] += src[i]`.
+pub fn vadd_assign(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len();
+    unsafe {
+        let mut i = 0;
+        while i + 4 <= n {
+            let dp = dst.as_mut_ptr().add(i);
+            vst1q_f32(dp, vaddq_f32(vld1q_f32(dp), vld1q_f32(src.as_ptr().add(i))));
+            i += 4;
+        }
+        for (d, &s) in dst[i..].iter_mut().zip(&src[i..]) {
+            *d += s;
+        }
+    }
+}
+
+/// `dst[i] = max(dst[i], src[i])`.
+pub fn vmax_assign(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len();
+    unsafe {
+        let mut i = 0;
+        while i + 4 <= n {
+            let dp = dst.as_mut_ptr().add(i);
+            vst1q_f32(dp, vmax_mirror(vld1q_f32(dp), vld1q_f32(src.as_ptr().add(i))));
+            i += 4;
+        }
+        for (d, &s) in dst[i..].iter_mut().zip(&src[i..]) {
+            *d = mx(*d, s);
+        }
+    }
+}

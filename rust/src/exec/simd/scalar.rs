@@ -1,0 +1,208 @@
+//! Scalar tier: the portable fallback and the semantic reference.
+//!
+//! Every function here spells out, lane by lane, exactly the IEEE
+//! operations the vector tiers perform — `f32::mul_add` where they
+//! issue an FMA, `[f32; 8]` striped accumulators where they keep a
+//! vector register, the shared `hsum8_tree`/`hmax8_tree` combine where
+//! they reduce horizontally. The property tests in
+//! `rust/tests/simd_kernels.rs` assert `to_bits` equality against this
+//! module, so any semantic drift in a vector tier is caught as a bit
+//! mismatch, not a tolerance failure.
+//!
+//! Known cost of the contract: on targets whose *baseline* ISA lacks a
+//! hardware FMA (plain `cargo build` for x86_64 without
+//! `-C target-cpu`), `f32::mul_add` lowers to a correctly-rounded
+//! libm `fmaf` call, so this tier trades throughput for bit-parity
+//! with the vector tiers. Hosts pinned to the scalar tier that care
+//! about speed should build with `RUSTFLAGS="-C target-cpu=native"`
+//! (keeps `mul_add` a single instruction wherever the CPU has FMA);
+//! the `FLASHLIGHT_SIMD=0` CI pass and the microbench's "scalar GF/s"
+//! column both run this code and inherit the cost.
+
+use super::{exp_f32, hmax8_tree, hsum8_tree, mx, sigmoid_f32, PackedB, KC};
+
+/// Striped-8 dot product along `k` (the m = 1 NT decode form).
+#[inline]
+pub(crate) fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut lanes = [0.0f32; 8];
+    let mut i = 0;
+    while i + 8 <= n {
+        for l in 0..8 {
+            lanes[l] = a[i + l].mul_add(b[i + l], lanes[l]);
+        }
+        i += 8;
+    }
+    for l in 0..n - i {
+        lanes[l] = a[i + l].mul_add(b[i + l], lanes[l]);
+    }
+    hsum8_tree(&lanes)
+}
+
+/// `c[j] = a · b[j]` over `n` output columns (m = 1 NT).
+pub fn nt_row(a: &[f32], b: &[f32], c: &mut [f32], n: usize, k: usize) {
+    for j in 0..n {
+        c[j] = dot8(a, &b[j * k..j * k + k]);
+    }
+}
+
+/// [`nt_row`] reading a packed panel set (cold backstop shared by all
+/// tiers for m = 1 calls that arrive pre-packed). Same chains as
+/// [`nt_row`] — the panel layout never affects bits.
+pub fn nt_row_packed(a: &[f32], bp: &PackedB, c: &mut [f32], n: usize, k: usize) {
+    let nr = bp.nr;
+    for j in 0..n {
+        let base = (j / nr) * k * nr + (j % nr);
+        let mut lanes = [0.0f32; 8];
+        let mut p = 0;
+        while p + 8 <= k {
+            for l in 0..8 {
+                lanes[l] = a[p + l].mul_add(bp.data[base + (p + l) * nr], lanes[l]);
+            }
+            p += 8;
+        }
+        for l in 0..k - p {
+            lanes[l] = a[p + l].mul_add(bp.data[base + (p + l) * nr], lanes[l]);
+        }
+        c[j] = hsum8_tree(&lanes);
+    }
+}
+
+/// `C[m×n] = A[m×k] · B[n×k]ᵀ`. Each output element is one sequential
+/// FMA chain over `p` — the association every tier shares.
+pub fn gemm_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    if m == 1 {
+        return nt_row(&a[..k], b, c, n, k);
+    }
+    for i in 0..m {
+        let a_row = &a[i * k..i * k + k];
+        let c_row = &mut c[i * n..i * n + n];
+        for j in 0..n {
+            let b_row = &b[j * k..j * k + k];
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc = a_row[p].mul_add(b_row[p], acc);
+            }
+            c_row[j] = acc;
+        }
+    }
+}
+
+/// [`gemm_nt`] over a packed panel set (m ≥ 2; the m = 1 case is routed
+/// to [`nt_row_packed`] by the dispatcher).
+pub fn gemm_nt_packed(a: &[f32], bp: &PackedB, c: &mut [f32], m: usize, n: usize, k: usize) {
+    let nr = bp.nr;
+    for i in 0..m {
+        let a_row = &a[i * k..i * k + k];
+        let c_row = &mut c[i * n..i * n + n];
+        for j in 0..n {
+            let base = (j / nr) * k * nr + (j % nr);
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc = a_row[p].mul_add(bp.data[base + p * nr], acc);
+            }
+            c_row[j] = acc;
+        }
+    }
+}
+
+/// `C[m×n] += A[m×k] · B[k×n]`, contraction blocked into [`KC`]-row
+/// panels of `B`. Exact-zero A entries skip their row step (bit-neutral
+/// for finite B: `fma(0, b, acc) == acc`).
+pub fn gemm_nn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    let mut p0 = 0;
+    while p0 < k {
+        let pc = KC.min(k - p0);
+        for i in 0..m {
+            let a_row = &a[i * k + p0..i * k + p0 + pc];
+            let c_row = &mut c[i * n..i * n + n];
+            for (p, &av) in a_row.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let b_row = &b[(p0 + p) * n..(p0 + p) * n + n];
+                for (cv, &bv) in c_row.iter_mut().zip(b_row) {
+                    *cv = av.mul_add(bv, *cv);
+                }
+            }
+        }
+        p0 += pc;
+    }
+}
+
+/// `dst[i] = exp(src[i] + shift)`.
+pub fn vexp_shift(dst: &mut [f32], src: &[f32], shift: f32) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = exp_f32(s + shift);
+    }
+}
+
+/// `dst[i] = sigmoid(src[i])`.
+pub fn vsigmoid(dst: &mut [f32], src: &[f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = sigmoid_f32(s);
+    }
+}
+
+/// Striped-8 sum with the shared tree combine.
+pub fn row_sum(x: &[f32]) -> f32 {
+    let n = x.len();
+    let mut lanes = [0.0f32; 8];
+    let mut i = 0;
+    while i + 8 <= n {
+        for l in 0..8 {
+            lanes[l] += x[i + l];
+        }
+        i += 8;
+    }
+    for l in 0..n - i {
+        lanes[l] += x[i + l];
+    }
+    hsum8_tree(&lanes)
+}
+
+/// Striped-8 max with the shared tree combine (`-inf` identity).
+pub fn row_max(x: &[f32]) -> f32 {
+    let n = x.len();
+    let mut lanes = [f32::NEG_INFINITY; 8];
+    let mut i = 0;
+    while i + 8 <= n {
+        for l in 0..8 {
+            lanes[l] = mx(lanes[l], x[i + l]);
+        }
+        i += 8;
+    }
+    for l in 0..n - i {
+        lanes[l] = mx(lanes[l], x[i + l]);
+    }
+    hmax8_tree(&lanes)
+}
+
+/// `acc[i] *= alpha`.
+pub fn scale(acc: &mut [f32], alpha: f32) {
+    for v in acc.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// `acc[i] = fma(p, v[i], acc[i])`.
+pub fn axpy(acc: &mut [f32], p: f32, v: &[f32]) {
+    for (av, &vv) in acc.iter_mut().zip(v) {
+        *av = p.mul_add(vv, *av);
+    }
+}
+
+/// `dst[i] += src[i]`.
+pub fn vadd_assign(dst: &mut [f32], src: &[f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// `dst[i] = max(dst[i], src[i])` (x86 `maxps` operand order).
+pub fn vmax_assign(dst: &mut [f32], src: &[f32]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = mx(*d, s);
+    }
+}

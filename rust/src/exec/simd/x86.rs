@@ -1,0 +1,393 @@
+//! AVX2 + FMA3 tier (8-lane f32, fused multiply-add).
+//!
+//! Lane-for-lane mirror of `scalar.rs` — see the bit-exactness contract
+//! in the module docs. The NT microkernel is an 8-row × 2-vector
+//! (8 × 16) register-blocked accumulator tile over packed B panels; the
+//! NN kernel streams contiguous B rows 16 columns at a time with the
+//! exact-zero skip; reductions keep one striped YMM accumulator and
+//! finish through the shared scalar tree.
+//!
+//! # Safety
+//!
+//! Every function is `unsafe fn` + `#[target_feature(enable =
+//! "avx2,fma")]`: callers (the dispatcher in `mod.rs`) must only reach
+//! this module after `detect()` has confirmed both features.
+
+#![allow(clippy::missing_safety_doc, clippy::too_many_arguments)]
+
+use core::arch::x86_64::*;
+
+use super::{hsum8_tree, mx, PackedB, KC};
+
+const NR: usize = 16; // panel width: two YMM vectors
+const MR: usize = 8; // accumulator tile rows
+
+/// `C[m×n] = A[m×k] · B[n×k]ᵀ` over packed panels (`bp.nr == 16`).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn gemm_nt_packed(a: &[f32], bp: &PackedB, c: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(bp.nr, NR);
+    debug_assert!(a.len() >= m * k && c.len() >= m * n);
+    let panels = (n + NR - 1) / NR;
+    for jp in 0..panels {
+        let jbase = jp * NR;
+        let cols = NR.min(n - jbase);
+        let pb = bp.data.as_ptr().add(jp * k * NR);
+        let mut i = 0;
+        while i + MR <= m {
+            nt_block8(a.as_ptr().add(i * k), k, pb, c, i, jbase, n, cols);
+            i += MR;
+        }
+        if i < m {
+            nt_block_rows(a.as_ptr().add(i * k), m - i, k, pb, c, i, jbase, n, cols);
+        }
+    }
+}
+
+/// Fixed 8-row block: 16 YMM accumulators, broadcast-A FMA per k step.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn nt_block8(
+    a: *const f32,
+    k: usize,
+    pb: *const f32,
+    c: &mut [f32],
+    i0: usize,
+    jbase: usize,
+    ldc: usize,
+    cols: usize,
+) {
+    let mut acc0 = [_mm256_setzero_ps(); MR];
+    let mut acc1 = [_mm256_setzero_ps(); MR];
+    for p in 0..k {
+        let b0 = _mm256_loadu_ps(pb.add(p * NR));
+        let b1 = _mm256_loadu_ps(pb.add(p * NR + 8));
+        for r in 0..MR {
+            let av = _mm256_set1_ps(*a.add(r * k + p));
+            acc0[r] = _mm256_fmadd_ps(av, b0, acc0[r]);
+            acc1[r] = _mm256_fmadd_ps(av, b1, acc1[r]);
+        }
+    }
+    store_block(&acc0, &acc1, MR, c, i0, jbase, ldc, cols);
+}
+
+/// Tail block (1..8 rows), runtime row count.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn nt_block_rows(
+    a: *const f32,
+    mr: usize,
+    k: usize,
+    pb: *const f32,
+    c: &mut [f32],
+    i0: usize,
+    jbase: usize,
+    ldc: usize,
+    cols: usize,
+) {
+    debug_assert!(mr < MR);
+    let mut acc0 = [_mm256_setzero_ps(); MR];
+    let mut acc1 = [_mm256_setzero_ps(); MR];
+    for p in 0..k {
+        let b0 = _mm256_loadu_ps(pb.add(p * NR));
+        let b1 = _mm256_loadu_ps(pb.add(p * NR + 8));
+        for r in 0..mr {
+            let av = _mm256_set1_ps(*a.add(r * k + p));
+            acc0[r] = _mm256_fmadd_ps(av, b0, acc0[r]);
+            acc1[r] = _mm256_fmadd_ps(av, b1, acc1[r]);
+        }
+    }
+    store_block(&acc0, &acc1, mr, c, i0, jbase, ldc, cols);
+}
+
+#[target_feature(enable = "avx2,fma")]
+unsafe fn store_block(
+    acc0: &[__m256; MR],
+    acc1: &[__m256; MR],
+    rows: usize,
+    c: &mut [f32],
+    i0: usize,
+    jbase: usize,
+    ldc: usize,
+    cols: usize,
+) {
+    for r in 0..rows {
+        let off = (i0 + r) * ldc + jbase;
+        if cols == NR {
+            _mm256_storeu_ps(c.as_mut_ptr().add(off), acc0[r]);
+            _mm256_storeu_ps(c.as_mut_ptr().add(off + 8), acc1[r]);
+        } else {
+            let mut buf = [0.0f32; NR];
+            _mm256_storeu_ps(buf.as_mut_ptr(), acc0[r]);
+            _mm256_storeu_ps(buf.as_mut_ptr().add(8), acc1[r]);
+            c[off..off + cols].copy_from_slice(&buf[..cols]);
+        }
+    }
+}
+
+/// Striped-8 dot (the m = 1 NT decode form): vector FMA over full
+/// chunks, scalar lanes for the tail, shared tree combine.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot8(a: *const f32, b: *const f32, k: usize) -> f32 {
+    let mut acc = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + 8 <= k {
+        acc = _mm256_fmadd_ps(_mm256_loadu_ps(a.add(i)), _mm256_loadu_ps(b.add(i)), acc);
+        i += 8;
+    }
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    for l in 0..k - i {
+        lanes[l] = (*a.add(i + l)).mul_add(*b.add(i + l), lanes[l]);
+    }
+    hsum8_tree(&lanes)
+}
+
+/// `c[j] = a · b[j]` (m = 1 NT).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn nt_row(a: &[f32], b: &[f32], c: &mut [f32], n: usize, k: usize) {
+    debug_assert!(a.len() >= k && b.len() >= n * k && c.len() >= n);
+    for j in 0..n {
+        c[j] = dot8(a.as_ptr(), b.as_ptr().add(j * k), k);
+    }
+}
+
+/// `C[m×n] += A[m×k] · B[k×n]` — contiguous B rows, [`KC`]-panel
+/// contraction blocking, exact-zero skip.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn gemm_nn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n && c.len() >= m * n);
+    let mut p0 = 0;
+    while p0 < k {
+        let pc = KC.min(k - p0);
+        for i in 0..m {
+            let a_row = a.as_ptr().add(i * k + p0);
+            let c_row = c.as_mut_ptr().add(i * n);
+            let mut j = 0;
+            while j + 16 <= n {
+                let mut acc0 = _mm256_loadu_ps(c_row.add(j));
+                let mut acc1 = _mm256_loadu_ps(c_row.add(j + 8));
+                for p in 0..pc {
+                    let av = *a_row.add(p);
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let avv = _mm256_set1_ps(av);
+                    let brow = b.as_ptr().add((p0 + p) * n + j);
+                    acc0 = _mm256_fmadd_ps(avv, _mm256_loadu_ps(brow), acc0);
+                    acc1 = _mm256_fmadd_ps(avv, _mm256_loadu_ps(brow.add(8)), acc1);
+                }
+                _mm256_storeu_ps(c_row.add(j), acc0);
+                _mm256_storeu_ps(c_row.add(j + 8), acc1);
+                j += 16;
+            }
+            while j + 8 <= n {
+                let mut acc = _mm256_loadu_ps(c_row.add(j));
+                for p in 0..pc {
+                    let av = *a_row.add(p);
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let avv = _mm256_set1_ps(av);
+                    acc = _mm256_fmadd_ps(
+                        avv,
+                        _mm256_loadu_ps(b.as_ptr().add((p0 + p) * n + j)),
+                        acc,
+                    );
+                }
+                _mm256_storeu_ps(c_row.add(j), acc);
+                j += 8;
+            }
+            while j < n {
+                let mut acc = *c_row.add(j);
+                for p in 0..pc {
+                    let av = *a_row.add(p);
+                    if av != 0.0 {
+                        acc = av.mul_add(*b.as_ptr().add((p0 + p) * n + j), acc);
+                    }
+                }
+                *c_row.add(j) = acc;
+                j += 1;
+            }
+        }
+        p0 += pc;
+    }
+}
+
+/// Eight lanes of the shared exp kernel (see `exp_f32` for the
+/// per-lane reference this mirrors operation-for-operation).
+#[target_feature(enable = "avx2,fma")]
+unsafe fn exp8(x: __m256) -> __m256 {
+    let lo = _mm256_set1_ps(super::EXP_LO);
+    let hi = _mm256_set1_ps(super::EXP_HI);
+    let xc = _mm256_min_ps(_mm256_max_ps(x, lo), hi);
+    let magic = _mm256_set1_ps(super::EXP_MAGIC);
+    let n = _mm256_sub_ps(
+        _mm256_fmadd_ps(xc, _mm256_set1_ps(super::LOG2E), magic),
+        magic,
+    );
+    let r = _mm256_fmadd_ps(n, _mm256_set1_ps(-super::LN2_HI), xc);
+    let r = _mm256_fmadd_ps(n, _mm256_set1_ps(-super::LN2_LO), r);
+    let z = _mm256_mul_ps(r, r);
+    let mut y = _mm256_set1_ps(super::EXP_P0);
+    y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(super::EXP_P1));
+    y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(super::EXP_P2));
+    y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(super::EXP_P3));
+    y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(super::EXP_P4));
+    y = _mm256_fmadd_ps(y, r, _mm256_set1_ps(super::EXP_P5));
+    let y = _mm256_add_ps(_mm256_fmadd_ps(y, z, r), _mm256_set1_ps(1.0));
+    let ni = _mm256_cvtps_epi32(n);
+    let bits = _mm256_slli_epi32::<23>(_mm256_add_epi32(ni, _mm256_set1_epi32(127)));
+    let out = _mm256_mul_ps(y, _mm256_castsi256_ps(bits));
+    // x < EXP_LO ⇒ exactly 0.0 (the -1e30 mask sentinel path).
+    let under = _mm256_cmp_ps::<_CMP_LT_OQ>(x, lo);
+    _mm256_andnot_ps(under, out)
+}
+
+/// `dst[i] = exp(src[i] + shift)`.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn vexp_shift(dst: &mut [f32], src: &[f32], shift: f32) {
+    let n = src.len();
+    let sh = _mm256_set1_ps(shift);
+    let mut i = 0;
+    while i + 8 <= n {
+        let x = _mm256_add_ps(_mm256_loadu_ps(src.as_ptr().add(i)), sh);
+        _mm256_storeu_ps(dst.as_mut_ptr().add(i), exp8(x));
+        i += 8;
+    }
+    if i < n {
+        let mut xb = [0.0f32; 8];
+        xb[..n - i].copy_from_slice(&src[i..]);
+        let x = _mm256_add_ps(_mm256_loadu_ps(xb.as_ptr()), sh);
+        let mut eb = [0.0f32; 8];
+        _mm256_storeu_ps(eb.as_mut_ptr(), exp8(x));
+        dst[i..].copy_from_slice(&eb[..n - i]);
+    }
+}
+
+/// `dst[i] = 1 / (1 + exp(-src[i]))`.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn vsigmoid(dst: &mut [f32], src: &[f32]) {
+    let n = src.len();
+    let one = _mm256_set1_ps(1.0);
+    let sign = _mm256_set1_ps(-0.0);
+    let mut i = 0;
+    while i + 8 <= n {
+        let x = _mm256_loadu_ps(src.as_ptr().add(i));
+        let e = exp8(_mm256_xor_ps(x, sign));
+        _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_div_ps(one, _mm256_add_ps(one, e)));
+        i += 8;
+    }
+    if i < n {
+        let mut xb = [0.0f32; 8];
+        xb[..n - i].copy_from_slice(&src[i..]);
+        let e = exp8(_mm256_xor_ps(_mm256_loadu_ps(xb.as_ptr()), sign));
+        let mut ob = [0.0f32; 8];
+        _mm256_storeu_ps(ob.as_mut_ptr(), _mm256_div_ps(one, _mm256_add_ps(one, e)));
+        dst[i..].copy_from_slice(&ob[..n - i]);
+    }
+}
+
+/// Striped-8 sum, shared tree combine.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn row_sum(x: &[f32]) -> f32 {
+    let n = x.len();
+    let mut acc = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + 8 <= n {
+        acc = _mm256_add_ps(acc, _mm256_loadu_ps(x.as_ptr().add(i)));
+        i += 8;
+    }
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    for l in 0..n - i {
+        lanes[l] += x[i + l];
+    }
+    hsum8_tree(&lanes)
+}
+
+/// Striped-8 max (`maxps` matches the scalar `mx` bitwise).
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn row_max(x: &[f32]) -> f32 {
+    let n = x.len();
+    let mut acc = _mm256_set1_ps(f32::NEG_INFINITY);
+    let mut i = 0;
+    while i + 8 <= n {
+        acc = _mm256_max_ps(acc, _mm256_loadu_ps(x.as_ptr().add(i)));
+        i += 8;
+    }
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    for l in 0..n - i {
+        lanes[l] = mx(lanes[l], x[i + l]);
+    }
+    super::hmax8_tree(&lanes)
+}
+
+/// `acc[i] *= alpha`.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn scale(acc: &mut [f32], alpha: f32) {
+    let n = acc.len();
+    let av = _mm256_set1_ps(alpha);
+    let mut i = 0;
+    while i + 8 <= n {
+        let p = acc.as_mut_ptr().add(i);
+        _mm256_storeu_ps(p, _mm256_mul_ps(_mm256_loadu_ps(p), av));
+        i += 8;
+    }
+    for v in &mut acc[i..] {
+        *v *= alpha;
+    }
+}
+
+/// `acc[i] = fma(p, v[i], acc[i])`.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn axpy(acc: &mut [f32], p: f32, v: &[f32]) {
+    let n = acc.len();
+    let pv = _mm256_set1_ps(p);
+    let mut i = 0;
+    while i + 8 <= n {
+        let ap = acc.as_mut_ptr().add(i);
+        _mm256_storeu_ps(
+            ap,
+            _mm256_fmadd_ps(pv, _mm256_loadu_ps(v.as_ptr().add(i)), _mm256_loadu_ps(ap)),
+        );
+        i += 8;
+    }
+    for (av, &vv) in acc[i..].iter_mut().zip(&v[i..]) {
+        *av = p.mul_add(vv, *av);
+    }
+}
+
+/// `dst[i] += src[i]`.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn vadd_assign(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let dp = dst.as_mut_ptr().add(i);
+        _mm256_storeu_ps(
+            dp,
+            _mm256_add_ps(_mm256_loadu_ps(dp), _mm256_loadu_ps(src.as_ptr().add(i))),
+        );
+        i += 8;
+    }
+    for (d, &s) in dst[i..].iter_mut().zip(&src[i..]) {
+        *d += s;
+    }
+}
+
+/// `dst[i] = max(dst[i], src[i])`.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn vmax_assign(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let dp = dst.as_mut_ptr().add(i);
+        _mm256_storeu_ps(
+            dp,
+            _mm256_max_ps(_mm256_loadu_ps(dp), _mm256_loadu_ps(src.as_ptr().add(i))),
+        );
+        i += 8;
+    }
+    for (d, &s) in dst[i..].iter_mut().zip(&src[i..]) {
+        *d = mx(*d, s);
+    }
+}

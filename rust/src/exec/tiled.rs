@@ -82,6 +82,9 @@ struct TiledCtx<'g, 'w> {
     touches: Vec<Touch>,
     flops: u64,
     pool: &'w mut TilePool,
+    /// Plan tag scoping the worker's packed-panel cache within one
+    /// batched launch (see [`TilePool::packed_nt_panel`]).
+    tag: u64,
 }
 
 impl<'g, 'w> TiledCtx<'g, 'w> {
@@ -165,10 +168,13 @@ impl<'g, 'w> TiledCtx<'g, 'w> {
                     (1, op1) => {
                         let a = &ts[0].data;
                         match op1 {
-                            PwOp::Exp => data.extend(a.iter().map(|x| x.exp())),
+                            // exp/sigmoid: vectorized shared kernels
+                            // (bit-identical to the eager executor's).
+                            PwOp::Exp => crate::exec::simd::vexp_append(&mut data, a),
                             PwOp::Tanh => data.extend(a.iter().map(|x| x.tanh())),
-                            PwOp::Sigmoid => data
-                                .extend(a.iter().map(|x| 1.0 / (1.0 + (-x).exp()))),
+                            PwOp::Sigmoid => {
+                                crate::exec::simd::vsigmoid_append(&mut data, a)
+                            }
                             PwOp::Neg => data.extend(a.iter().map(|x| -x)),
                             PwOp::MulScalar(s) => {
                                 data.extend(a.iter().map(|x| x * s))
@@ -270,7 +276,26 @@ impl<'g, 'w> TiledCtx<'g, 'w> {
                 let rt = self.eval_region(*rhs, &rr);
                 let n: usize = lens.iter().product();
                 let mut data = self.pool.take_zeroed(n);
-                gemm::batched_matmul(&lt, &rt, *transpose_rhs, &lens, &mut data);
+                let (mm, nn) = (lens[rank - 2], lens[rank - 1]);
+                if *transpose_rhs
+                    && mm >= 2
+                    && n == mm * nn
+                    && crate::exec::simd::level().uses_panels()
+                {
+                    // In-pipeline QKᵀ tile (batch dims pinned to 1):
+                    // pack the K tile once per (plan, node, k-region)
+                    // into the worker's panel cache — amortized across
+                    // every q-tile block this worker claims. The tile
+                    // gather above already logged the fetch, so HBM/L2
+                    // counters are identical with the cache cold or
+                    // warm. Bit-neutral: the packed and plain kernels
+                    // share per-element FMA chains.
+                    let key = (self.tag, rhs.0, rr);
+                    let bp = self.pool.packed_nt_panel(key, &rt.data, nn, k_full);
+                    gemm::gemm_nt_packed(&lt.data, &bp, &mut data, mm, nn, k_full);
+                } else {
+                    gemm::batched_matmul(&lt, &rt, *transpose_rhs, &lens, &mut data);
+                }
                 self.pool.recycle_shared(lt);
                 self.pool.recycle_shared(rt);
                 Tensor::from_vec(&lens, data)
@@ -333,6 +358,7 @@ struct BlockOut {
 }
 
 /// Execute one (outer…, q-tile) program instance of a pipeline group.
+#[allow(clippy::too_many_arguments)]
 fn run_block(
     sh: &PipelineShared,
     pipe: &Pipeline,
@@ -340,6 +366,7 @@ fn run_block(
     grid: &LogicalGrid,
     block: usize,
     scratch: &mut WorkerScratch,
+    tag: u64,
 ) -> BlockOut {
     let coords = grid.delinearize(block);
     let q_dim = coords.len() - 1;
@@ -354,6 +381,7 @@ fn run_block(
         touches: Vec::new(),
         flops: 0,
         pool,
+        tag,
     };
 
     // Score region template (per kv tile) for this block.
@@ -523,6 +551,9 @@ struct PipelineRun<'a> {
     pipe: &'a Pipeline,
     meta: PipeMeta,
     grid: LogicalGrid,
+    /// Scopes the workers' packed-panel caches to this plan within a
+    /// batched launch (the job index; 0 for single-plan execution).
+    tag: u64,
 }
 
 impl<'a> PipelineRun<'a> {
@@ -533,6 +564,7 @@ impl<'a> PipelineRun<'a> {
         tile: TileConfig,
         inputs: &'a HashMap<String, Tensor>,
         values: &'a HashMap<NodeId, Tensor>,
+        tag: u64,
     ) -> Self {
         let out_shape = g.node(pipe.out).shape.clone();
         let out_axes = an.axes[pipe.out.0 as usize].clone();
@@ -641,6 +673,7 @@ impl<'a> PipelineRun<'a> {
             pipe,
             meta,
             grid,
+            tag,
         }
     }
 
@@ -649,7 +682,15 @@ impl<'a> PipelineRun<'a> {
     }
 
     fn run_block(&self, block: usize, scratch: &mut WorkerScratch) -> BlockOut {
-        run_block(&self.sh, self.pipe, &self.meta, &self.grid, block, scratch)
+        run_block(
+            &self.sh,
+            self.pipe,
+            &self.meta,
+            &self.grid,
+            block,
+            scratch,
+            self.tag,
+        )
     }
 
     /// Deterministic merge in block (= sequential iteration) order, with
@@ -700,7 +741,16 @@ fn eval_node_pooled(
         }
         Op::Pointwise { op, .. } => {
             let mut data = pool.take(n);
-            pointwise_fill(&mut data, *op, operands, n);
+            use crate::ir::PwOp;
+            match (operands.len(), *op) {
+                // Unary exp/sigmoid: shared vectorized kernels,
+                // bit-identical to the generic per-element loop.
+                (1, PwOp::Exp) => crate::exec::simd::vexp_append(&mut data, &operands[0].data),
+                (1, PwOp::Sigmoid) => {
+                    crate::exec::simd::vsigmoid_append(&mut data, &operands[0].data)
+                }
+                _ => pointwise_fill(&mut data, *op, operands, n),
+            }
             Tensor::from_vec(shape, data)
         }
         Op::Matmul { transpose_rhs, .. } => {
@@ -984,6 +1034,7 @@ pub fn execute_plans_batched(
                         jobs[j].tile,
                         jobs[j].inputs,
                         &values[j],
+                        j as u64,
                     )
                 })
                 .collect();

@@ -149,11 +149,21 @@ pub fn online_reduce_blocked<A: Ring, E: ExpHom<A>>(x: &[f64], block: usize) -> 
 /// "registers": running max `m`, running denominator `l`, and the running
 /// output accumulator `acc` (rescaled by the same correction factor —
 /// this is the extension FlashAttention applies to the PV product).
+///
+/// The update runs on the SIMD kernel tier ([`crate::exec::simd`]):
+/// striped-8 row max, the shared vectorized `exp` for the probabilities
+/// and the rescale factor, striped-8 block sum for the denominator, and
+/// FMA row folds (`axpy`) into the accumulator. Scalar and vector
+/// dispatch are bit-identical, so tiling and thread count never
+/// perturb the result.
 #[derive(Debug, Clone)]
 pub struct OnlineRowState {
     pub m: f32,
     pub l: f32,
     pub acc: Vec<f32>,
+    /// Per-tile probability scratch (`exp(s - m_new)`), retained across
+    /// updates so the k-loop stays allocation-free at steady state.
+    p: Vec<f32>,
 }
 
 impl OnlineRowState {
@@ -162,40 +172,45 @@ impl OnlineRowState {
             m: f32::NEG_INFINITY,
             l: 0.0,
             acc: vec![0.0; d],
+            p: Vec::new(),
         }
     }
 
     /// Fold in one kv tile: `scores` (len Bk) and `v_tile` (Bk × d,
     /// row-major). Returns nothing; state carries across tiles.
     pub fn update(&mut self, scores: &[f32], v_tile: &[f32]) {
+        use crate::exec::simd;
         let d = self.acc.len();
         debug_assert_eq!(scores.len() * d, v_tile.len());
-        let bm = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let m_new = self.m.max(bm);
+        let bm = simd::row_max(scores);
+        let m_new = if self.m > bm { self.m } else { bm };
         if m_new == f32::NEG_INFINITY {
             return; // all-masked tile
         }
         let alpha = if self.m.is_finite() {
-            (self.m - m_new).exp()
+            simd::exp_f32(self.m - m_new)
         } else {
             0.0
         };
         if alpha != 1.0 {
             self.l *= alpha;
-            for a in &mut self.acc {
-                *a *= alpha;
-            }
+            simd::scale(&mut self.acc, alpha);
         }
-        for (j, &s) in scores.iter().enumerate() {
-            let p = (s - m_new).exp();
+        // p[j] = exp(s[j] - m_new), vectorized; the block denominator
+        // folds through the striped-8 sum. Exact zeros (fully masked
+        // positions) skip their PV row fold. vexp_shift overwrites
+        // every element, so the scratch only resizes when the tile
+        // width changes (steady state: never).
+        if self.p.len() != scores.len() {
+            self.p.resize(scores.len(), 0.0);
+        }
+        simd::vexp_shift(&mut self.p, scores, -m_new);
+        self.l += simd::row_sum(&self.p);
+        for (j, &p) in self.p.iter().enumerate() {
             if p == 0.0 {
                 continue;
             }
-            self.l += p;
-            let row = &v_tile[j * d..(j + 1) * d];
-            for (a, &vv) in self.acc.iter_mut().zip(row) {
-                *a += p * vv;
-            }
+            simd::axpy(&mut self.acc, p, &v_tile[j * d..(j + 1) * d]);
         }
         self.m = m_new;
     }

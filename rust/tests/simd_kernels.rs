@@ -1,0 +1,272 @@
+//! Property tests for the SIMD kernel tier.
+//!
+//! The contract (see `rust/src/exec/simd/mod.rs`): the dispatched
+//! vector tier and the scalar tier agree **bit-exactly** — `to_bits`
+//! equality, not tolerance — over odd shapes and tails, the
+//! `FLASHLIGHT_SIMD=0` kill switch forces the scalar tier, and the
+//! engine's parity gates (fused vs eager, sequential vs parallel) hold
+//! with SIMD dispatch on.
+//!
+//! On a host whose best tier *is* scalar these bit-equality tests
+//! compare scalar against scalar and pass trivially; the
+//! `scripts/bench_regress.sh` CI pass runs the whole suite both ways
+//! (default and `FLASHLIGHT_SIMD=0`) so each tier gets a full-suite
+//! run wherever vector hardware exists.
+
+use std::collections::HashMap;
+
+use flashlight::exec::simd::{self, PackedB, SimdLevel};
+use flashlight::exec::{eval, execute_plan, execute_plan_par, Parallelism, Tensor};
+use flashlight::fusion::{plan, FusionMode, TileConfig};
+use flashlight::ir::{Graph, Op};
+use flashlight::variants::{build, AttnShape, Variant};
+
+/// Deterministic fill with negatives, exact zeros, and magnitude spread.
+fn fill(n: usize, seed: u64) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            if i % 13 == 7 {
+                0.0 // exercise the exact-zero skip paths
+            } else {
+                ((seed as f64 + i as f64 * 0.7).sin() * 4.0) as f32
+            }
+        })
+        .collect()
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{label}: lane {i} differs ({x} vs {y})"
+        );
+    }
+}
+
+/// Odd shapes + tails: every combination of tiny, just-past-vector,
+/// and just-past-block extents.
+const SHAPES: &[(usize, usize, usize)] = &[
+    (1, 1, 1),
+    (1, 3, 5),
+    (1, 17, 129),
+    (2, 2, 2),
+    (3, 5, 7),
+    (5, 17, 3),
+    (7, 9, 31),
+    (8, 16, 64),
+    (9, 17, 65),
+    (16, 33, 17),
+    (17, 129, 5),
+    (33, 31, 130),
+];
+
+#[test]
+fn gemm_nt_dispatched_is_bit_exact_vs_scalar() {
+    let lvl = simd::level();
+    for &(m, n, k) in SHAPES {
+        let a = fill(m * k, 1);
+        let b = fill(n * k, 2);
+        let mut c_s = vec![0.0f32; m * n];
+        let mut c_v = vec![0.0f32; m * n];
+        simd::gemm_nt_with(SimdLevel::Scalar, &a, &b, &mut c_s, m, n, k);
+        simd::gemm_nt_with(lvl, &a, &b, &mut c_v, m, n, k);
+        assert_bits_eq(&c_s, &c_v, &format!("gemm_nt {m}x{n}x{k}"));
+    }
+}
+
+#[test]
+fn gemm_nt_packed_is_bit_exact_for_any_packing_width() {
+    let lvl = simd::level();
+    for &(m, n, k) in SHAPES {
+        if m < 2 {
+            continue; // m = 1 never packs (decode dot path)
+        }
+        let a = fill(m * k, 3);
+        let b = fill(n * k, 4);
+        let mut c_plain = vec![0.0f32; m * n];
+        simd::gemm_nt_with(SimdLevel::Scalar, &a, &b, &mut c_plain, m, n, k);
+        for pack_level in [SimdLevel::Scalar, lvl] {
+            let bp = PackedB::pack_with(pack_level, &b, n, k, Vec::new());
+            let mut c_p = vec![0.0f32; m * n];
+            simd::gemm_nt_packed_with(lvl, &a, &bp, &mut c_p, m, n, k);
+            assert_bits_eq(
+                &c_plain,
+                &c_p,
+                &format!("gemm_nt_packed {m}x{n}x{k} nr={}", bp.nr),
+            );
+        }
+    }
+}
+
+#[test]
+fn gemm_nn_dispatched_is_bit_exact_vs_scalar() {
+    let lvl = simd::level();
+    for &(m, n, k) in SHAPES {
+        let a = fill(m * k, 5);
+        let b = fill(k * n, 6);
+        // non-zero initial accumulator: NN must chain off it
+        let init = fill(m * n, 7);
+        let mut c_s = init.clone();
+        let mut c_v = init.clone();
+        simd::gemm_nn_with(SimdLevel::Scalar, &a, &b, &mut c_s, m, n, k);
+        simd::gemm_nn_with(lvl, &a, &b, &mut c_v, m, n, k);
+        assert_bits_eq(&c_s, &c_v, &format!("gemm_nn {m}x{n}x{k}"));
+    }
+}
+
+#[test]
+fn exp_and_sigmoid_are_bit_exact_vs_scalar() {
+    let lvl = simd::level();
+    for n in [1usize, 3, 7, 8, 9, 16, 31, 129, 1000] {
+        let mut x = fill(n, 8);
+        // splice in the boundary cases wherever they fit
+        let specials = [
+            -1e30f32,
+            f32::NEG_INFINITY,
+            f32::INFINITY,
+            -87.4,
+            -87.3,
+            0.0,
+            88.0,
+            88.9,
+            1e30,
+        ];
+        for (i, s) in specials.iter().enumerate() {
+            if i < n {
+                x[i] = *s;
+            }
+        }
+        for shift in [0.0f32, -1.5, 2.25] {
+            let mut d_s = vec![0.0f32; n];
+            let mut d_v = vec![0.0f32; n];
+            simd::vexp_shift_with(SimdLevel::Scalar, &mut d_s, &x, shift);
+            simd::vexp_shift_with(lvl, &mut d_v, &x, shift);
+            assert_bits_eq(&d_s, &d_v, &format!("vexp n={n} shift={shift}"));
+            // and both match the single-lane reference
+            for i in 0..n {
+                assert_eq!(d_s[i].to_bits(), simd::exp_f32(x[i] + shift).to_bits());
+            }
+        }
+        let mut d_s = vec![0.0f32; n];
+        let mut d_v = vec![0.0f32; n];
+        simd::vsigmoid_with(SimdLevel::Scalar, &mut d_s, &x);
+        simd::vsigmoid_with(lvl, &mut d_v, &x);
+        assert_bits_eq(&d_s, &d_v, &format!("vsigmoid n={n}"));
+    }
+}
+
+#[test]
+fn row_reductions_are_bit_exact_vs_scalar() {
+    let lvl = simd::level();
+    for n in [0usize, 1, 2, 7, 8, 9, 15, 16, 17, 63, 64, 65, 1000] {
+        let x = fill(n, 9);
+        assert_eq!(
+            simd::row_sum_with(SimdLevel::Scalar, &x).to_bits(),
+            simd::row_sum_with(lvl, &x).to_bits(),
+            "row_sum n={n}"
+        );
+        assert_eq!(
+            simd::row_max_with(SimdLevel::Scalar, &x).to_bits(),
+            simd::row_max_with(lvl, &x).to_bits(),
+            "row_max n={n}"
+        );
+        // row_max against the plain fold (order-insensitive for
+        // non-NaN input)
+        let naive = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert_eq!(simd::row_max_with(lvl, &x), naive, "row_max value n={n}");
+    }
+}
+
+#[test]
+fn scale_axpy_and_assign_folds_are_bit_exact_vs_scalar() {
+    let lvl = simd::level();
+    for n in [1usize, 5, 8, 13, 64, 127] {
+        let v = fill(n, 10);
+        let mut acc_s = fill(n, 11);
+        let mut acc_v = acc_s.clone();
+        simd::scale_with(SimdLevel::Scalar, &mut acc_s, 0.37);
+        simd::scale_with(lvl, &mut acc_v, 0.37);
+        assert_bits_eq(&acc_s, &acc_v, &format!("scale n={n}"));
+        simd::axpy_with(SimdLevel::Scalar, &mut acc_s, 1.7, &v);
+        simd::axpy_with(lvl, &mut acc_v, 1.7, &v);
+        assert_bits_eq(&acc_s, &acc_v, &format!("axpy n={n}"));
+        simd::vadd_assign_with(SimdLevel::Scalar, &mut acc_s, &v);
+        simd::vadd_assign_with(lvl, &mut acc_v, &v);
+        assert_bits_eq(&acc_s, &acc_v, &format!("vadd n={n}"));
+        simd::vmax_assign_with(SimdLevel::Scalar, &mut acc_s, &v);
+        simd::vmax_assign_with(lvl, &mut acc_v, &v);
+        assert_bits_eq(&acc_s, &acc_v, &format!("vmax n={n}"));
+    }
+}
+
+#[test]
+fn kill_switch_forces_the_scalar_tier() {
+    // The env override is parsed by `resolve`; `level()` caches it per
+    // process, so the full-suite scalar run is driven by
+    // `FLASHLIGHT_SIMD=0 cargo test` (see scripts/bench_regress.sh).
+    assert_eq!(simd::resolve(Some("0")), SimdLevel::Scalar);
+    assert_eq!(simd::resolve(Some("off")), SimdLevel::Scalar);
+    assert_eq!(simd::resolve(Some("scalar")), SimdLevel::Scalar);
+    assert_eq!(simd::resolve(None), simd::detect());
+    if std::env::var("FLASHLIGHT_SIMD").map(|v| v.trim() == "0").unwrap_or(false) {
+        assert_eq!(simd::level(), SimdLevel::Scalar);
+    }
+}
+
+fn synthetic_inputs(g: &Graph, seed: u64) -> HashMap<String, Tensor> {
+    let mut m = HashMap::new();
+    for (i, &id) in g.inputs.iter().enumerate() {
+        let node = g.node(id);
+        let Op::Input { name } = &node.op else { unreachable!() };
+        let t = if name.starts_with("doc") {
+            let n: usize = node.shape.iter().product();
+            Tensor::from_vec(&node.shape, (0..n).map(|j| (j * 3 / n) as f32).collect())
+        } else {
+            Tensor::synthetic(&node.shape, seed + i as u64)
+        };
+        m.insert(name.clone(), t);
+    }
+    m
+}
+
+/// The engine-level gates the tier must not perturb: fused/eager parity
+/// (tolerance) and seq/par bit-identity (outputs AND counters), with
+/// SIMD dispatch live in both executors.
+#[test]
+fn engine_gates_hold_with_simd_dispatch() {
+    let shape = AttnShape {
+        batch: 2,
+        rows: 1,
+        heads_q: 4,
+        heads_kv: 2,
+        seq: 48, // not a multiple of block_k: tail tiles everywhere
+        head_dim: 24,
+    };
+    let tile = TileConfig {
+        block_q: 16,
+        block_k: 32,
+        l2_capacity: 40 << 20,
+    };
+    for v in [
+        Variant::Vanilla,
+        Variant::Causal,
+        Variant::Softcap { cap: 20.0 },
+        Variant::Rectified { tau: 0.05 },
+    ] {
+        let g = build(v, &shape);
+        let inputs = synthetic_inputs(&g, 23);
+        let p = plan(&g, FusionMode::Flashlight);
+        let (seq_out, seq_c) = execute_plan(&g, &p, &inputs, tile);
+        let (want, _) = eval(&g, &inputs);
+        let err = seq_out[0].max_abs_diff(&want[0]);
+        assert!(err < 1e-4, "{}: fused/eager err {err}", v.name());
+        for threads in [2, 5] {
+            let (par_out, par_c) =
+                execute_plan_par(&g, &p, &inputs, tile, &Parallelism::with_threads(threads));
+            assert_eq!(seq_out, par_out, "{} outputs, threads={threads}", v.name());
+            assert_eq!(seq_c, par_c, "{} counters, threads={threads}", v.name());
+        }
+    }
+}

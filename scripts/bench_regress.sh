@@ -1,9 +1,12 @@
 #!/usr/bin/env bash
-# Perf-regression driver: build release, run the compiler-micro and
-# fig2/fig3 benches, and record two perf trajectories at the repo root
-# so future PRs have a baseline to compare against:
+# Perf-regression driver: build release, gate the test suite on BOTH
+# dispatch tiers (default SIMD and FLASHLIGHT_SIMD=0 scalar), run the
+# benches, and record two perf trajectories at the repo root so future
+# PRs have a baseline to compare against:
 #   BENCH_parallel_engine.json  sequential vs parallel executor wall
-#                               clock per variant
+#                               clock per variant, plus the GEMM/softmax
+#                               microkernel table (GFLOP/s, scalar tier
+#                               vs dispatched tier)
 #   BENCH_serve_engine.json     engine-backend serve matrix: tok/s and
 #                               TTFT p50/p99 for chunked prefill on/off
 #                               x L in {1,4} layers, each at 1/2/all
@@ -12,27 +15,46 @@
 #                               zero-gather-alloc / zero-post-warmup-
 #                               plan-build gates
 #
-# Usage: scripts/bench_regress.sh [THREADS]
+# Usage: scripts/bench_regress.sh [--quick] [THREADS]
+#   --quick  engine + serve benches only: skip the criterion-style
+#            figure benches (compiler_micro, fig2/fig3) — the CI loop
 #   THREADS  worker threads for the parallel runs (default: all cores)
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-THREADS="${1:-0}" # 0 = all available cores
+QUICK=0
+THREADS=0 # 0 = all available cores
+for arg in "$@"; do
+  case "$arg" in
+    --quick) QUICK=1 ;;
+    *) THREADS="$arg" ;;
+  esac
+done
 
 echo "== cargo build --release =="
 cargo build --release
 
 echo
-echo "== compiler-micro bench =="
-cargo bench --bench compiler_micro
+echo "== cargo test -q (default SIMD dispatch) =="
+cargo test -q
 
 echo
-echo "== fig2/fig3 variants bench (cost-model series + measured executor) =="
-cargo bench --bench fig2_fig3_variants
+echo "== cargo test -q (FLASHLIGHT_SIMD=0: scalar tier) =="
+FLASHLIGHT_SIMD=0 cargo test -q
+
+if [ "$QUICK" -eq 0 ]; then
+  echo
+  echo "== compiler-micro bench =="
+  cargo bench --bench compiler_micro
+
+  echo
+  echo "== fig2/fig3 variants bench (cost-model series + measured executor) =="
+  cargo bench --bench fig2_fig3_variants
+fi
 
 echo
-echo "== parallel engine: seq vs par per variant -> BENCH_parallel_engine.json =="
+echo "== parallel engine: seq vs par per variant + microkernels -> BENCH_parallel_engine.json =="
 cargo run --release -- bench engine --threads "$THREADS"
 
 echo
