@@ -1,0 +1,41 @@
+//! Build probe for the AVX-512 kernel tier.
+//!
+//! The `_mm512_*` / masked-`_mm256_*` intrinsics the tier uses were
+//! stabilized in rustc 1.89. The offline build image pins whatever
+//! toolchain it ships, so instead of a hard MSRV bump the tier is
+//! compiled only when the active rustc can build it:
+//! `cfg(flashlight_avx512)` gates `exec/simd/x86_512.rs`, its
+//! `SimdLevel::Avx512` dispatch arms, and the `detect()` probe. On
+//! older toolchains (or non-x86_64 targets) the engine silently tops
+//! out at the AVX2+FMA tier — behavior, tests, and bit-identity gates
+//! are unaffected, only peak kernel throughput.
+
+use std::process::Command;
+
+fn rustc_at_least(major: u32, minor: u32) -> bool {
+    let rustc = std::env::var("RUSTC").unwrap_or_else(|_| "rustc".into());
+    let out = match Command::new(&rustc).arg("--version").output() {
+        Ok(o) => o,
+        Err(_) => return false,
+    };
+    let text = String::from_utf8_lossy(&out.stdout);
+    // "rustc 1.89.0 (…)" — take the second token, split on non-digits.
+    let ver = text.split_whitespace().nth(1).unwrap_or("");
+    let mut parts = ver.split(|c: char| !c.is_ascii_digit());
+    let maj: u32 = parts.next().and_then(|s| s.parse().ok()).unwrap_or(0);
+    let min: u32 = parts.next().and_then(|s| s.parse().ok()).unwrap_or(0);
+    (maj, min) >= (major, minor)
+}
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    let x86_64 = std::env::var("CARGO_CFG_TARGET_ARCH").as_deref() == Ok("x86_64");
+    if rustc_at_least(1, 80) {
+        // Declare the custom cfg so `unexpected_cfgs` stays quiet on
+        // toolchains that know check-cfg (stable since 1.80).
+        println!("cargo:rustc-check-cfg=cfg(flashlight_avx512)");
+    }
+    if x86_64 && rustc_at_least(1, 89) {
+        println!("cargo:rustc-cfg=flashlight_avx512");
+    }
+}

@@ -78,9 +78,18 @@ pub fn run_with(
     } else {
         Parallelism::with_threads(threads)
     };
+    // Spawn the persistent worker pool up front: the timed runs below
+    // measure grid scheduling over parked workers (a launch wakes them
+    // through the epoch doorbell), not thread creation.
+    crate::exec::runtime::warm(&par);
     println!(
         "== parallel engine: fused executor, sequential vs {} threads ==",
         par.num_threads
+    );
+    println!(
+        "worker runtime: topology {}, SIMD tier {}",
+        crate::exec::runtime::topology().describe(),
+        simd::level().name()
     );
     println!(
         "{:<16} {:>10} {:>10} {:>8}  {}",
@@ -88,6 +97,7 @@ pub fn run_with(
     );
     let mut json = JsonArray::new(out_path);
     let mut worst_speedup = f64::INFINITY;
+    let topo = crate::exec::runtime::topology().describe();
     for v in bench_variants(shape.seq) {
         let shape = if matches!(v, Variant::Evoformer) {
             AttnShape { rows: 2, ..shape }
@@ -130,6 +140,7 @@ pub fn run_with(
             ("par_ms", json_f64(par_ms)),
             ("speedup", json_f64(speedup)),
             ("threads", par.num_threads.to_string()),
+            ("topology", json_str(&topo)),
             ("bit_identical", identical.to_string()),
             ("seq", shape.seq.to_string()),
             ("batch", shape.batch.to_string()),

@@ -37,6 +37,10 @@ pub fn run_with(out_path: &str, n_requests: usize) -> anyhow::Result<()> {
         n_requests
     );
     println!(
+        "worker runtime: topology {} (persistent pool; spawn gate on)",
+        crate::exec::runtime::topology().describe()
+    );
+    println!(
         "{:>6} {:>7} {:>7} {:>9} {:>9} {:>9} {:>9} {:>8}  {}",
         "layers", "chunked", "threads", "tok/s", "wall(s)", "TTFT p50", "TTFT p99", "ITL(ms)", "bit-identical"
     );
@@ -60,9 +64,13 @@ pub fn run_with(out_path: &str, n_requests: usize) -> anyhow::Result<()> {
             let warmed = b.warmup_plans(1024);
             let misses0 = b.cache_stats().misses;
             let analyze0 = crate::sketch::analyze_call_count();
+            // Backend construction + configure() warmed the worker pool;
+            // from here on the serving loop must never spawn a thread.
+            let spawns0 = crate::exec::runtime::spawns_on_this_thread();
             let t0 = std::time::Instant::now();
             let done = run_trace(&mut b, &trace, cfg, vocab)?;
             let wall = t0.elapsed().as_secs_f64();
+            let run_spawns = crate::exec::runtime::spawns_on_this_thread() - spawns0;
             let analyze_run = crate::sketch::analyze_call_count() - analyze0;
             let s = summarize(&done);
             let cs = b.cache_stats();
@@ -98,6 +106,14 @@ pub fn run_with(out_path: &str, n_requests: usize) -> anyhow::Result<()> {
                 run_misses == 0,
                 "post-warmup run built {run_misses} plans (layers={layers} chunked={chunked})"
             );
+            // Persistent-runtime gate (tentpole): every launch of the
+            // run — prefill chunks and decode steps alike — reused the
+            // parked worker pool. Zero OS threads created.
+            anyhow::ensure!(
+                run_spawns == 0,
+                "serving run spawned {run_spawns} threads after warmup \
+                 (layers={layers} chunked={chunked} threads={t})"
+            );
             println!(
                 "{:>6} {:>7} {:>7} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>8.3}  {}",
                 layers,
@@ -127,6 +143,7 @@ pub fn run_with(out_path: &str, n_requests: usize) -> anyhow::Result<()> {
                 ("plans_warmed", warmed.to_string()),
                 ("post_warmup_plan_misses", run_misses.to_string()),
                 ("analyze_calls_during_run", analyze_run.to_string()),
+                ("post_warmup_thread_spawns", run_spawns.to_string()),
                 ("gather_reallocs", b.gather_reallocs().to_string()),
                 ("prefix_hits", ps.hits.to_string()),
                 ("prefix_tokens_reused", ps.tokens_reused.to_string()),
@@ -157,5 +174,6 @@ mod tests {
         assert!(s.contains("\"chunked\": true"));
         assert!(s.contains("\"layers\": 4"));
         assert!(s.contains("\"gather_reallocs\": 0"));
+        assert!(s.contains("\"post_warmup_thread_spawns\": 0"));
     }
 }

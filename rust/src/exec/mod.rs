@@ -4,8 +4,10 @@
 //! online-softmax rewrite, counting HBM traffic it actually generates).
 //!
 //! The tiled executor is a data-parallel engine: pipeline groups run
-//! their (batch, head, q-tile) launch grid across threads
-//! ([`Parallelism`]) with per-thread scratch pools ([`TilePool`]), and
+//! their (batch, head, q-tile) launch grid over the persistent
+//! topology-aware worker runtime ([`runtime`]: process-lifetime pool,
+//! per-domain grid shards, hierarchical work stealing) configured by
+//! [`Parallelism`], with per-thread scratch pools ([`TilePool`]), and
 //! both executors' numerics land on the runtime-dispatched SIMD kernel
 //! tier ([`simd`]: AVX2+FMA / NEON / scalar, `FLASHLIGHT_SIMD=0` kill
 //! switch) through the GEMM wrappers in [`gemm`], the shared
@@ -19,14 +21,17 @@ mod gemm;
 mod parallel;
 mod pool;
 mod reference;
+pub mod runtime;
 pub mod simd;
 mod tensor;
 pub mod tiled;
+pub mod topology;
 
 pub use counters::Counters;
 pub use gemm::{batched_matmul, gemm_nn, gemm_nt, gemm_nt_packed, PackedB};
 pub use parallel::{parallel_map_with, Parallelism};
 pub use pool::TilePool;
+pub use topology::Topology;
 pub use reference::{eager_counters, eval, eval_node, eval_pw, node_flops};
 pub use simd::SimdLevel;
 pub use tensor::{flat_index, for_each_index, for_each_row, strides_of, Tensor, NEG_INF};

@@ -1,29 +1,28 @@
-//! Thread scheduling for the data-parallel execution engine.
+//! Thread-count configuration and the engine's map primitive.
 //!
 //! The tiled executor's launch grid — one program instance per
 //! (batch, head, q-tile) block of [`crate::grid::LogicalGrid`] — is
-//! embarrassingly parallel: blocks share only read-only state. This
-//! module distributes block ids over a scoped thread pool with a shared
-//! atomic cursor (dynamic load balancing: causal/windowed variants give
-//! q-tiles very different amounts of unmasked work), then returns the
-//! results **in block order** so the caller's merge is deterministic and
-//! bit-identical to a sequential run.
+//! embarrassingly parallel: blocks share only read-only state.
+//! [`parallel_map_with`] distributes block ids over the **persistent
+//! topology-aware worker runtime** ([`crate::exec::runtime`]): a
+//! process-lifetime pool whose workers park between launches, claim
+//! per-domain grid shards in chunked CAS steps (single-block claims
+//! inside each shard's tail window), and steal hierarchically —
+//! within-domain first, cross-domain when a shard runs dry. Results
+//! come back **in item order**, so the caller's merge is deterministic
+//! and bit-identical to a sequential run at any thread count under any
+//! topology.
 //!
-//! Workers claim the cursor in small chunks ([`CLAIM_CHUNK`] blocks per
-//! CAS) to cut contention on fine-grained grids — one `fetch_add` per
-//! block made the cursor line the hottest word in the process on
-//! many-core hosts. The final `workers · CLAIM_CHUNK` items degrade to
-//! single-block claims so the tail stays load-balanced; either way each
-//! index is claimed exactly once and results are reassembled in index
-//! order, so the deterministic block-order merge is untouched.
+//! Earlier revisions spawned a fresh scoped thread pool per launch;
+//! that cost dominated small launches (a serving decode sub-round is a
+//! few hundred microseconds), so the scheduler now only ever spawns a
+//! worker the first time a thread count is requested — steady-state
+//! serving performs zero thread spawns (gated in `bench serve_engine`).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-
-/// Blocks handed out per cursor claim away from the tail.
-const CLAIM_CHUNK: usize = 4;
+use crate::exec::runtime;
 
 /// How many OS threads the execution engine may use. `num_threads == 1`
-/// is the exact sequential path (no threads are spawned).
+/// is the exact sequential path (the worker pool is never touched).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Parallelism {
     pub num_threads: usize,
@@ -52,14 +51,31 @@ impl Parallelism {
         }
     }
 
-    /// `FLASHLIGHT_THREADS=N` override, else all available cores.
+    /// `FLASHLIGHT_THREADS=N` override (N >= 1), else all available
+    /// cores. `0` and unparseable values are **rejected with a
+    /// warning** rather than silently clamped to one thread — a typo'd
+    /// `FLASHLIGHT_THREADS=0` used to quietly serialize the whole
+    /// engine. See `exec/README.md` for the variable reference.
     pub fn from_env() -> Self {
-        match std::env::var("FLASHLIGHT_THREADS")
-            .ok()
-            .and_then(|s| s.parse::<usize>().ok())
-        {
-            Some(n) => Self::with_threads(n),
+        Self::from_env_value(std::env::var("FLASHLIGHT_THREADS").ok().as_deref())
+    }
+
+    /// [`Parallelism::from_env`] on an explicit value (unit-testable
+    /// without touching the process environment).
+    pub fn from_env_value(env: Option<&str>) -> Self {
+        match env {
             None => Self::available(),
+            Some(s) => match s.trim().parse::<usize>() {
+                Ok(n) if n >= 1 => Self::with_threads(n),
+                _ => {
+                    eprintln!(
+                        "flashlight: ignoring invalid FLASHLIGHT_THREADS={s:?} \
+                         (want an integer >= 1); using all {} cores",
+                        Self::available().num_threads
+                    );
+                    Self::available()
+                }
+            },
         }
     }
 
@@ -74,83 +90,29 @@ impl Default for Parallelism {
     }
 }
 
-/// Map `f` over `0..n`, giving each worker thread its own scratch state
-/// built by `init` (reused across all items that worker claims — this is
-/// how the engine keeps per-thread tile pools warm). Items are claimed
-/// dynamically from a shared cursor; the returned Vec is in item order
-/// regardless of which thread computed what.
+/// Map `f` over `0..n` on the persistent worker runtime, giving each
+/// worker thread its own scratch state of type `S` (built by `init` the
+/// first time a thread needs one, then **reused across items, launches,
+/// and serving steps** — this is how the engine keeps per-thread tile
+/// pools and packed-panel caches warm between calls). Items are claimed
+/// dynamically from per-domain shard cursors with hierarchical
+/// stealing; the returned Vec is in item order regardless of which
+/// thread computed what.
 ///
-/// Worker panics propagate to the caller.
+/// Worker panics propagate to the caller; the pool survives them.
+///
+/// Nesting: a `parallel_map_with` issued from *inside* another map's
+/// closure does not re-enter the (non-reentrant) launch protocol — it
+/// runs sequentially on the calling worker with its own scratch.
+/// Correct, just serial; the engine never nests launches on purpose.
 pub fn parallel_map_with<S, T, I, F>(par: &Parallelism, n: usize, init: I, f: F) -> Vec<T>
 where
-    S: Send,
+    S: 'static,
     T: Send,
     I: Fn() -> S + Sync,
     F: Fn(&mut S, usize) -> T + Sync,
 {
-    let workers = par.num_threads.min(n).max(1);
-    if workers == 1 {
-        let mut state = init();
-        return (0..n).map(|i| f(&mut state, i)).collect();
-    }
-
-    let cursor = AtomicUsize::new(0);
-    // Chunked claims degrade to one block each inside the tail window,
-    // so no worker sits on a multi-block claim while others idle.
-    let tail_start = n.saturating_sub(workers * CLAIM_CHUNK);
-    let mut shards: Vec<Vec<(usize, T)>> = Vec::with_capacity(workers);
-    std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(workers);
-        for _ in 0..workers {
-            handles.push(scope.spawn(|| {
-                let mut state = init();
-                let mut local: Vec<(usize, T)> = Vec::new();
-                loop {
-                    let start = cursor.load(Ordering::Relaxed);
-                    if start >= n {
-                        break;
-                    }
-                    // Clamp chunks at the tail boundary so the last
-                    // `workers * CLAIM_CHUNK` items go out one by one.
-                    let take = if start < tail_start {
-                        CLAIM_CHUNK.min(tail_start - start)
-                    } else {
-                        1
-                    };
-                    if cursor
-                        .compare_exchange_weak(
-                            start,
-                            start + take,
-                            Ordering::Relaxed,
-                            Ordering::Relaxed,
-                        )
-                        .is_err()
-                    {
-                        continue; // lost the race (or spurious) — retry
-                    }
-                    for i in start..start + take {
-                        local.push((i, f(&mut state, i)));
-                    }
-                }
-                local
-            }));
-        }
-        for h in handles {
-            match h.join() {
-                Ok(shard) => shards.push(shard),
-                Err(payload) => std::panic::resume_unwind(payload),
-            }
-        }
-    });
-
-    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
-    for (i, v) in shards.into_iter().flatten() {
-        debug_assert!(out[i].is_none(), "item {i} computed twice");
-        out[i] = Some(v);
-    }
-    out.into_iter()
-        .map(|o| o.expect("work item never claimed"))
-        .collect()
+    runtime::map_with(par, n, init, f)
 }
 
 #[cfg(test)]
@@ -178,27 +140,36 @@ mod tests {
 
     #[test]
     fn per_worker_state_is_reused_not_shared() {
-        // Each worker counts the items it processed in its own state;
+        // Each worker counts the items it processed in its own scratch;
         // the per-item result records the worker-local ordinal, which
-        // must never exceed the item count.
+        // must never exceed the total number of items ever run through
+        // this scratch type (scratch persists across the two launches
+        // below — unique local types keep other tests out of the slot).
+        struct ParCount(usize);
         let n = 64;
         let out = parallel_map_with(
             &Parallelism::with_threads(4),
             n,
-            || 0usize,
-            |count, _i| {
-                *count += 1;
-                *count
+            || ParCount(0),
+            |c, _i| {
+                c.0 += 1;
+                c.0
             },
         );
         assert_eq!(out.len(), n);
-        assert!(out.iter().all(|&c| c >= 1 && c <= n));
-        // sequential: one state sees every item
-        let seq = parallel_map_with(&Parallelism::sequential(), n, || 0usize, |c, _| {
-            *c += 1;
-            *c
+        assert!(out.iter().all(|&c| c >= 1 && c <= 2 * n));
+        // sequential: one persistent state sees every item, in order
+        struct SeqCount(usize);
+        let seq = parallel_map_with(&Parallelism::sequential(), n, || SeqCount(0), |c, _| {
+            c.0 += 1;
+            c.0
         });
         assert_eq!(seq, (1..=n).collect::<Vec<_>>());
+        // ...and a second sequential launch continues where it left off
+        // (the persistence contract serving relies on).
+        let again =
+            parallel_map_with(&Parallelism::sequential(), 1, || SeqCount(0), |c, _| c.0);
+        assert_eq!(again, vec![n]);
     }
 
     #[test]
@@ -208,5 +179,19 @@ mod tests {
         assert!(!Parallelism::sequential().is_parallel());
         assert!(Parallelism::with_threads(2).is_parallel());
         assert_eq!(Parallelism::default(), Parallelism::sequential());
+    }
+
+    #[test]
+    fn from_env_rejects_zero_and_garbage() {
+        let all = Parallelism::available();
+        assert_eq!(Parallelism::from_env_value(None), all);
+        assert_eq!(Parallelism::from_env_value(Some("3")).num_threads, 3);
+        assert_eq!(Parallelism::from_env_value(Some(" 2 ")).num_threads, 2);
+        // 0 used to silently become 1 thread; now it is rejected.
+        assert_eq!(Parallelism::from_env_value(Some("0")), all);
+        assert_eq!(Parallelism::from_env_value(Some("")), all);
+        assert_eq!(Parallelism::from_env_value(Some("lots")), all);
+        assert_eq!(Parallelism::from_env_value(Some("-4")), all);
+        assert_eq!(Parallelism::from_env_value(Some("2.5")), all);
     }
 }

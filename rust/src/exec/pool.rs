@@ -29,9 +29,11 @@ const MAX_POOLED: usize = 256;
 const MAX_PANELS: usize = 128;
 
 /// Identity of a packed NT panel: (plan tag, node id, operand region).
-/// Valid for the lifetime of one pipeline launch — worker pools are
-/// created fresh per launch, and the tag keeps plans of one batched
-/// launch apart.
+/// Worker pools are **persistent** (they live in the runtime's
+/// per-thread storage and outlive launches), so the plan tag embeds a
+/// process-unique launch id — see `PipelineRun::tag` — and a key can
+/// never collide with a later launch's panels. Stale-launch entries
+/// linger harmlessly until the [`MAX_PANELS`] bound evicts them.
 pub type PanelKey = (u64, u32, Vec<(usize, usize)>);
 
 #[derive(Debug, Default)]

@@ -1,0 +1,653 @@
+//! Persistent, topology-aware worker runtime for the execution engine.
+//!
+//! The original scheduler ([`crate::exec::parallel`]) spawned a fresh
+//! scoped thread pool for **every** launch. For big one-shot grids the
+//! spawn cost amortizes, but the serving engine launches per decode
+//! sub-round — a few hundred microseconds of work — so thread creation
+//! and teardown dominated small-batch decode latency (the scheduler tax
+//! FlashInfer's serving measurements call out). This module replaces it
+//! with a process-lifetime pool:
+//!
+//! * **Persistent workers.** Helper threads spawn once (counted by
+//!   [`thread_spawns`] / [`spawns_on_this_thread`]; the serve bench
+//!   gates the steady state at zero) and park between launches on an
+//!   epoch doorbell — a `Mutex<Epoch>` + `Condvar` pair, the portable
+//!   spelling of a futex wait: workers sleep until the epoch advances,
+//!   the launcher bumps it and notifies. `Parallelism::num_threads == 1`
+//!   never touches the pool (the exact sequential path).
+//! * **Persistent scratch.** Each worker thread keeps its launch
+//!   scratch (the tiled executor's `WorkerScratch`: tile pool, packed-
+//!   panel cache, online-softmax rows) in thread-local storage keyed by
+//!   scratch type, so pooled buffers and panel capacity survive across
+//!   launches and across serving steps instead of being rebuilt per
+//!   call. The caller participates as worker 0 and keeps its own
+//!   scratch the same way (so single-threaded serving also reuses its
+//!   pool).
+//! * **Topology-aware sharding + hierarchical stealing.** Each launch
+//!   range-partitions its `0..n` index space into per-domain shards
+//!   (see [`crate::exec::topology`]), proportional to the workers
+//!   assigned to each domain. A worker claims from its home shard's
+//!   cursor first (chunked CAS claims, degrading to single-block claims
+//!   inside the shard's tail window) and steals from sibling domains in
+//!   ring order only when a shard runs dry. A drained cursor never
+//!   refills, so one ring pass visits every item exactly once.
+//!
+//! **Determinism.** Scheduling never touches results: every item is
+//! claimed exactly once, each claim runs the same closure a sequential
+//! run would, and results are written into an index-ordered output
+//! vector — so the caller's merge (and therefore outputs *and*
+//! `Counters`) is bit-identical to sequential under any topology, any
+//! steal schedule, and any thread count. Property-tested in
+//! `rust/tests/runtime_sched.rs` under adversarial topologies and
+//! forced-steal schedules.
+//!
+//! **Safety protocol.** A launch borrows the caller's closure and
+//! output buffer. The borrow is erased to a raw `dyn Fn` pointer for
+//! the workers, which is sound because the launcher (a) pre-registers
+//! the participant count, and (b) blocks until every participant has
+//! checked out — no worker can touch the job after `launch` returns.
+//! Worker panics are caught, forwarded, and re-raised on the caller;
+//! the pool itself stays usable (locks are poison-tolerant).
+//!
+//! Launches are serialized process-wide (one launch owns the pool at a
+//! time); nested launches from inside a worker closure are not
+//! supported — the engine never nests them.
+
+use std::any::Any;
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError, RwLock};
+
+use crate::exec::parallel::Parallelism;
+use crate::exec::topology::{proportional_split, Topology};
+
+/// Blocks handed out per cursor claim away from a shard's tail.
+pub(crate) const CLAIM_CHUNK: usize = 4;
+
+// ---------------------------------------------------------------------
+// Instrumentation
+// ---------------------------------------------------------------------
+
+static THREAD_SPAWNS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// Pool-growth events attributable to launches from *this* thread
+    /// (the launcher performs the spawns). Unlike the global counter,
+    /// this is immune to concurrent launches from other threads, so
+    /// steady-state gates ("zero spawns after warmup") are exact even
+    /// under a parallel test harness.
+    static LOCAL_SPAWNS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// OS threads the runtime has ever spawned, process-wide.
+pub fn thread_spawns() -> u64 {
+    THREAD_SPAWNS.load(Ordering::Relaxed)
+}
+
+/// Worker spawns caused by launches issued from the calling thread.
+/// The serve bench and the engine-backend tests gate this at zero
+/// after warmup: steady-state decode must never create threads.
+pub fn spawns_on_this_thread() -> u64 {
+    LOCAL_SPAWNS.with(|c| c.get())
+}
+
+thread_local! {
+    /// True while this thread is executing launch work (as launcher or
+    /// pooled worker). A nested map issued from inside a launch runs
+    /// sequentially on the calling worker instead of re-entering the
+    /// (non-reentrant) launch protocol — correct, just serial.
+    static IN_LAUNCH: Cell<bool> = const { Cell::new(false) };
+}
+
+fn in_launch() -> bool {
+    IN_LAUNCH.with(|c| c.get())
+}
+
+static LAUNCH_TAGS: AtomicU64 = AtomicU64::new(0);
+
+/// A process-unique launch tag. The tiled executor scopes its workers'
+/// packed-panel cache keys with this, so a panel packed for one launch
+/// can never be served to a later launch that happens to reuse the same
+/// (plan-index, node, region) key against different data — the
+/// correctness condition that lets worker pools outlive launches.
+pub fn fresh_launch_tag() -> u64 {
+    LAUNCH_TAGS.fetch_add(1, Ordering::Relaxed) + 1
+}
+
+// ---------------------------------------------------------------------
+// Topology handle (swappable so tests can force adversarial layouts;
+// correctness never depends on it — only shard shapes do).
+// ---------------------------------------------------------------------
+
+static TOPOLOGY: OnceLock<RwLock<Arc<Topology>>> = OnceLock::new();
+
+fn topo_cell() -> &'static RwLock<Arc<Topology>> {
+    TOPOLOGY.get_or_init(|| RwLock::new(Arc::new(Topology::detect())))
+}
+
+/// The topology the runtime currently shards launches with.
+pub fn topology() -> Arc<Topology> {
+    topo_cell()
+        .read()
+        .unwrap_or_else(PoisonError::into_inner)
+        .clone()
+}
+
+/// Replace the scheduling topology (tests, tooling). Takes effect for
+/// subsequent launches; never affects results, only shard layout.
+pub fn set_topology(t: Topology) {
+    *topo_cell().write().unwrap_or_else(PoisonError::into_inner) = Arc::new(t);
+}
+
+// ---------------------------------------------------------------------
+// The worker pool
+// ---------------------------------------------------------------------
+
+/// The job a launch publishes to its participants: a lifetime-erased
+/// `Fn(worker_ordinal)` plus the participant count for this epoch.
+#[derive(Clone, Copy)]
+struct Job {
+    task: *const (dyn Fn(usize) + Sync),
+    participants: usize,
+}
+// The launcher guarantees the pointee outlives every participant's use.
+unsafe impl Send for Job {}
+
+struct PoolState {
+    epoch: u64,
+    job: Option<Job>,
+    /// Helper threads spawned so far (their ordinals are 1..=threads).
+    threads: usize,
+    /// Participants still inside the current epoch's job.
+    active: usize,
+}
+
+struct Pool {
+    state: Mutex<PoolState>,
+    /// Wakes parked workers when the epoch advances.
+    doorbell: Condvar,
+    /// Wakes the launcher when the last participant checks out.
+    done: Condvar,
+    /// Serializes launches (one launch owns the pool at a time).
+    launch_lock: Mutex<()>,
+    /// Panic payloads collected from workers during the current launch.
+    panics: Mutex<Vec<Box<dyn Any + Send>>>,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        state: Mutex::new(PoolState {
+            epoch: 0,
+            job: None,
+            threads: 0,
+            active: 0,
+        }),
+        doorbell: Condvar::new(),
+        done: Condvar::new(),
+        launch_lock: Mutex::new(()),
+        panics: Mutex::new(Vec::new()),
+    })
+}
+
+fn lock_state(p: &Pool) -> MutexGuard<'_, PoolState> {
+    p.state.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Grow the pool to at least `helpers` parked worker threads. Spawns
+/// are counted globally and against the calling thread.
+fn grow(p: &'static Pool, st: &mut PoolState, helpers: usize) {
+    while st.threads < helpers {
+        let ordinal = st.threads + 1;
+        std::thread::Builder::new()
+            .name(format!("flashlight-worker-{ordinal}"))
+            .spawn(move || worker_loop(p, ordinal))
+            .expect("spawn flashlight worker");
+        st.threads += 1;
+        THREAD_SPAWNS.fetch_add(1, Ordering::Relaxed);
+        LOCAL_SPAWNS.with(|c| c.set(c.get() + 1));
+    }
+}
+
+/// Pre-spawn the helper threads `par` will need so later launches (the
+/// serving decode path) perform zero thread spawns. Idempotent.
+pub fn warm(par: &Parallelism) {
+    let helpers = par.num_threads.saturating_sub(1);
+    if helpers == 0 {
+        return;
+    }
+    let p = pool();
+    let _g = p.launch_lock.lock().unwrap_or_else(PoisonError::into_inner);
+    let mut st = lock_state(p);
+    grow(p, &mut st, helpers);
+}
+
+/// Helper threads parked right now (diagnostics / bench JSON).
+pub fn pooled_workers() -> usize {
+    lock_state(pool()).threads
+}
+
+fn worker_loop(p: &'static Pool, ordinal: usize) {
+    let mut seen = 0u64;
+    loop {
+        // Park on the doorbell until a new epoch includes us.
+        let job = {
+            let mut st = lock_state(p);
+            loop {
+                if st.epoch != seen {
+                    seen = st.epoch;
+                    if let Some(j) = st.job {
+                        if ordinal <= j.participants {
+                            break j;
+                        }
+                    }
+                }
+                st = p.doorbell.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        // Run our share of the launch; panics are forwarded, not fatal.
+        let task = unsafe { &*job.task };
+        IN_LAUNCH.with(|c| c.set(true));
+        let result = catch_unwind(AssertUnwindSafe(|| task(ordinal)));
+        IN_LAUNCH.with(|c| c.set(false));
+        if let Err(payload) = result {
+            p.panics
+                .lock()
+                .unwrap_or_else(PoisonError::into_inner)
+                .push(payload);
+        }
+        let mut st = lock_state(p);
+        st.active -= 1;
+        if st.active == 0 {
+            p.done.notify_all();
+        }
+    }
+}
+
+/// Run `task(ordinal)` once on each of `helpers + 1` workers: ordinals
+/// `1..=helpers` on pooled threads, ordinal `0` on the calling thread.
+/// Returns only after every participant has finished (or panicked —
+/// panics are re-raised here after the pool is quiescent).
+fn launch(helpers: usize, task: &(dyn Fn(usize) + Sync)) {
+    let p = pool();
+    let _guard = p.launch_lock.lock().unwrap_or_else(PoisonError::into_inner);
+    {
+        let mut st = lock_state(p);
+        grow(p, &mut st, helpers);
+        st.epoch += 1;
+        // Erase the borrow; sound because this frame outlives the job
+        // (we block on `active == 0` below before returning).
+        let task: *const (dyn Fn(usize) + Sync) = unsafe { std::mem::transmute(task) };
+        st.job = Some(Job {
+            task,
+            participants: helpers,
+        });
+        st.active = helpers;
+        p.doorbell.notify_all();
+    }
+    IN_LAUNCH.with(|c| c.set(true));
+    let caller_result = catch_unwind(AssertUnwindSafe(|| task(0)));
+    IN_LAUNCH.with(|c| c.set(false));
+    {
+        let mut st = lock_state(p);
+        while st.active > 0 {
+            st = p.done.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+        st.job = None;
+    }
+    let mut panics: Vec<Box<dyn Any + Send>> = p
+        .panics
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .drain(..)
+        .collect();
+    if let Err(payload) = caller_result {
+        panics.insert(0, payload);
+    }
+    if let Some(first) = panics.into_iter().next() {
+        drop(_guard);
+        std::panic::resume_unwind(first);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-thread persistent scratch
+// ---------------------------------------------------------------------
+
+thread_local! {
+    /// Launch scratch by scratch type. Worker threads are persistent,
+    /// so a `WorkerScratch` (tile pool + panel cache) placed here
+    /// survives across launches; distinct scratch types (tests, other
+    /// callers) coexist without evicting each other.
+    static SCRATCH: RefCell<HashMap<std::any::TypeId, Box<dyn Any>>> =
+        RefCell::new(HashMap::new());
+}
+
+fn with_scratch<S: 'static, R>(init: impl Fn() -> S, body: impl FnOnce(&mut S) -> R) -> R {
+    let key = std::any::TypeId::of::<S>();
+    // Take the slot *out* of the map (releasing the RefCell borrow)
+    // while the body runs: a reentrant map on the same thread then
+    // builds itself a fresh scratch instead of hitting a borrow panic.
+    // The outer scratch is restored afterwards (an inner same-type
+    // scratch is simply replaced — persistence is a perf property).
+    let mut slot: Box<S> = SCRATCH
+        .with(|cell| cell.borrow_mut().remove(&key))
+        .and_then(|b| b.downcast::<S>().ok())
+        .unwrap_or_else(|| Box::new(init()));
+    let out = body(&mut slot);
+    SCRATCH.with(|cell| cell.borrow_mut().insert(key, slot as Box<dyn Any>));
+    out
+}
+
+// ---------------------------------------------------------------------
+// Sharded claiming + hierarchical stealing
+// ---------------------------------------------------------------------
+
+/// One per-domain shard of a launch's index space.
+struct Shard {
+    start: usize,
+    end: usize,
+    /// Absolute index past which claims degrade to single blocks.
+    tail_start: usize,
+    cursor: AtomicUsize,
+}
+
+impl Shard {
+    /// Claim the next chunk: `CLAIM_CHUNK` blocks away from the tail,
+    /// one block inside it. `None` once the shard is dry (permanent —
+    /// cursors never retreat).
+    fn claim(&self) -> Option<(usize, usize)> {
+        loop {
+            let cur = self.cursor.load(Ordering::Relaxed);
+            if cur >= self.end {
+                return None;
+            }
+            let take = if cur < self.tail_start {
+                CLAIM_CHUNK.min(self.tail_start - cur)
+            } else {
+                1
+            };
+            if self
+                .cursor
+                .compare_exchange_weak(cur, cur + take, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                return Some((cur, take));
+            }
+        }
+    }
+}
+
+/// Shard `0..n` across domains proportionally to each domain's worker
+/// count. Contiguous, disjoint, covering; empty for 0-worker domains.
+fn build_shards(workers_per_domain: &[usize], n: usize) -> Vec<Shard> {
+    let sizes = proportional_split(workers_per_domain, n);
+    let mut shards = Vec::with_capacity(sizes.len());
+    let mut start = 0usize;
+    for (d, &len) in sizes.iter().enumerate() {
+        let end = start + len;
+        // Tail window sized to the domain's own workers: the final
+        // `workers * CLAIM_CHUNK` items go out one at a time so no
+        // worker sits on a multi-block claim while siblings idle.
+        let tail = end.saturating_sub(workers_per_domain[d] * CLAIM_CHUNK).max(start);
+        shards.push(Shard {
+            start,
+            end,
+            tail_start: tail,
+            cursor: AtomicUsize::new(start),
+        });
+        start = end;
+    }
+    debug_assert_eq!(start, n);
+    shards
+}
+
+/// Drain every shard from `home` outward in ring order, running `run`
+/// on each claimed index. Own-domain claims come first; cross-domain
+/// stealing only begins once a shard is dry, and dry shards stay dry,
+/// so a single ring pass claims every index exactly once overall.
+fn drive(shards: &[Shard], home: usize, mut run: impl FnMut(usize)) {
+    let nd = shards.len();
+    for k in 0..nd {
+        let shard = &shards[(home + k) % nd];
+        while let Some((start, take)) = shard.claim() {
+            for i in start..start + take {
+                run(i);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The mapping entry points
+// ---------------------------------------------------------------------
+
+/// Pointer wrapper so the output buffer can be written from workers
+/// (disjoint indices — each claimed exactly once).
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// Map `f` over `0..n` on the persistent pool, sharded by `topo`.
+///
+/// Per-worker scratch of type `S` persists in each worker thread across
+/// launches (`init` only runs when a thread has never held an `S`).
+/// Results return in index order regardless of which worker computed
+/// what, so a caller's merge is deterministic and bit-identical to the
+/// `num_threads == 1` sequential path, which runs entirely on the
+/// calling thread (using its own persistent scratch) and never touches
+/// the pool.
+pub fn map_with_topology<S, T, I, F>(
+    topo: &Topology,
+    par: &Parallelism,
+    n: usize,
+    init: I,
+    f: F,
+) -> Vec<T>
+where
+    S: 'static,
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    // A map issued from inside a launch (nested use) runs sequentially
+    // on this worker — the launch protocol is not reentrant.
+    let workers = if in_launch() {
+        1
+    } else {
+        par.num_threads.min(n).max(1)
+    };
+    if workers == 1 {
+        return with_scratch(&init, |s| (0..n).map(|i| f(s, i)).collect());
+    }
+
+    let per_domain = topo.assign_workers(workers);
+    let shards = build_shards(&per_domain, n);
+    // Worker ordinal -> home domain (contiguous ranges per domain).
+    let mut home = Vec::with_capacity(workers);
+    for (d, &c) in per_domain.iter().enumerate() {
+        home.extend(std::iter::repeat(d).take(c));
+    }
+    debug_assert_eq!(home.len(), workers);
+
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let out_ptr = SendPtr(out.as_mut_ptr());
+    let task = |ordinal: usize| {
+        with_scratch(&init, |s| {
+            drive(&shards, home[ordinal], |i| {
+                let v = f(s, i);
+                // Each index is claimed exactly once; the slot is None.
+                unsafe { out_ptr.0.add(i).write(Some(v)) };
+            });
+        });
+    };
+    launch(workers - 1, &task);
+    out.into_iter()
+        .enumerate()
+        .map(|(i, o)| o.unwrap_or_else(|| panic!("work item {i} never claimed")))
+        .collect()
+}
+
+/// [`map_with_topology`] under the process topology ([`topology()`]).
+pub fn map_with<S, T, I, F>(par: &Parallelism, n: usize, init: I, f: F) -> Vec<T>
+where
+    S: 'static,
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    map_with_topology(topology().as_ref(), par, n, init, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_cover_and_partition() {
+        for (wpd, n) in [
+            (vec![2usize, 2], 100usize),
+            (vec![1, 7], 13),
+            (vec![3], 5),
+            (vec![1, 0, 2], 9),
+            (vec![4, 4], 3),
+        ] {
+            let shards = build_shards(&wpd, n);
+            let mut covered = 0usize;
+            for s in &shards {
+                assert_eq!(s.start, covered, "{wpd:?} n={n}");
+                assert!(s.start <= s.tail_start && s.tail_start <= s.end);
+                covered = s.end;
+            }
+            assert_eq!(covered, n, "{wpd:?} n={n}");
+        }
+    }
+
+    #[test]
+    fn claims_are_exactly_once_and_chunked() {
+        let shards = build_shards(&[2], 23);
+        let mut seen = vec![0usize; 23];
+        let mut singles_at_tail = 0;
+        while let Some((start, take)) = shards[0].claim() {
+            assert!(take == 1 || take == CLAIM_CHUNK || start + take == shards[0].tail_start);
+            if start >= shards[0].tail_start {
+                assert_eq!(take, 1, "tail claims must be single blocks");
+                singles_at_tail += 1;
+            }
+            for i in start..start + take {
+                seen[i] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+        assert_eq!(singles_at_tail, 2 * CLAIM_CHUNK);
+    }
+
+    #[test]
+    fn map_matches_sequential_under_funny_topologies() {
+        let f = |_: &mut (), i: usize| (i as f32).sin() * 3.0 + i as f32;
+        let seq: Vec<f32> = (0..97).map(|i| f(&mut (), i)).collect();
+        for topo in [
+            Topology::flat(8),
+            Topology::from_domains(vec![1, 1], "env"),
+            Topology::from_domains(vec![1, 63], "env"),
+            Topology::from_domains(vec![1; 8], "env"),
+        ] {
+            for threads in [1usize, 2, 4, 7] {
+                let got = map_with_topology(
+                    &topo,
+                    &Parallelism::with_threads(threads),
+                    97,
+                    || (),
+                    f,
+                );
+                let bits_eq = seq
+                    .iter()
+                    .zip(&got)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(bits_eq, "topo={topo:?} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn worker_panics_propagate_and_pool_survives() {
+        let res = std::panic::catch_unwind(|| {
+            map_with(&Parallelism::with_threads(4), 32, || (), |_, i| {
+                if i == 17 {
+                    panic!("boom");
+                }
+                i
+            })
+        });
+        assert!(res.is_err(), "panic must propagate to the caller");
+        // Pool still serves launches afterwards.
+        let ok = map_with(&Parallelism::with_threads(4), 16, || (), |_, i| i * 2);
+        assert_eq!(ok, (0..16).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn warm_prespawns_and_counts() {
+        struct WarmProbe;
+        let before = spawns_on_this_thread();
+        warm(&Parallelism::with_threads(3));
+        let after_warm = spawns_on_this_thread();
+        assert!(pooled_workers() >= 2);
+        // A post-warm launch at the same width spawns nothing.
+        let _ = map_with(
+            &Parallelism::with_threads(3),
+            64,
+            || WarmProbe,
+            |_, i| i,
+        );
+        assert_eq!(spawns_on_this_thread(), after_warm);
+        // warm() itself attributed its spawns to this thread (0 if an
+        // earlier test on this thread already warmed this far).
+        assert!(after_warm >= before);
+    }
+
+    #[test]
+    fn sequential_path_keeps_caller_scratch_across_calls() {
+        // Unique local type: no other test can touch this slot.
+        struct Persist(u64);
+        let one = map_with(&Parallelism::sequential(), 4, || Persist(0), |s, i| {
+            s.0 += 1 + i as u64;
+            s.0
+        });
+        assert_eq!(one, vec![1, 3, 6, 10]);
+        // Second launch on the same thread: the scratch carried over.
+        let two = map_with(&Parallelism::sequential(), 1, || Persist(0), |s, _| s.0);
+        assert_eq!(two, vec![10], "caller scratch must persist across launches");
+    }
+
+    #[test]
+    fn nested_maps_degrade_to_sequential_without_deadlock() {
+        // A map inside a map (same or different scratch type) must not
+        // deadlock on the launch protocol or panic on the scratch
+        // RefCell — it runs serially on the calling worker.
+        struct NestOuter;
+        let out = map_with(
+            &Parallelism::with_threads(4),
+            8,
+            || NestOuter,
+            |_, i| {
+                let inner =
+                    map_with(&Parallelism::with_threads(4), 4, || (), |_, j| j * 10);
+                inner[i % 4] + i
+            },
+        );
+        assert_eq!(out, (0..8).map(|i| (i % 4) * 10 + i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn launch_tags_are_unique() {
+        let a = fresh_launch_tag();
+        let b = fresh_launch_tag();
+        assert_ne!(a, b);
+        assert!(b > 0);
+    }
+}

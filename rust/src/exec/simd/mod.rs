@@ -5,13 +5,16 @@
 //!
 //! ## Dispatch
 //!
-//! [`level()`] resolves the tier once per process: AVX2+FMA on x86_64
-//! hosts that report both features, NEON on aarch64 (baseline there),
-//! scalar everywhere else. `FLASHLIGHT_SIMD=0` (also `off` / `scalar`)
-//! is the kill switch — it forces the scalar tier; only downgrades are
-//! honored because forcing an ISA the host lacks would be unsound.
-//! Callers that need an explicit tier (benches, property tests) use the
-//! `*_with` entry points.
+//! [`level()`] resolves the tier once per process: AVX-512 (F+VL,
+//! 16-lane with masked tails — requires a toolchain with stable
+//! AVX-512 intrinsics, probed by build.rs) on hosts that report it,
+//! else AVX2+FMA on x86_64 hosts that report both features, NEON on
+//! aarch64 (baseline there), scalar everywhere else.
+//! `FLASHLIGHT_SIMD=0` (also `off` / `scalar`) is the kill switch and
+//! `FLASHLIGHT_SIMD=avx2` caps an AVX-512 host at the AVX2 tier; only
+//! downgrades are honored because forcing an ISA the host lacks would
+//! be unsound. Callers that need an explicit tier (benches, property
+//! tests) use the `*_with` entry points.
 //!
 //! ## The bit-exactness contract
 //!
@@ -27,8 +30,11 @@
 //!   blocking changes the association;
 //! * reductions are pinned to a fixed **8-lane striped** accumulation
 //!   (`lane[i % 8]`) with the shared [`hsum8_tree`] / [`hmax8_tree`]
-//!   combine, implemented as one YMM register on AVX2, a `float32x4`
-//!   pair on NEON, and an `[f32; 8]` array in the scalar tier;
+//!   combine, implemented as one YMM register on AVX2 and on AVX-512
+//!   (which merge-masks the ragged tail instead of looping scalar
+//!   lanes — 16-lane accumulation would change the association), a
+//!   `float32x4` pair on NEON, and an `[f32; 8]` array in the scalar
+//!   tier;
 //! * the m = 1 NT form (serving decode) instead vectorizes the dot
 //!   product along k with the same striped-8 scheme — a static split on
 //!   shape, so every tier takes it for exactly the same calls.
@@ -50,6 +56,10 @@ pub mod scalar;
 pub mod neon;
 #[cfg(target_arch = "x86_64")]
 pub mod x86;
+// Gated on the build.rs toolchain probe: the AVX-512 intrinsics are
+// stable since rustc 1.89; older toolchains top out at the AVX2 tier.
+#[cfg(all(target_arch = "x86_64", flashlight_avx512))]
+pub mod x86_512;
 
 use std::sync::OnceLock;
 
@@ -67,6 +77,11 @@ pub enum SimdLevel {
     Scalar,
     /// x86_64 with AVX2 + FMA3 (8-lane f32).
     Avx2Fma,
+    /// x86_64 with AVX-512F + VL (16-lane f32, masked tails). Only
+    /// dispatched when the toolchain compiled the tier
+    /// (`cfg(flashlight_avx512)`, see build.rs) *and* the host reports
+    /// both features; otherwise the variant exists but never resolves.
+    Avx512,
     /// aarch64 NEON (4-lane f32, paired to emulate the 8-lane contract).
     Neon,
 }
@@ -76,6 +91,7 @@ impl SimdLevel {
         match self {
             SimdLevel::Scalar => "scalar",
             SimdLevel::Avx2Fma => "avx2+fma",
+            SimdLevel::Avx512 => "avx512",
             SimdLevel::Neon => "neon",
         }
     }
@@ -90,6 +106,13 @@ impl SimdLevel {
 /// Best tier the host supports (ignores the env kill switch).
 #[allow(unreachable_code)]
 pub fn detect() -> SimdLevel {
+    #[cfg(all(target_arch = "x86_64", flashlight_avx512))]
+    {
+        if std::is_x86_feature_detected!("avx512f") && std::is_x86_feature_detected!("avx512vl")
+        {
+            return SimdLevel::Avx512;
+        }
+    }
     #[cfg(target_arch = "x86_64")]
     {
         if std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma") {
@@ -105,10 +128,16 @@ pub fn detect() -> SimdLevel {
 }
 
 /// Resolve a `FLASHLIGHT_SIMD` override: `0` / `off` / `scalar` force
-/// the scalar tier, anything else (or unset) auto-detects.
+/// the scalar tier, `avx2` caps an AVX-512 host at the AVX2+FMA tier
+/// (downgrades only — forcing an ISA the host lacks would be unsound),
+/// anything else (or unset) auto-detects.
 pub fn resolve(env: Option<&str>) -> SimdLevel {
     match env.map(str::trim) {
         Some("0") | Some("off") | Some("scalar") => SimdLevel::Scalar,
+        Some("avx2") => match detect() {
+            SimdLevel::Avx512 => SimdLevel::Avx2Fma,
+            other => other,
+        },
         _ => detect(),
     }
 }
@@ -218,6 +247,7 @@ pub fn hmax8_tree(l: &[f32; 8]) -> f32 {
 /// microkernel: two vectors wide on the vector tiers.
 pub fn panel_width(l: SimdLevel) -> usize {
     match l {
+        SimdLevel::Avx512 => 32,
         SimdLevel::Avx2Fma => 16,
         SimdLevel::Neon | SimdLevel::Scalar => 8,
     }
@@ -328,6 +358,8 @@ pub fn gemm_nt_packed_with(
         SimdLevel::Scalar => scalar::gemm_nt_packed(a, bp, c, m, n, k),
         #[cfg(target_arch = "x86_64")]
         SimdLevel::Avx2Fma => unsafe { x86::gemm_nt_packed(a, bp, c, m, n, k) },
+        #[cfg(all(target_arch = "x86_64", flashlight_avx512))]
+        SimdLevel::Avx512 => unsafe { x86_512::gemm_nt_packed(a, bp, c, m, n, k) },
         #[cfg(target_arch = "aarch64")]
         SimdLevel::Neon => neon::gemm_nt_packed(a, bp, c, m, n, k),
         #[allow(unreachable_patterns)]
@@ -342,6 +374,8 @@ fn nt_row_with(l: SimdLevel, a: &[f32], b: &[f32], c: &mut [f32], n: usize, k: u
         SimdLevel::Scalar => scalar::nt_row(a, b, c, n, k),
         #[cfg(target_arch = "x86_64")]
         SimdLevel::Avx2Fma => unsafe { x86::nt_row(a, b, c, n, k) },
+        #[cfg(all(target_arch = "x86_64", flashlight_avx512))]
+        SimdLevel::Avx512 => unsafe { x86_512::nt_row(a, b, c, n, k) },
         #[cfg(target_arch = "aarch64")]
         SimdLevel::Neon => neon::nt_row(a, b, c, n, k),
         #[allow(unreachable_patterns)]
@@ -359,6 +393,8 @@ pub fn gemm_nn_with(l: SimdLevel, a: &[f32], b: &[f32], c: &mut [f32], m: usize,
         SimdLevel::Scalar => scalar::gemm_nn(a, b, c, m, n, k),
         #[cfg(target_arch = "x86_64")]
         SimdLevel::Avx2Fma => unsafe { x86::gemm_nn(a, b, c, m, n, k) },
+        #[cfg(all(target_arch = "x86_64", flashlight_avx512))]
+        SimdLevel::Avx512 => unsafe { x86_512::gemm_nn(a, b, c, m, n, k) },
         #[cfg(target_arch = "aarch64")]
         SimdLevel::Neon => neon::gemm_nn(a, b, c, m, n, k),
         #[allow(unreachable_patterns)]
@@ -374,6 +410,8 @@ pub fn vexp_shift_with(l: SimdLevel, dst: &mut [f32], src: &[f32], shift: f32) {
         SimdLevel::Scalar => scalar::vexp_shift(dst, src, shift),
         #[cfg(target_arch = "x86_64")]
         SimdLevel::Avx2Fma => unsafe { x86::vexp_shift(dst, src, shift) },
+        #[cfg(all(target_arch = "x86_64", flashlight_avx512))]
+        SimdLevel::Avx512 => unsafe { x86_512::vexp_shift(dst, src, shift) },
         #[cfg(target_arch = "aarch64")]
         SimdLevel::Neon => neon::vexp_shift(dst, src, shift),
         #[allow(unreachable_patterns)]
@@ -388,6 +426,8 @@ pub fn vsigmoid_with(l: SimdLevel, dst: &mut [f32], src: &[f32]) {
         SimdLevel::Scalar => scalar::vsigmoid(dst, src),
         #[cfg(target_arch = "x86_64")]
         SimdLevel::Avx2Fma => unsafe { x86::vsigmoid(dst, src) },
+        #[cfg(all(target_arch = "x86_64", flashlight_avx512))]
+        SimdLevel::Avx512 => unsafe { x86_512::vsigmoid(dst, src) },
         #[cfg(target_arch = "aarch64")]
         SimdLevel::Neon => neon::vsigmoid(dst, src),
         #[allow(unreachable_patterns)]
@@ -401,6 +441,8 @@ pub fn row_sum_with(l: SimdLevel, x: &[f32]) -> f32 {
         SimdLevel::Scalar => scalar::row_sum(x),
         #[cfg(target_arch = "x86_64")]
         SimdLevel::Avx2Fma => unsafe { x86::row_sum(x) },
+        #[cfg(all(target_arch = "x86_64", flashlight_avx512))]
+        SimdLevel::Avx512 => unsafe { x86_512::row_sum(x) },
         #[cfg(target_arch = "aarch64")]
         SimdLevel::Neon => neon::row_sum(x),
         #[allow(unreachable_patterns)]
@@ -414,6 +456,8 @@ pub fn row_max_with(l: SimdLevel, x: &[f32]) -> f32 {
         SimdLevel::Scalar => scalar::row_max(x),
         #[cfg(target_arch = "x86_64")]
         SimdLevel::Avx2Fma => unsafe { x86::row_max(x) },
+        #[cfg(all(target_arch = "x86_64", flashlight_avx512))]
+        SimdLevel::Avx512 => unsafe { x86_512::row_max(x) },
         #[cfg(target_arch = "aarch64")]
         SimdLevel::Neon => neon::row_max(x),
         #[allow(unreachable_patterns)]
@@ -427,6 +471,8 @@ pub fn scale_with(l: SimdLevel, acc: &mut [f32], alpha: f32) {
         SimdLevel::Scalar => scalar::scale(acc, alpha),
         #[cfg(target_arch = "x86_64")]
         SimdLevel::Avx2Fma => unsafe { x86::scale(acc, alpha) },
+        #[cfg(all(target_arch = "x86_64", flashlight_avx512))]
+        SimdLevel::Avx512 => unsafe { x86_512::scale(acc, alpha) },
         #[cfg(target_arch = "aarch64")]
         SimdLevel::Neon => neon::scale(acc, alpha),
         #[allow(unreachable_patterns)]
@@ -441,6 +487,8 @@ pub fn axpy_with(l: SimdLevel, acc: &mut [f32], p: f32, v: &[f32]) {
         SimdLevel::Scalar => scalar::axpy(acc, p, v),
         #[cfg(target_arch = "x86_64")]
         SimdLevel::Avx2Fma => unsafe { x86::axpy(acc, p, v) },
+        #[cfg(all(target_arch = "x86_64", flashlight_avx512))]
+        SimdLevel::Avx512 => unsafe { x86_512::axpy(acc, p, v) },
         #[cfg(target_arch = "aarch64")]
         SimdLevel::Neon => neon::axpy(acc, p, v),
         #[allow(unreachable_patterns)]
@@ -455,6 +503,8 @@ pub fn vadd_assign_with(l: SimdLevel, dst: &mut [f32], src: &[f32]) {
         SimdLevel::Scalar => scalar::vadd_assign(dst, src),
         #[cfg(target_arch = "x86_64")]
         SimdLevel::Avx2Fma => unsafe { x86::vadd_assign(dst, src) },
+        #[cfg(all(target_arch = "x86_64", flashlight_avx512))]
+        SimdLevel::Avx512 => unsafe { x86_512::vadd_assign(dst, src) },
         #[cfg(target_arch = "aarch64")]
         SimdLevel::Neon => neon::vadd_assign(dst, src),
         #[allow(unreachable_patterns)]
@@ -469,6 +519,8 @@ pub fn vmax_assign_with(l: SimdLevel, dst: &mut [f32], src: &[f32]) {
         SimdLevel::Scalar => scalar::vmax_assign(dst, src),
         #[cfg(target_arch = "x86_64")]
         SimdLevel::Avx2Fma => unsafe { x86::vmax_assign(dst, src) },
+        #[cfg(all(target_arch = "x86_64", flashlight_avx512))]
+        SimdLevel::Avx512 => unsafe { x86_512::vmax_assign(dst, src) },
         #[cfg(target_arch = "aarch64")]
         SimdLevel::Neon => neon::vmax_assign(dst, src),
         #[allow(unreachable_patterns)]
@@ -547,6 +599,13 @@ mod tests {
         assert_eq!(resolve(Some(" 0 ")), SimdLevel::Scalar);
         assert_eq!(resolve(None), detect());
         assert_eq!(resolve(Some("1")), detect());
+        // avx2 is a downgrade cap: it only ever steps AVX-512 down.
+        let capped = resolve(Some("avx2"));
+        if detect() == SimdLevel::Avx512 {
+            assert_eq!(capped, SimdLevel::Avx2Fma);
+        } else {
+            assert_eq!(capped, detect());
+        }
         // level() is either the kill switch or auto-detect, never an
         // unsupported tier.
         assert!(level() == SimdLevel::Scalar || level() == detect());

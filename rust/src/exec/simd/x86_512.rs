@@ -1,0 +1,419 @@
+//! AVX-512 tier (16-lane f32, fused multiply-add, masked tails).
+//!
+//! Lane-for-lane mirror of `scalar.rs` — see the bit-exactness contract
+//! in the module docs. What the wider ISA buys over the AVX2 tier:
+//!
+//! * the NT microkernel is an 8-row × 2-vector (8 × 32) register-
+//!   blocked accumulator tile over packed B panels (`nr == 32`), with
+//!   **masked stores** for partial panels instead of the AVX2 tier's
+//!   bounce-buffer copy;
+//! * the NN kernel streams contiguous B rows 32 columns at a time, and
+//!   the ragged column tail is a masked load/FMA/store — no 8-wide or
+//!   scalar special-case loops remain;
+//! * element-wise kernels (`exp`, `sigmoid`, scale, axpy, folds) run
+//!   16 lanes per step with a masked tail — the scalar tail loops of
+//!   the AVX2 tier are gone entirely;
+//! * reductions **keep the 8-lane striped accumulator** mandated by the
+//!   bit-exactness contract (a 16-lane accumulator would change the
+//!   combine association), but the striped tail is a merge-masked YMM
+//!   op (`AVX-512VL`) rather than a scalar loop.
+//!
+//! Per-lane operations are bitwise those of the scalar tier: FMA where
+//! it spells `f32::mul_add`, `max` with x86 `maxps` semantics, and the
+//! shared `exp` constants — so `to_bits` equality with every other tier
+//! holds by construction (`rust/tests/simd_kernels.rs`).
+//!
+//! # Safety
+//!
+//! Every function is `unsafe fn` + `#[target_feature(enable =
+//! "avx512f,avx512vl")]`: callers (the dispatcher in `mod.rs`) must
+//! only reach this module after `detect()` has confirmed both features.
+//! The module itself is additionally gated on `cfg(flashlight_avx512)`
+//! (build.rs probes the toolchain; the intrinsics are stable since
+//! rustc 1.89).
+
+#![allow(clippy::missing_safety_doc, clippy::too_many_arguments)]
+
+use core::arch::x86_64::*;
+
+use super::{hsum8_tree, PackedB, KC};
+
+const NR: usize = 32; // panel width: two ZMM vectors
+const MR: usize = 8; // accumulator tile rows
+
+/// All-ones-below-`lanes` 16-bit lane mask (`lanes` in 1..=16).
+#[inline(always)]
+fn lane_mask16(lanes: usize) -> __mmask16 {
+    debug_assert!(lanes >= 1 && lanes <= 16);
+    if lanes >= 16 {
+        0xFFFF
+    } else {
+        ((1u32 << lanes) - 1) as __mmask16
+    }
+}
+
+/// 8-bit lane mask for the striped-YMM tails (`lanes` in 1..=8).
+#[inline(always)]
+fn lane_mask8(lanes: usize) -> __mmask8 {
+    debug_assert!(lanes >= 1 && lanes <= 8);
+    if lanes >= 8 {
+        0xFF
+    } else {
+        ((1u16 << lanes) - 1) as __mmask8
+    }
+}
+
+/// `C[m×n] = A[m×k] · B[n×k]ᵀ` over packed panels (`bp.nr == 32`).
+#[target_feature(enable = "avx512f,avx512vl")]
+pub unsafe fn gemm_nt_packed(a: &[f32], bp: &PackedB, c: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert_eq!(bp.nr, NR);
+    debug_assert!(a.len() >= m * k && c.len() >= m * n);
+    let panels = (n + NR - 1) / NR;
+    for jp in 0..panels {
+        let jbase = jp * NR;
+        let cols = NR.min(n - jbase);
+        let pb = bp.data.as_ptr().add(jp * k * NR);
+        let mut i = 0;
+        while i + MR <= m {
+            nt_block(a.as_ptr().add(i * k), MR, k, pb, c, i, jbase, n, cols);
+            i += MR;
+        }
+        if i < m {
+            nt_block(a.as_ptr().add(i * k), m - i, k, pb, c, i, jbase, n, cols);
+        }
+    }
+}
+
+/// `mr`-row block (mr ≤ 8): 2·mr ZMM accumulators, broadcast-A FMA per
+/// k step, masked stores on partial panels (no bounce buffer).
+#[target_feature(enable = "avx512f,avx512vl")]
+unsafe fn nt_block(
+    a: *const f32,
+    mr: usize,
+    k: usize,
+    pb: *const f32,
+    c: &mut [f32],
+    i0: usize,
+    jbase: usize,
+    ldc: usize,
+    cols: usize,
+) {
+    debug_assert!(mr <= MR);
+    let mut acc0 = [_mm512_setzero_ps(); MR];
+    let mut acc1 = [_mm512_setzero_ps(); MR];
+    for p in 0..k {
+        // Panels are zero-padded to NR columns: loads are always full.
+        let b0 = _mm512_loadu_ps(pb.add(p * NR));
+        let b1 = _mm512_loadu_ps(pb.add(p * NR + 16));
+        for r in 0..mr {
+            let av = _mm512_set1_ps(*a.add(r * k + p));
+            acc0[r] = _mm512_fmadd_ps(av, b0, acc0[r]);
+            acc1[r] = _mm512_fmadd_ps(av, b1, acc1[r]);
+        }
+    }
+    if cols == NR {
+        for r in 0..mr {
+            let off = (i0 + r) * ldc + jbase;
+            _mm512_storeu_ps(c.as_mut_ptr().add(off), acc0[r]);
+            _mm512_storeu_ps(c.as_mut_ptr().add(off + 16), acc1[r]);
+        }
+    } else {
+        let m0 = lane_mask16(cols.min(16));
+        let m1 = if cols > 16 { lane_mask16(cols - 16) } else { 0 };
+        for r in 0..mr {
+            let off = (i0 + r) * ldc + jbase;
+            _mm512_mask_storeu_ps(c.as_mut_ptr().add(off), m0, acc0[r]);
+            if m1 != 0 {
+                _mm512_mask_storeu_ps(c.as_mut_ptr().add(off + 16), m1, acc1[r]);
+            }
+        }
+    }
+}
+
+/// Striped-8 dot (the m = 1 NT decode form): one YMM FMA accumulator —
+/// the 8-lane striping is part of the cross-tier reduction contract —
+/// with a merge-masked FMA for the tail instead of scalar lanes.
+#[target_feature(enable = "avx512f,avx512vl")]
+unsafe fn dot8(a: *const f32, b: *const f32, k: usize) -> f32 {
+    let mut acc = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + 8 <= k {
+        acc = _mm256_fmadd_ps(_mm256_loadu_ps(a.add(i)), _mm256_loadu_ps(b.add(i)), acc);
+        i += 8;
+    }
+    if i < k {
+        let m = lane_mask8(k - i);
+        let av = _mm256_maskz_loadu_ps(m, a.add(i));
+        let bv = _mm256_maskz_loadu_ps(m, b.add(i));
+        // Masked-out lanes pass `acc` through untouched.
+        acc = _mm256_mask3_fmadd_ps(av, bv, acc, m);
+    }
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    hsum8_tree(&lanes)
+}
+
+/// `c[j] = a · b[j]` (m = 1 NT).
+#[target_feature(enable = "avx512f,avx512vl")]
+pub unsafe fn nt_row(a: &[f32], b: &[f32], c: &mut [f32], n: usize, k: usize) {
+    debug_assert!(a.len() >= k && b.len() >= n * k && c.len() >= n);
+    for j in 0..n {
+        c[j] = dot8(a.as_ptr(), b.as_ptr().add(j * k), k);
+    }
+}
+
+/// `C[m×n] += A[m×k] · B[k×n]` — contiguous B rows, [`KC`]-panel
+/// contraction blocking, exact-zero skip, masked ragged tail.
+#[target_feature(enable = "avx512f,avx512vl")]
+pub unsafe fn gemm_nn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    debug_assert!(a.len() >= m * k && b.len() >= k * n && c.len() >= m * n);
+    let mut p0 = 0;
+    while p0 < k {
+        let pc = KC.min(k - p0);
+        for i in 0..m {
+            let a_row = a.as_ptr().add(i * k + p0);
+            let c_row = c.as_mut_ptr().add(i * n);
+            let mut j = 0;
+            while j + 32 <= n {
+                let mut acc0 = _mm512_loadu_ps(c_row.add(j));
+                let mut acc1 = _mm512_loadu_ps(c_row.add(j + 16));
+                for p in 0..pc {
+                    let av = *a_row.add(p);
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let avv = _mm512_set1_ps(av);
+                    let brow = b.as_ptr().add((p0 + p) * n + j);
+                    acc0 = _mm512_fmadd_ps(avv, _mm512_loadu_ps(brow), acc0);
+                    acc1 = _mm512_fmadd_ps(avv, _mm512_loadu_ps(brow.add(16)), acc1);
+                }
+                _mm512_storeu_ps(c_row.add(j), acc0);
+                _mm512_storeu_ps(c_row.add(j + 16), acc1);
+                j += 32;
+            }
+            while j < n {
+                // Masked tail: up to two 16-lane segments, no scalar loop.
+                let rem = (n - j).min(16);
+                let mask = lane_mask16(rem);
+                let mut acc = _mm512_maskz_loadu_ps(mask, c_row.add(j));
+                for p in 0..pc {
+                    let av = *a_row.add(p);
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let bv = _mm512_maskz_loadu_ps(mask, b.as_ptr().add((p0 + p) * n + j));
+                    acc = _mm512_fmadd_ps(_mm512_set1_ps(av), bv, acc);
+                }
+                _mm512_mask_storeu_ps(c_row.add(j), mask, acc);
+                j += rem;
+            }
+        }
+        p0 += pc;
+    }
+}
+
+/// Sixteen lanes of the shared exp kernel (see `exp_f32` for the
+/// per-lane reference this mirrors operation-for-operation).
+#[target_feature(enable = "avx512f,avx512vl")]
+unsafe fn exp16(x: __m512) -> __m512 {
+    let lo = _mm512_set1_ps(super::EXP_LO);
+    let hi = _mm512_set1_ps(super::EXP_HI);
+    let xc = _mm512_min_ps(_mm512_max_ps(x, lo), hi);
+    let magic = _mm512_set1_ps(super::EXP_MAGIC);
+    let n = _mm512_sub_ps(
+        _mm512_fmadd_ps(xc, _mm512_set1_ps(super::LOG2E), magic),
+        magic,
+    );
+    let r = _mm512_fmadd_ps(n, _mm512_set1_ps(-super::LN2_HI), xc);
+    let r = _mm512_fmadd_ps(n, _mm512_set1_ps(-super::LN2_LO), r);
+    let z = _mm512_mul_ps(r, r);
+    let mut y = _mm512_set1_ps(super::EXP_P0);
+    y = _mm512_fmadd_ps(y, r, _mm512_set1_ps(super::EXP_P1));
+    y = _mm512_fmadd_ps(y, r, _mm512_set1_ps(super::EXP_P2));
+    y = _mm512_fmadd_ps(y, r, _mm512_set1_ps(super::EXP_P3));
+    y = _mm512_fmadd_ps(y, r, _mm512_set1_ps(super::EXP_P4));
+    y = _mm512_fmadd_ps(y, r, _mm512_set1_ps(super::EXP_P5));
+    let y = _mm512_add_ps(_mm512_fmadd_ps(y, z, r), _mm512_set1_ps(1.0));
+    let ni = _mm512_cvtps_epi32(n);
+    let bits = _mm512_slli_epi32::<23>(_mm512_add_epi32(ni, _mm512_set1_epi32(127)));
+    let out = _mm512_mul_ps(y, _mm512_castsi512_ps(bits));
+    // x < EXP_LO ⇒ exactly 0.0 (the -1e30 mask sentinel path).
+    let keep = _mm512_cmp_ps_mask::<_CMP_NLT_UQ>(x, lo);
+    _mm512_maskz_mov_ps(keep, out)
+}
+
+/// IEEE negate (sign-bit flip) without AVX-512DQ's `xor_ps`.
+#[target_feature(enable = "avx512f,avx512vl")]
+unsafe fn neg16(x: __m512) -> __m512 {
+    _mm512_castsi512_ps(_mm512_xor_si512(
+        _mm512_castps_si512(x),
+        _mm512_set1_epi32(i32::MIN),
+    ))
+}
+
+/// `dst[i] = exp(src[i] + shift)`.
+#[target_feature(enable = "avx512f,avx512vl")]
+pub unsafe fn vexp_shift(dst: &mut [f32], src: &[f32], shift: f32) {
+    let n = src.len();
+    let sh = _mm512_set1_ps(shift);
+    let mut i = 0;
+    while i + 16 <= n {
+        let x = _mm512_add_ps(_mm512_loadu_ps(src.as_ptr().add(i)), sh);
+        _mm512_storeu_ps(dst.as_mut_ptr().add(i), exp16(x));
+        i += 16;
+    }
+    if i < n {
+        let m = lane_mask16(n - i);
+        let x = _mm512_add_ps(_mm512_maskz_loadu_ps(m, src.as_ptr().add(i)), sh);
+        _mm512_mask_storeu_ps(dst.as_mut_ptr().add(i), m, exp16(x));
+    }
+}
+
+/// `dst[i] = 1 / (1 + exp(-src[i]))`.
+#[target_feature(enable = "avx512f,avx512vl")]
+pub unsafe fn vsigmoid(dst: &mut [f32], src: &[f32]) {
+    let n = src.len();
+    let one = _mm512_set1_ps(1.0);
+    let mut i = 0;
+    while i + 16 <= n {
+        let x = _mm512_loadu_ps(src.as_ptr().add(i));
+        let e = exp16(neg16(x));
+        _mm512_storeu_ps(
+            dst.as_mut_ptr().add(i),
+            _mm512_div_ps(one, _mm512_add_ps(one, e)),
+        );
+        i += 16;
+    }
+    if i < n {
+        let m = lane_mask16(n - i);
+        let x = _mm512_maskz_loadu_ps(m, src.as_ptr().add(i));
+        let e = exp16(neg16(x));
+        _mm512_mask_storeu_ps(
+            dst.as_mut_ptr().add(i),
+            m,
+            _mm512_div_ps(one, _mm512_add_ps(one, e)),
+        );
+    }
+}
+
+/// Striped-8 sum (8-lane stripe is the cross-tier contract; the tail
+/// is a merge-masked add instead of scalar lanes), shared tree combine.
+#[target_feature(enable = "avx512f,avx512vl")]
+pub unsafe fn row_sum(x: &[f32]) -> f32 {
+    let n = x.len();
+    let mut acc = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + 8 <= n {
+        acc = _mm256_add_ps(acc, _mm256_loadu_ps(x.as_ptr().add(i)));
+        i += 8;
+    }
+    if i < n {
+        let m = lane_mask8(n - i);
+        acc = _mm256_mask_add_ps(acc, m, acc, _mm256_maskz_loadu_ps(m, x.as_ptr().add(i)));
+    }
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    hsum8_tree(&lanes)
+}
+
+/// Striped-8 max (`maxps` matches the scalar `mx` bitwise).
+#[target_feature(enable = "avx512f,avx512vl")]
+pub unsafe fn row_max(x: &[f32]) -> f32 {
+    let n = x.len();
+    let mut acc = _mm256_set1_ps(f32::NEG_INFINITY);
+    let mut i = 0;
+    while i + 8 <= n {
+        acc = _mm256_max_ps(acc, _mm256_loadu_ps(x.as_ptr().add(i)));
+        i += 8;
+    }
+    if i < n {
+        let m = lane_mask8(n - i);
+        acc = _mm256_mask_max_ps(acc, m, acc, _mm256_maskz_loadu_ps(m, x.as_ptr().add(i)));
+    }
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    super::hmax8_tree(&lanes)
+}
+
+/// `acc[i] *= alpha`.
+#[target_feature(enable = "avx512f,avx512vl")]
+pub unsafe fn scale(acc: &mut [f32], alpha: f32) {
+    let n = acc.len();
+    let av = _mm512_set1_ps(alpha);
+    let mut i = 0;
+    while i + 16 <= n {
+        let p = acc.as_mut_ptr().add(i);
+        _mm512_storeu_ps(p, _mm512_mul_ps(_mm512_loadu_ps(p), av));
+        i += 16;
+    }
+    if i < n {
+        let m = lane_mask16(n - i);
+        let p = acc.as_mut_ptr().add(i);
+        _mm512_mask_storeu_ps(p, m, _mm512_mul_ps(_mm512_maskz_loadu_ps(m, p), av));
+    }
+}
+
+/// `acc[i] = fma(p, v[i], acc[i])`.
+#[target_feature(enable = "avx512f,avx512vl")]
+pub unsafe fn axpy(acc: &mut [f32], p: f32, v: &[f32]) {
+    let n = acc.len();
+    let pv = _mm512_set1_ps(p);
+    let mut i = 0;
+    while i + 16 <= n {
+        let ap = acc.as_mut_ptr().add(i);
+        _mm512_storeu_ps(
+            ap,
+            _mm512_fmadd_ps(pv, _mm512_loadu_ps(v.as_ptr().add(i)), _mm512_loadu_ps(ap)),
+        );
+        i += 16;
+    }
+    if i < n {
+        let m = lane_mask16(n - i);
+        let ap = acc.as_mut_ptr().add(i);
+        let vv = _mm512_maskz_loadu_ps(m, v.as_ptr().add(i));
+        let av = _mm512_maskz_loadu_ps(m, ap);
+        _mm512_mask_storeu_ps(ap, m, _mm512_fmadd_ps(pv, vv, av));
+    }
+}
+
+/// `dst[i] += src[i]`.
+#[target_feature(enable = "avx512f,avx512vl")]
+pub unsafe fn vadd_assign(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len();
+    let mut i = 0;
+    while i + 16 <= n {
+        let dp = dst.as_mut_ptr().add(i);
+        _mm512_storeu_ps(
+            dp,
+            _mm512_add_ps(_mm512_loadu_ps(dp), _mm512_loadu_ps(src.as_ptr().add(i))),
+        );
+        i += 16;
+    }
+    if i < n {
+        let m = lane_mask16(n - i);
+        let dp = dst.as_mut_ptr().add(i);
+        let sv = _mm512_maskz_loadu_ps(m, src.as_ptr().add(i));
+        _mm512_mask_storeu_ps(dp, m, _mm512_add_ps(_mm512_maskz_loadu_ps(m, dp), sv));
+    }
+}
+
+/// `dst[i] = max(dst[i], src[i])`.
+#[target_feature(enable = "avx512f,avx512vl")]
+pub unsafe fn vmax_assign(dst: &mut [f32], src: &[f32]) {
+    let n = dst.len();
+    let mut i = 0;
+    while i + 16 <= n {
+        let dp = dst.as_mut_ptr().add(i);
+        _mm512_storeu_ps(
+            dp,
+            _mm512_max_ps(_mm512_loadu_ps(dp), _mm512_loadu_ps(src.as_ptr().add(i))),
+        );
+        i += 16;
+    }
+    if i < n {
+        let m = lane_mask16(n - i);
+        let dp = dst.as_mut_ptr().add(i);
+        let sv = _mm512_maskz_loadu_ps(m, src.as_ptr().add(i));
+        _mm512_mask_storeu_ps(dp, m, _mm512_max_ps(_mm512_maskz_loadu_ps(m, dp), sv));
+    }
+}

@@ -14,8 +14,12 @@
 //! program instance per (batch…, head…, q-tile) block, modeled by
 //! [`LogicalGrid`]. Blocks share only read-only state (graph, inputs,
 //! previously materialized values), so a [`PipelineRun`] schedules them
-//! across threads ([`crate::exec::parallel`]) with per-thread scratch
-//! ([`WorkerScratch`]: tile pool + online-softmax row states).
+//! over the persistent topology-aware worker runtime
+//! ([`crate::exec::runtime`]: parked process-lifetime workers, per-
+//! domain grid shards, hierarchical stealing) with per-thread scratch
+//! ([`WorkerScratch`]: tile pool + online-softmax row states) that
+//! survives across launches — packed panels and pooled tile buffers
+//! stay warm between serving steps instead of being rebuilt per call.
 //!
 //! ## The multi-plan work queue
 //!
@@ -551,8 +555,10 @@ struct PipelineRun<'a> {
     pipe: &'a Pipeline,
     meta: PipeMeta,
     grid: LogicalGrid,
-    /// Scopes the workers' packed-panel caches to this plan within a
-    /// batched launch (the job index; 0 for single-plan execution).
+    /// Scopes the workers' packed-panel caches to this plan within this
+    /// launch: `(process-unique launch tag << 20) | job index`. Worker
+    /// pools outlive launches, so the tag must never repeat — a stale
+    /// panel under a reused key would silently serve old K-tile data.
     tag: u64,
 }
 
@@ -985,7 +991,20 @@ pub fn execute_plans_batched(
     let mut values: Vec<HashMap<NodeId, Tensor>> = (0..n).map(|_| HashMap::new()).collect();
     let mut counters: Vec<Counters> = vec![Counters::default(); n];
     let mut next_group: Vec<usize> = vec![0; n];
-    let mut pool = TilePool::new();
+    // Worker scratch lives in the runtime's persistent per-thread
+    // storage; panel-cache keys are scoped by a process-unique launch
+    // tag so a surviving pool can never serve a stale panel to a later
+    // launch that reuses the same (plan index, node, region) key.
+    let launch_tag = crate::exec::runtime::fresh_launch_tag();
+    // The scheduler thread's single-kernel pool is persistent too
+    // (serving calls this function once per decode sub-round; rebuilding
+    // the pool per call put the allocator back on the steady-state path).
+    std::thread_local! {
+        static SCHED_POOL: std::cell::RefCell<TilePool> =
+            std::cell::RefCell::new(TilePool::new());
+    }
+    SCHED_POOL.with(|cell| {
+    let sched_pool = &mut *cell.borrow_mut();
 
     loop {
         // Drain single-kernel groups on the scheduler thread (cheap);
@@ -1006,7 +1025,7 @@ pub fn execute_plans_batched(
                     &outputs[j],
                     &mut values[j],
                     &mut counters[j],
-                    &mut pool,
+                    sched_pool,
                 );
                 next_group[j] += 1;
             }
@@ -1034,7 +1053,7 @@ pub fn execute_plans_batched(
                         jobs[j].tile,
                         jobs[j].inputs,
                         &values[j],
-                        j as u64,
+                        (launch_tag << 20) | j as u64,
                     )
                 })
                 .collect();
@@ -1069,6 +1088,7 @@ pub fn execute_plans_batched(
             next_group[j] += 1;
         }
     }
+    }); // SCHED_POOL
 
     jobs.iter()
         .enumerate()

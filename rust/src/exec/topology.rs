@@ -1,0 +1,279 @@
+//! Cache/NUMA topology detection for the persistent worker runtime.
+//!
+//! The scheduler in [`crate::exec::runtime`] range-partitions each
+//! launch grid into per-domain shards so workers claim blocks that are
+//! near their cache first and steal across domains only when their own
+//! shard runs dry. A *domain* is a set of hardware threads that share a
+//! last-level cache (or a NUMA node) — work scheduled within one domain
+//! reuses packed panels and gathered tiles out of the shared cache
+//! instead of bouncing lines across the interconnect.
+//!
+//! Detection order:
+//!
+//! 1. `FLASHLIGHT_TOPO` override — `flat` (one domain), `DxW`
+//!    (`D` domains of `W` hardware threads, e.g. `2x8`), or a comma
+//!    list of per-domain thread counts (e.g. `8,8,4`). Invalid specs
+//!    warn once and fall back to detection. This is how tests exercise
+//!    adversarial topologies and how exotic hosts (heterogeneous
+//!    clusters, containers with misleading sysfs) pin the layout.
+//! 2. Linux sysfs — NUMA nodes (`/sys/devices/system/node/node*/
+//!    cpulist`) when there is more than one; otherwise L3 domains
+//!    (`cpu*/cache/index3/shared_cpu_list` grouping, the
+//!    multi-CCX/chiplet case).
+//! 3. Flat fallback — one domain spanning every available thread.
+//!
+//! Topology only ever affects *scheduling*: shard boundaries and steal
+//! order. Outputs and [`crate::exec::Counters`] are bit-identical under
+//! every topology because the runtime merges results in index order
+//! (property-tested in `rust/tests/runtime_sched.rs`).
+//!
+//! Note on pinning: the runtime does not call `sched_setaffinity` —
+//! std exposes no affinity API and the offline build image carries no
+//! `libc` crate — so domain assignment is advisory (the OS scheduler
+//! keeps parked threads where they last ran, which in practice holds
+//! workers inside their domain between launches).
+
+use std::collections::BTreeMap;
+
+/// Hardware-thread grouping used to shard launch grids. `domains[d]`
+/// is the relative weight (hardware thread count) of domain `d`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    domains: Vec<usize>,
+    /// Where this layout came from (diagnostics / bench JSON).
+    source: &'static str,
+}
+
+impl Topology {
+    /// A single domain of `threads` hardware threads (the no-locality
+    /// layout; also the `FLASHLIGHT_TOPO=flat` override).
+    pub fn flat(threads: usize) -> Self {
+        Topology {
+            domains: vec![threads.max(1)],
+            source: "flat",
+        }
+    }
+
+    /// A topology from explicit per-domain thread counts.
+    pub fn from_domains(domains: Vec<usize>, source: &'static str) -> Self {
+        let domains: Vec<usize> = domains.into_iter().filter(|&c| c > 0).collect();
+        if domains.is_empty() {
+            return Topology::flat(available_threads());
+        }
+        Topology { domains, source }
+    }
+
+    /// Parse a `FLASHLIGHT_TOPO` spec: `flat`, `DxW`, or `c0,c1,...`.
+    pub fn parse_spec(spec: &str) -> Result<Self, String> {
+        let s = spec.trim();
+        if s.eq_ignore_ascii_case("flat") {
+            return Ok(Topology::flat(available_threads()));
+        }
+        if let Some((d, w)) = s.split_once(['x', 'X']) {
+            let d: usize = d.trim().parse().map_err(|_| format!("bad domain count in {spec:?}"))?;
+            let w: usize = w.trim().parse().map_err(|_| format!("bad domain width in {spec:?}"))?;
+            if d == 0 || w == 0 {
+                return Err(format!("zero extent in {spec:?}"));
+            }
+            return Ok(Topology::from_domains(vec![w; d], "env"));
+        }
+        let counts: Result<Vec<usize>, _> = s.split(',').map(|c| c.trim().parse::<usize>()).collect();
+        match counts {
+            Ok(c) if !c.is_empty() && c.iter().all(|&x| x > 0) => {
+                Ok(Topology::from_domains(c, "env"))
+            }
+            _ => Err(format!("unparseable FLASHLIGHT_TOPO {spec:?} (want flat, DxW, or c0,c1,...)")),
+        }
+    }
+
+    /// Resolve the host topology: env override, then sysfs, then flat.
+    pub fn detect() -> Self {
+        if let Ok(spec) = std::env::var("FLASHLIGHT_TOPO") {
+            match Topology::parse_spec(&spec) {
+                Ok(t) => return t,
+                Err(e) => eprintln!("flashlight: ignoring {e}; auto-detecting topology"),
+            }
+        }
+        if let Some(t) = detect_sysfs() {
+            return t;
+        }
+        Topology::flat(available_threads())
+    }
+
+    pub fn n_domains(&self) -> usize {
+        self.domains.len()
+    }
+
+    /// Per-domain hardware-thread weights.
+    pub fn weights(&self) -> &[usize] {
+        &self.domains
+    }
+
+    pub fn source(&self) -> &'static str {
+        self.source
+    }
+
+    /// Compact description for logs/bench JSON, e.g. `numa:8,8`.
+    pub fn describe(&self) -> String {
+        let counts: Vec<String> = self.domains.iter().map(|c| c.to_string()).collect();
+        format!("{}:{}", self.source, counts.join(","))
+    }
+
+    /// Distribute `k` workers over the domains proportionally to their
+    /// weights (largest-remainder rounding, ties to the lower domain
+    /// index). Always sums to `k`; domains may receive zero workers
+    /// when `k < n_domains()`.
+    pub fn assign_workers(&self, k: usize) -> Vec<usize> {
+        proportional_split(&self.domains, k)
+    }
+}
+
+/// Largest-remainder proportional split of `total` units over `weights`.
+/// Deterministic: floors first, then hands remainders to the largest
+/// fractional parts (ties broken by lower index). Sums to `total`.
+pub fn proportional_split(weights: &[usize], total: usize) -> Vec<usize> {
+    let w_sum: usize = weights.iter().sum();
+    if w_sum == 0 || weights.is_empty() {
+        let mut out = vec![0; weights.len().max(1)];
+        out[0] = total;
+        return out;
+    }
+    let mut out = Vec::with_capacity(weights.len());
+    let mut rems: Vec<(usize, usize)> = Vec::with_capacity(weights.len()); // (remainder, idx)
+    let mut assigned = 0usize;
+    for (i, &w) in weights.iter().enumerate() {
+        let num = total * w;
+        out.push(num / w_sum);
+        assigned += num / w_sum;
+        rems.push((num % w_sum, i));
+    }
+    // Largest remainder first; ties to the lower index.
+    rems.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    for &(_, i) in rems.iter().take(total - assigned) {
+        out[i] += 1;
+    }
+    out
+}
+
+fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Count the entries of a sysfs cpulist like `0-3,8-11`.
+fn cpulist_len(list: &str) -> usize {
+    let mut n = 0usize;
+    for part in list.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.split_once('-') {
+            Some((a, b)) => {
+                if let (Ok(a), Ok(b)) = (a.parse::<usize>(), b.parse::<usize>()) {
+                    n += b.saturating_sub(a) + 1;
+                }
+            }
+            None => {
+                if part.parse::<usize>().is_ok() {
+                    n += 1;
+                }
+            }
+        }
+    }
+    n
+}
+
+/// Linux sysfs detection: NUMA nodes first, then L3 sharing groups.
+fn detect_sysfs() -> Option<Topology> {
+    // NUMA nodes with their cpu counts.
+    if let Ok(rd) = std::fs::read_dir("/sys/devices/system/node") {
+        let mut nodes: BTreeMap<usize, usize> = BTreeMap::new();
+        for e in rd.flatten() {
+            let name = e.file_name();
+            let name = name.to_string_lossy().into_owned();
+            if let Some(idx) = name.strip_prefix("node").and_then(|s| s.parse::<usize>().ok()) {
+                if let Ok(list) = std::fs::read_to_string(e.path().join("cpulist")) {
+                    let n = cpulist_len(&list);
+                    if n > 0 {
+                        nodes.insert(idx, n);
+                    }
+                }
+            }
+        }
+        if nodes.len() > 1 {
+            return Some(Topology::from_domains(nodes.into_values().collect(), "numa"));
+        }
+    }
+    // Single node: group hardware threads by their shared L3.
+    if let Ok(rd) = std::fs::read_dir("/sys/devices/system/cpu") {
+        let mut l3: BTreeMap<String, usize> = BTreeMap::new();
+        let mut cpus = 0usize;
+        for e in rd.flatten() {
+            let name = e.file_name();
+            let name = name.to_string_lossy().into_owned();
+            let is_cpu = name
+                .strip_prefix("cpu")
+                .is_some_and(|s| !s.is_empty() && s.chars().all(|c| c.is_ascii_digit()));
+            if !is_cpu {
+                continue;
+            }
+            cpus += 1;
+            if let Ok(list) = std::fs::read_to_string(e.path().join("cache/index3/shared_cpu_list")) {
+                *l3.entry(list.trim().to_string()).or_insert(0) += 1;
+            }
+        }
+        if l3.len() > 1 && l3.values().sum::<usize>() == cpus {
+            return Some(Topology::from_domains(l3.into_values().collect(), "l3"));
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parsing_covers_all_forms() {
+        assert_eq!(Topology::parse_spec("flat").unwrap().n_domains(), 1);
+        let t = Topology::parse_spec("2x8").unwrap();
+        assert_eq!(t.weights(), &[8, 8]);
+        let t = Topology::parse_spec("8, 8, 4").unwrap();
+        assert_eq!(t.weights(), &[8, 8, 4]);
+        assert!(Topology::parse_spec("").is_err());
+        assert!(Topology::parse_spec("0x4").is_err());
+        assert!(Topology::parse_spec("a,b").is_err());
+        assert!(Topology::parse_spec("4,0,4").is_err());
+    }
+
+    #[test]
+    fn proportional_split_sums_and_balances() {
+        assert_eq!(proportional_split(&[1, 1], 4), vec![2, 2]);
+        assert_eq!(proportional_split(&[8, 8, 4], 5), vec![2, 2, 1]);
+        // fewer units than domains: lower indexes win ties
+        assert_eq!(proportional_split(&[1, 1, 1, 1], 2).iter().sum::<usize>(), 2);
+        assert_eq!(proportional_split(&[1, 7], 8), vec![1, 7]);
+        assert_eq!(proportional_split(&[3], 10), vec![10]);
+        assert_eq!(proportional_split(&[0, 0], 3)[0], 3, "zero weights fall to domain 0");
+        for (w, k) in [(vec![5usize, 3, 9], 7usize), (vec![2, 2], 1), (vec![1, 63], 4)] {
+            assert_eq!(proportional_split(&w, k).iter().sum::<usize>(), k, "{w:?} {k}");
+        }
+    }
+
+    #[test]
+    fn cpulist_parsing() {
+        assert_eq!(cpulist_len("0-3,8-11"), 8);
+        assert_eq!(cpulist_len("0"), 1);
+        assert_eq!(cpulist_len("0-15"), 16);
+        assert_eq!(cpulist_len(""), 0);
+        assert_eq!(cpulist_len("2,4,6"), 3);
+    }
+
+    #[test]
+    fn detect_always_yields_a_usable_topology() {
+        let t = Topology::detect();
+        assert!(t.n_domains() >= 1);
+        assert!(t.weights().iter().all(|&c| c > 0));
+        assert!(!t.describe().is_empty());
+    }
+}

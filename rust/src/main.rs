@@ -21,8 +21,12 @@ fn usage() -> ! {
          \x20     regenerate a paper figure's series (CSV to bench_results/);\n\
          \x20     `engine` measures seq-vs-parallel executor wall clock\n\
          \x20     plus the GEMM/softmax microkernel table\n\
-         \x20     (default threads: FLASHLIGHT_THREADS env, else all cores;\n\
-         \x20     FLASHLIGHT_SIMD=0 forces the scalar kernel tier);\n\
+         \x20     (default threads: FLASHLIGHT_THREADS env — integer >= 1,\n\
+         \x20     invalid values warn and fall back to all cores;\n\
+         \x20     FLASHLIGHT_SIMD=0 forces the scalar kernel tier, =avx2\n\
+         \x20     caps an AVX-512 host at the AVX2 tier;\n\
+         \x20     FLASHLIGHT_TOPO=flat|DxW|c0,c1,.. overrides the worker\n\
+         \x20     runtime's cache/NUMA scheduling topology);\n\
          \x20     `serve_engine` measures engine-backend serve throughput\n\
          \x20     at 1/2/all threads with the bit-identity gate\n\
          \x20 serve [--requests N] [--backend sim|engine|pjrt] [--threads N]\n\

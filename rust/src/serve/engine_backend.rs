@@ -153,12 +153,17 @@ struct GatherScratch {
 
 /// A conversation's parked KV prefix: whole pages per layer, plus the
 /// prompt tokens they cache (verified against the next turn's prompt
-/// before adoption) and an LRU tick.
+/// before adoption) and the admission-score inputs — a recency tick and
+/// the conversation's observed reuse count at park time.
 struct ParkedPrefix {
     tokens: Vec<u32>,
     /// Page lists, one per layer; all the same length.
     pages: Vec<Vec<usize>>,
     tick: u64,
+    /// Times this conversation had come back (follow-up turns seen)
+    /// when the prefix was parked. A returning conversation is likelier
+    /// to return again, so reuse history buys eviction protection.
+    reuses: u32,
 }
 
 /// Prefix-cache counters, surfaced in serving metrics.
@@ -226,8 +231,16 @@ pub struct EngineBackend {
     /// whole prompt in one chunk.
     chunk_tokens: usize,
     prefix_caching: bool,
-    /// LRU budget for parked prefix pages (across all layers).
+    /// Page budget for parked prefix pages (across all layers).
     prefix_cache_pages: usize,
+    /// Admission policy weight: each observed return of a conversation
+    /// is worth this many recency ticks in its eviction score, so a
+    /// multi-turn conversation outlives a burst of one-shot parks.
+    /// 0 degrades to pure page-LRU (the pre-admission-polish policy).
+    prefix_reuse_boost: u64,
+    /// Follow-up turns observed per conversation (the trace-derived
+    /// reuse signal feeding the admission score).
+    conv_reuses: HashMap<usize, u32>,
     proj: Vec<LayerProj>,
     staged: Vec<Option<PrefillState>>,
     slot_meta: Vec<Option<SlotMeta>>,
@@ -273,6 +286,10 @@ impl EngineBackend {
             .collect();
         let buckets = max_context.max(1).div_ceil(DEFAULT_BLOCK_TOKENS);
         let plan_capacity = buckets + buckets * (buckets + 1) / 2 + 8;
+        // Pre-spawn the worker pool for this thread count: steady-state
+        // serving (and every decode step) then performs zero thread
+        // spawns — the runtime's parked workers just wake per launch.
+        crate::exec::runtime::warm(&par);
         EngineBackend {
             n_slots,
             max_context,
@@ -295,6 +312,8 @@ impl EngineBackend {
             chunk_tokens: 0,
             prefix_caching: true,
             prefix_cache_pages: 256,
+            prefix_reuse_boost: 8,
+            conv_reuses: HashMap::new(),
             proj,
             staged: (0..n_slots).map(|_| None).collect(),
             slot_meta: (0..n_slots).map(|_| None).collect(),
@@ -345,6 +364,7 @@ impl EngineBackend {
                 self.kv.release_prefix(pl);
             }
         }
+        self.conv_reuses.clear();
     }
 
     /// Plan-cache hit/miss counters (surfaced in serving metrics).
@@ -538,14 +558,37 @@ impl EngineBackend {
         }
     }
 
+    /// Set the admission-score weight per observed conversation return
+    /// (0 = pure page-LRU). See [`Self::park_slot`].
+    pub fn set_prefix_reuse_boost(&mut self, boost: u64) {
+        self.prefix_reuse_boost = boost;
+    }
+
+    /// Eviction score of a parked prefix: its recency tick plus
+    /// [`Self::prefix_reuse_boost`] ticks per observed return of the
+    /// conversation (capped so one immortal conversation cannot pin
+    /// pages forever). Lowest score is evicted first; the tick
+    /// tie-break keeps victim choice deterministic.
+    fn admission_score(&self, p: &ParkedPrefix) -> (u64, u64) {
+        (p.tick + self.prefix_reuse_boost * u64::from(p.reuses.min(16)), p.tick)
+    }
+
     /// Park a finished slot's conversation prefix (whole pages covering
-    /// its prompt) instead of freeing it, evicting LRU conversations
-    /// beyond the page budget.
+    /// its prompt) instead of freeing it. Beyond the page budget, the
+    /// victim is the parked prefix with the lowest **recency-weighted
+    /// reuse score** ([`Self::admission_score`]) — not raw page-LRU, so
+    /// a conversation with demonstrated multi-turn reuse survives a
+    /// burst of never-returning one-shot parks (gated by the admission
+    /// test below: strictly higher adopt hit rate on a multi-turn
+    /// trace than LRU).
     fn park_slot(&mut self, slot: usize, meta: SlotMeta) {
         let layers = self.model.layers;
         let block = self.kv.block_tokens();
         let keep = (meta.prompt.len() / block) * block;
         if keep == 0 {
+            // Nothing parked: the reuse signal can never be read, so
+            // drop the conversation's entry (keeps the map bounded).
+            self.conv_reuses.remove(&meta.conversation);
             for l in 0..layers {
                 let s = self.seq(slot, l);
                 self.kv.release(s);
@@ -562,21 +605,23 @@ impl EngineBackend {
             tokens: meta.prompt[..keep].to_vec(),
             pages,
             tick: self.prefix_tick,
+            reuses: self.conv_reuses.get(&meta.conversation).copied().unwrap_or(0),
         };
         if let Some(old) = self.prefix_cache.insert(meta.conversation, parked) {
             for pl in &old.pages {
                 self.kv.release_prefix(pl);
             }
         }
-        // LRU eviction down to the page budget.
+        // Recency-weighted reuse eviction down to the page budget.
         while self.parked_pages() > self.prefix_cache_pages {
             let victim = self
                 .prefix_cache
                 .iter()
-                .min_by_key(|(_, p)| p.tick)
+                .min_by_key(|(_, p)| self.admission_score(p))
                 .map(|(c, _)| *c);
             let Some(conv) = victim else { break };
             let p = self.prefix_cache.remove(&conv).unwrap();
+            self.conv_reuses.remove(&conv);
             for pl in &p.pages {
                 self.kv.release_prefix(pl);
             }
@@ -595,6 +640,9 @@ impl Backend for EngineBackend {
 
     fn configure(&mut self, cfg: &SchedulerConfig) {
         self.par = cfg.parallelism;
+        // Thread-count changes re-warm the pool so the serving loop
+        // itself never spawns (gated in `bench serve_engine`).
+        crate::exec::runtime::warm(&self.par);
         self.set_chunk_tokens(cfg.prefill_chunk_tokens);
     }
 
@@ -634,6 +682,18 @@ impl Backend for EngineBackend {
         // previous occupant (whose freed pages may since have been
         // rewritten) must not be trusted.
         self.scratch[slot].valid_for = None;
+        // Admission signal: a conversation seen again is a follow-up
+        // turn — evidence its parked prefix earns eviction protection.
+        // Only tracked where the signal can ever be read (causal arms
+        // with prefix caching on); entries are pruned when the
+        // conversation leaves the prefix cache, so the map is bounded
+        // by parked entries + in-flight slots, not by trace length.
+        if self.prefix_caching && self.model.variant.causal_serving() {
+            self.conv_reuses
+                .entry(req.conversation)
+                .and_modify(|c| *c = c.saturating_add(1))
+                .or_insert(0);
+        }
         // Prefix adoption: graft the conversation's parked whole-page
         // prefix (verified token-for-token) and prefill only the rest.
         // At least one fresh row is kept so the first token has a query.
@@ -1450,6 +1510,79 @@ mod tests {
         assert_eq!(b.prefix_stats().entries, 0);
         let (alloc, free) = b.kv_pages();
         assert_eq!(alloc, free, "vanilla release must free everything");
+    }
+
+    #[test]
+    fn reuse_weighted_admission_beats_lru_on_a_multi_turn_trace() {
+        // A hot conversation returns every round while pairs of one-shot
+        // conversations churn a 2-page prefix budget. Pure page-LRU
+        // (boost 0) evicts the hot prefix on every churn burst; the
+        // recency-weighted reuse score keeps it parked, so every later
+        // turn adopts.
+        let run = |boost: u64| {
+            let mut b = backend(Parallelism::sequential());
+            b.prefix_cache_pages = 2;
+            b.set_prefix_reuse_boost(boost);
+            let hot = |turn: usize| Request {
+                conversation: 7,
+                turn,
+                ..req(0, 70)
+            };
+            let r0 = hot(0);
+            let t0 = prompt_tokens(&r0, b.model.vocab);
+            b.prefill(0, &r0, &t0).unwrap();
+            b.release(0); // parks the hot conversation's one full page
+            for round in 1..=4usize {
+                let r = hot(round);
+                let t = prompt_tokens(&r, b.model.vocab);
+                b.prefill(0, &r, &t).unwrap();
+                b.release(0);
+                // Two one-shot conversations churn the budget.
+                for k in 0..2 {
+                    let one = Request {
+                        conversation: 100 + round * 2 + k,
+                        ..req(1, 70)
+                    };
+                    let t1 = prompt_tokens(&one, b.model.vocab);
+                    b.prefill(1, &one, &t1).unwrap();
+                    b.release(1);
+                }
+            }
+            b.prefix_stats().hits
+        };
+        let lru_hits = run(0);
+        let scored_hits = run(8);
+        assert!(
+            scored_hits > lru_hits,
+            "reuse-weighted admission must beat LRU: {scored_hits} vs {lru_hits}"
+        );
+        assert_eq!(scored_hits, 4, "every returning turn must adopt under the score");
+    }
+
+    #[test]
+    fn steady_state_decode_spawns_no_threads() {
+        use crate::exec::runtime;
+        // `new()` warms the worker pool for the configured parallelism;
+        // after a prefill + a few warmup decodes, the decode path must
+        // never create an OS thread again (the acceptance gate — spawn
+        // attribution is per calling thread, so concurrent tests in
+        // this binary cannot perturb the counter).
+        let mut b = backend(Parallelism::with_threads(3));
+        let r = req(0, 40);
+        let toks = prompt_tokens(&r, b.model.vocab);
+        b.prefill(0, &r, &toks).unwrap();
+        for _ in 0..3 {
+            b.decode(&[0]).unwrap();
+        }
+        let before = runtime::spawns_on_this_thread();
+        for _ in 0..20 {
+            b.decode(&[0]).unwrap();
+        }
+        assert_eq!(
+            runtime::spawns_on_this_thread(),
+            before,
+            "steady-state decode must perform zero thread spawns"
+        );
     }
 
     #[test]

@@ -17,7 +17,13 @@
 //! drawing from this single pool.
 //!
 //! **Prefix reuse (Mooncake-style):** pages carry reference counts so a
-//! conversation's prompt prefix can outlive its request. [`Self::park`]
+//! conversation's prompt prefix can outlive its request. Which parked
+//! prefixes survive the page budget is the *caller's* admission policy —
+//! the engine backend evicts by a recency-weighted reuse score
+//! (conversation last-seen tick + observed follow-up turns), not raw
+//! page-LRU, so multi-turn conversations outlive one-shot churn; this
+//! module only provides the refcounted park/adopt/release mechanics.
+//! [`Self::park`]
 //! detaches a whole-page prefix from a finished sequence (the partial
 //! tail page — which mixes prompt and generated tokens — is freed, never
 //! shared); [`Self::adopt`] grafts a parked prefix into a fresh sequence

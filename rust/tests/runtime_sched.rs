@@ -1,0 +1,249 @@
+//! Property tests for the persistent topology-aware worker runtime.
+//!
+//! The contract (see `rust/src/exec/runtime.rs`): chunked claims, the
+//! per-shard single-block tail, and hierarchical (within-domain, then
+//! cross-domain) stealing together claim **every index exactly once**,
+//! and the index-ordered merge makes outputs — and, at the engine
+//! level, `Counters` — `to_bits`-identical to sequential at any thread
+//! count under any topology, including adversarial ones (domains with
+//! no workers, wildly skewed weights, more domains than items) and
+//! forced-steal schedules.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use flashlight::exec::runtime::{self, map_with_topology};
+use flashlight::exec::topology::Topology;
+use flashlight::exec::{execute_plan, execute_plan_par, Parallelism, Tensor};
+use flashlight::fusion::{plan, FusionMode, TileConfig};
+use flashlight::ir::Op;
+use flashlight::variants::{build, AttnShape, Variant};
+
+fn adversarial_topologies() -> Vec<Topology> {
+    vec![
+        Topology::flat(1),
+        Topology::flat(64),
+        Topology::from_domains(vec![1, 1], "env"),
+        Topology::from_domains(vec![1, 63], "env"),
+        Topology::from_domains(vec![1; 8], "env"),
+        Topology::from_domains(vec![3, 1, 5, 1], "env"),
+        // more domains than any test below has items or workers
+        Topology::from_domains(vec![1; 32], "env"),
+    ]
+}
+
+/// A float-valued work item whose result depends on accumulation order
+/// within the item (but not across items): any scheduling bug that
+/// reran or reordered an item would flip bits.
+fn work(i: usize) -> f32 {
+    let mut acc = 0.0f32;
+    for k in 0..(i % 7) + 3 {
+        acc = (i as f32 * 0.37 + k as f32).sin().mul_add(0.25, acc);
+    }
+    acc
+}
+
+/// Every index claimed exactly once + output bits identical to
+/// sequential, across 1/2/4/available threads, sizes that land chunked
+/// claims, mid-chunk clamps, and the single-block tail, and every
+/// adversarial topology.
+#[test]
+fn exactly_once_and_bit_identical_across_topologies() {
+    let avail = Parallelism::available().num_threads;
+    let mut threads = vec![1usize, 2, 4, avail];
+    threads.dedup();
+    // n around chunk/tail boundaries: workers*CLAIM_CHUNK = 16 at 4
+    // threads; cover below, at, straddling, and far above it.
+    for n in [1usize, 2, 7, 15, 16, 17, 31, 97, 256] {
+        let seq: Vec<f32> = (0..n).map(work).collect();
+        for topo in adversarial_topologies() {
+            for &t in &threads {
+                let claims: Arc<Vec<AtomicUsize>> =
+                    Arc::new((0..n).map(|_| AtomicUsize::new(0)).collect());
+                let c2 = claims.clone();
+                let got = map_with_topology(
+                    &topo,
+                    &Parallelism::with_threads(t),
+                    n,
+                    || (),
+                    move |_, i| {
+                        c2[i].fetch_add(1, Ordering::Relaxed);
+                        work(i)
+                    },
+                );
+                for (i, c) in claims.iter().enumerate() {
+                    assert_eq!(
+                        c.load(Ordering::Relaxed),
+                        1,
+                        "item {i} claimed != once (n={n} t={t} topo={topo:?})"
+                    );
+                }
+                assert_eq!(got.len(), n);
+                for (i, (a, b)) in seq.iter().zip(&got).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "item {i} bits differ (n={n} t={t} topo={topo:?})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Forced-steal schedule: whichever worker claims item 0 (shard 0's
+/// first chunk) blocks inside it until every item *outside that chunk*
+/// has run. The chunk holds at most `CLAIM_CHUNK = 4` items, so the
+/// other `n - 4` items must all be executed by the *other* worker —
+/// and 8 of them live in shard 0, reachable by the domain-1 worker
+/// only via the cross-domain steal leg. Without stealing, progress
+/// stalls at shard 1's 12 items and the bounded wait fails loudly.
+#[test]
+fn cross_domain_steal_drains_a_blocked_domains_shard() {
+    let n = 24usize;
+    let done = Arc::new(AtomicUsize::new(0));
+    let topo = Topology::from_domains(vec![1, 1], "env");
+    let d2 = done.clone();
+    let out = map_with_topology(
+        &topo,
+        &Parallelism::with_threads(2),
+        n,
+        || (),
+        move |_, i| {
+            if i == 0 {
+                // Items 1..4 may sit behind us in our own claimed
+                // chunk; everything else must flow through the other
+                // worker — which requires stealing across domains.
+                let mut spins = 0u64;
+                while d2.load(Ordering::Acquire) < (n - 4) {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    spins += 1;
+                    assert!(
+                        spins < 20_000,
+                        "hierarchical steal never drained the sibling shard"
+                    );
+                }
+            } else {
+                d2.fetch_add(1, Ordering::Release);
+            }
+            i as u64
+        },
+    );
+    assert_eq!(out, (0..n as u64).collect::<Vec<_>>());
+    assert_eq!(done.load(Ordering::Relaxed), n - 1);
+}
+
+fn synthetic_inputs(
+    g: &flashlight::ir::Graph,
+    seed: u64,
+) -> std::collections::HashMap<String, Tensor> {
+    let mut m = std::collections::HashMap::new();
+    for (i, &id) in g.inputs.iter().enumerate() {
+        let node = g.node(id);
+        let Op::Input { name } = &node.op else { unreachable!() };
+        let t = if name.starts_with("doc") {
+            let n: usize = node.shape.iter().product();
+            Tensor::from_vec(&node.shape, (0..n).map(|j| (j * 3 / n) as f32).collect())
+        } else {
+            Tensor::synthetic(&node.shape, seed + i as u64)
+        };
+        m.insert(name.clone(), t);
+    }
+    m
+}
+
+/// The engine-level gate: under every adversarial *process* topology,
+/// parallel execution stays bit-identical to sequential — outputs AND
+/// Counters (HBM/L2 attribution). Topology swaps are safe to run
+/// concurrently with other tests because topology only moves shard
+/// boundaries, never results.
+#[test]
+fn engine_parity_holds_under_adversarial_topologies() {
+    let shape = AttnShape {
+        batch: 2,
+        rows: 1,
+        heads_q: 4,
+        heads_kv: 2,
+        seq: 48, // not a block multiple: tail tiles everywhere
+        head_dim: 8,
+    };
+    let tile = TileConfig {
+        block_q: 8,
+        block_k: 16,
+        l2_capacity: 40 << 20,
+    };
+    for v in [Variant::Causal, Variant::Alibi, Variant::DiffAttn { lambda: 0.5 }] {
+        let g = build(v, &shape);
+        let inputs = synthetic_inputs(&g, 31);
+        let p = plan(&g, FusionMode::Flashlight);
+        let (seq_out, seq_c) = execute_plan(&g, &p, &inputs, tile);
+        for topo in adversarial_topologies() {
+            runtime::set_topology(topo.clone());
+            for threads in [2usize, 4, 7] {
+                let (par_out, par_c) = execute_plan_par(
+                    &g,
+                    &p,
+                    &inputs,
+                    tile,
+                    &Parallelism::with_threads(threads),
+                );
+                assert_eq!(
+                    seq_out, par_out,
+                    "{} outputs diverge (threads={threads} topo={topo:?})",
+                    v.name()
+                );
+                assert_eq!(
+                    seq_c, par_c,
+                    "{} counters diverge (threads={threads} topo={topo:?})",
+                    v.name()
+                );
+            }
+        }
+    }
+    // Leave the process on its real detected topology.
+    runtime::set_topology(Topology::detect());
+}
+
+/// Per-worker scratch persists across launches (the serving engine's
+/// warm-pool contract) — verified on the deterministic sequential path.
+#[test]
+fn caller_scratch_survives_launches() {
+    struct Warmth(Vec<f32>);
+    let a = runtime::map_with(
+        &Parallelism::sequential(),
+        3,
+        || Warmth(Vec::new()),
+        |s, i| {
+            s.0.push(i as f32);
+            s.0.len()
+        },
+    );
+    assert_eq!(a, vec![1, 2, 3]);
+    let b = runtime::map_with(
+        &Parallelism::sequential(),
+        1,
+        || Warmth(Vec::new()),
+        |s, _| s.0.len(),
+    );
+    assert_eq!(b, vec![3], "scratch must survive between launches");
+}
+
+/// Thread spawns are monotonic and warm() makes later same-width
+/// launches spawn-free (attributed per calling thread, so this is
+/// exact even when the harness runs tests concurrently).
+#[test]
+fn warmed_launches_never_spawn() {
+    runtime::warm(&Parallelism::with_threads(4));
+    let s0 = runtime::spawns_on_this_thread();
+    for round in 0..5 {
+        let out = runtime::map_with(
+            &Parallelism::with_threads(4),
+            64,
+            || (),
+            move |_, i| i + round,
+        );
+        assert_eq!(out[3], 3 + round);
+    }
+    assert_eq!(runtime::spawns_on_this_thread(), s0);
+    assert!(runtime::thread_spawns() >= 3);
+}

@@ -1,8 +1,10 @@
 #!/usr/bin/env bash
-# Perf-regression driver: build release, gate the test suite on BOTH
-# dispatch tiers (default SIMD and FLASHLIGHT_SIMD=0 scalar), run the
-# benches, and record two perf trajectories at the repo root so future
-# PRs have a baseline to compare against:
+# Perf-regression driver: build release, gate the test suite under
+# THREE configurations (default SIMD dispatch, FLASHLIGHT_SIMD=0 scalar
+# tier, and FLASHLIGHT_TOPO=flat single-domain scheduling — the last
+# fails loudly if any bit-identity gate diverges between topology
+# modes), run the benches, and record two perf trajectories at the repo
+# root so future PRs have a baseline to compare against:
 #   BENCH_parallel_engine.json  sequential vs parallel executor wall
 #                               clock per variant, plus the GEMM/softmax
 #                               microkernel table (GFLOP/s, scalar tier
@@ -42,6 +44,19 @@ cargo test -q
 echo
 echo "== cargo test -q (FLASHLIGHT_SIMD=0: scalar tier) =="
 FLASHLIGHT_SIMD=0 cargo test -q
+
+echo
+echo "== cargo test -q (FLASHLIGHT_TOPO=flat: single-domain scheduling) =="
+# Third gate configuration: the whole suite — including every
+# bit-identity gate — must hold with topology-aware sharding collapsed
+# to one flat domain. A failure here means scheduling topology leaked
+# into numerics, which the runtime's determinism contract forbids.
+if ! FLASHLIGHT_TOPO=flat cargo test -q; then
+  echo >&2
+  echo "FATAL: test suite diverges under FLASHLIGHT_TOPO=flat —" >&2
+  echo "       a bit-identity gate depends on the scheduling topology." >&2
+  exit 1
+fi
 
 if [ "$QUICK" -eq 0 ]; then
   echo
