@@ -15,10 +15,11 @@
 //! p50/p99 per (layers, chunked, threads) cell, plus plan-cache and
 //! prefix-cache stats.
 
-use crate::bench::harness::{json_f64, JsonArray};
+use crate::bench::harness::{json_f64, json_str, JsonArray};
 use crate::exec::Parallelism;
 use crate::serve::{
-    engine_trace, run_trace, summarize, Backend, EngineBackend, EngineModel, SchedulerConfig,
+    engine_trace, run_lifecycle, run_trace, summarize, Backend, ClockMode, EngineBackend,
+    EngineModel, FaultPlan, LifecycleConfig, Outcome, SchedulerConfig,
 };
 
 /// Default entry point (`flashlight bench serve_engine`).
@@ -151,6 +152,121 @@ pub fn run_with(out_path: &str, n_requests: usize) -> anyhow::Result<()> {
             ]);
         }
     }
+    // Lifecycle cell: the fault-tolerant runner under a fixed
+    // deterministic fault plan (pool pressure + a worker panic + a
+    // cancel + a deadline storm) on the round clock, at every thread
+    // count. Gates: exactly one terminal per request, no page leaks,
+    // survivors bit-identical both across thread counts and to the
+    // fault-free reference. Records terminal-state counts and goodput
+    // so the perf trajectory covers degraded operation too.
+    let plan = FaultPlan::parse("pressure@2:6x6;panic@3;cancel@5:1;storm@9:2")?;
+    println!(
+        "-- lifecycle under faults: plan `{plan}` --\n\
+         {:>7} {:>9} {:>8} {:>9} {:>8} {:>6} {:>11} {:>9}",
+        "threads", "completed", "rejected", "cancelled", "deadline", "failed", "preemptions", "goodput"
+    );
+    let mut healthy_ref: Option<Vec<(usize, Vec<u32>)>> = None;
+    let mut fault_ref: Option<Vec<(usize, Vec<u32>)>> = None;
+    for &t in &threads {
+        let par = Parallelism::with_threads(t);
+        let cfg = SchedulerConfig {
+            parallelism: par,
+            prefill_chunk_tokens: 64,
+            prefill_round_tokens: 256,
+            ..Default::default()
+        };
+        let lc = LifecycleConfig {
+            clock: ClockMode::Rounds,
+            ..Default::default()
+        };
+        // A tight page cap (trace worst case ~4 pages/request, 8
+        // slots) makes the pressure window and preemption ladder bind.
+        let mut hb = EngineBackend::new(EngineModel::tiny_deep(1), 8, 1024, par);
+        hb.set_page_cap(20);
+        let vocab = hb.model.vocab;
+        let healthy = run_lifecycle(&mut hb, &trace, cfg, lc, &FaultPlan::none(), vocab)?;
+        anyhow::ensure!(
+            healthy.summary.completed == trace.len(),
+            "fault-free lifecycle must complete all requests at {t} threads"
+        );
+        let mut b = EngineBackend::new(EngineModel::tiny_deep(1), 8, 1024, par);
+        b.set_page_cap(20);
+        let rep = run_lifecycle(&mut b, &trace, cfg, lc, &plan, vocab)?;
+        let sum = &rep.summary;
+        anyhow::ensure!(
+            sum.total() == trace.len(),
+            "lifecycle terminal accounting broken at {t} threads: {} of {}",
+            sum.total(),
+            trace.len()
+        );
+        let (alloc, free) = b.kv_pages();
+        let parked = b.prefix_stats().parked_pages;
+        anyhow::ensure!(
+            alloc == free + parked,
+            "lifecycle leaked pages at {t} threads: {alloc} allocated vs {free}+{parked}"
+        );
+        // Survivor streams: identical to the fault-free run and across
+        // thread counts (the round clock makes both exact).
+        let healthy_tokens: Vec<(usize, Vec<u32>)> = healthy
+            .outcomes
+            .into_iter()
+            .map(|o| (o.id, o.tokens))
+            .collect();
+        let survivors: Vec<(usize, Vec<u32>)> = rep
+            .outcomes
+            .iter()
+            .filter(|o| o.outcome == Outcome::Completed)
+            .map(|o| (o.id, o.tokens.clone()))
+            .collect();
+        for (id, toks) in &survivors {
+            let want = &healthy_tokens[*id].1;
+            anyhow::ensure!(
+                toks == want,
+                "survivor {id} diverged from the fault-free run at {t} threads"
+            );
+        }
+        match &healthy_ref {
+            None => healthy_ref = Some(healthy_tokens),
+            Some(base) => anyhow::ensure!(
+                base == &healthy_tokens,
+                "fault-free lifecycle diverged at {t} threads"
+            ),
+        }
+        match &fault_ref {
+            None => fault_ref = Some(survivors),
+            Some(base) => anyhow::ensure!(
+                base == &survivors,
+                "faulted lifecycle survivors diverged at {t} threads"
+            ),
+        }
+        println!(
+            "{:>7} {:>9} {:>8} {:>9} {:>8} {:>6} {:>11} {:>9.1}",
+            t,
+            sum.completed,
+            sum.rejected,
+            sum.cancelled,
+            sum.deadline_exceeded,
+            sum.failed,
+            sum.preemptions,
+            sum.goodput_tokens_per_s,
+        );
+        json.push_obj(&[
+            ("cell", json_str("lifecycle_chaos")),
+            ("fault_plan", json_str(&plan.to_string())),
+            ("threads", t.to_string()),
+            ("completed", sum.completed.to_string()),
+            ("rejected", sum.rejected.to_string()),
+            ("cancelled", sum.cancelled.to_string()),
+            ("deadline_exceeded", sum.deadline_exceeded.to_string()),
+            ("failed", sum.failed.to_string()),
+            ("preemptions", sum.preemptions.to_string()),
+            ("goodput_tokens_per_round", json_f64(sum.goodput_tokens_per_s)),
+            ("rounds", rep.stats.rounds.to_string()),
+            ("throttled_rounds", rep.stats.throttled_rounds.to_string()),
+            ("survivors_bit_identical", "true".to_string()),
+            ("requests", n_requests.to_string()),
+        ]);
+    }
     let p = json.finish()?;
     println!("wrote {}", p.display());
     Ok(())
@@ -175,5 +291,9 @@ mod tests {
         assert!(s.contains("\"layers\": 4"));
         assert!(s.contains("\"gather_reallocs\": 0"));
         assert!(s.contains("\"post_warmup_thread_spawns\": 0"));
+        // The lifecycle cell records degraded-mode accounting.
+        assert!(s.contains("\"cell\": \"lifecycle_chaos\""));
+        assert!(s.contains("\"goodput_tokens_per_round\""));
+        assert!(s.contains("\"survivors_bit_identical\": true"));
     }
 }

@@ -105,6 +105,92 @@ fn in_launch() -> bool {
     IN_LAUNCH.with(|c| c.get())
 }
 
+// ---------------------------------------------------------------------
+// Scoped panic attribution + deterministic fault injection
+// ---------------------------------------------------------------------
+
+/// A panic payload wrapped with the index of the work item that raised
+/// it. Every item executed by [`map_with_topology`] runs under its own
+/// `catch_unwind`; a panic is re-raised wrapped in this struct, so a
+/// caller catching the launch panic can map it back to the exact plan /
+/// request the item belonged to and fail *only* that unit of work. The
+/// wrapper travels as the panic payload itself — no global slot — so
+/// attribution is race-free even with concurrent launches from parallel
+/// test threads.
+pub struct AttributedPanic {
+    /// Index (into the launch's `0..n` item space) that panicked.
+    pub item: usize,
+    /// The original panic payload.
+    pub payload: Box<dyn Any + Send>,
+}
+
+/// Extract the attributed work-item index from a caught launch panic.
+pub fn panic_item(payload: &(dyn Any + Send)) -> Option<usize> {
+    payload.downcast_ref::<AttributedPanic>().map(|a| a.item)
+}
+
+/// Best-effort human-readable message from a panic payload, unwrapping
+/// the [`AttributedPanic`] layer if present.
+pub fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(a) = payload.downcast_ref::<AttributedPanic>() {
+        return panic_message(a.payload.as_ref());
+    }
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        return (*s).to_string();
+    }
+    if let Some(s) = payload.downcast_ref::<String>() {
+        return s.clone();
+    }
+    "non-string panic payload".to_string()
+}
+
+thread_local! {
+    /// Deterministic fault injection (serve/faults): when armed, the
+    /// next map launched from this thread panics while executing the
+    /// given work item (clamped to the launch size). Thread-local and
+    /// one-shot, so a chaos plan poisons exactly the launch it schedules
+    /// and can never leak into a concurrently running test.
+    static INJECT_PANIC: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// Arm the fault injector: the next launch issued from this thread
+/// panics at work item `item.min(n - 1)`.
+pub fn inject_panic_next_launch(item: usize) {
+    INJECT_PANIC.with(|c| c.set(Some(item)));
+}
+
+/// Disarm a pending injected fault (end-of-run hygiene so an unfired
+/// injection cannot poison an unrelated later launch on this thread).
+pub fn clear_injected_panic() {
+    INJECT_PANIC.with(|c| c.take());
+}
+
+/// Run one work item under attribution: any panic (organic or injected)
+/// is re-raised wrapped in [`AttributedPanic`] carrying the item index.
+fn run_attributed<S, T, F>(f: &F, s: &mut S, i: usize, poison: Option<usize>) -> T
+where
+    F: Fn(&mut S, usize) -> T,
+{
+    match catch_unwind(AssertUnwindSafe(|| {
+        if poison == Some(i) {
+            panic!("injected worker fault");
+        }
+        f(s, i)
+    })) {
+        Ok(v) => v,
+        Err(payload) => {
+            // Don't double-wrap (a nested map already attributed it to
+            // its own item space; the outer item is the useful one for
+            // the outer caller, so re-wrap with ours).
+            let payload = match payload.downcast::<AttributedPanic>() {
+                Ok(inner) => inner.payload,
+                Err(other) => other,
+            };
+            std::panic::resume_unwind(Box::new(AttributedPanic { item: i, payload }))
+        }
+    }
+}
+
 static LAUNCH_TAGS: AtomicU64 = AtomicU64::new(0);
 
 /// A process-unique launch tag. The tiled executor scopes its workers'
@@ -455,6 +541,10 @@ where
     if n == 0 {
         return Vec::new();
     }
+    // One-shot injected fault for this launch, clamped so it always
+    // lands on a real item regardless of launch size. Taken here (not
+    // per worker) so the injection is consumed exactly once.
+    let poison = INJECT_PANIC.with(|c| c.take()).map(|p| p.min(n - 1));
     // A map issued from inside a launch (nested use) runs sequentially
     // on this worker — the launch protocol is not reentrant.
     let workers = if in_launch() {
@@ -463,7 +553,9 @@ where
         par.num_threads.min(n).max(1)
     };
     if workers == 1 {
-        return with_scratch(&init, |s| (0..n).map(|i| f(s, i)).collect());
+        return with_scratch(&init, |s| {
+            (0..n).map(|i| run_attributed(&f, s, i, poison)).collect()
+        });
     }
 
     let per_domain = topo.assign_workers(workers);
@@ -480,7 +572,7 @@ where
     let task = |ordinal: usize| {
         with_scratch(&init, |s| {
             drive(&shards, home[ordinal], |i| {
-                let v = f(s, i);
+                let v = run_attributed(&f, s, i, poison);
                 // Each index is claimed exactly once; the slot is None.
                 unsafe { out_ptr.0.add(i).write(Some(v)) };
             });
@@ -588,6 +680,46 @@ mod tests {
         // Pool still serves launches afterwards.
         let ok = map_with(&Parallelism::with_threads(4), 16, || (), |_, i| i * 2);
         assert_eq!(ok, (0..16).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panics_carry_item_attribution_at_any_width() {
+        for threads in [1usize, 4] {
+            let res = std::panic::catch_unwind(|| {
+                map_with(&Parallelism::with_threads(threads), 32, || (), |_, i| {
+                    if i == 17 {
+                        panic!("boom at 17");
+                    }
+                    i
+                })
+            });
+            let payload = res.expect_err("panic must propagate");
+            assert_eq!(
+                panic_item(payload.as_ref()),
+                Some(17),
+                "threads={threads}"
+            );
+            assert_eq!(panic_message(payload.as_ref()), "boom at 17");
+        }
+    }
+
+    #[test]
+    fn injected_fault_fires_once_then_disarms() {
+        inject_panic_next_launch(1000); // clamped to n - 1
+        let res = std::panic::catch_unwind(|| {
+            map_with(&Parallelism::with_threads(2), 8, || (), |_, i| i)
+        });
+        let payload = res.expect_err("injected fault must fire");
+        assert_eq!(panic_item(payload.as_ref()), Some(7));
+        assert_eq!(panic_message(payload.as_ref()), "injected worker fault");
+        // One-shot: the next launch is clean.
+        let ok = map_with(&Parallelism::with_threads(2), 8, || (), |_, i| i);
+        assert_eq!(ok, (0..8).collect::<Vec<_>>());
+        // clear_injected_panic disarms a never-fired injection.
+        inject_panic_next_launch(0);
+        clear_injected_panic();
+        let ok = map_with(&Parallelism::with_threads(2), 4, || (), |_, i| i);
+        assert_eq!(ok, (0..4).collect::<Vec<_>>());
     }
 
     #[test]

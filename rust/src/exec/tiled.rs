@@ -910,6 +910,25 @@ pub struct PlanJob<'a> {
     pub consumers: Option<&'a [Vec<NodeId>]>,
 }
 
+/// Panic payload re-raised by [`execute_plans_batched`] when a worker
+/// panics inside a batched launch: `job` is the index into the `jobs`
+/// slice whose grid block raised the panic, when the runtime's per-item
+/// attribution could identify it (`None` for panics outside the tiled
+/// launch, e.g. a single-kernel group on the scheduler thread). The
+/// serving backend catches this to fail only the poisoned request and
+/// re-run the surviving jobs — the pool itself stays healthy.
+pub struct BatchPanic {
+    pub job: Option<usize>,
+    /// The original panic payload (attribution layers removed).
+    pub payload: Box<dyn std::any::Any + Send>,
+}
+
+/// Extract the job attribution from a panic caught around
+/// [`execute_plans_batched`].
+pub fn batch_panic_job(payload: &(dyn std::any::Any + Send)) -> Option<usize> {
+    payload.downcast_ref::<BatchPanic>().and_then(|b| b.job)
+}
+
 impl<'a> PlanJob<'a> {
     /// A job without precomputed metadata (one-shot execution paths).
     pub fn new(
@@ -1064,11 +1083,33 @@ pub fn execute_plans_batched(
                 total += r.n_blocks();
             }
             offsets.push(total);
-            let blocks: Vec<BlockOut> =
-                parallel_map_with(par, total, WorkerScratch::new, |ws, item| {
-                    let ri = offsets.partition_point(|&o| o <= item) - 1;
-                    runs[ri].run_block(item - offsets[ri], ws)
-                });
+            // A worker panic inside the launch arrives attributed to a
+            // work item; translate the item to the owning job and re-
+            // raise as a BatchPanic so the serving layer can fail just
+            // that request. State is safe to retry: every per-job
+            // mutation (values/counters/next_group) happens only after
+            // a launch fully succeeds.
+            let blocks: Vec<BlockOut> = match std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| {
+                    parallel_map_with(par, total, WorkerScratch::new, |ws, item| {
+                        let ri = offsets.partition_point(|&o| o <= item) - 1;
+                        runs[ri].run_block(item - offsets[ri], ws)
+                    })
+                }),
+            ) {
+                Ok(b) => b,
+                Err(payload) => {
+                    let job = crate::exec::runtime::panic_item(payload.as_ref())
+                        .map(|item| ready[offsets.partition_point(|&o| o <= item) - 1]);
+                    let payload = match payload
+                        .downcast::<crate::exec::runtime::AttributedPanic>()
+                    {
+                        Ok(a) => a.payload,
+                        Err(other) => other,
+                    };
+                    std::panic::resume_unwind(Box::new(BatchPanic { job, payload }));
+                }
+            };
             // Per-plan deterministic merge, in block order.
             let mut out = Vec::with_capacity(runs.len());
             let mut it = blocks.into_iter();

@@ -31,13 +31,27 @@ fn usage() -> ! {
          \x20     at 1/2/all threads with the bit-identity gate\n\
          \x20 serve [--requests N] [--backend sim|engine|pjrt] [--threads N]\n\
          \x20       [--layers L] [--chunk N] [--prefill-budget N]\n\
+         \x20       [--deadline-ms MS] [--queue-cap N]\n\
          \x20     run the serving coordinator on a Mooncake-like trace;\n\
          \x20     `engine` executes requests on the real tiled engine\n\
          \x20     (slot-paged KV, pre-warmed plan cache, chunked prefill\n\
-         \x20     batched with decode, L-layer model, prefix reuse);\n\
+         \x20     batched with decode, L-layer model, prefix reuse)\n\
+         \x20     under the fault-tolerant lifecycle (bounded ingress,\n\
+         \x20     deadlines/cancels, KV-pressure preemption; inject\n\
+         \x20     faults via FLASHLIGHT_FAULTS, see serve/README.md);\n\
          \x20     --chunk 0 disables chunking; --prefill-budget bounds\n\
          \x20     per-round prefill work in row-layer units (one prompt\n\
-         \x20     row through one layer, so tokens x L per full row)\n\
+         \x20     row through one layer, so tokens x L per full row);\n\
+         \x20     --deadline-ms applies a default completion SLO,\n\
+         \x20     --queue-cap bounds the ingress queue (0 = unbounded),\n\
+         \x20     --kv-pages caps the KV page pool (0 = uncapped)\n\
+         \x20 chaos [--requests N] [--threads N] [--layers L] [--chunk N]\n\
+         \x20       [--prefill-budget N] [--kv-pages N] [--plans SPEC[,SPEC..]]\n\
+         \x20     replay the engine trace under deterministic fault\n\
+         \x20     plans (pressure windows, worker panics, cancels,\n\
+         \x20     deadline storms) and fail loudly unless every request\n\
+         \x20     reaches exactly one terminal state, no KV pages leak,\n\
+         \x20     and survivors' tokens match the fault-free run\n\
          \x20 selftest\n\
          \x20     load + execute every AOT artifact and cross-check"
     );
@@ -187,8 +201,50 @@ fn main() -> anyhow::Result<()> {
                 round_tokens: flag(&args, "--prefill-budget")
                     .map(|s| s.parse().unwrap())
                     .unwrap_or(defaults.round_tokens),
+                deadline_ms: flag(&args, "--deadline-ms")
+                    .map(|s| s.parse().unwrap())
+                    .unwrap_or(defaults.deadline_ms),
+                queue_cap: flag(&args, "--queue-cap")
+                    .map(|s| s.parse().unwrap())
+                    .unwrap_or(defaults.queue_cap),
+                kv_page_cap: flag(&args, "--kv-pages")
+                    .map(|s| s.parse().unwrap())
+                    .unwrap_or(defaults.kv_page_cap),
             };
             flashlight::serve::cli_serve(n, &backend, Parallelism::with_threads(threads), opts)?;
+        }
+        "chaos" => {
+            let n: usize = flag(&args, "--requests")
+                .map(|s| s.parse().unwrap())
+                .unwrap_or(24);
+            let threads: usize = flag(&args, "--threads")
+                .map(|s| s.parse().unwrap())
+                .unwrap_or(2);
+            let defaults = flashlight::serve::EngineServeOpts::default();
+            let opts = flashlight::serve::EngineServeOpts {
+                layers: flag(&args, "--layers")
+                    .map(|s| s.parse().unwrap())
+                    .unwrap_or(defaults.layers),
+                chunk_tokens: flag(&args, "--chunk")
+                    .map(|s| s.parse().unwrap())
+                    .unwrap_or(defaults.chunk_tokens),
+                round_tokens: flag(&args, "--prefill-budget")
+                    .map(|s| s.parse().unwrap())
+                    .unwrap_or(defaults.round_tokens),
+                kv_page_cap: flag(&args, "--kv-pages")
+                    .map(|s| s.parse().unwrap())
+                    .unwrap_or(defaults.kv_page_cap),
+                ..defaults
+            };
+            // Plans are comma-separated; events inside one plan are
+            // semicolon-separated (the FLASHLIGHT_FAULTS spec syntax).
+            let plans: Vec<String> = flag(&args, "--plans")
+                .unwrap_or("seed=1,seed=2,pressure@2:6x8;panic@3;storm@6:2".into())
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            flashlight::serve::chaos(n, Parallelism::with_threads(threads), opts, &plans)?;
         }
         "selftest" => {
             flashlight::runtime::selftest("artifacts")?;

@@ -29,6 +29,24 @@ pub trait Backend {
     /// Virtual-time backends advance the clock by their returned times;
     /// wall-time backends (PJRT) also do, but arrivals are compressed.
     fn is_virtual_time(&self) -> bool;
+    /// Admission control: can this request *ever* complete on this
+    /// backend? Checked once per request before any resources are
+    /// committed; `Err` carries a precise human-readable reason. The
+    /// default enforces the context window; backends with bounded KV
+    /// pools also reject requests whose worst-case lifetime page need
+    /// exceeds the pool (the silent over-admission fix).
+    fn admit_check(&self, req: &Request) -> Result<(), String> {
+        if req.input_tokens + req.output_tokens > self.max_context() {
+            return Err(format!(
+                "request {}: {} prompt + {} output tokens exceeds context window {}",
+                req.id,
+                req.input_tokens,
+                req.output_tokens,
+                self.max_context()
+            ));
+        }
+        Ok(())
+    }
 
     // --- chunked prefill (vLLM-style), optional ---------------------
     //
@@ -180,8 +198,8 @@ pub fn run_trace(
                 break;
             }
             let req = waiting.pop_front().unwrap();
-            if req.input_tokens + req.output_tokens > backend.max_context() {
-                anyhow::bail!("request {} exceeds context window", req.id);
+            if let Err(why) = backend.admit_check(&req) {
+                anyhow::bail!("inadmissible request: {why}");
             }
             let tokens = prompt_tokens(&req, vocab);
             let (dt, _tok) = backend.prefill(slot, &req, &tokens)?;
@@ -291,8 +309,8 @@ fn run_trace_chunked(
                 continue;
             }
             let req = waiting.pop_front().unwrap();
-            if req.input_tokens + req.output_tokens > backend.max_context() {
-                anyhow::bail!("request {} exceeds context window", req.id);
+            if let Err(why) = backend.admit_check(&req) {
+                anyhow::bail!("inadmissible request: {why}");
             }
             let tokens = prompt_tokens(&req, vocab);
             backend.begin_prefill(si, &req, &tokens)?;

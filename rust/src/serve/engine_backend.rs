@@ -49,6 +49,7 @@
 //! chunks). Asserted by the tests below and gated in the serve bench.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -216,6 +217,26 @@ enum Owner {
     Dec(usize),
     /// (slot, rows in this chunk).
     Pre(usize, usize),
+}
+
+/// Outcome of one fault-aware mixed round ([`EngineBackend::step`]).
+/// Unlike the legacy [`Backend::mixed_step`] tuple, a poisoned job
+/// (worker panic attributed to one request) does not abort the round:
+/// the victim lands in `failed`, everyone else's tokens are emitted
+/// exactly as in a healthy round.
+#[derive(Debug, Default)]
+pub struct StepReport {
+    pub elapsed_s: f64,
+    /// Prefills that completed this round: (slot, first token), in
+    /// completion order.
+    pub finished: Vec<(usize, u32)>,
+    /// One decode token per *surviving* active slot: (slot, token), in
+    /// the caller's `active` order.
+    pub tokens: Vec<(usize, u32)>,
+    /// Slots whose request died mid-round (a worker panic poisoned
+    /// their job). The engine state for the slot is already detached;
+    /// the scheduler must `release` it and fail the request.
+    pub failed: Vec<(usize, String)>,
 }
 
 pub struct EngineBackend {
@@ -511,7 +532,7 @@ impl EngineBackend {
         bucket: usize,
         len: usize,
         q_off: usize,
-    ) -> HashMap<String, Tensor> {
+    ) -> anyhow::Result<HashMap<String, Tensor>> {
         let (hkv, d) = (self.model.heads_kv, self.model.head_dim);
         let seq = self.seq(slot, layer);
         let key = (seq, self.kv.len(seq), bucket);
@@ -519,7 +540,14 @@ impl EngineBackend {
         let mut vbuf = std::mem::take(&mut self.scratch[slot].v);
         if self.scratch[slot].valid_for != Some(key) {
             let caps = (kbuf.capacity(), vbuf.capacity());
-            self.kv.gather(seq, bucket, &mut kbuf, &mut vbuf);
+            if let Err(e) = self.kv.gather(seq, bucket, &mut kbuf, &mut vbuf) {
+                // Hand the buffers home so even this (bucketing-bug)
+                // path leaks nothing.
+                self.scratch[slot].k = kbuf;
+                self.scratch[slot].v = vbuf;
+                self.scratch[slot].valid_for = None;
+                return Err(e.into());
+            }
             if kbuf.capacity() != caps.0 || vbuf.capacity() != caps.1 {
                 self.gather_reallocs += 1;
             }
@@ -544,7 +572,7 @@ impl EngineBackend {
             "q_off".to_string(),
             Tensor::from_vec(&[1, 1, 1, 1, 1], vec![q_off as f32]),
         );
-        m
+        Ok(m)
     }
 
     /// Take the K/V buffers back out of a finished job's inputs so the
@@ -620,153 +648,136 @@ impl EngineBackend {
                 .min_by_key(|(_, p)| self.admission_score(p))
                 .map(|(c, _)| *c);
             let Some(conv) = victim else { break };
-            let p = self.prefix_cache.remove(&conv).unwrap();
+            let p = self
+                .prefix_cache
+                .remove(&conv)
+                .expect("victim key was just read from this map");
             self.conv_reuses.remove(&conv);
             for pl in &p.pages {
                 self.kv.release_prefix(pl);
             }
         }
     }
-}
 
-impl Backend for EngineBackend {
-    fn n_slots(&self) -> usize {
-        self.n_slots
+    // --- KV capacity surface (the lifecycle scheduler's levers) ------
+
+    /// Cap the KV page pool at `cap` pages (fresh allocations beyond it
+    /// fail with [`super::kv::KvError::PoolExhausted`]).
+    pub fn set_page_cap(&mut self, cap: usize) {
+        self.kv.set_page_cap(cap);
     }
 
-    fn max_context(&self) -> usize {
-        self.max_context
+    /// The configured KV page cap (`usize::MAX` = unbounded).
+    pub fn page_cap(&self) -> usize {
+        self.kv.page_cap()
     }
 
-    fn configure(&mut self, cfg: &SchedulerConfig) {
-        self.par = cfg.parallelism;
-        // Thread-count changes re-warm the pool so the serving loop
-        // itself never spawns (gated in `bench serve_engine`).
-        crate::exec::runtime::warm(&self.par);
-        self.set_chunk_tokens(cfg.prefill_chunk_tokens);
+    /// Withhold `pages` pages from availability (fault injection: page
+    /// pressure without touching real occupancy).
+    pub fn set_kv_pressure(&mut self, pages: usize) {
+        self.kv.set_pressure(pages);
     }
 
-    fn supports_chunked_prefill(&self) -> bool {
-        true
+    /// KV pages a fresh allocation could still claim right now.
+    pub fn available_kv_pages(&self) -> usize {
+        self.kv.available_pages()
     }
 
-    fn begin_prefill(
-        &mut self,
-        slot: usize,
-        req: &Request,
-        tokens: &[u32],
-    ) -> anyhow::Result<()> {
-        let layers = self.model.layers;
-        anyhow::ensure!(
-            self.staged[slot].is_none(),
-            "prefill into a slot {slot} already mid-prefill"
-        );
-        for l in 0..layers {
-            anyhow::ensure!(
-                self.kv.is_empty(self.seq(slot, l)),
-                "prefill into a non-empty slot {slot}"
-            );
-        }
-        anyhow::ensure!(
-            tokens.len() <= self.max_context,
-            "prompt of {} tokens exceeds context window {}",
-            tokens.len(),
-            self.max_context
-        );
-        let prompt: Vec<u32> = if tokens.is_empty() {
-            vec![0]
+    /// Exact fresh pages one decode round of `slot` takes: each layer
+    /// appends one token, needing a page only when the sequence sits on
+    /// a page boundary (all of a slot's layer sequences advance in
+    /// lockstep, so layer 0's length speaks for all).
+    pub fn decode_pages_needed(&self, slot: usize) -> usize {
+        let pos = self.kv.len(self.seq(slot, 0));
+        if pos % self.kv.block_tokens() == 0 {
+            self.model.layers
         } else {
-            tokens.to_vec()
-        };
-        // The slot's cache identity changes: stale gather scratch from a
-        // previous occupant (whose freed pages may since have been
-        // rewritten) must not be trusted.
-        self.scratch[slot].valid_for = None;
-        // Admission signal: a conversation seen again is a follow-up
-        // turn — evidence its parked prefix earns eviction protection.
-        // Only tracked where the signal can ever be read (causal arms
-        // with prefix caching on); entries are pruned when the
-        // conversation leaves the prefix cache, so the map is bounded
-        // by parked entries + in-flight slots, not by trace length.
-        if self.prefix_caching && self.model.variant.causal_serving() {
-            self.conv_reuses
-                .entry(req.conversation)
-                .and_modify(|c| *c = c.saturating_add(1))
-                .or_insert(0);
+            0
         }
-        // Prefix adoption: graft the conversation's parked whole-page
-        // prefix (verified token-for-token) and prefill only the rest.
-        // At least one fresh row is kept so the first token has a query.
-        // Only causal serving arms park/adopt (see Variant::causal_serving).
-        let block = self.kv.block_tokens();
-        let mut base = 0usize;
-        if self.prefix_caching && self.model.variant.causal_serving() {
-            if let Some(p) = self.prefix_cache.get_mut(&req.conversation) {
-                let adopt_pages = p.pages[0].len().min((prompt.len() - 1) / block);
-                let adopt = adopt_pages * block;
-                if adopt_pages > 0 && p.tokens[..adopt] == prompt[..adopt] {
-                    self.prefix_tick += 1;
-                    p.tick = self.prefix_tick;
-                    let page_lists: Vec<Vec<usize>> = p
-                        .pages
-                        .iter()
-                        .map(|pl| pl[..adopt_pages].to_vec())
-                        .collect();
-                    for (l, pl) in page_lists.iter().enumerate() {
-                        let s = self.seq(slot, l);
-                        self.kv.adopt(s, pl);
-                    }
-                    base = adopt;
-                    self.prefix_hits += 1;
-                    self.prefix_tokens_reused += adopt as u64;
-                }
-            }
-        }
-        // Enter layer 0: its K/V come straight from the token embeddings.
-        let n_new = prompt.len() - base;
-        let stride = self.kv.token_stride();
-        let seq0 = self.seq(slot, 0);
-        for r in 0..n_new {
-            let pos = base + r;
-            let k = embed(K_SALT, prompt[pos], pos, stride);
-            let v = embed(V_SALT, prompt[pos], pos, stride);
-            self.kv.append(seq0, &k, &v);
-        }
-        let w = self.model.heads_q * self.model.head_dim;
-        self.staged[slot] = Some(PrefillState {
-            conversation: req.conversation,
-            prompt,
-            base,
-            layer: 0,
-            cursor: 0,
-            x: vec![0.0; n_new * w],
-            x_next: vec![0.0; n_new * w],
-        });
-        self.slot_meta[slot] = None;
-        Ok(())
     }
 
-    fn staged_rows(&self, slot: usize) -> usize {
+    /// Conservative bound on fresh pages continuing `slot`'s staged
+    /// prefill can take in one mixed round. A round may cross several
+    /// layer boundaries, and each crossing appends every new row to
+    /// that layer's sequence — so the bound sums the not-yet-entered
+    /// layers' append needs (the current layer's rows were appended at
+    /// its entry). 0 when nothing is staged.
+    pub fn prefill_pages_bound(&self, slot: usize) -> usize {
         match &self.staged[slot] {
             Some(st) => {
                 let n_new = st.prompt.len() - st.base;
-                (self.model.layers - st.layer) * n_new - st.cursor
+                (st.layer + 1..self.model.layers)
+                    .map(|l| self.kv.pages_for_append(self.seq(slot, l), n_new))
+                    .sum()
             }
             None => 0,
         }
     }
 
-    /// One mixed round. Runs as a sequence of *sub-rounds*: in each,
-    /// every active decode slot contributes its current-layer job and
-    /// every budgeted prefill slot contributes its next chunk, all
-    /// executed as one batched launch over the shared worker pool.
-    /// Decode slots advance one layer per sub-round; prefill slots one
-    /// chunk (crossing layer boundaries as their cursor wraps).
-    fn mixed_step(
+    /// Fresh pages staging a cold `input_tokens`-token prompt needs at
+    /// layer 0 (prefix adoption can only lower it). The scheduler
+    /// checks this before `begin_prefill`.
+    pub fn admit_pages_needed(&self, input_tokens: usize) -> usize {
+        input_tokens.max(1).div_ceil(self.kv.block_tokens())
+    }
+
+    /// Worst-case pages a request pins over its whole lifetime: every
+    /// layer holds prompt + generated tokens, minus the final sampled
+    /// token (sampled but never appended). Admission control rejects
+    /// requests whose bound exceeds the page cap — they could *never*
+    /// complete, however empty the pool.
+    pub fn lifetime_pages_bound(&self, input_tokens: usize, output_tokens: usize) -> usize {
+        let final_len = input_tokens.max(1) + output_tokens.max(1) - 1;
+        self.model.layers * final_len.div_ceil(self.kv.block_tokens())
+    }
+
+    /// Degradation-ladder rung 1: evict parked conversation prefixes
+    /// (lowest admission score first — the same policy park uses) until
+    /// `pages` are available or the cache is empty. Returns the
+    /// resulting availability.
+    pub fn evict_prefixes_for(&mut self, pages: usize) -> usize {
+        while self.kv.available_pages() < pages && !self.prefix_cache.is_empty() {
+            let victim = self
+                .prefix_cache
+                .iter()
+                .min_by_key(|(_, p)| self.admission_score(p))
+                .map(|(c, _)| *c);
+            let Some(conv) = victim else { break };
+            let p = self
+                .prefix_cache
+                .remove(&conv)
+                .expect("victim key was just read from this map");
+            self.conv_reuses.remove(&conv);
+            for pl in &p.pages {
+                self.kv.release_prefix(pl);
+            }
+        }
+        self.kv.available_pages()
+    }
+
+    /// One fault-aware mixed round: the engine's real scheduling unit.
+    /// Numerics and emission order are identical to the legacy
+    /// [`Backend::mixed_step`] (which now delegates here), plus two
+    /// robustness layers:
+    ///
+    /// * **KV preflight** — every page the round's decode entries and
+    ///   staged prefill layer-crossings could claim is checked against
+    ///   availability *before any append*, so capacity failure is a
+    ///   clean error with nothing mutated (the lifecycle preempts or
+    ///   throttles instead of corrupting slots).
+    /// * **Poisoned-job isolation** — a worker panic attributed to one
+    ///   job ([`crate::exec::BatchPanic`]) fails only that job's slot:
+    ///   the victim is detached and reported in [`StepReport::failed`],
+    ///   the surviving jobs re-launch, and their tokens come out
+    ///   bit-identical to a healthy round (per-slot state is folded
+    ///   only after a launch fully succeeds, and kernels are
+    ///   deterministic, so re-execution reproduces the same bits).
+    ///   A failed slot must then be `release`d by the caller.
+    pub fn step(
         &mut self,
         prefill: &[(usize, usize)],
         active: &[usize],
-    ) -> anyhow::Result<(f64, Vec<(usize, u32)>, Vec<u32>)> {
+    ) -> anyhow::Result<StepReport> {
         let t0 = Instant::now();
         let layers = self.model.layers;
         let (hq, hkv, d) = (
@@ -777,6 +788,30 @@ impl Backend for EngineBackend {
         let w = hq * d;
         let block = self.kv.block_tokens();
         let stride = self.kv.token_stride();
+        let par = self.par;
+
+        // --- KV preflight: fail before any append, not mid-round.
+        let mut need = 0usize;
+        for &slot in active {
+            anyhow::ensure!(
+                self.staged[slot].is_none(),
+                "decoding a slot {slot} still mid-prefill"
+            );
+            let seq0 = self.seq(slot, 0);
+            anyhow::ensure!(!self.kv.is_empty(seq0), "decoding an unprefilled slot {slot}");
+            anyhow::ensure!(self.kv.len(seq0) < self.max_context, "slot {slot} exceeds context");
+            need += self.decode_pages_needed(slot);
+        }
+        for &(slot, budget) in prefill {
+            if budget > 0 {
+                need += self.prefill_pages_bound(slot);
+            }
+        }
+        let avail = self.kv.available_pages();
+        anyhow::ensure!(
+            need <= avail,
+            "KV preflight: round needs up to {need} fresh pages, {avail} available"
+        );
 
         // Decode init: append the pending token's layer-0 K/V.
         struct DecState {
@@ -785,38 +820,39 @@ impl Backend for EngineBackend {
             pos: usize,
             x: Vec<f32>,
             layer: usize,
+            /// Poisoned by a worker panic this round: no further jobs,
+            /// no token. The slot awaits `release`.
+            failed: bool,
         }
         let mut dec: Vec<DecState> = Vec::with_capacity(active.len());
         for &slot in active {
-            anyhow::ensure!(
-                self.staged[slot].is_none(),
-                "decoding a slot {slot} still mid-prefill"
-            );
             let seq0 = self.seq(slot, 0);
-            anyhow::ensure!(!self.kv.is_empty(seq0), "decoding an unprefilled slot {slot}");
             let tok = self.last_token[slot];
             let pos = self.kv.len(seq0);
-            anyhow::ensure!(pos < self.max_context, "slot {slot} exceeds context");
             let k = embed(K_SALT, tok, pos, stride);
             let v = embed(V_SALT, tok, pos, stride);
-            self.kv.append(seq0, &k, &v);
+            // Preflighted above — a failure here is an accounting bug,
+            // surfaced as an error rather than a panic.
+            self.kv.append(seq0, &k, &v)?;
             dec.push(DecState {
                 slot,
                 tok,
                 pos,
                 x: Vec::new(),
                 layer: 0,
+                failed: false,
             });
         }
 
         let mut allow: Vec<(usize, usize)> = prefill.to_vec();
         let mut completions: Vec<(usize, u32)> = Vec::new();
+        let mut failed: Vec<(usize, String)> = Vec::new();
 
         loop {
             // --- build this sub-round's jobs (decode first, then chunks)
             let mut built: Vec<(Owner, Arc<CachedPlan>, HashMap<String, Tensor>)> = Vec::new();
             for di in 0..dec.len() {
-                if dec[di].layer >= layers {
+                if dec[di].failed || dec[di].layer >= layers {
                     continue;
                 }
                 let (slot, layer, pos) = (dec[di].slot, dec[di].layer, dec[di].pos);
@@ -829,7 +865,7 @@ impl Backend for EngineBackend {
                 let bucket = bucket_len(len, block);
                 let entry = self.plan_entry("decode", 1, bucket);
                 let q = Tensor::from_vec(&[1, hkv, hq / hkv, 1, d], q_vec);
-                let inputs = self.attn_inputs(slot, layer, q, bucket, len, len - 1);
+                let inputs = self.attn_inputs(slot, layer, q, bucket, len, len - 1)?;
                 built.push((Owner::Dec(di), entry, inputs));
             }
             for ai in 0..allow.len() {
@@ -878,22 +914,63 @@ impl Backend for EngineBackend {
                 let entry = self.plan_entry("prefill", qb, kvb);
                 let q = Tensor::from_vec(&[1, hkv, hq / hkv, qb, d], qdata);
                 let q_off = st.base + st.cursor;
-                let inputs = self.attn_inputs(slot, st.layer, q, kvb, total, q_off);
+                let layer = st.layer;
                 allow[ai].1 = rem - c;
+                // Park the state *before* the fallible gather so an
+                // error cannot orphan a mid-prefill slot.
                 self.staged[slot] = Some(st);
+                let inputs = self.attn_inputs(slot, layer, q, kvb, total, q_off)?;
                 built.push((Owner::Pre(slot, c), entry, inputs));
             }
             if built.is_empty() {
                 break;
             }
 
-            // --- one batched launch over the shared worker pool
-            let results = {
-                let jobs: Vec<PlanJob> = built
-                    .iter()
-                    .map(|(_, e, inp)| PlanJob::from_cached(e.as_ref(), inp))
-                    .collect();
-                execute_plans_batched(&jobs, &self.par)
+            // --- one batched launch over the shared worker pool. A
+            //     panic attributed to a single job detaches only that
+            //     job's slot; the remaining jobs re-launch from their
+            //     (immutable) inputs. Per-slot folds happen strictly
+            //     after a fully successful launch, so a retried round
+            //     reproduces identical bits for the survivors.
+            let results = loop {
+                let exec = {
+                    let jobs: Vec<PlanJob> = built
+                        .iter()
+                        .map(|(_, e, inp)| PlanJob::from_cached(e.as_ref(), inp))
+                        .collect();
+                    catch_unwind(AssertUnwindSafe(|| execute_plans_batched(&jobs, &par)))
+                };
+                let payload = match exec {
+                    Ok(r) => break r,
+                    Err(p) => p,
+                };
+                let Some(j) = crate::exec::batch_panic_job(payload.as_ref()) else {
+                    anyhow::bail!(
+                        "engine round panicked without job attribution: {}",
+                        crate::exec::runtime::panic_message(payload.as_ref())
+                    );
+                };
+                let msg = payload
+                    .downcast_ref::<crate::exec::BatchPanic>()
+                    .map(|b| crate::exec::runtime::panic_message(b.payload.as_ref()))
+                    .unwrap_or_else(|| crate::exec::runtime::panic_message(payload.as_ref()));
+                let (owner, _entry, mut inputs) = built.remove(j);
+                let (slot, what) = match owner {
+                    Owner::Dec(di) => {
+                        dec[di].failed = true;
+                        (dec[di].slot, "decode")
+                    }
+                    Owner::Pre(slot, _) => {
+                        self.staged[slot] = None;
+                        (slot, "prefill")
+                    }
+                };
+                self.reclaim_scratch(slot, &mut inputs);
+                self.scratch[slot].valid_for = None;
+                failed.push((
+                    slot,
+                    format!("worker panic poisoned {what} for slot {slot}: {msg}"),
+                ));
             };
 
             // --- fold results back into the per-slot state machines
@@ -918,7 +995,7 @@ impl Backend for EngineBackend {
                             let k = self.proj_k(l, &dec[di].x);
                             let v = self.proj_v(l, &dec[di].x);
                             let s = self.seq(dec[di].slot, l);
-                            self.kv.append(s, &k, &v);
+                            self.kv.append(s, &k, &v)?;
                         }
                     }
                     Owner::Pre(slot, c) => {
@@ -963,12 +1040,13 @@ impl Backend for EngineBackend {
                             } else {
                                 // Enter the next layer: append its K/V
                                 // for every new row from the stream.
+                                // Covered by the preflight bound above.
                                 for r in 0..n_new {
                                     let xr = &st.x[r * w..(r + 1) * w];
                                     let k = self.proj_k(st.layer, xr);
                                     let v = self.proj_v(st.layer, xr);
                                     let s = self.seq(slot, st.layer);
-                                    self.kv.append(s, &k, &v);
+                                    self.kv.append(s, &k, &v)?;
                                 }
                                 self.staged[slot] = Some(st);
                             }
@@ -982,22 +1060,221 @@ impl Backend for EngineBackend {
 
         // Emit tokens: prefill completions first (in completion order —
         // the sub-round each finished in, then job order within it),
-        // then the decode batch (active order). Both orders depend only
-        // on the scheduler's call sequence, never on thread timing, so
-        // the bit-identity gate holds.
-        let mut toks = Vec::with_capacity(dec.len());
+        // then the decode batch (active order, survivors only). Both
+        // orders depend only on the scheduler's call sequence, never on
+        // thread timing, so the bit-identity gate holds.
+        let mut tokens: Vec<(usize, u32)> = Vec::with_capacity(dec.len());
         for ds in &dec {
+            if ds.failed {
+                continue;
+            }
             let tok = sample_token(&ds.x, self.model.vocab);
             self.last_token[ds.slot] = tok;
-            toks.push(tok);
+            tokens.push((ds.slot, tok));
         }
         for &(_, tok) in &completions {
             self.log_token(tok);
         }
-        for &tok in &toks {
+        for &(_, tok) in &tokens {
             self.log_token(tok);
         }
-        Ok((t0.elapsed().as_secs_f64(), completions, toks))
+        Ok(StepReport {
+            elapsed_s: t0.elapsed().as_secs_f64(),
+            finished: completions,
+            tokens,
+            failed,
+        })
+    }
+}
+
+impl Backend for EngineBackend {
+    fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    fn max_context(&self) -> usize {
+        self.max_context
+    }
+
+    fn configure(&mut self, cfg: &SchedulerConfig) {
+        self.par = cfg.parallelism;
+        // Thread-count changes re-warm the pool so the serving loop
+        // itself never spawns (gated in `bench serve_engine`).
+        crate::exec::runtime::warm(&self.par);
+        self.set_chunk_tokens(cfg.prefill_chunk_tokens);
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
+    }
+
+    /// Admission control: beyond the context-window check, reject a
+    /// request whose worst-case lifetime page need exceeds the page
+    /// cap — it could *never* complete, however empty the pool, so
+    /// failing it at admit time is strictly better than deadlocking
+    /// the batch on it later (the silent over-admission fix).
+    fn admit_check(&self, req: &Request) -> Result<(), String> {
+        let total = req.input_tokens.max(1) + req.output_tokens.max(1);
+        if total > self.max_context {
+            return Err(format!(
+                "request {}: {} prompt + {} output tokens exceeds context window {}",
+                req.id, req.input_tokens, req.output_tokens, self.max_context
+            ));
+        }
+        let need = self.lifetime_pages_bound(req.input_tokens, req.output_tokens);
+        if need > self.kv.page_cap() {
+            return Err(format!(
+                "request {}: needs up to {} KV pages over its lifetime, page cap is {} — can never fit",
+                req.id, need, self.kv.page_cap()
+            ));
+        }
+        Ok(())
+    }
+
+    fn begin_prefill(
+        &mut self,
+        slot: usize,
+        req: &Request,
+        tokens: &[u32],
+    ) -> anyhow::Result<()> {
+        let layers = self.model.layers;
+        anyhow::ensure!(
+            self.staged[slot].is_none(),
+            "prefill into a slot {slot} already mid-prefill"
+        );
+        for l in 0..layers {
+            anyhow::ensure!(
+                self.kv.is_empty(self.seq(slot, l)),
+                "prefill into a non-empty slot {slot}"
+            );
+        }
+        anyhow::ensure!(
+            tokens.len() <= self.max_context,
+            "prompt of {} tokens exceeds context window {}",
+            tokens.len(),
+            self.max_context
+        );
+        let prompt: Vec<u32> = if tokens.is_empty() {
+            vec![0]
+        } else {
+            tokens.to_vec()
+        };
+        // Capacity preflight, checked *before* adoption so a rejection
+        // leaves no state to undo. Worst case every layer-0 prompt page
+        // is fresh (adoption can only lower the need); deeper layers
+        // are covered round by round in `step`'s preflight. Defensive —
+        // the lifecycle scheduler checks `admit_pages_needed` first.
+        let avail = self.kv.available_pages();
+        let need = prompt.len().div_ceil(self.kv.block_tokens());
+        anyhow::ensure!(
+            need <= avail,
+            "admission preflight: prompt needs {need} fresh KV pages for layer 0, {avail} available"
+        );
+        // The slot's cache identity changes: stale gather scratch from a
+        // previous occupant (whose freed pages may since have been
+        // rewritten) must not be trusted.
+        self.scratch[slot].valid_for = None;
+        // Admission signal: a conversation seen again is a follow-up
+        // turn — evidence its parked prefix earns eviction protection.
+        // Only tracked where the signal can ever be read (causal arms
+        // with prefix caching on); entries are pruned when the
+        // conversation leaves the prefix cache, so the map is bounded
+        // by parked entries + in-flight slots, not by trace length.
+        if self.prefix_caching && self.model.variant.causal_serving() {
+            self.conv_reuses
+                .entry(req.conversation)
+                .and_modify(|c| *c = c.saturating_add(1))
+                .or_insert(0);
+        }
+        // Prefix adoption: graft the conversation's parked whole-page
+        // prefix (verified token-for-token) and prefill only the rest.
+        // At least one fresh row is kept so the first token has a query.
+        // Only causal serving arms park/adopt (see Variant::causal_serving).
+        let block = self.kv.block_tokens();
+        let mut base = 0usize;
+        if self.prefix_caching && self.model.variant.causal_serving() {
+            if let Some(p) = self.prefix_cache.get_mut(&req.conversation) {
+                let adopt_pages = p.pages[0].len().min((prompt.len() - 1) / block);
+                let adopt = adopt_pages * block;
+                if adopt_pages > 0 && p.tokens[..adopt] == prompt[..adopt] {
+                    self.prefix_tick += 1;
+                    p.tick = self.prefix_tick;
+                    let page_lists: Vec<Vec<usize>> = p
+                        .pages
+                        .iter()
+                        .map(|pl| pl[..adopt_pages].to_vec())
+                        .collect();
+                    for (l, pl) in page_lists.iter().enumerate() {
+                        let s = self.seq(slot, l);
+                        // Infallible by construction — the slot's seqs
+                        // were verified empty above and parked pages
+                        // always hold a live refcount — but a violation
+                        // surfaces as an error, not a panic.
+                        self.kv.adopt(s, pl)?;
+                    }
+                    base = adopt;
+                    self.prefix_hits += 1;
+                    self.prefix_tokens_reused += adopt as u64;
+                }
+            }
+        }
+        // Enter layer 0: its K/V come straight from the token embeddings.
+        let n_new = prompt.len() - base;
+        let stride = self.kv.token_stride();
+        let seq0 = self.seq(slot, 0);
+        for r in 0..n_new {
+            let pos = base + r;
+            let k = embed(K_SALT, prompt[pos], pos, stride);
+            let v = embed(V_SALT, prompt[pos], pos, stride);
+            // Cannot exhaust: the preflight above reserved `need`
+            // pages, and layer-0 staging consumes at most that many.
+            self.kv.append(seq0, &k, &v)?;
+        }
+        let w = self.model.heads_q * self.model.head_dim;
+        self.staged[slot] = Some(PrefillState {
+            conversation: req.conversation,
+            prompt,
+            base,
+            layer: 0,
+            cursor: 0,
+            x: vec![0.0; n_new * w],
+            x_next: vec![0.0; n_new * w],
+        });
+        self.slot_meta[slot] = None;
+        Ok(())
+    }
+
+    fn staged_rows(&self, slot: usize) -> usize {
+        match &self.staged[slot] {
+            Some(st) => {
+                let n_new = st.prompt.len() - st.base;
+                (self.model.layers - st.layer) * n_new - st.cursor
+            }
+            None => 0,
+        }
+    }
+
+    /// One mixed round under the legacy strict contract: delegates to
+    /// the fault-aware [`EngineBackend::step`] and turns any poisoned
+    /// slot into a hard error. Fault tolerance is the lifecycle
+    /// runner's job — a caller that cannot handle partial failure must
+    /// not silently lose a request.
+    fn mixed_step(
+        &mut self,
+        prefill: &[(usize, usize)],
+        active: &[usize],
+    ) -> anyhow::Result<(f64, Vec<(usize, u32)>, Vec<u32>)> {
+        let rep = self.step(prefill, active)?;
+        anyhow::ensure!(
+            rep.failed.is_empty(),
+            "worker panic poisoned slots {:?}",
+            rep.failed
+        );
+        Ok((
+            rep.elapsed_s,
+            rep.finished,
+            rep.tokens.into_iter().map(|(_, t)| t).collect(),
+        ))
     }
 
     fn prefill(
@@ -1053,11 +1330,10 @@ mod tests {
     fn req(id: usize, input_tokens: usize) -> Request {
         Request {
             id,
-            arrival_s: 0.0,
             input_tokens,
             output_tokens: 8,
             conversation: id,
-            turn: 0,
+            ..Request::default()
         }
     }
 
@@ -1243,7 +1519,7 @@ mod tests {
         let attn = |kv: &PagedKv, q: Tensor, bucket: usize, len: usize, q_off: usize| {
             let mut kb = Vec::new();
             let mut vb = Vec::new();
-            kv.gather(0, bucket, &mut kb, &mut vb);
+            kv.gather(0, bucket, &mut kb, &mut vb).unwrap();
             let mut inp = HashMap::new();
             inp.insert("q".to_string(), q);
             inp.insert("k".to_string(), Tensor::from_vec(&[1, hkv, 1, bucket, d], kb));
@@ -1259,7 +1535,8 @@ mod tests {
             inp
         };
         for (pos, &tok) in prompt.iter().enumerate() {
-            kv.append(0, &embed(K_SALT, tok, pos, stride), &embed(V_SALT, tok, pos, stride));
+            kv.append(0, &embed(K_SALT, tok, pos, stride), &embed(V_SALT, tok, pos, stride))
+                .unwrap();
         }
         let s = prompt.len();
         let bucket = bucket_len(s, DEFAULT_BLOCK_TOKENS);
@@ -1296,7 +1573,8 @@ mod tests {
                 0,
                 &embed(K_SALT, last, pos, stride),
                 &embed(V_SALT, last, pos, stride),
-            );
+            )
+            .unwrap();
             let len = pos + 1;
             let bucket = bucket_len(len, DEFAULT_BLOCK_TOKENS);
             let e = entry(&mut plans, "decode", 1, bucket);
@@ -1599,5 +1877,108 @@ mod tests {
             b.token_log
         };
         assert_eq!(mk(), mk());
+    }
+
+    #[test]
+    fn admission_rejects_requests_that_can_never_fit() {
+        let mut b = backend(Parallelism::sequential());
+        b.set_page_cap(2); // 2 pages x 64 tokens, single layer
+        assert!(b.admit_check(&req(0, 40)).is_ok()); // 47 tokens -> 1 page
+        let err = b.admit_check(&req(1, 130)).unwrap_err(); // 137 -> 3 pages
+        assert!(err.contains("can never fit"), "{err}");
+        // The context-window check still fires (and first).
+        let err = b.admit_check(&req(2, 2000)).unwrap_err();
+        assert!(err.contains("exceeds context window"), "{err}");
+    }
+
+    #[test]
+    fn kv_preflight_fails_cleanly_at_zero_availability() {
+        let mut b = backend(Parallelism::sequential());
+        let r = req(0, 64); // exactly one full page
+        let toks = prompt_tokens(&r, b.model.vocab);
+        b.prefill(0, &r, &toks).unwrap();
+        let (alloc0, _) = b.kv_pages();
+        // The sequence sits on a page boundary: the next decode needs
+        // one fresh page per layer. Cap the pool at its current size
+        // and the preflight must fail without appending anything.
+        b.set_page_cap(alloc0);
+        assert_eq!(b.available_kv_pages(), 0);
+        assert_eq!(b.decode_pages_needed(0), 1);
+        let err = b.decode(&[0]).unwrap_err().to_string();
+        assert!(err.contains("KV preflight"), "{err}");
+        let (alloc1, _) = b.kv_pages();
+        assert_eq!(alloc1, alloc0, "failed preflight must not allocate");
+        // Capacity returns -> the very same decode succeeds.
+        b.set_page_cap(alloc0 + 1);
+        b.decode(&[0]).unwrap();
+    }
+
+    #[test]
+    fn a_poisoned_job_fails_one_slot_and_survivors_match_bitwise() {
+        use crate::exec::runtime;
+        // Reference streams, served together with no faults.
+        let prompts = [9usize, 23, 40];
+        let mut h = backend(Parallelism::sequential());
+        let mut want: Vec<Vec<u32>> = Vec::new();
+        for (i, &plen) in prompts.iter().enumerate() {
+            let r = req(i, plen);
+            let toks = prompt_tokens(&r, h.model.vocab);
+            let (_, first) = h.prefill(i, &r, &toks).unwrap();
+            want.push(vec![first]);
+        }
+        for _ in 0..5 {
+            let (_, ts) = h.decode(&[0, 1, 2]).unwrap();
+            for (i, t) in ts.iter().enumerate() {
+                want[i].push(*t);
+            }
+        }
+
+        for threads in [1, 2, 4] {
+            let mut b = backend(Parallelism::with_threads(threads));
+            let mut outs: Vec<Vec<u32>> = Vec::new();
+            for (i, &plen) in prompts.iter().enumerate() {
+                let r = req(i, plen);
+                let toks = prompt_tokens(&r, b.model.vocab);
+                let (_, first) = b.prefill(i, &r, &toks).unwrap();
+                outs.push(vec![first]);
+            }
+            for stepno in 0..5 {
+                if stepno == 2 {
+                    // Poison grid item 0 — the first block of the first
+                    // job, i.e. slot 0's decode. Only that slot fails.
+                    runtime::inject_panic_next_launch(0);
+                    let rep = b.step(&[], &[0, 1, 2]).unwrap();
+                    assert_eq!(rep.failed.len(), 1, "threads={threads}");
+                    assert_eq!(rep.failed[0].0, 0, "threads={threads}");
+                    assert!(rep.failed[0].1.contains("worker panic"));
+                    assert_eq!(rep.tokens.len(), 2, "threads={threads}");
+                    for &(slot, tok) in &rep.tokens {
+                        outs[slot].push(tok);
+                    }
+                    b.release(0);
+                } else if stepno > 2 {
+                    let (_, ts) = b.decode(&[1, 2]).unwrap();
+                    outs[1].push(ts[0]);
+                    outs[2].push(ts[1]);
+                } else {
+                    let (_, ts) = b.decode(&[0, 1, 2]).unwrap();
+                    for (i, t) in ts.iter().enumerate() {
+                        outs[i].push(*t);
+                    }
+                }
+            }
+            runtime::clear_injected_panic();
+            // Survivors' streams are bitwise identical to the healthy
+            // run; the victim matches up to the fault.
+            assert_eq!(outs[1], want[1], "threads={threads}");
+            assert_eq!(outs[2], want[2], "threads={threads}");
+            assert_eq!(&outs[0][..3], &want[0][..3], "threads={threads}");
+            // No pages leak past release + cache clear.
+            b.release(1);
+            b.release(2);
+            b.clear_prefix_cache();
+            let (alloc, free) = b.kv_pages();
+            assert_eq!(alloc, free, "threads={threads}");
+        }
     }
 }

@@ -1,0 +1,364 @@
+//! Deterministic fault injection for the serving lifecycle.
+//!
+//! A [`FaultPlan`] is a *schedule* of adverse events keyed by lifecycle
+//! round number — page-pool pressure windows, worker panics, client
+//! cancels, deadline storms. The lifecycle runner consults the plan at
+//! the top of every round, so a given (trace, scheduler config, plan)
+//! triple replays bit-identically: the chaos harness asserts that every
+//! request still reaches exactly one terminal state, that no KV pages
+//! leak, and that the survivors' token streams match the fault-free
+//! run bit for bit.
+//!
+//! Plans come from three places:
+//!
+//! * [`FaultPlan::parse`] — a compact spec string, e.g.
+//!   `pressure@3:2x4;panic@5;cancel@7:2;storm@9:2`;
+//! * [`FaultPlan::generate`] — a seeded random schedule (`seed=42` in
+//!   spec form), for chaos sweeps;
+//! * [`FaultPlan::from_env`] — either of the above via the
+//!   `FLASHLIGHT_FAULTS` environment variable (CLI entry points only;
+//!   library code never reads the environment).
+
+use crate::tracegen::Rng;
+
+/// Environment variable the CLI reads fault specs from.
+pub const FAULTS_ENV: &str = "FLASHLIGHT_FAULTS";
+
+/// One scheduled adverse event. `round` is the lifecycle round the
+/// event fires at (pressure events span `[round, round + rounds)`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Withhold `pages` KV pages from availability for `rounds`
+    /// consecutive rounds — simulated pool exhaustion the scheduler
+    /// must degrade around (evict prefixes, preempt, throttle).
+    PagePressure {
+        round: u64,
+        pages: usize,
+        rounds: u64,
+    },
+    /// Poison grid item `item` of the round's first engine launch: the
+    /// worker panics, the runtime attributes it, and exactly one
+    /// request must fail while the pool and the rest of the batch
+    /// continue.
+    WorkerPanic { round: u64, item: usize },
+    /// Client cancel of request `id` at the top of the round.
+    Cancel { round: u64, id: usize },
+    /// Deadline storm: every `every`-th in-flight request's deadline
+    /// collapses to "now" at the top of the round.
+    DeadlineStorm { round: u64, every: usize },
+}
+
+impl Fault {
+    /// The round this event first applies to.
+    pub fn round(&self) -> u64 {
+        match *self {
+            Fault::PagePressure { round, .. }
+            | Fault::WorkerPanic { round, .. }
+            | Fault::Cancel { round, .. }
+            | Fault::DeadlineStorm { round, .. } => round,
+        }
+    }
+}
+
+impl std::fmt::Display for Fault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            Fault::PagePressure {
+                round,
+                pages,
+                rounds,
+            } => write!(f, "pressure@{round}:{pages}x{rounds}"),
+            Fault::WorkerPanic { round, item } => write!(f, "panic@{round}:{item}"),
+            Fault::Cancel { round, id } => write!(f, "cancel@{round}:{id}"),
+            Fault::DeadlineStorm { round, every } => write!(f, "storm@{round}:{every}"),
+        }
+    }
+}
+
+/// A deterministic schedule of [`Fault`] events, sorted by round.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub events: Vec<Fault>,
+}
+
+/// Round-trips through [`FaultPlan::parse`]: the display form of any
+/// plan (including generated ones) is itself a valid spec.
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                write!(f, ";")?;
+            }
+            write!(f, "{e}")?;
+        }
+        Ok(())
+    }
+}
+
+impl FaultPlan {
+    /// The empty plan: a fault-free run.
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse a spec string: either `seed=N[@ROUNDS]` (a generated
+    /// schedule over a `ROUNDS`-round horizon, default 64) or a
+    /// `;`-separated event list:
+    ///
+    /// * `pressure@R:PxD` — withhold `P` pages for `D` rounds from `R`
+    /// * `panic@R[:I]`    — poison grid item `I` (default 0) at `R`
+    /// * `cancel@R:ID`    — cancel request `ID` at round `R`
+    /// * `storm@R[:H]`    — collapse every `H`-th (default every)
+    ///   in-flight deadline at round `R`
+    ///
+    /// The empty string parses to the empty plan.
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        let spec = spec.trim();
+        if spec.is_empty() {
+            return Ok(FaultPlan::none());
+        }
+        if let Some(rest) = spec.strip_prefix("seed=") {
+            let (seed, rounds) = match rest.split_once('@') {
+                Some((s, r)) => (
+                    s.parse::<u64>()
+                        .map_err(|e| anyhow::anyhow!("bad fault seed {s:?}: {e}"))?,
+                    r.parse::<u64>()
+                        .map_err(|e| anyhow::anyhow!("bad fault horizon {r:?}: {e}"))?,
+                ),
+                None => (
+                    rest.parse::<u64>()
+                        .map_err(|e| anyhow::anyhow!("bad fault seed {rest:?}: {e}"))?,
+                    64,
+                ),
+            };
+            return Ok(FaultPlan::generate(seed, rounds));
+        }
+        let mut events = Vec::new();
+        for part in spec.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (kind, at) = part
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("fault event {part:?} missing '@round'"))?;
+            let (round_s, args) = match at.split_once(':') {
+                Some((r, a)) => (r, Some(a)),
+                None => (at, None),
+            };
+            let round: u64 = round_s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad round in {part:?}: {e}"))?;
+            let ev = match kind {
+                "pressure" => {
+                    let a = args
+                        .ok_or_else(|| anyhow::anyhow!("pressure needs ':PAGESxROUNDS' ({part:?})"))?;
+                    let (p, d) = a
+                        .split_once('x')
+                        .ok_or_else(|| anyhow::anyhow!("pressure needs 'PAGESxROUNDS' ({part:?})"))?;
+                    Fault::PagePressure {
+                        round,
+                        pages: p
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("bad pages in {part:?}: {e}"))?,
+                        rounds: d
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("bad duration in {part:?}: {e}"))?,
+                    }
+                }
+                "panic" => Fault::WorkerPanic {
+                    round,
+                    item: match args {
+                        Some(a) => a
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("bad item in {part:?}: {e}"))?,
+                        None => 0,
+                    },
+                },
+                "cancel" => Fault::Cancel {
+                    round,
+                    id: args
+                        .ok_or_else(|| anyhow::anyhow!("cancel needs ':REQUEST_ID' ({part:?})"))?
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad request id in {part:?}: {e}"))?,
+                },
+                "storm" => Fault::DeadlineStorm {
+                    round,
+                    every: match args {
+                        Some(a) => a
+                            .parse::<usize>()
+                            .map_err(|e| anyhow::anyhow!("bad stride in {part:?}: {e}"))?
+                            .max(1),
+                        None => 1,
+                    },
+                },
+                other => anyhow::bail!("unknown fault kind {other:?} in {part:?}"),
+            };
+            events.push(ev);
+        }
+        let mut plan = FaultPlan { events };
+        plan.events.sort_by_key(|e| e.round());
+        Ok(plan)
+    }
+
+    /// Read a plan from `FLASHLIGHT_FAULTS` (unset or empty = no
+    /// faults). CLI entry points only — library code takes plans as
+    /// values.
+    pub fn from_env() -> anyhow::Result<Self> {
+        match std::env::var(FAULTS_ENV) {
+            Ok(spec) => FaultPlan::parse(&spec),
+            Err(_) => Ok(FaultPlan::none()),
+        }
+    }
+
+    /// A seeded random schedule over a `rounds`-round horizon: a
+    /// handful of pressure windows, panics, cancels, and storms whose
+    /// placement is a pure function of `seed` — the chaos harness runs
+    /// the same plan twice and asserts byte-identical outcomes.
+    pub fn generate(seed: u64, rounds: u64) -> Self {
+        let horizon = rounds.max(1);
+        let mut rng = Rng::new(seed | 1);
+        let n = 3 + (rng.next_u64() % 4) as usize;
+        let mut events = Vec::with_capacity(n);
+        for _ in 0..n {
+            let round = rng.next_u64() % horizon;
+            events.push(match rng.next_u64() % 4 {
+                0 => Fault::PagePressure {
+                    round,
+                    pages: 1 + (rng.next_u64() % 4) as usize,
+                    rounds: 1 + rng.next_u64() % 6,
+                },
+                1 => Fault::WorkerPanic {
+                    round,
+                    item: (rng.next_u64() % 8) as usize,
+                },
+                2 => Fault::Cancel {
+                    round,
+                    id: (rng.next_u64() % 16) as usize,
+                },
+                _ => Fault::DeadlineStorm {
+                    round,
+                    every: 1 + (rng.next_u64() % 3) as usize,
+                },
+            });
+        }
+        events.sort_by_key(|e| e.round());
+        FaultPlan { events }
+    }
+
+    /// The point events (panic / cancel / storm) firing exactly at
+    /// `round`, in plan order. Pressure windows are queried separately
+    /// via [`FaultPlan::pressure_at`] because they span rounds.
+    pub fn events_at(&self, round: u64) -> impl Iterator<Item = &Fault> {
+        self.events.iter().filter(move |e| {
+            e.round() == round && !matches!(e, Fault::PagePressure { .. })
+        })
+    }
+
+    /// Total KV pages withheld at `round`: the sum of all pressure
+    /// windows covering it.
+    pub fn pressure_at(&self, round: u64) -> usize {
+        self.events
+            .iter()
+            .filter_map(|e| match *e {
+                Fault::PagePressure {
+                    round: r,
+                    pages,
+                    rounds,
+                } if round >= r && round < r.saturating_add(rounds) => Some(pages),
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// The last round any event in the plan touches (0 for an empty
+    /// plan) — runners keep stepping at least this far so late faults
+    /// are not silently skipped on short traces.
+    pub fn horizon(&self) -> u64 {
+        self.events
+            .iter()
+            .map(|e| match *e {
+                Fault::PagePressure { round, rounds, .. } => {
+                    round.saturating_add(rounds)
+                }
+                other => other.round(),
+            })
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_every_event_kind() {
+        let plan =
+            FaultPlan::parse("pressure@3:2x4; panic@5:1; cancel@7:2; storm@9:2;").unwrap();
+        assert_eq!(
+            plan.events,
+            vec![
+                Fault::PagePressure {
+                    round: 3,
+                    pages: 2,
+                    rounds: 4
+                },
+                Fault::WorkerPanic { round: 5, item: 1 },
+                Fault::Cancel { round: 7, id: 2 },
+                Fault::DeadlineStorm { round: 9, every: 2 },
+            ]
+        );
+        // Display form re-parses to the same plan.
+        let spec: Vec<String> = plan.events.iter().map(|e| e.to_string()).collect();
+        assert_eq!(FaultPlan::parse(&spec.join(";")).unwrap(), plan);
+    }
+
+    #[test]
+    fn parse_defaults_and_errors() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert_eq!(
+            FaultPlan::parse("panic@4").unwrap().events,
+            vec![Fault::WorkerPanic { round: 4, item: 0 }]
+        );
+        assert_eq!(
+            FaultPlan::parse("storm@2").unwrap().events,
+            vec![Fault::DeadlineStorm { round: 2, every: 1 }]
+        );
+        for bad in ["pressure@1", "cancel@1", "blorp@3", "panic", "panic@x"] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn pressure_windows_span_and_stack() {
+        let plan = FaultPlan::parse("pressure@2:3x2;pressure@3:1x3").unwrap();
+        assert_eq!(plan.pressure_at(1), 0);
+        assert_eq!(plan.pressure_at(2), 3);
+        assert_eq!(plan.pressure_at(3), 4); // both windows cover round 3
+        assert_eq!(plan.pressure_at(4), 1);
+        assert_eq!(plan.pressure_at(5), 1);
+        assert_eq!(plan.pressure_at(6), 0);
+        assert_eq!(plan.horizon(), 6);
+        // Pressure never shows up as a point event.
+        assert_eq!(plan.events_at(2).count(), 0);
+    }
+
+    #[test]
+    fn generated_plans_are_deterministic_and_seed_sensitive() {
+        let a = FaultPlan::generate(42, 64);
+        let b = FaultPlan::generate(42, 64);
+        assert_eq!(a, b, "same seed must replay the same plan");
+        assert!(!a.is_empty());
+        assert!(a.events.iter().all(|e| e.round() < 64));
+        let c = FaultPlan::generate(43, 64);
+        assert_ne!(a, c, "different seeds must differ");
+        // The seed= spec form reaches the same generator.
+        assert_eq!(FaultPlan::parse("seed=42@64").unwrap(), a);
+        assert_eq!(FaultPlan::parse("seed=42").unwrap(), a);
+    }
+}

@@ -39,6 +39,67 @@
 /// Default page size in tokens — also the serving bucket granule.
 pub const DEFAULT_BLOCK_TOKENS: usize = 64;
 
+/// Typed KV-pool failures. Exhaustion is an *expected* runtime state the
+/// lifecycle scheduler reacts to (preempt → requeue → throttle), so it
+/// must be a value, not a panic; the invariant violations are programming
+/// errors surfaced as errors so a serving process degrades instead of
+/// aborting.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KvError {
+    /// The pool cannot supply another page: every page up to `cap` is
+    /// live (or held back by injected `pressure`).
+    PoolExhausted {
+        seq: usize,
+        in_use: usize,
+        cap: usize,
+        pressure: usize,
+    },
+    /// [`PagedKv::adopt`] into a sequence that still owns pages.
+    AdoptNonEmpty { seq: usize },
+    /// [`PagedKv::adopt`] of a page with no live references (the prefix
+    /// was already evicted).
+    AdoptFreedPage { page: usize },
+    /// [`PagedKv::gather`] with a padded length below the cached length —
+    /// a stale bucket would silently drop the newest tokens.
+    GatherTruncates {
+        seq: usize,
+        padded_len: usize,
+        len: usize,
+    },
+}
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::PoolExhausted {
+                seq,
+                in_use,
+                cap,
+                pressure,
+            } => write!(
+                f,
+                "kv pool exhausted appending to seq {seq}: {in_use} pages in use, cap {cap}, external pressure {pressure}"
+            ),
+            KvError::AdoptNonEmpty { seq } => {
+                write!(f, "adopt into non-empty seq {seq}")
+            }
+            KvError::AdoptFreedPage { page } => {
+                write!(f, "adopting freed page {page}")
+            }
+            KvError::GatherTruncates {
+                seq,
+                padded_len,
+                len,
+            } => write!(
+                f,
+                "gather of seq {seq} with padded_len {padded_len} < cached len {len} would drop tokens"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
+
 struct Page {
     k: Vec<f32>,
     v: Vec<f32>,
@@ -59,6 +120,14 @@ pub struct PagedKv {
     pages: Vec<Page>,
     free: Vec<usize>,
     seqs: Vec<SeqKv>,
+    /// Hard cap on pool size in pages (`usize::MAX` = grow on demand,
+    /// the legacy behavior). With a finite cap, [`Self::append`] returns
+    /// [`KvError::PoolExhausted`] instead of allocating past it.
+    page_cap: usize,
+    /// Pages held hostage by fault injection: subtracted from
+    /// [`Self::available_pages`] without touching real bookkeeping, so a
+    /// chaos plan can simulate exhaustion deterministically.
+    pressure: usize,
 }
 
 impl PagedKv {
@@ -75,7 +144,48 @@ impl PagedKv {
                     len: 0,
                 })
                 .collect(),
+            page_cap: usize::MAX,
+            pressure: 0,
         }
+    }
+
+    /// Cap the pool at `cap` pages. Shrinking below the current
+    /// allocation does not free anything — it only forbids growth and
+    /// makes [`Self::available_pages`] report the tighter budget.
+    pub fn set_page_cap(&mut self, cap: usize) {
+        self.page_cap = cap.max(1);
+    }
+
+    pub fn page_cap(&self) -> usize {
+        self.page_cap
+    }
+
+    /// Fault injection: pretend `pages` pages are unavailable.
+    pub fn set_pressure(&mut self, pages: usize) {
+        self.pressure = pages;
+    }
+
+    pub fn pressure(&self) -> usize {
+        self.pressure
+    }
+
+    /// Pages an append could take right now: the free list plus headroom
+    /// below the cap, minus injected pressure.
+    pub fn available_pages(&self) -> usize {
+        let headroom = self.page_cap.saturating_sub(self.pages.len());
+        self.free
+            .len()
+            .saturating_add(headroom)
+            .saturating_sub(self.pressure)
+    }
+
+    /// New pages appending `extra_tokens` more tokens to `seq` would
+    /// take (0 if they all land in the current partial tail page).
+    pub fn pages_for_append(&self, seq: usize, extra_tokens: usize) -> usize {
+        let sl = &self.seqs[seq];
+        (sl.len + extra_tokens)
+            .div_ceil(self.block_tokens)
+            .saturating_sub(sl.pages.len())
     }
 
     /// Tokens per page (the serving bucket granule).
@@ -112,26 +222,43 @@ impl PagedKv {
     /// taken from the free list (or freshly allocated) only every
     /// `block_tokens` appends. Only pages owned exclusively by this
     /// sequence are ever written (adopted prefix pages are full, so the
-    /// write cursor never lands inside one).
-    pub fn append(&mut self, seq: usize, k: &[f32], v: &[f32]) {
+    /// write cursor never lands inside one). At a block boundary with no
+    /// page available ([`Self::available_pages`] = 0) this returns
+    /// [`KvError::PoolExhausted`] *before* mutating anything, so the
+    /// scheduler can preempt and retry.
+    pub fn append(&mut self, seq: usize, k: &[f32], v: &[f32]) -> Result<(), KvError> {
         let stride = self.token_stride();
         debug_assert_eq!(k.len(), stride);
         debug_assert_eq!(v.len(), stride);
         let len = self.seqs[seq].len;
         if len % self.block_tokens == 0 {
-            let cap = self.block_tokens * stride;
-            let pi = self.free.pop().unwrap_or_else(|| {
-                self.pages.push(Page {
-                    k: vec![0.0; cap],
-                    v: vec![0.0; cap],
-                    rc: 0,
+            if self.available_pages() == 0 {
+                return Err(KvError::PoolExhausted {
+                    seq,
+                    in_use: self.pages.len() - self.free.len(),
+                    cap: self.page_cap,
+                    pressure: self.pressure,
                 });
-                self.pages.len() - 1
-            });
+            }
+            let cap = self.block_tokens * stride;
+            let pi = match self.free.pop() {
+                Some(pi) => pi,
+                None => {
+                    self.pages.push(Page {
+                        k: vec![0.0; cap],
+                        v: vec![0.0; cap],
+                        rc: 0,
+                    });
+                    self.pages.len() - 1
+                }
+            };
             debug_assert_eq!(self.pages[pi].rc, 0, "free page with live references");
             self.pages[pi].rc = 1;
             self.seqs[seq].pages.push(pi);
         }
+        // Invariant, not an error path: the branch above pushed a page
+        // whenever the cursor sat on a block boundary, so a tail page
+        // always exists here.
         let pi = *self.seqs[seq].pages.last().expect("page just ensured");
         debug_assert_eq!(
             self.pages[pi].rc, 1,
@@ -141,29 +268,32 @@ impl PagedKv {
         self.pages[pi].k[off..off + stride].copy_from_slice(k);
         self.pages[pi].v[off..off + stride].copy_from_slice(v);
         self.seqs[seq].len = len + 1;
+        Ok(())
     }
 
     /// Gather `seq`'s cache into head-major `[head][padded_len][d]`
     /// buffers (the engine's KV input layout), zero-filling positions
-    /// `>= len(seq)`. `padded_len` must be a bucketed length `>= len`.
+    /// `>= len(seq)`. `padded_len` must be a bucketed length `>= len`:
+    /// a stale bucket (computed before an append) would silently drop
+    /// the newest tokens, so it is a typed error, not a debug assert.
     pub fn gather(
         &self,
         seq: usize,
         padded_len: usize,
         k_out: &mut Vec<f32>,
         v_out: &mut Vec<f32>,
-    ) {
+    ) -> Result<(), KvError> {
         let d = self.head_dim;
         let stride = self.token_stride();
         let sl = &self.seqs[seq];
-        // A stale bucket (computed before an append) would silently drop
-        // the newest tokens; fail fast instead.
-        debug_assert!(
-            padded_len >= sl.len,
-            "gather with padded_len {padded_len} < cached len {}",
-            sl.len
-        );
-        let len = sl.len.min(padded_len);
+        if padded_len < sl.len {
+            return Err(KvError::GatherTruncates {
+                seq,
+                padded_len,
+                len: sl.len,
+            });
+        }
+        let len = sl.len;
         k_out.clear();
         v_out.clear();
         k_out.reserve(self.heads * padded_len * d);
@@ -178,6 +308,7 @@ impl PagedKv {
             k_out.resize(k_out.len() + (padded_len - len) * d, 0.0);
             v_out.resize(v_out.len() + (padded_len - len) * d, 0.0);
         }
+        Ok(())
     }
 
     fn unref(&mut self, pi: usize) {
@@ -218,15 +349,22 @@ impl PagedKv {
     /// Graft a parked prefix into an empty sequence: every page gains a
     /// reference, and the sequence continues appending *after* the
     /// prefix (the prefix pages are full, so the next append opens a
-    /// fresh page — shared pages are never written).
-    pub fn adopt(&mut self, seq: usize, pages: &[usize]) {
-        assert!(self.seqs[seq].pages.is_empty(), "adopt into non-empty seq {seq}");
+    /// fresh page — shared pages are never written). Validates the whole
+    /// prefix *before* bumping any refcount, so a failed adopt leaves
+    /// the pool untouched.
+    pub fn adopt(&mut self, seq: usize, pages: &[usize]) -> Result<(), KvError> {
+        if !self.seqs[seq].pages.is_empty() {
+            return Err(KvError::AdoptNonEmpty { seq });
+        }
+        if let Some(&pi) = pages.iter().find(|&&pi| self.pages[pi].rc == 0) {
+            return Err(KvError::AdoptFreedPage { page: pi });
+        }
         for &pi in pages {
-            debug_assert!(self.pages[pi].rc > 0, "adopting a freed page {pi}");
             self.pages[pi].rc += 1;
         }
         self.seqs[seq].pages = pages.to_vec();
         self.seqs[seq].len = pages.len() * self.block_tokens;
+        Ok(())
     }
 
     /// Drop a parked prefix's references (LRU eviction / replacement).
@@ -253,12 +391,12 @@ mod tests {
         for t in 0..6 {
             let k = token_vec(100.0 + t as f32, stride);
             let v = token_vec(200.0 + t as f32, stride);
-            kv.append(0, &k, &v);
+            kv.append(0, &k, &v).unwrap();
         }
         assert_eq!(kv.len(0), 6);
         let mut kb = Vec::new();
         let mut vb = Vec::new();
-        kv.gather(0, 8, &mut kb, &mut vb);
+        kv.gather(0, 8, &mut kb, &mut vb).unwrap();
         assert_eq!(kb.len(), heads * 8 * d);
         // head-major layout: [h][t][d]; token t of head h came from
         // token_vec(100 + t)[h*d..]
@@ -283,10 +421,12 @@ mod tests {
         let stride = kv.token_stride();
         assert_eq!(kv.allocated_pages(), 0);
         for t in 0..4 {
-            kv.append(0, &token_vec(t as f32, stride), &token_vec(t as f32, stride));
+            kv.append(0, &token_vec(t as f32, stride), &token_vec(t as f32, stride))
+                .unwrap();
         }
         assert_eq!(kv.allocated_pages(), 1, "4 tokens fit one 4-token page");
-        kv.append(0, &token_vec(9.0, stride), &token_vec(9.0, stride));
+        kv.append(0, &token_vec(9.0, stride), &token_vec(9.0, stride))
+            .unwrap();
         assert_eq!(kv.allocated_pages(), 2, "5th token opens a second page");
     }
 
@@ -295,7 +435,8 @@ mod tests {
         let mut kv = PagedKv::new(2, 2, 1, 2);
         let stride = kv.token_stride();
         for _ in 0..4 {
-            kv.append(0, &token_vec(1.0, stride), &token_vec(1.0, stride));
+            kv.append(0, &token_vec(1.0, stride), &token_vec(1.0, stride))
+                .unwrap();
         }
         assert_eq!(kv.allocated_pages(), 2);
         kv.release(0);
@@ -303,13 +444,14 @@ mod tests {
         assert_eq!(kv.free_pages(), 2);
         // Seq 1 reuses the freed pages: no new allocation.
         for _ in 0..4 {
-            kv.append(1, &token_vec(2.0, stride), &token_vec(2.0, stride));
+            kv.append(1, &token_vec(2.0, stride), &token_vec(2.0, stride))
+                .unwrap();
         }
         assert_eq!(kv.allocated_pages(), 2, "pool must reuse freed pages");
         assert_eq!(kv.free_pages(), 0);
         // And the reused pages carry the new values, not the old ones.
         let (mut kb, mut vb) = (Vec::new(), Vec::new());
-        kv.gather(1, 4, &mut kb, &mut vb);
+        kv.gather(1, 4, &mut kb, &mut vb).unwrap();
         assert!(kb.iter().take(4 * 2).all(|&x| x >= 2.0));
     }
 
@@ -317,11 +459,12 @@ mod tests {
     fn gather_reuses_caller_buffers() {
         let mut kv = PagedKv::new(1, 4, 1, 2);
         let stride = kv.token_stride();
-        kv.append(0, &token_vec(1.0, stride), &token_vec(1.0, stride));
+        kv.append(0, &token_vec(1.0, stride), &token_vec(1.0, stride))
+            .unwrap();
         let mut kb = Vec::with_capacity(64);
         let mut vb = Vec::with_capacity(64);
         let cap = kb.capacity();
-        kv.gather(0, 4, &mut kb, &mut vb);
+        kv.gather(0, 4, &mut kb, &mut vb).unwrap();
         assert_eq!(kb.capacity(), cap, "gather must not grow a large buffer");
         assert_eq!(kb.len(), 4 * 2);
     }
@@ -332,7 +475,8 @@ mod tests {
         let mut kv = PagedKv::new(1, 2, 1, 2);
         let stride = kv.token_stride();
         for t in 0..5 {
-            kv.append(0, &token_vec(t as f32, stride), &token_vec(t as f32, stride));
+            kv.append(0, &token_vec(t as f32, stride), &token_vec(t as f32, stride))
+                .unwrap();
         }
         assert_eq!(kv.allocated_pages(), 3);
         // Park a 5-token prefix: only 2 full pages (4 tokens) survive.
@@ -349,20 +493,22 @@ mod tests {
         let mut kv = PagedKv::new(2, 2, 1, 2);
         let stride = kv.token_stride();
         for t in 0..4 {
-            kv.append(0, &token_vec(t as f32, stride), &token_vec(t as f32, stride));
+            kv.append(0, &token_vec(t as f32, stride), &token_vec(t as f32, stride))
+                .unwrap();
         }
         let prefix = kv.park(0, 4); // 2 full pages
         assert_eq!(prefix.len(), 2);
         // Adopt into seq 1 and extend it.
-        kv.adopt(1, &prefix);
+        kv.adopt(1, &prefix).unwrap();
         assert_eq!(kv.len(1), 4);
-        kv.append(1, &token_vec(9.0, stride), &token_vec(9.0, stride));
+        kv.append(1, &token_vec(9.0, stride), &token_vec(9.0, stride))
+            .unwrap();
         assert_eq!(kv.len(1), 5);
         // Releasing the sequence keeps the parked prefix alive...
         kv.release(1);
         let (mut kb, mut vb) = (Vec::new(), Vec::new());
-        kv.adopt(1, &prefix);
-        kv.gather(1, 4, &mut kb, &mut vb);
+        kv.adopt(1, &prefix).unwrap();
+        kv.gather(1, 4, &mut kb, &mut vb).unwrap();
         assert_eq!(kb[0], 0.0); // token 0 still intact
         assert_eq!(kb[2 * 2], 2.0); // token 2 (page 1) intact
         kv.release(1);
@@ -376,19 +522,146 @@ mod tests {
         let mut kv = PagedKv::new(2, 2, 1, 2);
         let stride = kv.token_stride();
         for t in 0..2 {
-            kv.append(0, &token_vec(t as f32, stride), &token_vec(t as f32, stride));
+            kv.append(0, &token_vec(t as f32, stride), &token_vec(t as f32, stride))
+                .unwrap();
         }
         let prefix = kv.park(0, 2);
-        kv.adopt(0, &prefix);
+        kv.adopt(0, &prefix).unwrap();
         let before = kv.allocated_pages();
-        kv.append(0, &token_vec(7.0, stride), &token_vec(7.0, stride));
+        kv.append(0, &token_vec(7.0, stride), &token_vec(7.0, stride))
+            .unwrap();
         // The shared page is full, so the append must not touch it.
         assert!(kv.allocated_pages() > before || kv.free_pages() == 0);
         let (mut kb, mut vb) = (Vec::new(), Vec::new());
-        kv.gather(0, 4, &mut kb, &mut vb);
+        kv.gather(0, 4, &mut kb, &mut vb).unwrap();
         assert_eq!(kb[2 * 2], 7.0);
         kv.release(0);
         kv.release_prefix(&prefix);
         assert_eq!(kv.free_pages(), kv.allocated_pages());
+    }
+
+    #[test]
+    fn capped_pool_exhausts_cleanly_and_recovers_after_release() {
+        // 2-token pages, cap 2 pages => at most 4 cached tokens.
+        let mut kv = PagedKv::new(2, 2, 1, 2);
+        kv.set_page_cap(2);
+        let stride = kv.token_stride();
+        for t in 0..4 {
+            kv.append(0, &token_vec(t as f32, stride), &token_vec(t as f32, stride))
+                .unwrap();
+        }
+        assert_eq!(kv.available_pages(), 0);
+        let err = kv
+            .append(0, &token_vec(9.0, stride), &token_vec(9.0, stride))
+            .unwrap_err();
+        assert_eq!(
+            err,
+            KvError::PoolExhausted {
+                seq: 0,
+                in_use: 2,
+                cap: 2,
+                pressure: 0
+            }
+        );
+        // The failed append must not have mutated anything.
+        assert_eq!(kv.len(0), 4);
+        assert_eq!(kv.allocated_pages(), 2);
+        // Releasing frees capacity and the append succeeds on seq 1.
+        kv.release(0);
+        assert_eq!(kv.available_pages(), 2);
+        kv.append(1, &token_vec(5.0, stride), &token_vec(5.0, stride))
+            .unwrap();
+        assert_eq!(kv.len(1), 1);
+    }
+
+    #[test]
+    fn mid_page_appends_survive_exhaustion() {
+        // Appends into a partial tail page need no new page, so they
+        // must succeed even with zero availability.
+        let mut kv = PagedKv::new(1, 4, 1, 2);
+        kv.set_page_cap(1);
+        let stride = kv.token_stride();
+        kv.append(0, &token_vec(0.0, stride), &token_vec(0.0, stride))
+            .unwrap();
+        assert_eq!(kv.available_pages(), 0);
+        for t in 1..4 {
+            kv.append(0, &token_vec(t as f32, stride), &token_vec(t as f32, stride))
+                .unwrap();
+        }
+        assert!(kv
+            .append(0, &token_vec(4.0, stride), &token_vec(4.0, stride))
+            .is_err());
+    }
+
+    #[test]
+    fn pressure_simulates_exhaustion_and_lifts() {
+        let mut kv = PagedKv::new(1, 2, 1, 2);
+        kv.set_page_cap(4);
+        assert_eq!(kv.available_pages(), 4);
+        kv.set_pressure(3);
+        assert_eq!(kv.available_pages(), 1);
+        let stride = kv.token_stride();
+        for t in 0..2 {
+            kv.append(0, &token_vec(t as f32, stride), &token_vec(t as f32, stride))
+                .unwrap();
+        }
+        let err = kv
+            .append(0, &token_vec(9.0, stride), &token_vec(9.0, stride))
+            .unwrap_err();
+        assert!(matches!(err, KvError::PoolExhausted { pressure: 3, .. }));
+        kv.set_pressure(0);
+        kv.append(0, &token_vec(9.0, stride), &token_vec(9.0, stride))
+            .unwrap();
+        assert_eq!(kv.len(0), 3);
+    }
+
+    #[test]
+    fn pages_for_append_counts_block_crossings() {
+        let mut kv = PagedKv::new(1, 4, 1, 2);
+        let stride = kv.token_stride();
+        assert_eq!(kv.pages_for_append(0, 1), 1);
+        assert_eq!(kv.pages_for_append(0, 4), 1);
+        assert_eq!(kv.pages_for_append(0, 5), 2);
+        for t in 0..3 {
+            kv.append(0, &token_vec(t as f32, stride), &token_vec(t as f32, stride))
+                .unwrap();
+        }
+        assert_eq!(kv.pages_for_append(0, 1), 0, "fits the tail page");
+        assert_eq!(kv.pages_for_append(0, 2), 1);
+    }
+
+    #[test]
+    fn adopt_and_gather_report_typed_errors() {
+        let mut kv = PagedKv::new(2, 2, 1, 2);
+        let stride = kv.token_stride();
+        for t in 0..4 {
+            kv.append(0, &token_vec(t as f32, stride), &token_vec(t as f32, stride))
+                .unwrap();
+        }
+        let prefix = kv.park(0, 4);
+        kv.append(1, &token_vec(8.0, stride), &token_vec(8.0, stride))
+            .unwrap();
+        assert_eq!(
+            kv.adopt(1, &prefix).unwrap_err(),
+            KvError::AdoptNonEmpty { seq: 1 }
+        );
+        assert_eq!(
+            kv.gather(1, 0, &mut Vec::new(), &mut Vec::new()).unwrap_err(),
+            KvError::GatherTruncates {
+                seq: 1,
+                padded_len: 0,
+                len: 1
+            }
+        );
+        // Evict the prefix, then adopting it must fail without touching
+        // refcounts.
+        kv.release_prefix(&prefix);
+        let free_before = kv.free_pages();
+        assert!(matches!(
+            kv.adopt(0, &prefix).unwrap_err(),
+            KvError::AdoptFreedPage { .. }
+        ));
+        assert_eq!(kv.free_pages(), free_before);
+        assert!(kv.is_empty(0));
     }
 }

@@ -1,0 +1,672 @@
+//! The fault-tolerant request lifecycle: a serving loop in which every
+//! request ends in **exactly one** terminal state
+//! ([`Outcome`]: `Completed | Rejected | Cancelled | DeadlineExceeded |
+//! Failed`) no matter what faults fire, no KV pages or slots leak, and
+//! the surviving requests' token streams are bit-identical to a
+//! fault-free run.
+//!
+//! Where [`super::engine::run_trace`] assumes a fixed, well-behaved
+//! schedule (any anomaly aborts the whole run), this runner degrades:
+//!
+//! 1. **Bounded ingress** — clients submitting past `queue_cap` get an
+//!    explicit `Rejected { retry_after }` instead of unbounded queue
+//!    growth (saturating replay: the whole trace submits as fast as
+//!    the queue drains).
+//! 2. **Admission control** — requests that could *never* complete
+//!    (context window, worst-case lifetime KV pages vs the page cap)
+//!    are rejected up front with a precise reason
+//!    ([`Backend::admit_check`]).
+//! 3. **Deadlines & cancellation** — per-request SLO budgets and
+//!    cancel times (trace-driven or fault-injected) are swept between
+//!    engine rounds; a dead request's pages and slot free immediately,
+//!    even mid-prefill.
+//! 4. **KV-pressure degradation ladder** — when the next round's page
+//!    preflight cannot be satisfied: first evict parked conversation
+//!    prefixes, then *preempt* the lowest-priority in-flight request
+//!    (release its slot, requeue it at the front; completed-prefill
+//!    victims park their prefix so the retry adopts it), and finally
+//!    throttle admission until pressure lifts. Nothing panics on an
+//!    exhausted pool.
+//! 5. **Worker-panic isolation** — an attributed panic inside a
+//!    batched launch ([`EngineBackend::step`]) fails only the poisoned
+//!    request; the pool and the rest of the batch continue.
+//!
+//! Faults come from a [`FaultPlan`] consulted at the top of every
+//! round, so a (trace, config, plan) triple replays deterministically —
+//! the chaos harness's whole premise.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+
+use crate::tracegen::Request;
+
+use super::engine::{prompt_tokens, Backend, SchedulerConfig};
+use super::engine_backend::EngineBackend;
+use super::faults::{Fault, FaultPlan};
+use super::metrics::{
+    summarize_outcomes, LifecycleSummary, Outcome, RequestMetrics, RequestOutcome,
+};
+
+/// How deadlines and cancel budgets are measured.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClockMode {
+    /// Engine-reported elapsed seconds (real serving). Deadline
+    /// terminals depend on machine speed — use `Rounds` for
+    /// deterministic tests.
+    Wall,
+    /// One clock unit per scheduling round: `deadline_s`/`cancel_s`
+    /// budgets count rounds, bit-for-bit reproducible anywhere.
+    Rounds,
+}
+
+/// Lifecycle policy knobs, layered on top of [`SchedulerConfig`].
+#[derive(Debug, Clone, Copy)]
+pub struct LifecycleConfig {
+    /// Ingress queue bound; submissions past it are rejected with a
+    /// backoff hint. 0 = unbounded (no rejection rung).
+    pub queue_cap: usize,
+    /// Deadline budget applied to requests that carry none
+    /// (`Request::deadline_s = INFINITY`). INFINITY = no default.
+    pub default_deadline_s: f64,
+    pub clock: ClockMode,
+    /// Consecutive rounds the runner may sit unable to admit or step
+    /// anything (e.g. a pressure window with an empty batch) before it
+    /// drains the queue as `Rejected` instead of livelocking.
+    pub max_stall_rounds: u32,
+}
+
+impl Default for LifecycleConfig {
+    fn default() -> Self {
+        LifecycleConfig {
+            queue_cap: 0,
+            default_deadline_s: f64::INFINITY,
+            clock: ClockMode::Wall,
+            max_stall_rounds: 64,
+        }
+    }
+}
+
+/// Run-level lifecycle counters (beyond per-request outcomes).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LifecycleStats {
+    pub rounds: u64,
+    /// In-flight requests preempted (released + requeued) for pages.
+    pub preemptions: u64,
+    /// Rounds admission was throttled for lack of pages.
+    pub throttled_rounds: u64,
+    pub rejected_queue_full: u64,
+    pub rejected_inadmissible: u64,
+}
+
+/// Everything a lifecycle run produced.
+#[derive(Debug, Clone)]
+pub struct LifecycleReport {
+    /// One terminal record per trace request, sorted by id.
+    pub outcomes: Vec<RequestOutcome>,
+    pub summary: LifecycleSummary,
+    pub stats: LifecycleStats,
+}
+
+/// A submitted-but-not-yet-running request, with its lifecycle budgets
+/// made absolute at submission time.
+struct Queued {
+    req: Request,
+    submitted_s: f64,
+    deadline_at: f64,
+    cancel_at: f64,
+    preemptions: u32,
+}
+
+/// A request occupying a slot (mid-prefill or decoding).
+struct InFlight {
+    q: Queued,
+    admitted_round: u64,
+    prefilling: bool,
+    tokens: Vec<u32>,
+    first_token_s: f64,
+    last_token_s: f64,
+    itls: Vec<f64>,
+}
+
+fn record(outcomes: &mut HashMap<usize, RequestOutcome>, o: RequestOutcome) {
+    let id = o.id;
+    let prev = outcomes.insert(id, o);
+    debug_assert!(
+        prev.is_none(),
+        "request {id} reached two terminal states"
+    );
+}
+
+fn terminal(q: &Queued, outcome: Outcome, reason: String, retry_after_s: f64) -> RequestOutcome {
+    RequestOutcome {
+        id: q.req.id,
+        outcome,
+        reason,
+        retry_after_s,
+        tokens: Vec::new(),
+        preemptions: q.preemptions,
+        metrics: None,
+    }
+}
+
+impl InFlight {
+    fn into_terminal(self, outcome: Outcome, reason: String, now: f64) -> RequestOutcome {
+        let metrics = self.first_token_s.is_finite().then(|| RequestMetrics {
+            id: self.q.req.id,
+            arrival_s: self.q.submitted_s,
+            first_token_s: self.first_token_s,
+            done_s: now,
+            input_tokens: self.q.req.input_tokens,
+            output_tokens: self.tokens.len(),
+            itls: self.itls.clone(),
+        });
+        RequestOutcome {
+            id: self.q.req.id,
+            outcome,
+            reason,
+            retry_after_s: 0.0,
+            tokens: self.tokens,
+            preemptions: self.q.preemptions,
+            metrics,
+        }
+    }
+}
+
+/// Drive `trace` through `backend` under the fault-tolerant lifecycle.
+/// See the module docs for the state machine; `faults` may be
+/// [`FaultPlan::none`] for a healthy run.
+pub fn run_lifecycle(
+    backend: &mut EngineBackend,
+    trace: &[Request],
+    sched: SchedulerConfig,
+    lc: LifecycleConfig,
+    faults: &FaultPlan,
+    vocab: usize,
+) -> anyhow::Result<LifecycleReport> {
+    backend.configure(&sched);
+    let n_slots = backend.n_slots();
+    let mut pending: VecDeque<Request> = trace.to_vec().into();
+    let mut queue: VecDeque<Queued> = VecDeque::new();
+    let mut slots: Vec<Option<InFlight>> = (0..n_slots).map(|_| None).collect();
+    let mut prefill_order: Vec<usize> = Vec::new();
+    let mut outcomes: HashMap<usize, RequestOutcome> = HashMap::new();
+    let mut cancelled_ids: HashSet<usize> = HashSet::new();
+    let mut stats = LifecycleStats::default();
+    let mut clock = 0.0f64;
+    let mut round: u64 = 0;
+    let mut stall = 0u32;
+    let mut last_dt = 1e-3f64;
+
+    loop {
+        if pending.is_empty() && queue.is_empty() && slots.iter().all(Option::is_none) {
+            break;
+        }
+        stats.rounds = round + 1;
+
+        // 1. Fault-plan pressure for this round (0 lifts it).
+        backend.set_kv_pressure(faults.pressure_at(round));
+
+        // 2. Point faults: cancels persist (a client cancel also kills
+        //    a not-yet-submitted request), storms and panics fire now.
+        for ev in faults.events_at(round) {
+            match *ev {
+                Fault::Cancel { id, .. } => {
+                    cancelled_ids.insert(id);
+                }
+                Fault::DeadlineStorm { every, .. } => {
+                    let mut j = 0usize;
+                    for s in slots.iter_mut().flatten() {
+                        if j % every == 0 {
+                            s.q.deadline_at = s.q.deadline_at.min(clock);
+                        }
+                        j += 1;
+                    }
+                }
+                Fault::WorkerPanic { item, .. } => {
+                    crate::exec::runtime::inject_panic_next_launch(item);
+                }
+                Fault::PagePressure { .. } => {}
+            }
+        }
+
+        // 3. Bounded ingress (saturating replay: every not-yet-
+        //    submitted client submits now; past the cap they get an
+        //    explicit rejection with a backoff hint).
+        while let Some(r) = pending.pop_front() {
+            if lc.queue_cap > 0 && queue.len() >= lc.queue_cap {
+                stats.rejected_queue_full += 1;
+                let retry = (queue.len() as f64) * last_dt.max(1e-3);
+                let q = Queued {
+                    req: r,
+                    submitted_s: clock,
+                    deadline_at: f64::INFINITY,
+                    cancel_at: f64::INFINITY,
+                    preemptions: 0,
+                };
+                record(
+                    &mut outcomes,
+                    terminal(
+                        &q,
+                        Outcome::Rejected,
+                        format!("ingress queue full ({} queued)", queue.len()),
+                        retry,
+                    ),
+                );
+                continue;
+            }
+            let deadline_budget = if r.deadline_s.is_finite() {
+                r.deadline_s
+            } else {
+                lc.default_deadline_s
+            };
+            queue.push_back(Queued {
+                deadline_at: clock + deadline_budget,
+                cancel_at: clock + r.cancel_s,
+                submitted_s: clock,
+                preemptions: 0,
+                req: r,
+            });
+        }
+
+        // 4. Sweeps: cancelled / past-deadline requests terminate now,
+        //    queued or in-flight alike; an in-flight death frees its
+        //    pages and slot immediately, even mid-prefill.
+        let mut keep = VecDeque::with_capacity(queue.len());
+        for q in queue.drain(..) {
+            if cancelled_ids.contains(&q.req.id) || clock >= q.cancel_at {
+                record(
+                    &mut outcomes,
+                    terminal(&q, Outcome::Cancelled, "cancelled while queued".into(), 0.0),
+                );
+            } else if clock >= q.deadline_at {
+                record(
+                    &mut outcomes,
+                    terminal(
+                        &q,
+                        Outcome::DeadlineExceeded,
+                        "deadline expired while queued".into(),
+                        0.0,
+                    ),
+                );
+            } else {
+                keep.push_back(q);
+            }
+        }
+        queue = keep;
+        for slot in 0..n_slots {
+            let Some(fl) = &slots[slot] else { continue };
+            let cancel = cancelled_ids.contains(&fl.q.req.id) || clock >= fl.q.cancel_at;
+            let deadline = clock >= fl.q.deadline_at;
+            if cancel || deadline {
+                let fl = slots[slot].take().unwrap();
+                let phase = if fl.prefilling { "prefill" } else { "decode" };
+                backend.release(slot);
+                prefill_order.retain(|&s| s != slot);
+                let (outcome, why) = if cancel {
+                    (Outcome::Cancelled, format!("cancelled mid-{phase}"))
+                } else {
+                    (Outcome::DeadlineExceeded, format!("deadline expired mid-{phase}"))
+                };
+                record(&mut outcomes, fl.into_terminal(outcome, why, clock));
+            }
+        }
+
+        // 5. Admission: free slots pull from the queue head. Requests
+        //    that can never complete are rejected; if the prompt's
+        //    pages aren't available even after evicting parked
+        //    prefixes, admission throttles (the request waits).
+        let mut free: VecDeque<usize> = (0..n_slots).filter(|&i| slots[i].is_none()).collect();
+        let mut admitted = 0usize;
+        while admitted < sched.max_prefills_per_step && !free.is_empty() {
+            let Some(q) = queue.pop_front() else { break };
+            if let Err(why) = backend.admit_check(&q.req) {
+                stats.rejected_inadmissible += 1;
+                record(
+                    &mut outcomes,
+                    terminal(&q, Outcome::Rejected, why, f64::INFINITY),
+                );
+                continue;
+            }
+            let need = backend.admit_pages_needed(q.req.input_tokens);
+            if need > backend.available_kv_pages() && backend.evict_prefixes_for(need) < need {
+                stats.throttled_rounds += 1;
+                queue.push_front(q);
+                break;
+            }
+            let slot = free.pop_front().unwrap();
+            let tokens = prompt_tokens(&q.req, vocab);
+            backend.begin_prefill(slot, &q.req, &tokens)?;
+            prefill_order.push(slot);
+            slots[slot] = Some(InFlight {
+                q,
+                admitted_round: round,
+                prefilling: true,
+                tokens: Vec::new(),
+                first_token_s: f64::NAN,
+                last_token_s: clock,
+                itls: Vec::new(),
+            });
+            admitted += 1;
+        }
+
+        // 6. Build the round's work and walk the degradation ladder
+        //    until its page preflight fits: evict parked prefixes,
+        //    then preempt the lowest-priority / latest-admitted
+        //    in-flight request (requeued at the front; a completed
+        //    prefill parks so the retry adopts it).
+        let mut budget = if sched.prefill_round_tokens == 0 {
+            usize::MAX
+        } else {
+            sched.prefill_round_tokens
+        };
+        let mut work: Vec<(usize, usize)> = Vec::new();
+        for &si in &prefill_order {
+            if budget == 0 {
+                break;
+            }
+            let rows = backend.staged_rows(si).min(budget);
+            if rows > 0 {
+                work.push((si, rows));
+                budget -= rows;
+            }
+        }
+        let mut active: Vec<usize> = (0..n_slots)
+            .filter(|&i| slots[i].as_ref().is_some_and(|fl| !fl.prefilling))
+            .collect();
+        loop {
+            let need: usize = active
+                .iter()
+                .map(|&s| backend.decode_pages_needed(s))
+                .sum::<usize>()
+                + work
+                    .iter()
+                    .map(|&(s, _)| backend.prefill_pages_bound(s))
+                    .sum::<usize>();
+            if need <= backend.available_kv_pages() || backend.evict_prefixes_for(need) >= need {
+                break;
+            }
+            let victim = slots
+                .iter()
+                .enumerate()
+                .filter_map(|(i, s)| {
+                    s.as_ref()
+                        .map(|fl| (i, fl.q.req.priority, fl.admitted_round))
+                })
+                .min_by_key(|&(_, pri, adm)| (pri, std::cmp::Reverse(adm)))
+                .map(|(i, ..)| i);
+            let Some(v) = victim else { break };
+            let mut fl = slots[v].take().unwrap();
+            backend.release(v);
+            active.retain(|&s| s != v);
+            work.retain(|&(s, _)| s != v);
+            prefill_order.retain(|&s| s != v);
+            // The retry restarts cleanly: its stream is regenerated
+            // from the prompt, so a preempted-then-completed request
+            // still matches the fault-free run bit for bit.
+            fl.q.preemptions += 1;
+            stats.preemptions += 1;
+            queue.push_front(fl.q);
+        }
+
+        // 7. One engine round (if there is anything to run).
+        if work.is_empty() && active.is_empty() {
+            if !queue.is_empty() || !pending.is_empty() {
+                stall += 1;
+                if stall > lc.max_stall_rounds {
+                    // Livelock guard: pressure (or ping-pong) has kept
+                    // the engine idle too long — shed the queue rather
+                    // than spin forever. Every request still gets a
+                    // terminal state.
+                    for q in queue.drain(..) {
+                        stats.rejected_queue_full += 1;
+                        record(
+                            &mut outcomes,
+                            terminal(
+                                &q,
+                                Outcome::Rejected,
+                                format!(
+                                    "admission stalled for {} rounds (KV pressure)",
+                                    lc.max_stall_rounds
+                                ),
+                                last_dt.max(1e-3) * 16.0,
+                            ),
+                        );
+                    }
+                    for r in pending.drain(..) {
+                        let q = Queued {
+                            req: r,
+                            submitted_s: clock,
+                            deadline_at: f64::INFINITY,
+                            cancel_at: f64::INFINITY,
+                            preemptions: 0,
+                        };
+                        stats.rejected_queue_full += 1;
+                        record(
+                            &mut outcomes,
+                            terminal(
+                                &q,
+                                Outcome::Rejected,
+                                "server stalled before submission".into(),
+                                last_dt.max(1e-3) * 16.0,
+                            ),
+                        );
+                    }
+                }
+            }
+        } else {
+            stall = 0;
+            let rep = backend.step(&work, &active)?;
+            last_dt = rep.elapsed_s.max(1e-9);
+            if lc.clock == ClockMode::Wall {
+                clock += rep.elapsed_s;
+            }
+            let now = if lc.clock == ClockMode::Rounds {
+                (round + 1) as f64
+            } else {
+                clock
+            };
+
+            for (slot, tok) in rep.finished {
+                prefill_order.retain(|&s| s != slot);
+                let fl = slots[slot].as_mut().expect("finished an empty slot");
+                fl.prefilling = false;
+                fl.first_token_s = now;
+                fl.last_token_s = now;
+                fl.tokens.push(tok);
+                if fl.q.req.output_tokens <= 1 {
+                    let fl = slots[slot].take().unwrap();
+                    backend.release(slot);
+                    record(&mut outcomes, fl.into_terminal(Outcome::Completed, String::new(), now));
+                }
+            }
+            for (slot, tok) in rep.tokens {
+                let fl = slots[slot].as_mut().expect("token for an empty slot");
+                fl.itls.push(now - fl.last_token_s);
+                fl.last_token_s = now;
+                fl.tokens.push(tok);
+                if fl.tokens.len() >= fl.q.req.output_tokens.max(1) {
+                    let fl = slots[slot].take().unwrap();
+                    backend.release(slot);
+                    record(&mut outcomes, fl.into_terminal(Outcome::Completed, String::new(), now));
+                }
+            }
+            for (slot, reason) in rep.failed {
+                prefill_order.retain(|&s| s != slot);
+                let fl = slots[slot].take().expect("failure on an empty slot");
+                backend.release(slot);
+                record(&mut outcomes, fl.into_terminal(Outcome::Failed, reason, now));
+            }
+        }
+
+        round += 1;
+        if lc.clock == ClockMode::Rounds {
+            clock = round as f64;
+        }
+    }
+
+    // Leave the backend clean for the next run: no synthetic pressure,
+    // no armed faults.
+    backend.set_kv_pressure(0);
+    crate::exec::runtime::clear_injected_panic();
+
+    anyhow::ensure!(
+        outcomes.len() == trace.len(),
+        "terminal-state invariant violated: {} outcomes for {} requests",
+        outcomes.len(),
+        trace.len()
+    );
+    let mut outcomes: Vec<RequestOutcome> = outcomes.into_values().collect();
+    outcomes.sort_by_key(|o| o.id);
+    let summary = summarize_outcomes(&outcomes);
+    Ok(LifecycleReport {
+        summary,
+        stats,
+        outcomes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Parallelism;
+    use crate::serve::engine_backend::EngineModel;
+    use crate::tracegen::{generate, TraceConfig};
+
+    fn trace(n: usize) -> Vec<Request> {
+        generate(&TraceConfig {
+            n_requests: n,
+            rate: 100.0,
+            input_mu: 3.5,
+            input_sigma: 0.5,
+            mean_output: 5.0,
+            max_input: 100,
+            max_output: 8,
+            ..Default::default()
+        })
+    }
+
+    fn backend(threads: usize) -> EngineBackend {
+        EngineBackend::new(
+            EngineModel::tiny(),
+            4,
+            1024,
+            Parallelism::with_threads(threads),
+        )
+    }
+
+    fn sched() -> SchedulerConfig {
+        SchedulerConfig {
+            prefill_chunk_tokens: 64,
+            prefill_round_tokens: 128,
+            ..Default::default()
+        }
+    }
+
+    fn assert_no_leak(b: &mut EngineBackend) {
+        let (alloc, free) = b.kv_pages();
+        assert_eq!(
+            alloc,
+            free + b.prefix_stats().parked_pages,
+            "pages leaked beyond the parked prefixes"
+        );
+        b.clear_prefix_cache();
+        let (alloc, free) = b.kv_pages();
+        assert_eq!(alloc, free, "pages leaked after cache clear");
+    }
+
+    #[test]
+    fn healthy_lifecycle_completes_everything_bit_identically_across_threads() {
+        let tr = trace(10);
+        let mut streams: Vec<Vec<Vec<u32>>> = Vec::new();
+        for threads in [1, 2, 4] {
+            let mut b = backend(threads);
+            let vocab = b.model.vocab;
+            let rep = run_lifecycle(
+                &mut b,
+                &tr,
+                sched(),
+                LifecycleConfig {
+                    clock: ClockMode::Rounds,
+                    ..Default::default()
+                },
+                &FaultPlan::none(),
+                vocab,
+            )
+            .unwrap();
+            assert_eq!(rep.summary.completed, tr.len(), "threads={threads}");
+            assert_eq!(rep.summary.total(), tr.len());
+            for (o, r) in rep.outcomes.iter().zip(&tr) {
+                assert_eq!(o.id, r.id);
+                assert_eq!(o.outcome, Outcome::Completed);
+                assert_eq!(o.tokens.len(), r.output_tokens.max(1), "req {}", r.id);
+            }
+            assert!(rep.summary.goodput_tokens_per_s > 0.0);
+            streams.push(rep.outcomes.into_iter().map(|o| o.tokens).collect());
+            assert_no_leak(&mut b);
+        }
+        assert_eq!(streams[0], streams[1], "threads must not change tokens");
+        assert_eq!(streams[0], streams[2], "threads must not change tokens");
+    }
+
+    #[test]
+    fn bounded_ingress_rejects_overflow_with_backoff() {
+        let tr = trace(8);
+        let mut b = backend(1);
+        let vocab = b.model.vocab;
+        let rep = run_lifecycle(
+            &mut b,
+            &tr,
+            sched(),
+            LifecycleConfig {
+                queue_cap: 2,
+                clock: ClockMode::Rounds,
+                ..Default::default()
+            },
+            &FaultPlan::none(),
+            vocab,
+        )
+        .unwrap();
+        assert_eq!(rep.summary.total(), tr.len());
+        assert!(rep.summary.rejected > 0, "overflow must reject");
+        assert_eq!(rep.summary.completed + rep.summary.rejected, tr.len());
+        for o in rep.outcomes.iter().filter(|o| o.outcome == Outcome::Rejected) {
+            assert!(o.retry_after_s > 0.0, "rejection must carry a backoff hint");
+            assert!(o.reason.contains("queue full"), "{}", o.reason);
+        }
+        assert_eq!(rep.stats.rejected_queue_full as usize, rep.summary.rejected);
+        assert_no_leak(&mut b);
+    }
+
+    #[test]
+    fn default_deadline_expires_slow_requests_deterministically() {
+        let tr = trace(8);
+        let run = |threads: usize| {
+            let mut b = backend(threads);
+            let vocab = b.model.vocab;
+            let rep = run_lifecycle(
+                &mut b,
+                &tr,
+                sched(),
+                LifecycleConfig {
+                    default_deadline_s: 6.0, // rounds
+                    clock: ClockMode::Rounds,
+                    ..Default::default()
+                },
+                &FaultPlan::none(),
+                vocab,
+            )
+            .unwrap();
+            assert_eq!(rep.summary.total(), tr.len());
+            assert!(
+                rep.summary.deadline_exceeded > 0,
+                "a 6-round budget must expire some of 8 queued requests"
+            );
+            assert_no_leak(&mut b);
+            rep.outcomes
+                .iter()
+                .map(|o| (o.outcome, o.tokens.clone()))
+                .collect::<Vec<_>>()
+        };
+        // Rounds-mode deadlines are thread-count independent.
+        assert_eq!(run(1), run(2));
+    }
+}

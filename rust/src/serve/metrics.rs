@@ -1,4 +1,7 @@
-//! Serving metrics: TTFT, ITL, token throughput (paper Fig 5).
+//! Serving metrics: TTFT, ITL, token throughput (paper Fig 5) — plus
+//! the fault-tolerant lifecycle's terminal-state accounting (exactly
+//! one [`Outcome`] per request, latency summaries split by outcome,
+//! goodput).
 
 #[derive(Debug, Clone, Default)]
 pub struct RequestMetrics {
@@ -71,6 +74,112 @@ pub fn summarize(reqs: &[RequestMetrics]) -> Summary {
     }
 }
 
+/// The terminal state of one request under the fault-tolerant
+/// lifecycle. Every admitted-or-rejected request ends in *exactly one*
+/// of these — the chaos harness's core invariant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Outcome {
+    /// All requested tokens generated.
+    Completed,
+    /// Refused at the ingress (queue overflow or can-never-fit); the
+    /// client may retry after the hinted backoff.
+    Rejected,
+    /// Client cancelled before completion.
+    Cancelled,
+    /// Deadline (SLO budget) expired before completion.
+    DeadlineExceeded,
+    /// An engine fault (attributed worker panic) killed the request.
+    Failed,
+}
+
+impl Outcome {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Outcome::Completed => "completed",
+            Outcome::Rejected => "rejected",
+            Outcome::Cancelled => "cancelled",
+            Outcome::DeadlineExceeded => "deadline_exceeded",
+            Outcome::Failed => "failed",
+        }
+    }
+}
+
+/// One request's full lifecycle record: its terminal state, the token
+/// stream it actually emitted (partial for non-completed requests —
+/// preempted-and-resumed requests re-emit from their restart point,
+/// so the stream is the *final* attempt's), and timing metrics where
+/// a first token was ever produced.
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    pub id: usize,
+    pub outcome: Outcome,
+    /// Human-readable cause for non-completed terminals.
+    pub reason: String,
+    /// Backoff hint attached to `Rejected` terminals (seconds).
+    pub retry_after_s: f64,
+    /// Tokens emitted by the final attempt, in emission order.
+    pub tokens: Vec<u32>,
+    /// Times this request was preempted (parked + requeued).
+    pub preemptions: u32,
+    /// Timing metrics; `None` when no first token was ever emitted.
+    pub metrics: Option<RequestMetrics>,
+}
+
+/// Aggregate lifecycle accounting over a run.
+#[derive(Debug, Clone, Default)]
+pub struct LifecycleSummary {
+    pub completed: usize,
+    pub rejected: usize,
+    pub cancelled: usize,
+    pub deadline_exceeded: usize,
+    pub failed: usize,
+    /// Preemption events across all requests.
+    pub preemptions: u64,
+    /// Latency summary over completed requests only.
+    pub completed_summary: Option<Summary>,
+    /// Tokens emitted by requests that went on to complete, divided by
+    /// the run's makespan: throughput that *counted* (preempted work
+    /// that was re-done, and tokens of requests that later died, are
+    /// excluded).
+    pub goodput_tokens_per_s: f64,
+}
+
+impl LifecycleSummary {
+    pub fn total(&self) -> usize {
+        self.completed + self.rejected + self.cancelled + self.deadline_exceeded + self.failed
+    }
+}
+
+/// Fold per-request outcomes into the run-level accounting.
+pub fn summarize_outcomes(outcomes: &[RequestOutcome]) -> LifecycleSummary {
+    let mut s = LifecycleSummary::default();
+    let mut completed_metrics = Vec::new();
+    let mut good_tokens = 0usize;
+    let mut makespan = 0f64;
+    for o in outcomes {
+        match o.outcome {
+            Outcome::Completed => s.completed += 1,
+            Outcome::Rejected => s.rejected += 1,
+            Outcome::Cancelled => s.cancelled += 1,
+            Outcome::DeadlineExceeded => s.deadline_exceeded += 1,
+            Outcome::Failed => s.failed += 1,
+        }
+        s.preemptions += u64::from(o.preemptions);
+        if let Some(m) = &o.metrics {
+            makespan = makespan.max(m.done_s);
+            if o.outcome == Outcome::Completed {
+                good_tokens += o.tokens.len();
+                completed_metrics.push(m.clone());
+            }
+        }
+    }
+    if !completed_metrics.is_empty() {
+        s.completed_summary = Some(summarize(&completed_metrics));
+    }
+    s.goodput_tokens_per_s = good_tokens as f64 / makespan.max(1e-12);
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -102,5 +211,46 @@ mod tests {
         assert!((s.ttft_mean_s - 0.2).abs() < 1e-12);
         assert!((s.tokens_per_s - 10.0).abs() < 1e-9);
         assert!((s.itl_mean_s - 0.1125).abs() < 1e-12);
+    }
+
+    #[test]
+    fn outcome_accounting_counts_each_terminal_once() {
+        let m = |done_s: f64| RequestMetrics {
+            id: 0,
+            arrival_s: 0.0,
+            first_token_s: 0.1,
+            done_s,
+            input_tokens: 4,
+            output_tokens: 3,
+            itls: vec![0.1, 0.1],
+        };
+        let o = |id, outcome, tokens: usize, metrics| RequestOutcome {
+            id,
+            outcome,
+            reason: String::new(),
+            retry_after_s: 0.0,
+            tokens: vec![7; tokens],
+            preemptions: u32::from(id == 1),
+            metrics,
+        };
+        let outcomes = vec![
+            o(0, Outcome::Completed, 3, Some(m(1.0))),
+            o(1, Outcome::Completed, 3, Some(m(2.0))),
+            o(2, Outcome::Rejected, 0, None),
+            o(3, Outcome::Cancelled, 1, Some(m(0.5))),
+            o(4, Outcome::DeadlineExceeded, 2, Some(m(0.8))),
+            o(5, Outcome::Failed, 1, Some(m(0.9))),
+        ];
+        let s = summarize_outcomes(&outcomes);
+        assert_eq!(
+            (s.completed, s.rejected, s.cancelled, s.deadline_exceeded, s.failed),
+            (2, 1, 1, 1, 1)
+        );
+        assert_eq!(s.total(), outcomes.len());
+        assert_eq!(s.preemptions, 1);
+        // Goodput counts only completed requests' tokens over the
+        // makespan: 6 tokens / 2.0 s.
+        assert!((s.goodput_tokens_per_s - 3.0).abs() < 1e-9);
+        assert_eq!(s.completed_summary.unwrap().n_requests, 2);
     }
 }

@@ -6,7 +6,9 @@
 
 pub mod engine;
 pub mod engine_backend;
+pub mod faults;
 pub mod kv;
+pub mod lifecycle;
 pub mod metrics;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
@@ -14,8 +16,13 @@ pub mod sim;
 
 pub use engine::{run_trace, Backend, SchedulerConfig};
 pub use engine_backend::{EngineBackend, EngineModel, PrefixStats};
-pub use kv::PagedKv;
-pub use metrics::{summarize, RequestMetrics, Summary};
+pub use faults::{FaultPlan, FAULTS_ENV};
+pub use kv::{KvError, PagedKv};
+pub use lifecycle::{run_lifecycle, ClockMode, LifecycleConfig, LifecycleReport};
+pub use metrics::{
+    summarize, summarize_outcomes, LifecycleSummary, Outcome, RequestMetrics, RequestOutcome,
+    Summary,
+};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 pub use sim::{llama_3_2_1b, ModelShape, SimBackend};
@@ -164,6 +171,15 @@ pub struct EngineServeOpts {
     /// one prompt row through one layer, so a full row costs `layers`
     /// units (0 = unbounded).
     pub round_tokens: usize,
+    /// Default completion deadline applied to requests that carry none
+    /// (`--deadline-ms`; 0 = no default deadline).
+    pub deadline_ms: u64,
+    /// Ingress queue bound (`--queue-cap`; 0 = unbounded, no
+    /// rejection).
+    pub queue_cap: usize,
+    /// KV page-pool cap (`--kv-pages`; 0 = uncapped). Pressure faults
+    /// and the preemption ladder only bind against a finite cap.
+    pub kv_page_cap: usize,
 }
 
 impl Default for EngineServeOpts {
@@ -172,6 +188,9 @@ impl Default for EngineServeOpts {
             layers: 1,
             chunk_tokens: 64,
             round_tokens: 256,
+            deadline_ms: 0,
+            queue_cap: 0,
+            kv_page_cap: 0,
         }
     }
 }
@@ -200,9 +219,12 @@ pub fn cli_serve(
     }
 }
 
-/// Real tiled-engine serving run: chunk-scheduled multi-layer serving
-/// on the fused executor with slot-paged KV, conversation prefix reuse,
-/// and the pre-warmed fusion plan cache.
+/// Real tiled-engine serving run under the fault-tolerant lifecycle:
+/// chunk-scheduled multi-layer serving on the fused executor with
+/// slot-paged KV, conversation prefix reuse, the pre-warmed fusion
+/// plan cache, bounded ingress, deadlines, and KV-pressure preemption.
+/// Fault injection comes from the `FLASHLIGHT_FAULTS` env var (see
+/// [`faults`]).
 fn serve_engine(
     n_requests: usize,
     par: crate::exec::Parallelism,
@@ -210,6 +232,9 @@ fn serve_engine(
 ) -> anyhow::Result<()> {
     let trace = engine_trace(n_requests);
     let mut b = EngineBackend::new(EngineModel::tiny_deep(opts.layers), 8, 1024, par);
+    if opts.kv_page_cap > 0 {
+        b.set_page_cap(opts.kv_page_cap);
+    }
     let vocab = b.model.vocab;
     let cfg = SchedulerConfig {
         parallelism: par,
@@ -217,13 +242,38 @@ fn serve_engine(
         prefill_round_tokens: opts.round_tokens,
         ..Default::default()
     };
+    let lc = LifecycleConfig {
+        queue_cap: opts.queue_cap,
+        default_deadline_s: if opts.deadline_ms == 0 {
+            f64::INFINITY
+        } else {
+            opts.deadline_ms as f64 / 1e3
+        },
+        clock: ClockMode::Wall,
+        ..Default::default()
+    };
+    let plan = FaultPlan::from_env()?;
+    if !plan.is_empty() {
+        println!("fault plan ({} events): {plan}", plan.events.len());
+    }
     // Plan-cache warmup: build the whole bucket ladder up front so the
     // first request per bucket pays no plan+autotune latency inline.
     b.configure(&cfg);
     let warmed = b.warmup_plans(1024);
     let t0 = std::time::Instant::now();
-    let done = run_trace(&mut b, &trace, cfg, vocab)?;
-    let s = summarize(&done);
+    let rep = run_lifecycle(&mut b, &trace, cfg, lc, &plan, vocab)?;
+    let sum = &rep.summary;
+    let s = sum.completed_summary.unwrap_or(Summary {
+        n_requests: 0,
+        ttft_mean_s: 0.0,
+        ttft_p50_s: 0.0,
+        ttft_p99_s: 0.0,
+        itl_mean_s: 0.0,
+        itl_p50_s: 0.0,
+        itl_p99_s: 0.0,
+        tokens_per_s: 0.0,
+        makespan_s: 0.0,
+    });
     let cs = b.cache_stats();
     let ps = b.prefix_stats();
     let (pages_alloc, pages_free) = b.kv_pages();
@@ -239,6 +289,18 @@ fn serve_engine(
         b.parallelism().num_threads,
         b.model.layers,
         opts.chunk_tokens,
+    );
+    println!(
+        "lifecycle: {} completed, {} rejected, {} cancelled, {} deadline_exceeded, \
+         {} failed | {} preemptions | goodput {:.1} tok/s | {} rounds",
+        sum.completed,
+        sum.rejected,
+        sum.cancelled,
+        sum.deadline_exceeded,
+        sum.failed,
+        sum.preemptions,
+        sum.goodput_tokens_per_s,
+        rep.stats.rounds,
     );
     println!(
         "plan cache: {} warmed, {} hits / {} misses ({:.1}% hit rate, {} entries) | \
@@ -260,6 +322,132 @@ fn serve_engine(
         ps.entries,
         b.gather_reallocs(),
     );
+    Ok(())
+}
+
+/// `flashlight chaos`: replay the engine trace under deterministic
+/// fault plans and enforce the lifecycle's three invariants, loudly.
+///
+/// For every plan (parsed from `specs`, e.g. `seed=1` or
+/// `pressure@2:4x6;panic@3;cancel@4:1;storm@6:2`):
+///
+/// 1. **Terminal accounting** — every request ends in exactly one of
+///    `completed | rejected | cancelled | deadline_exceeded | failed`.
+/// 2. **No leaks** — allocated KV pages return to `free + parked`, and
+///    to exactly `free` once the prefix cache is cleared.
+/// 3. **Bit-identical survivors** — every request that completes under
+///    the fault plan emits the same token stream as the fault-free
+///    reference run, even if it was preempted and retried.
+///
+/// Runs on the deterministic round clock so a failure reproduces
+/// anywhere from the (trace, config, plan) triple alone. Any gate
+/// violation returns an error (non-zero CLI exit) naming the plan.
+pub fn chaos(
+    n_requests: usize,
+    par: crate::exec::Parallelism,
+    opts: EngineServeOpts,
+    specs: &[String],
+) -> anyhow::Result<()> {
+    let trace = engine_trace(n_requests);
+    // A tight page cap makes pressure windows and the preemption
+    // ladder actually bind (the trace's worst request needs ~4 pages
+    // per layer; 8 slots would want ~32).
+    let cap = if opts.kv_page_cap > 0 {
+        opts.kv_page_cap
+    } else {
+        20 * opts.layers
+    };
+    let mk = || {
+        let mut b = EngineBackend::new(EngineModel::tiny_deep(opts.layers), 8, 1024, par);
+        b.set_page_cap(cap);
+        b
+    };
+    let cfg = SchedulerConfig {
+        parallelism: par,
+        prefill_chunk_tokens: opts.chunk_tokens,
+        prefill_round_tokens: opts.round_tokens,
+        ..Default::default()
+    };
+    // The reference run must complete everything, so the chaos clock is
+    // deterministic rounds with no deadline default and no queue bound
+    // (fault plans inject the adversity themselves).
+    let lc = LifecycleConfig {
+        clock: ClockMode::Rounds,
+        ..Default::default()
+    };
+    let mut hb = mk();
+    let vocab = hb.model.vocab;
+    let healthy = run_lifecycle(&mut hb, &trace, cfg, lc, &FaultPlan::none(), vocab)?;
+    anyhow::ensure!(
+        healthy.summary.completed == trace.len(),
+        "fault-free reference run must complete all {} requests (completed {})",
+        trace.len(),
+        healthy.summary.completed
+    );
+    let reference: std::collections::HashMap<usize, Vec<u32>> = healthy
+        .outcomes
+        .into_iter()
+        .map(|o| (o.id, o.tokens))
+        .collect();
+    println!(
+        "chaos: {} requests, {} plans, {} threads, {} layers",
+        trace.len(),
+        specs.len(),
+        par.num_threads,
+        opts.layers
+    );
+    for spec in specs {
+        let plan = FaultPlan::parse(spec)?;
+        let mut b = mk();
+        let rep = run_lifecycle(&mut b, &trace, cfg, lc, &plan, vocab)?;
+        let sum = &rep.summary;
+        anyhow::ensure!(
+            sum.total() == trace.len(),
+            "plan `{spec}`: terminal accounting broken — {} terminals for {} requests",
+            sum.total(),
+            trace.len()
+        );
+        let (alloc, free) = b.kv_pages();
+        let parked = b.prefix_stats().parked_pages;
+        anyhow::ensure!(
+            alloc == free + parked,
+            "plan `{spec}`: page leak — {alloc} allocated vs {free} free + {parked} parked"
+        );
+        b.clear_prefix_cache();
+        let (alloc, free) = b.kv_pages();
+        anyhow::ensure!(
+            alloc == free,
+            "plan `{spec}`: page leak after prefix-cache clear — {alloc} allocated, {free} free"
+        );
+        for o in rep.outcomes.iter().filter(|o| o.outcome == Outcome::Completed) {
+            let want = reference.get(&o.id).ok_or_else(|| {
+                anyhow::anyhow!("plan `{spec}`: request {} has no fault-free reference", o.id)
+            })?;
+            anyhow::ensure!(
+                &o.tokens == want,
+                "plan `{spec}`: request {} diverged from the fault-free run \
+                 ({} tokens vs {}, preempted {}x)",
+                o.id,
+                o.tokens.len(),
+                want.len(),
+                o.preemptions
+            );
+        }
+        println!(
+            "  plan `{spec}` OK: {} completed, {} rejected, {} cancelled, \
+             {} deadline_exceeded, {} failed | {} preemptions | {} rounds | \
+             goodput {:.1} tok/round | survivors bit-identical, no leaks",
+            sum.completed,
+            sum.rejected,
+            sum.cancelled,
+            sum.deadline_exceeded,
+            sum.failed,
+            sum.preemptions,
+            rep.stats.rounds,
+            sum.goodput_tokens_per_s,
+        );
+    }
+    println!("chaos: all {} plans passed", specs.len());
     Ok(())
 }
 

@@ -57,8 +57,11 @@ impl PjrtBackend {
             .get("prefill_buckets")
             .context("prefill_buckets")?
             .split('/')
-            .map(|s| s.parse().unwrap())
-            .collect();
+            .map(|s| {
+                s.parse()
+                    .map_err(|e| anyhow::anyhow!("prefill_buckets entry `{s}`: {e}"))
+            })
+            .collect::<anyhow::Result<_>>()?;
         let weights = engine.load_weights("llama")?.literals();
         // Precompile every executable this backend can hit, so XLA JIT
         // time never lands inside serving metrics (the paper likewise

@@ -272,6 +272,7 @@ mod tests {
             output_tokens: 16,
             conversation,
             turn: 0,
+            ..Request::default()
         }
     }
 

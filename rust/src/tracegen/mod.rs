@@ -63,6 +63,33 @@ pub struct Request {
     pub conversation: usize,
     /// Turn index within the conversation.
     pub turn: usize,
+    /// Scheduling priority: higher survives longer under KV pressure
+    /// (the lifecycle scheduler preempts the lowest-priority in-flight
+    /// request first).
+    pub priority: u8,
+    /// Completion SLO *budget* relative to arrival, in scheduler-clock
+    /// units (seconds under a wall clock, rounds under the deterministic
+    /// round clock). `INFINITY` = no deadline.
+    pub deadline_s: f64,
+    /// Time after arrival at which the client abandons the request
+    /// (cancellation). `INFINITY` = never.
+    pub cancel_s: f64,
+}
+
+impl Default for Request {
+    fn default() -> Self {
+        Request {
+            id: 0,
+            arrival_s: 0.0,
+            input_tokens: 1,
+            output_tokens: 1,
+            conversation: 0,
+            turn: 0,
+            priority: 1,
+            deadline_s: f64::INFINITY,
+            cancel_s: f64::INFINITY,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -81,6 +108,18 @@ pub struct TraceConfig {
     /// Hard caps so requests fit the serving model's context window.
     pub max_input: usize,
     pub max_output: usize,
+    /// Distinct priority levels (1 = every request gets priority 1; `k`
+    /// draws uniformly from `0..k`).
+    pub priority_levels: u8,
+    /// Fraction of requests carrying a completion deadline.
+    pub deadline_p: f64,
+    /// Mean deadline budget (relative to arrival) for deadline-bearing
+    /// requests; the drawn budget is uniform in `[0.5, 1.5] * slack`.
+    pub deadline_slack_s: f64,
+    /// Fraction of requests the client abandons mid-flight.
+    pub cancel_p: f64,
+    /// Mean time-to-cancel for abandoned requests.
+    pub cancel_after_s: f64,
 }
 
 impl Default for TraceConfig {
@@ -95,6 +134,11 @@ impl Default for TraceConfig {
             continuation_p: 0.55,
             max_input: 480,
             max_output: 64,
+            priority_levels: 1,
+            deadline_p: 0.0,
+            deadline_slack_s: 30.0,
+            cancel_p: 0.0,
+            cancel_after_s: 10.0,
         }
     }
 }
@@ -102,6 +146,11 @@ impl Default for TraceConfig {
 /// Generate the trace. Deterministic for a given config.
 pub fn generate(cfg: &TraceConfig) -> Vec<Request> {
     let mut rng = Rng::new(cfg.seed);
+    // Lifecycle fields draw from a *separate* derived stream so turning
+    // the knobs on cannot shift the arrivals/lengths stream: the same
+    // seed always yields the same base trace, with or without
+    // deadlines/cancels/priorities layered on top.
+    let mut lrng = Rng::new(cfg.seed ^ 0x9E3779B97F4A7C15);
     let mut t = 0.0f64;
     let mut conversations: Vec<(usize, usize)> = vec![]; // (total_len, turns)
     let mut out = Vec::with_capacity(cfg.n_requests);
@@ -123,6 +172,21 @@ pub fn generate(cfg: &TraceConfig) -> Vec<Request> {
             (conversations.len() - 1, 0, len)
         };
         let output_tokens = ((rng.exp(cfg.mean_output) as usize) + 1).min(cfg.max_output);
+        let priority = if cfg.priority_levels > 1 {
+            lrng.range(0, cfg.priority_levels as usize) as u8
+        } else {
+            1
+        };
+        let deadline_s = if cfg.deadline_p > 0.0 && lrng.f64() < cfg.deadline_p {
+            cfg.deadline_slack_s * (0.5 + lrng.f64())
+        } else {
+            f64::INFINITY
+        };
+        let cancel_s = if cfg.cancel_p > 0.0 && lrng.f64() < cfg.cancel_p {
+            lrng.exp(cfg.cancel_after_s)
+        } else {
+            f64::INFINITY
+        };
         out.push(Request {
             id,
             arrival_s: t,
@@ -130,6 +194,9 @@ pub fn generate(cfg: &TraceConfig) -> Vec<Request> {
             output_tokens,
             conversation,
             turn,
+            priority,
+            deadline_s,
+            cancel_s,
         });
     }
     out
@@ -183,6 +250,31 @@ mod tests {
         let m0 = turn0.iter().sum::<f64>() / turn0.len() as f64;
         let mn = turnn.iter().sum::<f64>() / turnn.len() as f64;
         assert!(mn > m0, "continuations should carry history ({mn} vs {m0})");
+    }
+
+    #[test]
+    fn lifecycle_knobs_do_not_perturb_the_base_trace() {
+        // Adding deadlines/cancels/priorities must not shift the RNG
+        // stream that produces arrivals and lengths: downstream serving
+        // benches key their baselines off the default trace.
+        let base = generate(&TraceConfig::default());
+        let spiced = generate(&TraceConfig {
+            priority_levels: 4,
+            deadline_p: 0.5,
+            cancel_p: 0.25,
+            ..TraceConfig::default()
+        });
+        assert!(base
+            .iter()
+            .all(|r| r.priority == 1 && r.deadline_s.is_infinite() && r.cancel_s.is_infinite()));
+        for (b, s) in base.iter().zip(&spiced) {
+            assert_eq!(b.arrival_s, s.arrival_s);
+            assert_eq!(b.input_tokens, s.input_tokens);
+            assert_eq!(b.output_tokens, s.output_tokens);
+        }
+        assert!(spiced.iter().any(|r| r.deadline_s.is_finite()));
+        assert!(spiced.iter().any(|r| r.cancel_s.is_finite()));
+        assert!(spiced.iter().any(|r| r.priority != spiced[0].priority));
     }
 
     #[test]

@@ -3,8 +3,12 @@
 
 #[cfg(feature = "pjrt")]
 use flashlight::runtime::Engine;
+use flashlight::exec::Parallelism;
 use flashlight::runtime::{Manifest, TensorMeta};
-use flashlight::serve::{run_trace, Backend, SchedulerConfig};
+use flashlight::serve::{
+    run_lifecycle, run_trace, Backend, ClockMode, EngineBackend, EngineModel, FaultPlan,
+    LifecycleConfig, LifecycleReport, Outcome, SchedulerConfig,
+};
 use flashlight::tracegen::{generate, Request, TraceConfig};
 
 #[test]
@@ -115,6 +119,7 @@ fn coordinator_rejects_requests_exceeding_context() {
         output_tokens: 8,
         conversation: 0,
         turn: 0,
+        ..Request::default()
     }];
     let mut b = TinyContextBackend;
     let err = run_trace(&mut b, &trace, SchedulerConfig::default(), 512)
@@ -138,6 +143,251 @@ fn coordinator_survives_empty_and_single_token_requests() {
     let done = run_trace(&mut b, &trace, SchedulerConfig::default(), 512).unwrap();
     assert_eq!(done.len(), 8);
     assert!(done[0].itls.is_empty()); // single-token: no inter-token gaps
+}
+
+// ---------------------------------------------------------------------
+// Fault-tolerant serving lifecycle: the chaos gates.
+//
+// Every scenario below runs through `assert_lifecycle_gates`, which
+// enforces the lifecycle's three invariants at 1, 2, and 4 worker
+// threads:
+//   1. exactly one terminal state per request;
+//   2. no KV pages leak (allocated returns to free + parked, and to
+//      free alone once the prefix cache is cleared);
+//   3. every emitted token stream is a prefix of the unconstrained
+//      fault-free run's stream — equal for completed requests — so
+//      survivors are bit-identical and victims died mid-stream, not
+//      corrupted.
+// The deterministic round clock makes all three thread counts produce
+// identical outcomes, which is asserted too.
+// ---------------------------------------------------------------------
+
+fn lifecycle_trace(n: usize) -> Vec<Request> {
+    generate(&TraceConfig {
+        n_requests: n,
+        rate: 100.0,
+        input_mu: 3.6,
+        input_sigma: 0.4,
+        mean_output: 6.0,
+        max_input: 120,
+        max_output: 10,
+        ..Default::default()
+    })
+}
+
+fn rounds_lc() -> LifecycleConfig {
+    LifecycleConfig {
+        clock: ClockMode::Rounds,
+        ..Default::default()
+    }
+}
+
+fn run_engine_lifecycle(
+    trace: &[Request],
+    threads: usize,
+    page_cap: usize,
+    plan: &FaultPlan,
+    lc: LifecycleConfig,
+) -> LifecycleReport {
+    let mut b = EngineBackend::new(
+        EngineModel::tiny(),
+        4,
+        1024,
+        Parallelism::with_threads(threads),
+    );
+    if page_cap > 0 {
+        b.set_page_cap(page_cap);
+    }
+    let vocab = b.model.vocab;
+    let cfg = SchedulerConfig {
+        prefill_chunk_tokens: 64,
+        prefill_round_tokens: 128,
+        ..Default::default()
+    };
+    let rep = run_lifecycle(&mut b, trace, cfg, lc, plan, vocab).unwrap();
+    let (alloc, free) = b.kv_pages();
+    let parked = b.prefix_stats().parked_pages;
+    assert_eq!(
+        alloc,
+        free + parked,
+        "pages leaked at {threads} threads (beyond the parked prefixes)"
+    );
+    b.clear_prefix_cache();
+    let (alloc, free) = b.kv_pages();
+    assert_eq!(alloc, free, "pages leaked at {threads} threads after cache clear");
+    rep
+}
+
+fn assert_lifecycle_gates(
+    trace: &[Request],
+    page_cap: usize,
+    plan: &FaultPlan,
+    lc: LifecycleConfig,
+) -> LifecycleReport {
+    // Unconstrained fault-free reference: same prompts, no deadlines or
+    // cancels, no faults. Everything admissible completes here.
+    let mut plain = trace.to_vec();
+    for r in &mut plain {
+        r.deadline_s = f64::INFINITY;
+        r.cancel_s = f64::INFINITY;
+    }
+    let healthy = run_engine_lifecycle(&plain, 1, page_cap, &FaultPlan::none(), rounds_lc());
+    let reference: std::collections::HashMap<usize, Vec<u32>> = healthy
+        .outcomes
+        .into_iter()
+        .filter(|o| o.outcome == Outcome::Completed)
+        .map(|o| (o.id, o.tokens))
+        .collect();
+
+    let mut per_thread: Vec<Vec<(usize, Outcome, Vec<u32>)>> = Vec::new();
+    let mut last = None;
+    for threads in [1usize, 2, 4] {
+        let rep = run_engine_lifecycle(trace, threads, page_cap, plan, lc);
+        assert_eq!(
+            rep.summary.total(),
+            trace.len(),
+            "terminal accounting broken at {threads} threads"
+        );
+        for o in &rep.outcomes {
+            match reference.get(&o.id) {
+                Some(want) => {
+                    assert!(
+                        o.tokens.len() <= want.len(),
+                        "request {} emitted more tokens than the fault-free run",
+                        o.id
+                    );
+                    assert_eq!(
+                        &o.tokens[..],
+                        &want[..o.tokens.len()],
+                        "request {} diverged from the fault-free stream at {threads} threads",
+                        o.id
+                    );
+                    if o.outcome == Outcome::Completed {
+                        assert_eq!(
+                            &o.tokens, want,
+                            "survivor {} not bit-identical at {threads} threads",
+                            o.id
+                        );
+                    }
+                }
+                // Inadmissible in the reference too: it must never have
+                // produced a token under faults either.
+                None => assert!(o.tokens.is_empty(), "request {} has no reference", o.id),
+            }
+        }
+        per_thread.push(
+            rep.outcomes
+                .iter()
+                .map(|o| (o.id, o.outcome, o.tokens.clone()))
+                .collect(),
+        );
+        last = Some(rep);
+    }
+    assert_eq!(per_thread[0], per_thread[1], "outcomes diverged 1 vs 2 threads");
+    assert_eq!(per_thread[0], per_thread[2], "outcomes diverged 1 vs 4 threads");
+    last.unwrap()
+}
+
+#[test]
+fn pool_exhaustion_preempts_requeues_and_recovers() {
+    let mut tr = lifecycle_trace(6);
+    // A prompt long enough that its chunked prefill straddles the
+    // pressure window's onset (round 0 prefills 128 of 150 rows): the
+    // round-1 preflight must preempt it.
+    tr[0].input_tokens = 150;
+    let plan = FaultPlan::parse("pressure@1:12x6").unwrap();
+    let rep = assert_lifecycle_gates(&tr, 12, &plan, rounds_lc());
+    assert!(
+        rep.summary.preemptions >= 1,
+        "the pressure window must preempt the in-flight request"
+    );
+    assert_eq!(
+        rep.summary.completed,
+        tr.len(),
+        "every request recovers once pressure lifts"
+    );
+    assert!(
+        rep.outcomes
+            .iter()
+            .any(|o| o.preemptions > 0 && o.outcome == Outcome::Completed),
+        "a preempted request must requeue and complete"
+    );
+}
+
+#[test]
+fn cancel_mid_chunked_prefill_frees_the_slot_and_spares_survivors() {
+    let mut tr = lifecycle_trace(5);
+    tr[0].input_tokens = 150; // three 64-token chunks: cancels mid-prefill
+    let plan = FaultPlan::parse("cancel@1:0").unwrap();
+    let rep = assert_lifecycle_gates(&tr, 0, &plan, rounds_lc());
+    let o0 = &rep.outcomes[0];
+    assert_eq!(o0.outcome, Outcome::Cancelled);
+    assert!(o0.reason.contains("mid-prefill"), "{}", o0.reason);
+    assert!(o0.tokens.is_empty(), "cancelled before its first token");
+    assert_eq!(rep.summary.completed, tr.len() - 1);
+}
+
+#[test]
+fn deadline_expiry_mid_decode_keeps_a_clean_prefix() {
+    let mut tr = lifecycle_trace(5);
+    tr[0].input_tokens = 40; // prefill completes in the admission round
+    tr[0].output_tokens = 10;
+    tr[0].deadline_s = 4.0; // rounds: dies partway through decode
+    let rep = assert_lifecycle_gates(&tr, 0, &FaultPlan::none(), rounds_lc());
+    let o0 = &rep.outcomes[0];
+    assert_eq!(o0.outcome, Outcome::DeadlineExceeded);
+    assert!(o0.reason.contains("mid-decode"), "{}", o0.reason);
+    assert!(
+        !o0.tokens.is_empty() && o0.tokens.len() < 10,
+        "expired mid-stream, got {} tokens",
+        o0.tokens.len()
+    );
+    assert!(o0.metrics.is_some(), "it produced tokens, so it has metrics");
+    assert_eq!(rep.summary.completed, tr.len() - 1);
+}
+
+#[test]
+fn worker_panic_fails_one_request_and_spares_the_batch() {
+    let tr = lifecycle_trace(6);
+    let plan = FaultPlan::parse("panic@3").unwrap();
+    let rep = assert_lifecycle_gates(&tr, 0, &plan, rounds_lc());
+    assert_eq!(rep.summary.failed, 1, "exactly the poisoned request fails");
+    assert_eq!(rep.summary.completed, tr.len() - 1);
+    let f = rep
+        .outcomes
+        .iter()
+        .find(|o| o.outcome == Outcome::Failed)
+        .unwrap();
+    assert!(f.reason.contains("worker panic"), "{}", f.reason);
+}
+
+#[test]
+fn admission_rejects_impossible_requests_with_precise_reasons() {
+    let mut tr = lifecycle_trace(4);
+    tr[0].input_tokens = 30;
+    tr[1].input_tokens = 2000; // exceeds the 1024-token context window
+    tr[2].input_tokens = 150; // needs 3 KV pages; the cap is 2
+    tr[3].input_tokens = 40;
+    let rep = assert_lifecycle_gates(&tr, 2, &FaultPlan::none(), rounds_lc());
+    let o1 = &rep.outcomes[1];
+    assert_eq!(o1.outcome, Outcome::Rejected);
+    assert!(o1.reason.contains("exceeds context window"), "{}", o1.reason);
+    assert!(o1.retry_after_s.is_infinite(), "never-fits: do not retry");
+    let o2 = &rep.outcomes[2];
+    assert_eq!(o2.outcome, Outcome::Rejected);
+    assert!(o2.reason.contains("can never fit"), "{}", o2.reason);
+    assert_eq!(rep.summary.completed, 2);
+}
+
+#[test]
+fn generated_fault_plans_preserve_every_invariant() {
+    let tr = lifecycle_trace(8);
+    for seed in [1u64, 2, 3] {
+        let plan = FaultPlan::generate(seed, 16);
+        assert!(!plan.is_empty(), "seeded plans schedule events");
+        let rep = assert_lifecycle_gates(&tr, 16, &plan, rounds_lc());
+        assert_eq!(rep.summary.total(), tr.len(), "seed {seed}");
+    }
 }
 
 #[test]

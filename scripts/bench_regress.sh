@@ -17,19 +17,26 @@
 #                               zero-gather-alloc / zero-post-warmup-
 #                               plan-build gates
 #
-# Usage: scripts/bench_regress.sh [--quick] [THREADS]
+# Usage: scripts/bench_regress.sh [--quick] [--chaos] [THREADS]
 #   --quick  engine + serve benches only: skip the criterion-style
 #            figure benches (compiler_micro, fig2/fig3) — the CI loop
+#   --chaos  also replay the serving lifecycle under three seeded
+#            fault plans (pool exhaustion, worker panics, cancels,
+#            deadline storms); fails loudly on a leaked page, a missing
+#            terminal state, or a survivor token stream that diverges
+#            from the fault-free run
 #   THREADS  worker threads for the parallel runs (default: all cores)
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 QUICK=0
+CHAOS=0
 THREADS=0 # 0 = all available cores
 for arg in "$@"; do
   case "$arg" in
     --quick) QUICK=1 ;;
+    --chaos) CHAOS=1 ;;
     *) THREADS="$arg" ;;
   esac
 done
@@ -75,6 +82,24 @@ cargo run --release -- bench engine --threads "$THREADS"
 echo
 echo "== serve throughput: engine backend, chunking x layers matrix -> BENCH_serve_engine.json =="
 cargo run --release -- bench serve_engine
+
+if [ "$CHAOS" -eq 1 ]; then
+  echo
+  echo "== chaos: lifecycle invariants under seeded fault plans =="
+  # Three deterministic plans: two seeded schedules plus an explicit
+  # worst-case (pressure window + worker panic + cancel + deadline
+  # storm). `chaos` exits non-zero if any request misses its single
+  # terminal state, any KV page leaks, or any survivor's token stream
+  # diverges from the fault-free run.
+  if ! cargo run --release -- chaos --requests 24 --threads 2 \
+      --plans 'seed=1,seed=2,pressure@2:6x8;panic@3;cancel@5:1;storm@9:2'; then
+    echo >&2
+    echo "FATAL: lifecycle invariant violated under fault injection —" >&2
+    echo "       see the failing plan above; reproduce with" >&2
+    echo "       cargo run --release -- chaos --plans '<spec>'" >&2
+    exit 1
+  fi
+fi
 
 echo
 echo "wrote $(pwd)/BENCH_parallel_engine.json:"
