@@ -111,6 +111,7 @@ pub fn mask_creation_time(spec: &GpuSpec, s: usize) -> f64 {
         flops: 64 * points,             // vmapped mask_mod evaluation
         launches: 6,                    // the multi-kernel inspection path
         peak_workspace: points,
+        ..Counters::default()
     };
     spec.mask_host_s + kernel_time(spec, &c, Efficiency::new(0.015, 0.5))
 }

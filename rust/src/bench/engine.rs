@@ -10,7 +10,7 @@ use std::collections::HashMap;
 use crate::bench::harness::{bench_median_ms, json_f64, json_str, JsonArray};
 use crate::exec::simd::{self, SimdLevel};
 use crate::exec::{eval, execute_plan, execute_plan_par, Parallelism, Tensor};
-use crate::fusion::{plan, FusionMode, TileConfig};
+use crate::fusion::{blockmask_enabled, plan, set_blockmask_override, FusionMode, TileConfig};
 use crate::ir::{Graph, Op};
 use crate::variants::{build, paper_variants, AttnShape, Variant};
 
@@ -142,12 +142,14 @@ pub fn run_with(
             ("threads", par.num_threads.to_string()),
             ("topology", json_str(&topo)),
             ("bit_identical", identical.to_string()),
+            ("blockmask", blockmask_enabled().to_string()),
             ("seq", shape.seq.to_string()),
             ("batch", shape.batch.to_string()),
             ("heads_q", shape.heads_q.to_string()),
             ("head_dim", shape.head_dim.to_string()),
         ]);
     }
+    sparsity_sweep_into(&mut json, &shape, tile)?;
     microbench_into(&mut json, warmup, iters);
     let p = json.finish()?;
     println!(
@@ -156,6 +158,155 @@ pub fn run_with(
         par.num_threads,
         p.display()
     );
+    Ok(())
+}
+
+/// Block-sparsity sweep over a (window x seq-len) grid: each cell runs
+/// the fused executor dense (block masks forced off) and sparse (forced
+/// on) and gates the contract the planner's tile classes promise —
+/// outputs bit-identical to the dense run for every index-mask variant,
+/// `tiles_skipped > 0`, work and traffic never above dense, and the
+/// sparse run itself bit-stable at 1/2/4 threads. The threshold variant
+/// (`rectified`, runtime data-dependent mask) is gated on tolerance vs
+/// the unpruned run, with inputs crafted so the coarse pass provably
+/// prunes its last k-block. Results land in the JSON trajectory.
+fn sparsity_sweep_into(
+    json: &mut JsonArray,
+    base: &AttnShape,
+    tile: TileConfig,
+) -> anyhow::Result<()> {
+    println!("\n== block-sparsity sweep: sparse vs dense, 1/2/4 threads ==");
+    println!(
+        "{:<16} {:>5} {:>6} {:>9} {:>9} {:>12}",
+        "variant", "seq", "window", "visited", "skipped", "flops saved"
+    );
+    for &seq in &[base.seq / 2, base.seq] {
+        let mut cells: Vec<(Variant, usize)> = vec![
+            (Variant::DocumentMask, 0),
+            (Variant::PrefixLm { prefix: seq / 4 }, 0),
+            (Variant::Rectified { tau: 0.05 }, 0),
+        ];
+        for &w in &[seq / 8, seq / 4] {
+            cells.push((Variant::SlidingWindow { window: w }, w));
+        }
+        for (v, window) in cells {
+            let shape = AttnShape { seq, ..*base };
+            let g = build(v, &shape);
+            let mut inputs = inputs_for(&g, 11);
+            let threshold = matches!(v, Variant::Rectified { .. });
+            if threshold {
+                // Deterministic runtime mask: all-positive q against an
+                // all-ones first k-block makes every row live after the
+                // first tile; an all-zero last k-block scores exactly 0
+                // (< tau), so the coarse pass must prune it.
+                if let Some(q) = inputs.get_mut("q") {
+                    q.data.iter_mut().for_each(|x| *x = x.abs() + 0.5);
+                }
+                if let Some(k) = inputs.get_mut("k") {
+                    let r = k.shape.len();
+                    let d = k.shape[r - 1];
+                    let sk = k.shape[r - 2];
+                    let bk = tile.block_k.min(sk);
+                    for (j, x) in k.data.iter_mut().enumerate() {
+                        let s = (j / d) % sk;
+                        if s < bk {
+                            *x = 1.0;
+                        } else if s >= sk - bk {
+                            *x = 0.0;
+                        }
+                    }
+                }
+            }
+            let p = plan(&g, FusionMode::Flashlight);
+
+            set_blockmask_override(Some(false));
+            let (dense_out, dense_c) = execute_plan(&g, &p, &inputs, tile);
+            set_blockmask_override(Some(true));
+            let (sparse_out, sparse_c) = execute_plan(&g, &p, &inputs, tile);
+            // The sparse path must be bit-stable across thread counts
+            // (outputs *and* counters — skip decisions are data-, not
+            // schedule-, dependent).
+            let mut thread_stable = true;
+            for threads in [2usize, 4] {
+                let (o, c) = execute_plan_par(
+                    &g,
+                    &p,
+                    &inputs,
+                    tile,
+                    &Parallelism::with_threads(threads),
+                );
+                thread_stable &= o == sparse_out && c == sparse_c;
+            }
+            set_blockmask_override(None);
+            anyhow::ensure!(
+                thread_stable,
+                "{} seq={seq}: sparse run diverged across thread counts",
+                v.name()
+            );
+
+            if threshold {
+                let err = sparse_out[0].max_abs_diff(&dense_out[0]);
+                anyhow::ensure!(
+                    err < 1e-5,
+                    "{} seq={seq}: pruned run err {err} vs unpruned",
+                    v.name()
+                );
+            } else {
+                anyhow::ensure!(
+                    sparse_out == dense_out,
+                    "{} seq={seq}: sparse outputs not bit-identical to dense",
+                    v.name()
+                );
+            }
+            anyhow::ensure!(
+                sparse_c.tiles_skipped > 0,
+                "{} seq={seq}: expected skipped tiles, visited {} skipped {}",
+                v.name(),
+                sparse_c.tiles_visited,
+                sparse_c.tiles_skipped
+            );
+            anyhow::ensure!(
+                sparse_c.flops < dense_c.flops || threshold,
+                "{} seq={seq}: sparse flops {} not below dense {}",
+                v.name(),
+                sparse_c.flops,
+                dense_c.flops
+            );
+            anyhow::ensure!(
+                sparse_c.hbm_read <= dense_c.hbm_read
+                    && sparse_c.l2_read <= dense_c.l2_read
+                    && sparse_c.hbm_write == dense_c.hbm_write,
+                "{} seq={seq}: sparse traffic above dense",
+                v.name()
+            );
+
+            println!(
+                "{:<16} {:>5} {:>6} {:>9} {:>9} {:>12}",
+                v.name(),
+                seq,
+                window,
+                sparse_c.tiles_visited,
+                sparse_c.tiles_skipped,
+                sparse_c.flops_avoided
+            );
+            json.push_obj(&[
+                ("sweep", json_str("blocksparse")),
+                ("variant", json_str(v.name())),
+                ("seq", seq.to_string()),
+                ("window", window.to_string()),
+                ("blockmask", "true".to_string()),
+                ("tiles_visited", sparse_c.tiles_visited.to_string()),
+                ("tiles_skipped", sparse_c.tiles_skipped.to_string()),
+                ("flops_avoided", sparse_c.flops_avoided.to_string()),
+                ("bytes_skipped", sparse_c.bytes_skipped.to_string()),
+                ("dense_flops", dense_c.flops.to_string()),
+                ("sparse_flops", sparse_c.flops.to_string()),
+                ("dense_l2_read", dense_c.l2_read.to_string()),
+                ("sparse_l2_read", sparse_c.l2_read.to_string()),
+                ("bit_identical", (!threshold).to_string()),
+            ]);
+        }
+    }
     Ok(())
 }
 
@@ -280,5 +431,8 @@ mod tests {
         let s = std::fs::read_to_string(&path).unwrap();
         assert!(s.contains("\"variant\": \"causal\""));
         assert!(s.contains("\"bit_identical\": true"));
+        assert!(s.contains("\"blockmask\""));
+        assert!(s.contains("\"sweep\": \"blocksparse\""));
+        assert!(s.contains("\"tiles_skipped\""));
     }
 }

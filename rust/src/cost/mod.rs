@@ -126,7 +126,7 @@ mod tests {
             hbm_write: write,
             flops,
             launches,
-            peak_workspace: 0,
+            ..Counters::default()
         }
     }
 

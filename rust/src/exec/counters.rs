@@ -23,6 +23,18 @@ pub struct Counters {
     /// Peak extra workspace bytes alive at once (materialized
     /// intermediates for eager; tile buffers for fused).
     pub peak_workspace: u64,
+    /// Score k-tiles the tiled executor actually processed.
+    pub tiles_visited: u64,
+    /// Score k-tiles skipped by the block-sparse layer (statically
+    /// `Empty` tiles, or threshold-pruned tiles at runtime).
+    pub tiles_skipped: u64,
+    /// Flops the dense path would have spent on skipped tiles (QK^T,
+    /// softmax update, and PV work that never ran). Not part of
+    /// `flops`, which counts work actually performed.
+    pub flops_avoided: u64,
+    /// Bytes of K/V tile gathers elided by skipped tiles — the HBM/L2
+    /// traffic delta vs the dense run.
+    pub bytes_skipped: u64,
 }
 
 impl Counters {
@@ -43,6 +55,10 @@ impl Counters {
         self.flops += other.flops;
         self.launches += other.launches;
         self.peak_workspace = self.peak_workspace.max(other.peak_workspace);
+        self.tiles_visited += other.tiles_visited;
+        self.tiles_skipped += other.tiles_skipped;
+        self.flops_avoided += other.flops_avoided;
+        self.bytes_skipped += other.bytes_skipped;
     }
 
     pub fn read_elems(&mut self, n: usize) {
@@ -71,6 +87,10 @@ mod tests {
             flops: 100,
             launches: 1,
             peak_workspace: 64,
+            tiles_visited: 6,
+            tiles_skipped: 2,
+            flops_avoided: 40,
+            bytes_skipped: 16,
         };
         let b = Counters {
             hbm_read: 1,
@@ -79,6 +99,10 @@ mod tests {
             flops: 3,
             launches: 4,
             peak_workspace: 32,
+            tiles_visited: 1,
+            tiles_skipped: 3,
+            flops_avoided: 5,
+            bytes_skipped: 8,
         };
         a.add(&b);
         assert_eq!(a.hbm_read, 11);
@@ -87,5 +111,9 @@ mod tests {
         assert_eq!(a.peak_workspace, 64);
         assert_eq!(a.total_traffic(), 18);
         assert_eq!(a.total_with_l2(), 28);
+        assert_eq!(a.tiles_visited, 7);
+        assert_eq!(a.tiles_skipped, 5);
+        assert_eq!(a.flops_avoided, 45);
+        assert_eq!(a.bytes_skipped, 24);
     }
 }

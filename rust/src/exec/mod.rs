@@ -29,7 +29,7 @@ pub mod topology;
 
 pub use counters::Counters;
 pub use gemm::{batched_matmul, gemm_nn, gemm_nt, gemm_nt_packed, PackedB};
-pub use parallel::{parallel_map_with, Parallelism};
+pub use parallel::{parallel_map_with, parallel_map_with_weights, Parallelism};
 pub use pool::TilePool;
 pub use topology::Topology;
 pub use reference::{eager_counters, eval, eval_node, eval_pw, node_flops};

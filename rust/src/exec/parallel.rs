@@ -115,6 +115,29 @@ where
     runtime::map_with(par, n, init, f)
 }
 
+/// [`parallel_map_with`] with optional per-item scheduling weights:
+/// `Some(weights)` (one entry per item) cuts the per-domain shards by
+/// cumulative weight instead of item count, so launches whose items do
+/// very different amounts of work — block-sparse attention grids under
+/// a sliding-window mask, say — still balance across topology domains.
+/// Weighting changes shard boundaries only; results stay index-ordered
+/// and bit-identical to the unweighted (and sequential) path.
+pub fn parallel_map_with_weights<S, T, I, F>(
+    par: &Parallelism,
+    n: usize,
+    weights: Option<&[u64]>,
+    init: I,
+    f: F,
+) -> Vec<T>
+where
+    S: 'static,
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    runtime::map_with_weights(par, n, weights, init, f)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

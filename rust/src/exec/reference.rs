@@ -155,6 +155,22 @@ pub fn eval_node(node_op: &Op, shape: &[usize], operands: &[&Tensor]) -> Tensor 
             match (operands.len(), *op) {
                 (1, PwOp::Exp) => simd::vexp_append(&mut data, &operands[0].data),
                 (1, PwOp::Sigmoid) => simd::vsigmoid_append(&mut data, &operands[0].data),
+                // Uniform-condition select degenerates to a copy of one
+                // branch — bit-identical to the element loop (`Where` is
+                // `if c != 0.0 { a } else { b }` per element), and the
+                // eager-side analogue of the tiled executor's Full/Empty
+                // tile elision: masked score tensors are uniform over
+                // large mask-aligned spans.
+                (3, PwOp::Where) => {
+                    let cond = &operands[0].data;
+                    if cond.iter().all(|&c| c != 0.0) {
+                        data.extend_from_slice(&operands[1].data);
+                    } else if cond.iter().all(|&c| c == 0.0) {
+                        data.extend_from_slice(&operands[2].data);
+                    } else {
+                        pointwise_fill(&mut data, *op, operands, n);
+                    }
+                }
                 _ => pointwise_fill(&mut data, *op, operands, n),
             }
             Tensor::from_vec(shape, data)
@@ -355,6 +371,27 @@ mod tests {
         let g = b.finish(&[keep]);
         let (outs, _) = eval(&g, &HashMap::new());
         assert_eq!(outs[0].data, vec![1., 0., 0., 1., 1., 0., 1., 1., 1.]);
+    }
+
+    #[test]
+    fn where_uniform_cond_fast_path_is_bitwise() {
+        let a = Tensor::from_vec(&[4], vec![1.5, -2.0, 3.25, 0.0]);
+        let b = Tensor::from_vec(&[4], vec![-9.0, 0.5, 7.0, -1e30]);
+        for cond in [
+            vec![1.0f32, 1.0, 1.0, 1.0],
+            vec![0.0, 0.0, 0.0, 0.0],
+            vec![1.0, 0.0, 0.0, 1.0],
+        ] {
+            let c = Tensor::from_vec(&[4], cond);
+            let op = Op::Pointwise {
+                op: PwOp::Where,
+                inputs: vec![],
+            };
+            let got = eval_node(&op, &[4], &[&c, &a, &b]);
+            let mut want = Vec::new();
+            pointwise_fill(&mut want, PwOp::Where, &[&c, &a, &b], 4);
+            assert_eq!(got.data, want);
+        }
     }
 
     #[test]

@@ -490,6 +490,51 @@ fn build_shards(workers_per_domain: &[usize], n: usize) -> Vec<Shard> {
     shards
 }
 
+/// Shard `0..weights.len()` across domains proportionally to each
+/// domain's share of the *total weight* rather than the item count: cut
+/// points fall where the cumulative weight crosses each domain's
+/// worker-proportional target, so block-sparse launches (highly
+/// non-uniform per-item cost) still hand every domain a comparable
+/// amount of work. Contiguous, disjoint, covering; degenerate weights
+/// fall back to uniform sharding.
+fn build_shards_weighted(workers_per_domain: &[usize], weights: &[u64]) -> Vec<Shard> {
+    let n = weights.len();
+    let total: u128 = weights.iter().map(|&w| w as u128).sum();
+    let w_workers: usize = workers_per_domain.iter().sum();
+    if total == 0 || w_workers == 0 {
+        return build_shards(workers_per_domain, n);
+    }
+    let mut shards = Vec::with_capacity(workers_per_domain.len());
+    let mut start = 0usize;
+    let mut cum: u128 = 0;
+    let mut acc_workers = 0usize;
+    for (d, &wk) in workers_per_domain.iter().enumerate() {
+        acc_workers += wk;
+        let end = if d + 1 == workers_per_domain.len() {
+            // Last domain takes the remainder, guaranteeing coverage.
+            n
+        } else {
+            let target = total * acc_workers as u128 / w_workers as u128;
+            let mut end = start;
+            while end < n && cum < target {
+                cum += weights[end] as u128;
+                end += 1;
+            }
+            end
+        };
+        let tail = end.saturating_sub(wk * CLAIM_CHUNK).max(start);
+        shards.push(Shard {
+            start,
+            end,
+            tail_start: tail,
+            cursor: AtomicUsize::new(start),
+        });
+        start = end;
+    }
+    debug_assert_eq!(start, n);
+    shards
+}
+
 /// Drain every shard from `home` outward in ring order, running `run`
 /// on each claimed index. Own-domain claims come first; cross-domain
 /// stealing only begins once a shard is dry, and dry shards stay dry,
@@ -538,6 +583,28 @@ where
     I: Fn() -> S + Sync,
     F: Fn(&mut S, usize) -> T + Sync,
 {
+    map_with_topology_inner(topo, par, n, None, init, f)
+}
+
+/// [`map_with_topology`] with optional per-item scheduling weights:
+/// when `weights` is `Some` and covers every item, domain shards are
+/// cut by cumulative weight instead of item count (see
+/// [`build_shards_weighted`]). Results are index-ordered either way, so
+/// weighting affects load balance only — never outputs or merge order.
+fn map_with_topology_inner<S, T, I, F>(
+    topo: &Topology,
+    par: &Parallelism,
+    n: usize,
+    weights: Option<&[u64]>,
+    init: I,
+    f: F,
+) -> Vec<T>
+where
+    S: 'static,
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
     if n == 0 {
         return Vec::new();
     }
@@ -559,7 +626,10 @@ where
     }
 
     let per_domain = topo.assign_workers(workers);
-    let shards = build_shards(&per_domain, n);
+    let shards = match weights {
+        Some(w) if w.len() == n => build_shards_weighted(&per_domain, w),
+        _ => build_shards(&per_domain, n),
+    };
     // Worker ordinal -> home domain (contiguous ranges per domain).
     let mut home = Vec::with_capacity(workers);
     for (d, &c) in per_domain.iter().enumerate() {
@@ -596,6 +666,24 @@ where
     map_with_topology(topology().as_ref(), par, n, init, f)
 }
 
+/// [`map_with`] with optional per-item scheduling weights (weighted
+/// domain sharding under the process topology).
+pub fn map_with_weights<S, T, I, F>(
+    par: &Parallelism,
+    n: usize,
+    weights: Option<&[u64]>,
+    init: I,
+    f: F,
+) -> Vec<T>
+where
+    S: 'static,
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    map_with_topology_inner(topology().as_ref(), par, n, weights, init, f)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -618,6 +706,31 @@ mod tests {
             }
             assert_eq!(covered, n, "{wpd:?} n={n}");
         }
+    }
+
+    #[test]
+    fn weighted_shards_cover_and_balance_by_weight() {
+        // Skewed weights: the first half of the items carry almost all
+        // the work; an even worker split must give the first domain far
+        // fewer items than the second.
+        let weights: Vec<u64> = (0..100).map(|i| if i < 50 { 99 } else { 1 }).collect();
+        let shards = build_shards_weighted(&[2, 2], &weights);
+        let mut covered = 0usize;
+        for s in &shards {
+            assert_eq!(s.start, covered);
+            assert!(s.start <= s.tail_start && s.tail_start <= s.end);
+            covered = s.end;
+        }
+        assert_eq!(covered, 100);
+        // ~half the total weight sits in the first ~25 items.
+        assert!(shards[0].end < 35, "weighted cut at {}", shards[0].end);
+
+        // Degenerate weights fall back to uniform sharding.
+        let zero = build_shards_weighted(&[2, 2], &vec![0u64; 10]);
+        assert_eq!(zero.len(), 2);
+        assert_eq!(zero.last().unwrap().end, 10);
+        let uniform = build_shards_weighted(&[1, 1], &vec![7u64; 8]);
+        assert_eq!(uniform[0].end, 4);
     }
 
     #[test]

@@ -46,13 +46,17 @@
 
 use std::collections::{HashMap, HashSet};
 use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::exec::gemm;
-use crate::exec::parallel::{parallel_map_with, Parallelism};
+use crate::exec::parallel::{parallel_map_with_weights, Parallelism};
 use crate::exec::pool::TilePool;
 use crate::exec::reference::{iota_fill, pointwise_fill, reduce_rows_into};
-use crate::exec::{eval_node, eval_pw, node_flops, Counters, Tensor};
-use crate::fusion::{GroupKind, OnlineRowState, Pipeline, Plan, TileConfig};
+use crate::exec::{eval_node, eval_pw, node_flops, Counters, Tensor, NEG_INF};
+use crate::fusion::{
+    blockmask_enabled, classify_block_mask, BlockMask, GroupKind, MaskKind, OnlineRowState,
+    Pipeline, Plan, TileClass, TileConfig,
+};
 use crate::grid::{LogicalGrid, TiledDim};
 use crate::ir::{Graph, NodeId, Op};
 use crate::sketch::{analyze, DimAnalysis};
@@ -359,6 +363,22 @@ struct BlockOut {
     tile: Tensor,
     touches: Vec<Touch>,
     flops: u64,
+    tiles_visited: u64,
+    tiles_skipped: u64,
+    flops_avoided: u64,
+    bytes_skipped: u64,
+}
+
+/// Resolved block-mask strategy for one pipeline run.
+enum RunMask {
+    /// Classified tile classes (index masks): skip `Empty` tiles, elide
+    /// the mask/fill ops on `Full` tiles by evaluating `value` directly.
+    Static { bm: Arc<BlockMask>, value: NodeId },
+    /// Data-dependent threshold (`keep = score >= tau`): a coarse pass
+    /// scores each raw tile, and the exact pass is pruned at runtime
+    /// when the tile maximum falls below `tau` and every row of the
+    /// q-tile is already live (the bitwise no-op condition).
+    Dynamic { value: NodeId, tau: f32 },
 }
 
 /// Execute one (outer…, q-tile) program instance of a pipeline group.
@@ -368,6 +388,7 @@ fn run_block(
     pipe: &Pipeline,
     meta: &PipeMeta,
     grid: &LogicalGrid,
+    mask: Option<&RunMask>,
     block: usize,
     scratch: &mut WorkerScratch,
     tag: u64,
@@ -397,6 +418,20 @@ fn run_block(
     }
     score_region[meta.q_ax_s] = (qt, cq);
 
+    // Static tile classes for this block's (dep, q-tile) row. `dep_index`
+    // reads only the outer (non-q/kv) axes of the region, which are
+    // already pinned above.
+    let static_mask = match mask {
+        Some(RunMask::Static { bm, value }) => {
+            Some((bm, *value, bm.dep_index(&score_region), coords[q_dim]))
+        }
+        _ => None,
+    };
+    let mut tiles_visited = 0u64;
+    let mut tiles_skipped = 0u64;
+    let mut flops_avoided = 0u64;
+    let mut bytes_skipped = 0u64;
+
     // Online state per q row (worker-resident, reset per block).
     if meta.has_sm {
         for st in states.iter_mut().take(cq) {
@@ -419,9 +454,54 @@ fn run_block(
     let mut kt = 0;
     while kt < meta.sk {
         let ck = meta.bk.min(meta.sk - kt);
+
+        // Which node yields this k-tile's scores: the full masked score
+        // graph by default, the unmasked `value` on provably-Full tiles
+        // (Where(keep, v, fill) == v bitwise when keep is 1 everywhere).
+        let mut score_node = pipe.score_root;
+        if let Some((bm, value, dep, qti)) = &static_mask {
+            match bm.class(*dep, *qti, kt / meta.bk) {
+                TileClass::Empty => {
+                    // Provably all-masked, and no q-row of this tile is
+                    // dead everywhere (classification demotes such tiles
+                    // to Partial): the dense online-softmax update is a
+                    // bitwise no-op here, so skip the tile without
+                    // gathering K or V.
+                    tiles_skipped += 1;
+                    flops_avoided += (2 * cq * ck * meta.d_out
+                        + 4 * cq * ck
+                        + 2 * cq * ck * meta.kdim) as u64;
+                    bytes_skipped += (4 * ck * (meta.kdim + meta.d_out)) as u64;
+                    kt += ck;
+                    continue;
+                }
+                TileClass::Full => score_node = *value,
+                TileClass::Partial => {}
+            }
+        }
+
         let mut sr = score_region.clone();
         sr[meta.kv_ax_s] = (kt, ck);
-        let s_tile = ctx.eval_region(pipe.score_root, &sr);
+
+        // Runtime data-dependent mask: a coarse first pass scores the
+        // raw tile; the exact pass is pruned when the tile max is below
+        // tau *and* every row already has a live column (fresh rows have
+        // m == -inf and always fail the guard, so the first tile of each
+        // row is never pruned and the finalize path stays dense-exact).
+        if let Some(RunMask::Dynamic { value, tau }) = mask {
+            let raw = ctx.eval_region(*value, &sr);
+            let tile_max = raw.data.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+            ctx.pool.recycle_shared(raw);
+            if tile_max < *tau && states.iter().take(cq).all(|st| st.m > NEG_INF) {
+                tiles_skipped += 1;
+                flops_avoided += (2 * cq * ck * meta.d_out + 4 * cq * ck) as u64;
+                bytes_skipped += (4 * ck * meta.d_out) as u64;
+                kt += ck;
+                continue;
+            }
+        }
+
+        let s_tile = ctx.eval_region(score_node, &sr);
         // v tile: [.., ck, d]
         let vr: Region = meta
             .v_shape
@@ -461,10 +541,17 @@ fn run_block(
         }
         ctx.pool.recycle_shared(s_tile);
         ctx.pool.recycle_shared(v_tile);
+        tiles_visited += 1;
         kt += ck;
     }
-    // m1 flops for this tile row (q-block x full kv).
-    ctx.flops += (2 * cq * meta.sk * meta.kdim) as u64;
+    // m1 flops for this tile row: q-block x live kv. Under a static mask
+    // only visited k elements pay the QK^T cost; dynamic pruning runs the
+    // coarse pass over every tile, so it still pays the full row.
+    let m1_k = match &static_mask {
+        Some((bm, _, dep, qti)) => bm.live_k_elems(*dep, *qti),
+        None => meta.sk,
+    };
+    ctx.flops += (2 * cq * m1_k * meta.kdim) as u64;
 
     // Finalize the accumulator -> pin as m2's tile value.
     let acc: Vec<f32> = if meta.has_sm {
@@ -521,6 +608,10 @@ fn run_block(
         tile,
         touches,
         flops,
+        tiles_visited,
+        tiles_skipped,
+        flops_avoided,
+        bytes_skipped,
     }
 }
 
@@ -555,6 +646,8 @@ struct PipelineRun<'a> {
     pipe: &'a Pipeline,
     meta: PipeMeta,
     grid: LogicalGrid,
+    /// Block-sparse strategy for this run (None = dense).
+    mask: Option<RunMask>,
     /// Scopes the workers' packed-panel caches to this plan within this
     /// launch: `(process-unique launch tag << 20) | job index`. Worker
     /// pools outlive launches, so the tag must never repeat — a stale
@@ -570,6 +663,7 @@ impl<'a> PipelineRun<'a> {
         tile: TileConfig,
         inputs: &'a HashMap<String, Tensor>,
         values: &'a HashMap<NodeId, Tensor>,
+        precomputed: Option<&Arc<BlockMask>>,
         tag: u64,
     ) -> Self {
         let out_shape = g.node(pipe.out).shape.clone();
@@ -674,11 +768,52 @@ impl<'a> PipelineRun<'a> {
         dims.push(TiledDim { size: sq, tile: bq });
         let grid = LogicalGrid::new(dims);
 
+        // Resolve the block-sparse strategy. The cached per-plan mask is
+        // reused only when its geometry matches the clamped tile config;
+        // otherwise (or for input-dependent index masks, e.g. document
+        // ids) classification runs here against this launch's inputs.
+        let mask = if meta.has_sm && blockmask_enabled() {
+            pipe.mask.as_ref().and_then(|info| match &info.kind {
+                MaskKind::Threshold { tau } => Some(RunMask::Dynamic {
+                    value: info.value,
+                    tau: *tau,
+                }),
+                MaskKind::Index { .. } => precomputed
+                    .filter(|m| {
+                        m.block_q == bq
+                            && m.block_k == bk
+                            && m.sq == meta.score_shape[meta.q_ax_s]
+                            && m.sk == sk
+                    })
+                    .cloned()
+                    .or_else(|| {
+                        classify_block_mask(
+                            g,
+                            info,
+                            &meta.score_shape,
+                            meta.q_ax_s,
+                            meta.kv_ax_s,
+                            bq,
+                            bk,
+                            inputs,
+                        )
+                        .map(Arc::new)
+                    })
+                    .map(|bm| RunMask::Static {
+                        bm,
+                        value: info.value,
+                    }),
+            })
+        } else {
+            None
+        };
+
         PipelineRun {
             sh: PipelineShared { g, inputs, values },
             pipe,
             meta,
             grid,
+            mask,
             tag,
         }
     }
@@ -693,10 +828,40 @@ impl<'a> PipelineRun<'a> {
             self.pipe,
             &self.meta,
             &self.grid,
+            self.mask.as_ref(),
             block,
             scratch,
             self.tag,
         )
+    }
+
+    /// True when this run's static mask makes per-block work non-uniform
+    /// enough that weighted sharding pays off.
+    fn is_skewed(&self) -> bool {
+        matches!(&self.mask, Some(RunMask::Static { bm, .. }) if bm.skipped_tiles() > 0)
+    }
+
+    /// Scheduling weight of one grid block: rows x live k elements
+    /// (the dominant per-block cost). Dense and dynamic runs are
+    /// uniform at `cq * sk`. Never zero, so coverage is preserved.
+    fn block_weight(&self, block: usize) -> u64 {
+        let coords = self.grid.delinearize(block);
+        let q_dim = coords.len() - 1;
+        let (_, cq) = self.grid.tile_range(q_dim, coords[q_dim]);
+        let live_k = match &self.mask {
+            Some(RunMask::Static { bm, .. }) => {
+                let mut region: Region =
+                    self.meta.score_shape.iter().map(|&s| (0, s)).collect();
+                for (ax_s, slot) in self.meta.score_outer_map.iter().enumerate() {
+                    if let Some(i) = slot {
+                        region[ax_s] = (coords[*i], 1);
+                    }
+                }
+                bm.live_k_elems(bm.dep_index(&region), coords[q_dim]).max(1)
+            }
+            _ => self.meta.sk,
+        };
+        (cq * live_k) as u64
     }
 
     /// Deterministic merge in block (= sequential iteration) order, with
@@ -714,6 +879,10 @@ impl<'a> PipelineRun<'a> {
                 }
             }
             counters.flops += b.flops;
+            counters.tiles_visited += b.tiles_visited;
+            counters.tiles_skipped += b.tiles_skipped;
+            counters.flops_avoided += b.flops_avoided;
+            counters.bytes_skipped += b.bytes_skipped;
             let n = b.tile.numel();
             scatter_tile(&mut out, &b.out_region, &b.tile);
             counters.write_elems(n);
@@ -908,6 +1077,10 @@ pub struct PlanJob<'a> {
     pub tile: TileConfig,
     pub analysis: Option<&'a DimAnalysis>,
     pub consumers: Option<&'a [Vec<NodeId>]>,
+    /// Plan-cache precomputed block masks, one slot per plan group
+    /// (`None` entries and absent slices fall back to per-launch
+    /// classification inside [`PipelineRun`]).
+    pub block_masks: Option<&'a [Option<Arc<BlockMask>>]>,
 }
 
 /// Panic payload re-raised by [`execute_plans_batched`] when a worker
@@ -944,6 +1117,7 @@ impl<'a> PlanJob<'a> {
             tile,
             analysis: None,
             consumers: None,
+            block_masks: None,
         }
     }
 
@@ -960,6 +1134,7 @@ impl<'a> PlanJob<'a> {
             tile: entry.tile,
             analysis: Some(&entry.analysis),
             consumers: Some(&entry.consumers),
+            block_masks: Some(&entry.block_masks),
         }
     }
 }
@@ -969,7 +1144,7 @@ impl<'a> PlanJob<'a> {
 /// Per-plan group order is preserved (groups may depend on earlier
 /// groups' materialized values), but whenever multiple plans are ready at
 /// a pipeline group, *all* their grid blocks become tagged work items
-/// `(plan, block)` in a single [`parallel_map_with`] launch — the
+/// `(plan, block)` in a single [`parallel_map_with_weights`] launch — the
 /// cross-request grid parallelism the serving engine's batched decode
 /// needs, where each individual plan may have too few blocks to fill the
 /// machine. Single-kernel groups run on the scheduler thread through a
@@ -1072,6 +1247,10 @@ pub fn execute_plans_batched(
                         jobs[j].tile,
                         jobs[j].inputs,
                         &values[j],
+                        jobs[j]
+                            .block_masks
+                            .and_then(|ms| ms.get(next_group[j]))
+                            .and_then(|o| o.as_ref()),
                         (launch_tag << 20) | j as u64,
                     )
                 })
@@ -1083,6 +1262,18 @@ pub fn execute_plans_batched(
                 total += r.n_blocks();
             }
             offsets.push(total);
+            // Size work items by live k-tiles so topology shards stay
+            // balanced under block-sparse skew (a sliding-window q-tile
+            // near the diagonal does a fraction of a dense tile's work).
+            // Uniform launches pass no weights and keep the cheap path.
+            let weights: Option<Vec<u64>> = runs.iter().any(|r| r.is_skewed()).then(|| {
+                (0..total)
+                    .map(|item| {
+                        let ri = offsets.partition_point(|&o| o <= item) - 1;
+                        runs[ri].block_weight(item - offsets[ri])
+                    })
+                    .collect()
+            });
             // A worker panic inside the launch arrives attributed to a
             // work item; translate the item to the owning job and re-
             // raise as a BatchPanic so the serving layer can fail just
@@ -1091,10 +1282,16 @@ pub fn execute_plans_batched(
             // a launch fully succeeds.
             let blocks: Vec<BlockOut> = match std::panic::catch_unwind(
                 std::panic::AssertUnwindSafe(|| {
-                    parallel_map_with(par, total, WorkerScratch::new, |ws, item| {
-                        let ri = offsets.partition_point(|&o| o <= item) - 1;
-                        runs[ri].run_block(item - offsets[ri], ws)
-                    })
+                    parallel_map_with_weights(
+                        par,
+                        total,
+                        weights.as_deref(),
+                        WorkerScratch::new,
+                        |ws, item| {
+                            let ri = offsets.partition_point(|&o| o <= item) - 1;
+                            runs[ri].run_block(item - offsets[ri], ws)
+                        },
+                    )
                 }),
             ) {
                 Ok(b) => b,

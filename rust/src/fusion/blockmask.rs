@@ -1,0 +1,657 @@
+//! Block-sparse tile classification: FlexAttention-style `BlockMask`.
+//!
+//! Masked attention variants neutralize dead scores with a `-1e30` fill
+//! inside a `Where`; the tiled executor then visits every k-tile and
+//! relies on the exact-zero `exp` skip to cancel the dead work. This
+//! module recovers the structure *before* execution: the planner hands
+//! us the `Where` at the score root, we prove its condition is a pure
+//! function of indices (plus optional side inputs like document ids),
+//! and we classify every (q-tile, k-tile) cell of the score grid as
+//!
+//! * `Full`    — every position kept: the executor evaluates the score
+//!               subgraph *under* the `Where` directly (no condition
+//!               eval, no fill),
+//! * `Empty`   — every position masked: the executor skips the tile
+//!               outright (no gather, no GEMM, no softmax update),
+//! * `Partial` — mixed: the dense masked path runs unchanged.
+//!
+//! **Bit-identity contract.** Skipping an `Empty` tile must leave the
+//! online-softmax state of every row in the q-tile bitwise unchanged
+//! relative to the dense path. A dense pass over an all-masked tile
+//! performs `m' = max(m, -1e30)`, `alpha = exp(m - m')`, `p = exp(-1e30
+//! - m')`: once a row has seen any live position (`m > -1e30`), `m' ==
+//! m`, `alpha == 1.0` exactly, and `p` underflows to exactly `0.0`
+//! (`simd::exp_f32` pins inputs below its cutoff), so the update is a
+//! bitwise no-op. A row with *no* live position anywhere never takes
+//! that form — its state replays garbage-cancellation arithmetic the
+//! sparse path would have to reproduce — so [`classify`] demotes every
+//! `Empty` tile of a q-tile containing a fully-dead row to `Partial`.
+//! With that demotion, sparse execution is *unconditionally* bit-
+//! identical to dense.
+//!
+//! **Data-dependent masks.** `Variant::Rectified`-style thresholding
+//! (`keep = score >= tau`) cannot be classified statically; [`extract`]
+//! reports it as [`MaskKind::Threshold`] and the executor prunes at
+//! runtime: it evaluates the raw score tile (a coarse first pass over
+//! the exact scores), and skips the softmax/PV work when the tile
+//! maximum falls below `tau` *and* every row is already live — the same
+//! no-op proof as above, decided per tile from the data.
+//!
+//! `FLASHLIGHT_BLOCKMASK=0|off` disables the whole layer (dense
+//! fallback), resolved once per process like `FLASHLIGHT_SIMD`; tests
+//! and benches flip a thread-local override for in-process A/B runs.
+
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::sync::OnceLock;
+
+use crate::exec::{eval_pw, Tensor, NEG_INF};
+use crate::ir::{CmpOp, Graph, NodeId, Op, PwOp};
+
+/// Deepest score rank the classifier's fixed-size coordinate buffers
+/// support (attention scores are rank 5; headroom for exotic variants).
+const MAX_RANK: usize = 8;
+
+/// Predicate evaluations (`n_dep_combos * sq * sk`) past which
+/// classification falls back to dense — keeps plan-time cost bounded on
+/// pathological shapes.
+const CLASSIFY_CELL_CAP: usize = 1 << 26;
+
+/// Class of one (q-tile, k-tile) cell of the score grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileClass {
+    /// Every position kept: elide the mask/fill ops.
+    Full,
+    /// Mixed: run the dense masked path.
+    Partial,
+    /// Every position masked: skip the tile outright.
+    Empty,
+}
+
+/// How the mask decides which positions live.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MaskKind {
+    /// Pure function of indices plus the named side inputs (empty for
+    /// causal/sliding-window/prefix-LM; document ids / serving lengths
+    /// otherwise). Classifiable whenever those inputs are at hand.
+    Index { input_deps: Vec<String> },
+    /// `keep = score >= tau`: data-dependent, prunable only at runtime
+    /// from the scores themselves.
+    Threshold { tau: f32 },
+}
+
+/// A score-root `Where` the planner proved maskable: `cond` selects
+/// live positions, `value` is the unmasked score subgraph, the fill is
+/// the `-1e30` sentinel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MaskInfo {
+    pub cond: NodeId,
+    pub value: NodeId,
+    pub kind: MaskKind,
+}
+
+impl MaskInfo {
+    /// True when the predicate needs no runtime inputs at all — the
+    /// plan cache can classify it once per shape bucket.
+    pub fn is_input_free(&self) -> bool {
+        matches!(&self.kind, MaskKind::Index { input_deps } if input_deps.is_empty())
+    }
+}
+
+/// Tile classes for one score grid, per combination of the "dep" axes
+/// (axes besides q/kv the predicate varies along — e.g. batch for
+/// document masks; empty for index-only templates).
+#[derive(Debug, Clone)]
+pub struct BlockMask {
+    pub block_q: usize,
+    pub block_k: usize,
+    pub sq: usize,
+    pub sk: usize,
+    pub n_q_tiles: usize,
+    pub n_k_tiles: usize,
+    /// Score-space axes the predicate varies along besides q/kv.
+    pub dep_axes: Vec<usize>,
+    dep_sizes: Vec<usize>,
+    /// `[(dep * n_q_tiles + qt) * n_k_tiles + kt]`.
+    classes: Vec<TileClass>,
+}
+
+impl BlockMask {
+    pub fn n_deps(&self) -> usize {
+        self.dep_sizes.iter().product::<usize>().max(1)
+    }
+
+    pub fn class(&self, dep: usize, qt: usize, kt: usize) -> TileClass {
+        self.classes[(dep * self.n_q_tiles + qt) * self.n_k_tiles + kt]
+    }
+
+    /// Dep-combination index of a block whose score-space region starts
+    /// are `region[ax].0` (grid outer axes carry tile size 1, so the
+    /// start *is* the coordinate).
+    pub fn dep_index(&self, region: &[(usize, usize)]) -> usize {
+        let mut idx = 0usize;
+        for (i, &ax) in self.dep_axes.iter().enumerate() {
+            idx = idx * self.dep_sizes[i] + region[ax].0.min(self.dep_sizes[i] - 1);
+        }
+        idx
+    }
+
+    fn ck(&self, kt: usize) -> usize {
+        self.block_k.min(self.sk - kt * self.block_k)
+    }
+
+    /// Live (non-`Empty`) k elements for one q-tile row of one dep
+    /// combination — the executor's per-block work estimate.
+    pub fn live_k_elems(&self, dep: usize, qt: usize) -> usize {
+        (0..self.n_k_tiles)
+            .filter(|&kt| self.class(dep, qt, kt) != TileClass::Empty)
+            .map(|kt| self.ck(kt))
+            .sum()
+    }
+
+    /// Sum of [`Self::live_k_elems`] over every (dep, q-tile) row: what
+    /// the analytic traffic model charges K/V re-reads against instead
+    /// of `n_q_tiles * sk`.
+    pub fn visited_k_elems(&self) -> u64 {
+        let mut total = 0u64;
+        for dep in 0..self.n_deps() {
+            for qt in 0..self.n_q_tiles {
+                total += self.live_k_elems(dep, qt) as u64;
+            }
+        }
+        total
+    }
+
+    /// K elements belonging to k-tiles live for *some* (dep, q-tile) —
+    /// the compulsory first-touch footprint of the K/V operands.
+    pub fn touched_k_elems(&self) -> usize {
+        (0..self.n_k_tiles)
+            .filter(|&kt| {
+                (0..self.n_deps()).any(|dep| {
+                    (0..self.n_q_tiles).any(|qt| self.class(dep, qt, kt) != TileClass::Empty)
+                })
+            })
+            .map(|kt| self.ck(kt))
+            .sum()
+    }
+
+    /// Number of `Empty` cells across every dep combination.
+    pub fn skipped_tiles(&self) -> u64 {
+        self.classes.iter().filter(|&&c| c == TileClass::Empty).count() as u64
+    }
+}
+
+/// Strip explicit `Broadcast` wrappers (the graph builder inserts them
+/// whenever operand shapes differ).
+fn peel_broadcast(g: &Graph, mut id: NodeId) -> NodeId {
+    while let Op::Broadcast { input } = &g.node(id).op {
+        id = *input;
+    }
+    id
+}
+
+/// True iff the subgraph under `id` is a pure function of indices,
+/// constants, and external inputs (collected into `deps`) — no matmul
+/// or reduction, so a scalar interpreter can evaluate it per position.
+fn index_only(g: &Graph, id: NodeId, deps: &mut Vec<String>) -> bool {
+    match &g.node(id).op {
+        Op::Const { .. } | Op::Iota { .. } => true,
+        Op::Input { name } => {
+            deps.push(name.clone());
+            true
+        }
+        Op::Broadcast { input } | Op::Slice { input, .. } => index_only(g, *input, deps),
+        Op::Pointwise { inputs, .. } => inputs.iter().all(|&i| index_only(g, i, deps)),
+        Op::Matmul { .. } | Op::Reduce { .. } => false,
+    }
+}
+
+/// Mark which axes the value of `id` can vary along. Conservative: an
+/// unknown construct marks every axis (more dep combinations scanned,
+/// never a wrong share).
+fn varies_along(g: &Graph, id: NodeId, axes: &mut [bool]) {
+    let node = g.node(id);
+    match &node.op {
+        Op::Const { .. } => {}
+        Op::Iota { axis } => {
+            if *axis < axes.len() {
+                axes[*axis] = true;
+            }
+        }
+        Op::Input { .. } => {
+            for (ax, &sz) in node.shape.iter().enumerate() {
+                if sz > 1 && ax < axes.len() {
+                    axes[ax] = true;
+                }
+            }
+        }
+        Op::Broadcast { input } | Op::Slice { input, .. } => varies_along(g, *input, axes),
+        Op::Pointwise { inputs, .. } => {
+            for &i in inputs {
+                varies_along(g, i, axes);
+            }
+        }
+        Op::Matmul { .. } | Op::Reduce { .. } => {
+            for a in axes.iter_mut() {
+                *a = true;
+            }
+        }
+    }
+}
+
+/// Evaluate an index-only predicate subgraph at one score coordinate.
+pub(crate) fn eval_index_expr(
+    g: &Graph,
+    id: NodeId,
+    coords: &[usize],
+    inputs: &HashMap<String, Tensor>,
+) -> f32 {
+    let node = g.node(id);
+    match &node.op {
+        Op::Const { value } => *value,
+        Op::Iota { axis } => coords[*axis] as f32,
+        Op::Input { name } => inputs[name].at_broadcast(coords),
+        Op::Broadcast { input } => {
+            let child = g.node(*input);
+            let mut c = [0usize; MAX_RANK];
+            c[..coords.len()].copy_from_slice(coords);
+            for (ax, &sz) in child.shape.iter().enumerate() {
+                if sz == 1 {
+                    c[ax] = 0;
+                }
+            }
+            eval_index_expr(g, *input, &c[..coords.len()], inputs)
+        }
+        Op::Slice { input, axis, start, .. } => {
+            let mut c = [0usize; MAX_RANK];
+            c[..coords.len()].copy_from_slice(coords);
+            c[*axis] += *start;
+            eval_index_expr(g, *input, &c[..coords.len()], inputs)
+        }
+        Op::Pointwise { op, inputs: pins } => {
+            let mut args = [0f32; 3];
+            for (k, &i) in pins.iter().enumerate() {
+                args[k] = eval_index_expr(g, i, coords, inputs);
+            }
+            eval_pw(*op, &args[..pins.len()])
+        }
+        Op::Matmul { .. } | Op::Reduce { .. } => {
+            unreachable!("index-only predicates never contain matmul/reduce")
+        }
+    }
+}
+
+/// Recognize a maskable score root: `Where(cond, value, -1e30)` whose
+/// condition is either index-only ([`MaskKind::Index`]) or a `score >=
+/// tau` threshold on the value itself ([`MaskKind::Threshold`]).
+/// Anything else (including fills other than the `-1e30` sentinel, for
+/// which the skip proof does not hold) returns `None` — dense path.
+pub fn extract(g: &Graph, score_root: NodeId) -> Option<MaskInfo> {
+    let Op::Pointwise { op: PwOp::Where, inputs } = &g.node(score_root).op else {
+        return None;
+    };
+    let (cond, value, fill) = (inputs[0], inputs[1], inputs[2]);
+    match g.node(peel_broadcast(g, fill)).op {
+        Op::Const { value: f } if f == NEG_INF => {}
+        _ => return None,
+    }
+    let cond_src = peel_broadcast(g, cond);
+    // Threshold check first: `Ge(score, tau)` would otherwise fail the
+    // index walk at its matmul and lose the runtime-prunable kind.
+    if let Op::Pointwise { op: PwOp::Cmp(CmpOp::Ge), inputs: cins } = &g.node(cond_src).op {
+        if peel_broadcast(g, cins[0]) == peel_broadcast(g, value) {
+            if let Op::Const { value: tau } = g.node(peel_broadcast(g, cins[1])).op {
+                return Some(MaskInfo {
+                    cond,
+                    value,
+                    kind: MaskKind::Threshold { tau },
+                });
+            }
+        }
+    }
+    let mut deps = Vec::new();
+    if index_only(g, cond_src, &mut deps) {
+        deps.sort();
+        deps.dedup();
+        return Some(MaskInfo {
+            cond,
+            value,
+            kind: MaskKind::Index { input_deps: deps },
+        });
+    }
+    None
+}
+
+/// Classify every (q-tile, k-tile) cell of the score grid under an
+/// index mask by brute-force evaluation of the predicate, with the
+/// fully-dead-row demotion described in the module docs. `None` when
+/// the mask is data-dependent, a named side input is missing from
+/// `inputs`, or the scan would exceed [`CLASSIFY_CELL_CAP`].
+#[allow(clippy::too_many_arguments)]
+pub fn classify(
+    g: &Graph,
+    info: &MaskInfo,
+    score_shape: &[usize],
+    q_ax: usize,
+    kv_ax: usize,
+    block_q: usize,
+    block_k: usize,
+    inputs: &HashMap<String, Tensor>,
+) -> Option<BlockMask> {
+    let MaskKind::Index { input_deps } = &info.kind else {
+        return None;
+    };
+    if !input_deps.iter().all(|n| inputs.contains_key(n)) {
+        return None;
+    }
+    let rank = score_shape.len();
+    if rank > MAX_RANK || q_ax >= rank || kv_ax >= rank || q_ax == kv_ax {
+        return None;
+    }
+    let (sq, sk) = (score_shape[q_ax], score_shape[kv_ax]);
+    if sq == 0 || sk == 0 {
+        return None;
+    }
+    let bq = block_q.max(1).min(sq);
+    let bk = block_k.max(1).min(sk);
+    let (n_q, n_k) = (sq.div_ceil(bq), sk.div_ceil(bk));
+
+    let mut varies = [false; MAX_RANK];
+    varies_along(g, info.cond, &mut varies[..rank]);
+    let mut dep_axes = Vec::new();
+    let mut dep_sizes = Vec::new();
+    for (ax, &sz) in score_shape.iter().enumerate() {
+        if ax != q_ax && ax != kv_ax && varies[ax] && sz > 1 {
+            dep_axes.push(ax);
+            dep_sizes.push(sz);
+        }
+    }
+    let n_dep = dep_sizes.iter().product::<usize>().max(1);
+    if n_dep.saturating_mul(sq).saturating_mul(sk) > CLASSIFY_CELL_CAP {
+        return None;
+    }
+
+    let mut classes = vec![TileClass::Partial; n_dep * n_q * n_k];
+    let mut kept = vec![0u32; n_q * n_k];
+    let mut row_live = vec![false; sq];
+    let mut coords = [0usize; MAX_RANK];
+    for dep in 0..n_dep {
+        let mut rem = dep;
+        for i in (0..dep_axes.len()).rev() {
+            coords[dep_axes[i]] = rem % dep_sizes[i];
+            rem /= dep_sizes[i];
+        }
+        kept.iter_mut().for_each(|c| *c = 0);
+        row_live.iter_mut().for_each(|r| *r = false);
+        for qi in 0..sq {
+            coords[q_ax] = qi;
+            for ki in 0..sk {
+                coords[kv_ax] = ki;
+                if eval_index_expr(g, info.cond, &coords[..rank], inputs) != 0.0 {
+                    kept[(qi / bq) * n_k + ki / bk] += 1;
+                    row_live[qi] = true;
+                }
+            }
+        }
+        for qt in 0..n_q {
+            let cq = bq.min(sq - qt * bq);
+            // A q-tile holding a row with no live key anywhere must
+            // replay the dense garbage-cancellation arithmetic exactly:
+            // demote its Empty tiles to Partial (see module docs).
+            let has_dead_row = (qt * bq..qt * bq + cq).any(|q| !row_live[q]);
+            for kt in 0..n_k {
+                let ck = bk.min(sk - kt * bk);
+                let n = kept[qt * n_k + kt];
+                classes[(dep * n_q + qt) * n_k + kt] = if n == (cq * ck) as u32 {
+                    TileClass::Full
+                } else if n == 0 && !has_dead_row {
+                    TileClass::Empty
+                } else {
+                    TileClass::Partial
+                };
+            }
+        }
+    }
+    Some(BlockMask {
+        block_q: bq,
+        block_k: bk,
+        sq,
+        sk,
+        n_q_tiles: n_q,
+        n_k_tiles: n_k,
+        dep_axes,
+        dep_sizes,
+        classes,
+    })
+}
+
+// ---------------------------------------------------------------------
+// FLASHLIGHT_BLOCKMASK kill switch + in-process override
+// ---------------------------------------------------------------------
+
+/// Parse a `FLASHLIGHT_BLOCKMASK` value: `0`/`off` disable the block-
+/// sparse layer; anything else (including unset) leaves it on.
+pub fn resolve(env: Option<&str>) -> bool {
+    !matches!(env.map(str::trim), Some("0") | Some("off"))
+}
+
+static ENABLED: OnceLock<bool> = OnceLock::new();
+
+thread_local! {
+    /// 0 = follow the env var, 1 = force dense, 2 = force sparse.
+    /// Thread-local (not process-global): `enabled()` is only consulted
+    /// on the scheduling thread (plan counters / run setup), so tests
+    /// and benches can A/B dense-vs-sparse without racing the parallel
+    /// test harness.
+    static OVERRIDE: Cell<u8> = const { Cell::new(0) };
+}
+
+/// Force the block-mask layer on (`Some(true)`), off (`Some(false)`),
+/// or back to the env-var default (`None`) for the calling thread —
+/// the in-process A/B hook used by the bit-identity gates and the
+/// sparsity sweep bench.
+pub fn set_mode_override(mode: Option<bool>) {
+    OVERRIDE.with(|c| {
+        c.set(match mode {
+            None => 0,
+            Some(false) => 1,
+            Some(true) => 2,
+        })
+    });
+}
+
+/// Whether block-sparse planning/execution is active, honoring the
+/// thread-local override first and `FLASHLIGHT_BLOCKMASK` (resolved
+/// once per process) otherwise.
+pub fn enabled() -> bool {
+    match OVERRIDE.with(|c| c.get()) {
+        1 => false,
+        2 => true,
+        _ => *ENABLED
+            .get_or_init(|| resolve(std::env::var("FLASHLIGHT_BLOCKMASK").ok().as_deref())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::variants::{build, AttnShape, Variant};
+
+    fn shape(seq: usize) -> AttnShape {
+        AttnShape {
+            batch: 1,
+            rows: 1,
+            heads_q: 2,
+            heads_kv: 1,
+            seq,
+            head_dim: 8,
+        }
+    }
+
+    /// The unique maskable `Where` in a variant graph.
+    fn mask_root(g: &Graph) -> (NodeId, MaskInfo) {
+        for id in g.ids() {
+            if let Some(info) = extract(g, id) {
+                return (id, info);
+            }
+        }
+        panic!("graph has no maskable score root");
+    }
+
+    #[test]
+    fn resolve_parses_kill_switch() {
+        assert!(resolve(None));
+        assert!(resolve(Some("1")));
+        assert!(resolve(Some("on")));
+        assert!(resolve(Some("anything")));
+        assert!(!resolve(Some("0")));
+        assert!(!resolve(Some("off")));
+        assert!(!resolve(Some(" off ")));
+    }
+
+    #[test]
+    fn override_wins_over_default_on_this_thread() {
+        set_mode_override(Some(false));
+        assert!(!enabled());
+        set_mode_override(Some(true));
+        assert!(enabled());
+        set_mode_override(None);
+    }
+
+    #[test]
+    fn causal_extracts_as_input_free_index_mask() {
+        let g = build(Variant::Causal, &shape(32));
+        let (_, info) = mask_root(&g);
+        assert!(info.is_input_free(), "{:?}", info.kind);
+    }
+
+    #[test]
+    fn document_mask_depends_on_doc_inputs() {
+        let g = build(Variant::DocumentMask, &shape(32));
+        let (_, info) = mask_root(&g);
+        match &info.kind {
+            MaskKind::Index { input_deps } => {
+                assert!(!input_deps.is_empty(), "document mask must name its id inputs");
+            }
+            other => panic!("expected index mask, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rectified_extracts_as_runtime_threshold() {
+        let g = build(Variant::Rectified { tau: 0.05 }, &shape(32));
+        let (_, info) = mask_root(&g);
+        match info.kind {
+            MaskKind::Threshold { tau } => assert_eq!(tau, 0.05),
+            other => panic!("expected threshold mask, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sliding_window_classification_matches_brute_force() {
+        let (seq, window, b) = (23usize, 5usize, 8usize);
+        let g = build(Variant::SlidingWindow { window }, &shape(seq));
+        let (root, info) = mask_root(&g);
+        let score_shape = g.node(root).shape.clone();
+        let rank = score_shape.len();
+        let bm = classify(
+            &g,
+            &info,
+            &score_shape,
+            rank - 2,
+            rank - 1,
+            b,
+            b,
+            &HashMap::new(),
+        )
+        .expect("index mask must classify");
+        assert!(bm.dep_axes.is_empty());
+        let keep = |qi: usize, ki: usize| ki <= qi && qi - ki <= window;
+        for qt in 0..bm.n_q_tiles {
+            let cq = b.min(seq - qt * b);
+            for kt in 0..bm.n_k_tiles {
+                let ck = b.min(seq - kt * b);
+                let kept = (0..cq)
+                    .flat_map(|r| (0..ck).map(move |c| (qt * b + r, kt * b + c)))
+                    .filter(|&(qi, ki)| keep(qi, ki))
+                    .count();
+                let want = if kept == cq * ck {
+                    TileClass::Full
+                } else if kept == 0 {
+                    TileClass::Empty
+                } else {
+                    TileClass::Partial
+                };
+                assert_eq!(bm.class(0, qt, kt), want, "tile ({qt},{kt})");
+            }
+        }
+        assert!(bm.skipped_tiles() > 0, "window 5 over seq 23 must skip tiles");
+        assert!((bm.visited_k_elems() as usize) < bm.n_q_tiles * seq);
+    }
+
+    #[test]
+    fn dead_rows_demote_empty_to_partial() {
+        // Document mask where the ids never match: every row is dead, so
+        // no tile may be skipped (the dense arithmetic must replay).
+        let seq = 16usize;
+        let g = build(Variant::DocumentMask, &shape(seq));
+        let (root, info) = mask_root(&g);
+        let score_shape = g.node(root).shape.clone();
+        let rank = score_shape.len();
+        let MaskKind::Index { input_deps } = &info.kind else {
+            panic!("document mask must be an index mask")
+        };
+        let mut inputs = HashMap::new();
+        for (i, name) in input_deps.iter().enumerate() {
+            // Disjoint id ranges: doc ids on the q side never equal the
+            // k side, so keep is false everywhere.
+            let node = g
+                .inputs
+                .iter()
+                .map(|&id| g.node(id))
+                .find(|n| matches!(&n.op, Op::Input { name: q } if q == name))
+                .expect("dep input must exist");
+            let n: usize = node.shape.iter().product();
+            inputs.insert(
+                name.clone(),
+                Tensor::from_vec(&node.shape, vec![(i * 1000) as f32; n]),
+            );
+        }
+        let bm = classify(&g, &info, &score_shape, rank - 2, rank - 1, 8, 8, &inputs)
+            .expect("document mask with ids present must classify");
+        assert_eq!(bm.skipped_tiles(), 0, "dead rows must force Partial");
+        assert!(bm
+            .classes
+            .iter()
+            .all(|&c| c == TileClass::Partial));
+    }
+
+    #[test]
+    fn full_tiles_and_counters_on_causal() {
+        let (seq, b) = (32usize, 8usize);
+        let g = build(Variant::Causal, &shape(seq));
+        let (root, info) = mask_root(&g);
+        let score_shape = g.node(root).shape.clone();
+        let rank = score_shape.len();
+        let bm = classify(&g, &info, &score_shape, rank - 2, rank - 1, b, b, &HashMap::new())
+            .unwrap();
+        // Below-diagonal tiles Full, diagonal Partial, above Empty.
+        for qt in 0..bm.n_q_tiles {
+            for kt in 0..bm.n_k_tiles {
+                let want = if kt < qt {
+                    TileClass::Full
+                } else if kt == qt {
+                    TileClass::Partial
+                } else {
+                    TileClass::Empty
+                };
+                assert_eq!(bm.class(0, qt, kt), want);
+            }
+        }
+        // Every k-tile is live for its diagonal q-tile: compulsory
+        // footprint stays the whole K axis, only re-reads shrink.
+        assert_eq!(bm.touched_k_elems(), seq);
+        assert_eq!(bm.visited_k_elems(), (8 + 16 + 24 + 32) as u64);
+        assert_eq!(bm.skipped_tiles(), 6);
+    }
+}

@@ -19,7 +19,8 @@ use std::sync::Arc;
 use crate::ir::{Graph, NodeId};
 use crate::sketch::{analyze, DimAnalysis};
 
-use super::planner::{plan, FusionMode, Plan, TileConfig};
+use super::blockmask::{self, BlockMask};
+use super::planner::{plan, FusionMode, GroupKind, Plan, TileConfig};
 
 /// Round `n` up to a multiple of `granule` (at least one granule) — the
 /// shape-class bucketing for sequence lengths. Buckets are what make the
@@ -64,6 +65,55 @@ pub struct CachedPlan {
     /// `graph.consumers()`, computed once at build time (the batched
     /// executor's single-kernel path needs it per job).
     pub consumers: Vec<Vec<NodeId>>,
+    /// Block-sparse tile classes per plan group, classified once per
+    /// shape class from the plan's *input-free* index mask predicate
+    /// with the autotuned tile. `None` slots (unmasked groups, runtime-
+    /// dependent masks such as document ids) fall back to per-launch
+    /// classification in the executor.
+    pub block_masks: Vec<Option<Arc<BlockMask>>>,
+}
+
+/// Classify each pipeline group's static block mask (see
+/// [`CachedPlan::block_masks`]). Cheap relative to planning and always
+/// computed, so cache entries are valid under either blockmask mode.
+fn build_block_masks(
+    g: &Graph,
+    p: &Plan,
+    an: &DimAnalysis,
+    tile: TileConfig,
+) -> Vec<Option<Arc<BlockMask>>> {
+    p.groups
+        .iter()
+        .map(|grp| {
+            let GroupKind::Pipeline(pipe) = &grp.kind else {
+                return None;
+            };
+            if pipe.softmax.is_none() {
+                return None;
+            }
+            let info = pipe.mask.as_ref()?;
+            if !info.is_input_free() {
+                return None;
+            }
+            let score_shape = &g.node(pipe.score_root).shape;
+            let score_axes = &an.axes[pipe.score_root.0 as usize];
+            let kv_ax = score_axes.iter().rposition(|c| *c == pipe.kv_class)?;
+            let q_ax = score_axes[..kv_ax]
+                .iter()
+                .rposition(|c| *c == pipe.q_class)?;
+            blockmask::classify(
+                g,
+                info,
+                score_shape,
+                q_ax,
+                kv_ax,
+                tile.block_q.min(score_shape[q_ax]),
+                tile.block_k.min(score_shape[kv_ax]),
+                &HashMap::new(),
+            )
+            .map(Arc::new)
+        })
+        .collect()
 }
 
 /// Hit/miss counters, surfaced in serving metrics.
@@ -196,12 +246,14 @@ impl PlanCache {
         let tile = autotune_tile_with(&graph, &p, self.fixed_block_k);
         let analysis = analyze(&graph);
         let consumers = graph.consumers();
+        let block_masks = build_block_masks(&graph, &p, &analysis, tile);
         let entry = Arc::new(CachedPlan {
             graph,
             plan: p,
             tile,
             analysis,
             consumers,
+            block_masks,
         });
         if self.map.len() >= self.capacity {
             // Evict the least-recently-used entry.
@@ -325,6 +377,26 @@ mod tests {
         let e = c.get_or_build(key(128), || build_serving(Variant::Causal, &shape(128), 1));
         assert!(e.plan.num_pipelines() >= 1, "{}", e.plan.describe(&e.graph));
         assert!(e.tile.block_q >= 1 && e.tile.block_k >= 1);
+    }
+
+    #[test]
+    fn cached_plan_carries_static_block_masks_for_index_masks() {
+        use crate::variants::build;
+        let mut c = PlanCache::new(4);
+        let s = AttnShape {
+            batch: 1,
+            rows: 1,
+            heads_q: 2,
+            heads_kv: 2,
+            seq: 64,
+            head_dim: 16,
+        };
+        let e = c.get_or_build(key(999), || build(Variant::Causal, &s));
+        assert_eq!(e.block_masks.len(), e.plan.groups.len());
+        assert!(
+            e.block_masks.iter().flatten().any(|m| m.skipped_tiles() > 0),
+            "causal prefill must classify some empty k-tiles"
+        );
     }
 
     #[test]

@@ -5,10 +5,16 @@
 //! [`PlanCache`] that memoizes plans and tile autotune results per shape
 //! class (the FlexAttention compiled-artifact-caching pattern, §4.4).
 
+mod blockmask;
 mod cache;
 mod online;
 mod planner;
 
+pub use blockmask::{
+    classify as classify_block_mask, enabled as blockmask_enabled, extract as extract_mask,
+    resolve as resolve_blockmask, set_mode_override as set_blockmask_override, BlockMask,
+    MaskInfo, MaskKind, TileClass,
+};
 pub use cache::{
     autotune_tile, autotune_tile_with, bucket_len, CacheStats, CachedPlan, PlanCache, PlanKey,
 };

@@ -18,6 +18,7 @@
 use std::collections::{HashMap, HashSet};
 
 use crate::exec::{node_flops, Counters};
+use crate::fusion::blockmask;
 use crate::ir::{Graph, NodeId, Op, PwOp};
 use crate::sketch::{analyze, find_softmax_patterns, DimAnalysis, DimClass};
 
@@ -81,6 +82,11 @@ pub struct Pipeline {
     pub out: NodeId,
     pub q_class: DimClass,
     pub kv_class: DimClass,
+    /// Block-sparse mask structure recognized at the score root (a
+    /// `Where(cond, value, -1e30)`), when the pipeline has an online
+    /// softmax to make tile skipping a provable no-op. `None` for
+    /// unmasked variants and twin-matmul pipelines.
+    pub mask: Option<blockmask::MaskInfo>,
 }
 
 #[derive(Debug, Clone)]
@@ -394,6 +400,7 @@ fn try_pipeline(
                 out,
                 q_class,
                 kv_class,
+                mask: blockmask::extract(g, x),
             },
         ));
     }
@@ -490,6 +497,9 @@ fn try_twin_matmul(
                         out: m2,
                         q_class,
                         kv_class,
+                        // No softmax: a skipped tile's -1e30·V contribution
+                        // would not cancel, so twin-matmul stays dense.
+                        mask: None,
                     },
                 ));
             }
@@ -764,6 +774,33 @@ impl Plan {
                 }
                 None => (1, vec![]),
             };
+            // Block-sparse traffic: with an input-free index mask on a
+            // softmax pipeline, K/V-like operands are charged per *live*
+            // k element of the classified (block_q x block_k) grid —
+            // skipped tiles are never gathered. Dense pipelines (and
+            // masks needing runtime inputs) keep the full-pass formula.
+            let bm = match pipe {
+                Some(p) if p.softmax.is_some() && blockmask::enabled() => p
+                    .mask
+                    .as_ref()
+                    .filter(|m| m.is_input_free())
+                    .and_then(|m| {
+                        let s_shape = &g.node(p.score_root).shape;
+                        let rank = s_shape.len();
+                        blockmask::classify(
+                            g,
+                            m,
+                            s_shape,
+                            rank - 2,
+                            rank - 1,
+                            tile.block_q,
+                            tile.block_k,
+                            &HashMap::new(),
+                        )
+                    })
+                    .filter(|m| m.dep_axes.is_empty()),
+                _ => None,
+            };
             for &n in &grp.nodes {
                 for opnd in g.node(n).op.input_ids() {
                     if members.contains(&opnd) || !seen.insert(opnd) {
@@ -777,7 +814,7 @@ impl Plan {
                         continue;
                     }
                     let bytes = 4 * g.numel(opnd) as u64;
-                    let (touches, working_set) = match pipe {
+                    let (total, first, working_set) = match pipe {
                         Some(p) => {
                             let axes = &an.axes[opnd.0 as usize];
                             let shape = &g.node(opnd).shape;
@@ -800,17 +837,30 @@ impl Plan {
                             }
                             let has_kv = covers(p.kv_class);
                             let has_q = covers(p.q_class);
-                            let t = if has_kv && !has_q {
-                                mult * n_qtiles
+                            let (t_total, t_first) = if has_kv && !has_q {
+                                match &bm {
+                                    Some(m) => {
+                                        // Per-k-element slab of this operand:
+                                        // visited tiles drive total reads,
+                                        // ever-live tiles the compulsory
+                                        // first touch.
+                                        let per_k = bytes / m.sk as u64;
+                                        (
+                                            mult * per_k * m.visited_k_elems(),
+                                            per_k * m.touched_k_elems() as u64,
+                                        )
+                                    }
+                                    None => (mult * n_qtiles * bytes, bytes),
+                                }
                             } else {
-                                mult
+                                (mult * bytes, bytes)
                             };
-                            (t, bytes / covered.max(1))
+                            (t_total, t_first, bytes / covered.max(1))
                         }
-                        None => (1, bytes),
+                        None => (bytes, bytes, bytes),
                     };
-                    c.hbm_read += bytes;
-                    let reread = bytes * (touches - 1);
+                    c.hbm_read += first;
+                    let reread = total.saturating_sub(first);
                     if working_set <= tile.l2_capacity {
                         c.l2_read += reread;
                     } else {
@@ -828,7 +878,6 @@ impl Plan {
                     c.hbm_write += 4 * g.numel(n) as u64;
                 }
             }
-            let _ = tile.block_k;
         }
         // workspace: bytes of all materialized intermediates (non-output)
         let mut live = 0u64;

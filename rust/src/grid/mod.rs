@@ -81,6 +81,15 @@ impl LogicalGrid {
         let start = c * d.tile;
         (start, d.tile.min(d.size - start))
     }
+
+    /// Per-block scheduling weights in physical block order: `f` maps a
+    /// block id to its work size (e.g. live k-elements under a block
+    /// mask). Consumed by the weighted sharding of
+    /// [`crate::exec::parallel_map_with_weights`], which cuts topology
+    /// shards by cumulative weight so skewed grids still balance.
+    pub fn block_weights(&self, f: impl Fn(usize) -> u64) -> Vec<u64> {
+        (0..self.n_blocks()).map(f).collect()
+    }
 }
 
 /// L2-cache swizzle (§3.7): for a 2-D tiled iteration (m_tiles x
@@ -190,6 +199,18 @@ mod tests {
             covered += len;
         }
         assert_eq!(covered, 100);
+    }
+
+    #[test]
+    fn block_weights_cover_all_blocks_in_order() {
+        let g = LogicalGrid::new(vec![
+            TiledDim { size: 4, tile: 1 },
+            TiledDim { size: 100, tile: 32 },
+        ]);
+        let w = g.block_weights(|b| (b as u64) + 1);
+        assert_eq!(w.len(), g.n_blocks());
+        assert_eq!(w[0], 1);
+        assert_eq!(*w.last().unwrap(), g.n_blocks() as u64);
     }
 
     #[test]

@@ -26,7 +26,9 @@ fn usage() -> ! {
          \x20     FLASHLIGHT_SIMD=0 forces the scalar kernel tier, =avx2\n\
          \x20     caps an AVX-512 host at the AVX2 tier;\n\
          \x20     FLASHLIGHT_TOPO=flat|DxW|c0,c1,.. overrides the worker\n\
-         \x20     runtime's cache/NUMA scheduling topology);\n\
+         \x20     runtime's cache/NUMA scheduling topology;\n\
+         \x20     FLASHLIGHT_BLOCKMASK=0 disables block-sparse tile\n\
+         \x20     skipping — dense fallback, every k-tile visited);\n\
          \x20     `serve_engine` measures engine-backend serve throughput\n\
          \x20     at 1/2/all threads with the bit-identity gate\n\
          \x20 serve [--requests N] [--backend sim|engine|pjrt] [--threads N]\n\

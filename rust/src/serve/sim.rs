@@ -126,7 +126,7 @@ impl SimBackend {
             hbm_write: (tokens * self.model.d_model * 2) as u64,
             flops: self.model.gemm_flops(tokens),
             launches: (self.model.layers * 6) as u64,
-            peak_workspace: 0,
+            ..Counters::default()
         };
         kernel_time(&self.spec, &c, Efficiency::new(0.70, 0.85))
     }
@@ -181,7 +181,7 @@ impl SimBackend {
             hbm_write: 0,
             flops: 2 * kv_bytes, // one MAC per streamed kv element
             launches: self.model.layers as u64,
-            peak_workspace: 0,
+            ..Counters::default()
         };
         kernel_time(&self.spec, &c, Efficiency::new(0.5, 0.8))
     }

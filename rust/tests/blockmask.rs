@@ -1,0 +1,318 @@
+//! Property tests for the block-sparse tile planner.
+//!
+//! Two contracts (see `rust/src/fusion/blockmask.rs`):
+//!
+//! 1. **Classification is exact**: for every index-mask variant, the
+//!    planner's per-(q-tile, k-tile) `Full/Partial/Empty` classes match
+//!    a brute-force evaluation of the variant's keep predicate over odd
+//!    shapes and ragged tails.
+//! 2. **Skipping is invisible**: sparse execution (Empty tiles skipped,
+//!    Full tiles' mask ops elided) is bit-identical to the dense
+//!    `FLASHLIGHT_BLOCKMASK=0` path — outputs AND traffic counters — at
+//!    1, 2, and 3 threads, while actually skipping work
+//!    (`tiles_skipped > 0`, fewer FLOPs).
+//!
+//! Plus the runtime data-dependent path: `Variant::Rectified`'s
+//! threshold mask must prune tiles from the *data* (no static class
+//! grid exists) and still match the unpruned reference.
+
+use std::collections::HashMap;
+
+use flashlight::exec::{execute_plan, execute_plan_par, Counters, Parallelism, Tensor};
+use flashlight::fusion::{
+    classify_block_mask, extract_mask, plan, set_blockmask_override, FusionMode, MaskInfo,
+    MaskKind, TileClass, TileConfig,
+};
+use flashlight::ir::{Graph, NodeId, Op};
+use flashlight::variants::{build, AttnShape, Variant};
+
+fn shape(seq: usize) -> AttnShape {
+    AttnShape {
+        batch: 1,
+        rows: 1,
+        heads_q: 2,
+        heads_kv: 2,
+        seq,
+        head_dim: 8,
+    }
+}
+
+/// Deterministic inputs; document ids are `j * 3 / n` (three ragged
+/// documents), matching the id layout the doc-mask brute force assumes.
+fn inputs_for(g: &Graph, seed: u64) -> HashMap<String, Tensor> {
+    let mut m = HashMap::new();
+    for (i, &id) in g.inputs.iter().enumerate() {
+        let node = g.node(id);
+        let Op::Input { name } = &node.op else { unreachable!() };
+        let t = if name.starts_with("doc") {
+            let n: usize = node.shape.iter().product();
+            Tensor::from_vec(&node.shape, (0..n).map(|j| (j * 3 / n) as f32).collect())
+        } else {
+            Tensor::synthetic(&node.shape, seed + i as u64)
+        };
+        m.insert(name.clone(), t);
+    }
+    m
+}
+
+/// The unique maskable `Where` at a variant graph's score root.
+fn mask_root(g: &Graph) -> (NodeId, MaskInfo) {
+    for id in g.ids() {
+        if let Some(info) = extract_mask(g, id) {
+            return (id, info);
+        }
+    }
+    panic!("graph has no maskable score root");
+}
+
+/// The variant's keep predicate, reimplemented independently of the IR.
+fn brute_keep(v: &Variant, qi: usize, ki: usize, doc: &[usize]) -> bool {
+    match v {
+        Variant::Causal => ki <= qi,
+        Variant::SlidingWindow { window } => ki <= qi && qi - ki <= *window,
+        Variant::PrefixLm { prefix } => ki <= qi || ki < *prefix,
+        Variant::DocumentMask => doc[qi] == doc[ki],
+        other => panic!("not an index-mask variant: {other:?}"),
+    }
+}
+
+/// Index-mask variants exercised throughout, sized for `seq`.
+fn index_variants(seq: usize) -> Vec<Variant> {
+    vec![
+        Variant::Causal,
+        Variant::SlidingWindow { window: seq / 4 },
+        Variant::PrefixLm { prefix: seq / 3 },
+        Variant::DocumentMask,
+    ]
+}
+
+/// Contract 1: planner classification == brute-force predicate scan,
+/// over prime/odd sequence lengths (ragged tail tiles) and asymmetric
+/// block shapes, including the fully-dead-row demotion rule.
+#[test]
+fn classification_matches_brute_force_over_odd_shapes() {
+    for seq in [17usize, 23, 48] {
+        for (bq, bk) in [(8usize, 8usize), (16, 8), (8, 16)] {
+            for v in index_variants(seq) {
+                let s = shape(seq);
+                let g = build(v, &s);
+                let inputs = inputs_for(&g, 7);
+                let (root, info) = mask_root(&g);
+                assert!(
+                    matches!(info.kind, MaskKind::Index { .. }),
+                    "{} must extract as an index mask",
+                    v.name()
+                );
+                let score_shape = g.node(root).shape.clone();
+                let rank = score_shape.len();
+                let bm = classify_block_mask(
+                    &g,
+                    &info,
+                    &score_shape,
+                    rank - 2,
+                    rank - 1,
+                    bq,
+                    bk,
+                    &inputs,
+                )
+                .expect("index mask must classify");
+                // batch == 1: at most one dep combination.
+                assert_eq!(bm.n_deps(), 1, "{}", v.name());
+
+                let doc: Vec<usize> = (0..seq).map(|j| j * 3 / seq).collect();
+                let keep = |qi: usize, ki: usize| brute_keep(&v, qi, ki, &doc);
+                let (bq_c, bk_c) = (bq.min(seq), bk.min(seq));
+                for qt in 0..bm.n_q_tiles {
+                    let q0 = qt * bq_c;
+                    let cq = bq_c.min(seq - q0);
+                    let dead_row =
+                        (q0..q0 + cq).any(|qi| (0..seq).all(|ki| !keep(qi, ki)));
+                    for kt in 0..bm.n_k_tiles {
+                        let k0 = kt * bk_c;
+                        let ck = bk_c.min(seq - k0);
+                        let kept = (q0..q0 + cq)
+                            .flat_map(|qi| (k0..k0 + ck).map(move |ki| (qi, ki)))
+                            .filter(|&(qi, ki)| keep(qi, ki))
+                            .count();
+                        let want = if kept == cq * ck {
+                            TileClass::Full
+                        } else if kept == 0 && !dead_row {
+                            TileClass::Empty
+                        } else {
+                            TileClass::Partial
+                        };
+                        assert_eq!(
+                            bm.class(0, qt, kt),
+                            want,
+                            "{} seq={seq} bq={bq} bk={bk} tile ({qt},{kt})",
+                            v.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Run one graph dense (override off) then sparse (override on),
+/// asserting bitwise-equal outputs at 1/2/3 threads and returning
+/// (dense counters, sparse counters).
+fn dense_vs_sparse(
+    g: &Graph,
+    inputs: &HashMap<String, Tensor>,
+    tile: TileConfig,
+    label: &str,
+) -> (Counters, Counters) {
+    let p = plan(g, FusionMode::Flashlight);
+    set_blockmask_override(Some(false));
+    let (dense_out, dense_c) = execute_plan(g, &p, inputs, tile);
+    set_blockmask_override(Some(true));
+    let (sparse_out, sparse_c) = execute_plan(g, &p, inputs, tile);
+    for threads in [2usize, 3] {
+        let par = Parallelism::with_threads(threads);
+        let (o, c) = execute_plan_par(g, &p, inputs, tile, &par);
+        assert_eq!(o, sparse_out, "{label}: sparse unstable at threads={threads}");
+        assert_eq!(c, sparse_c, "{label}: counters unstable at threads={threads}");
+    }
+    set_blockmask_override(None);
+    assert_eq!(dense_out.len(), sparse_out.len(), "{label}");
+    for (i, (d, s)) in dense_out.iter().zip(&sparse_out).enumerate() {
+        assert_eq!(d.shape, s.shape, "{label} out[{i}]");
+        assert!(
+            d.data == s.data,
+            "{label} out[{i}]: sparse not bit-identical to dense"
+        );
+    }
+    (dense_c, sparse_c)
+}
+
+/// Contract 2: every index-mask variant executes bit-identically with
+/// the block-mask layer on, while provably skipping tiles and FLOPs.
+/// Ragged tails (seq 44 vs block 16) ride along.
+#[test]
+fn sparse_execution_is_bit_identical_to_dense() {
+    for seq in [32usize, 44] {
+        for v in index_variants(seq) {
+            let s = shape(seq);
+            let g = build(v, &s);
+            let inputs = inputs_for(&g, 11);
+            let tile = TileConfig {
+                block_q: 16,
+                block_k: 8,
+                ..Default::default()
+            };
+            let label = format!("{} seq={seq}", v.name());
+            let (dense_c, sparse_c) = dense_vs_sparse(&g, &inputs, tile, &label);
+            assert!(sparse_c.tiles_skipped > 0, "{label}: no tiles skipped");
+            assert!(sparse_c.tiles_visited > 0, "{label}: nothing visited?");
+            assert!(sparse_c.flops < dense_c.flops, "{label}: no FLOPs saved");
+            assert!(sparse_c.flops_avoided > 0, "{label}");
+            assert!(sparse_c.bytes_skipped > 0, "{label}");
+            // Traffic may only shrink; writes are mask-independent.
+            assert!(sparse_c.l2_read <= dense_c.l2_read, "{label}");
+            assert!(sparse_c.hbm_read <= dense_c.hbm_read, "{label}");
+            assert_eq!(sparse_c.hbm_write, dense_c.hbm_write, "{label}");
+            // The dense run never consults the block-mask machinery.
+            assert_eq!(dense_c.tiles_skipped, 0, "{label}");
+            assert_eq!(dense_c.flops_avoided, 0, "{label}");
+        }
+    }
+}
+
+/// An unmasked variant must be untouched by the layer (no mask, no
+/// skips, identical FLOPs); a masked variant with a non-trivial score
+/// subgraph (Softcap's tanh) exercises Full-tile elision — the `Where`
+/// and fill are dropped but the softcapped value must still be
+/// computed bit-identically.
+#[test]
+fn no_mask_is_a_no_op_and_full_tile_elision_is_exact() {
+    let tile = TileConfig {
+        block_q: 8,
+        block_k: 8,
+        ..Default::default()
+    };
+    let s = shape(32);
+
+    let g = build(Variant::Vanilla, &s);
+    let inputs = inputs_for(&g, 5);
+    let (dense_c, sparse_c) = dense_vs_sparse(&g, &inputs, tile, "vanilla");
+    assert_eq!(sparse_c.tiles_skipped, 0, "vanilla has nothing to skip");
+    assert_eq!(dense_c.flops, sparse_c.flops, "vanilla must be untouched");
+
+    // Softcap is causally masked: below-diagonal tiles are Full and
+    // elide the mask, above-diagonal tiles are Empty and skip.
+    let g = build(Variant::Softcap { cap: 20.0 }, &s);
+    let inputs = inputs_for(&g, 5);
+    let (dense_c, sparse_c) = dense_vs_sparse(&g, &inputs, tile, "softcap");
+    assert!(sparse_c.tiles_skipped > 0, "causal softcap must skip");
+    assert!(sparse_c.flops < dense_c.flops);
+}
+
+/// Runtime data-dependent block mask: `Rectified`'s threshold predicate
+/// cannot be classified statically (no `BlockMask` exists), yet the
+/// executor prunes tiles from the score data at runtime. Inputs are
+/// crafted so the k-range splits into a provably-live head (scores
+/// >> tau) and a provably-dead tail (scores 0 < tau): pruning must
+/// trigger, and the result must match the unpruned reference exactly
+/// (a fully sub-threshold tile is an exact no-op in the dense path
+/// too, so even bit-identity holds).
+#[test]
+fn rectified_threshold_prunes_at_runtime() {
+    let seq = 32usize;
+    let (bq, bk) = (8usize, 8usize);
+    let s = shape(seq);
+    let g = build(Variant::Rectified { tau: 0.05 }, &s);
+    let mut inputs = inputs_for(&g, 13);
+
+    // q strictly positive so q.k^T over the crafted K is controlled.
+    let q = inputs.get_mut("q").expect("rectified graph has a q input");
+    q.data.iter_mut().for_each(|x| *x = x.abs() + 0.5);
+    // K rows: first k-block all-ones (scores well above tau -> every
+    // row live after block 0), last k-block all-zeros (scores exactly
+    // 0 < tau after scaling -> dead, prunable).
+    let k = inputs.get_mut("k").expect("rectified graph has a k input");
+    let d = s.head_dim;
+    for (j, x) in k.data.iter_mut().enumerate() {
+        let pos = (j / d) % seq;
+        if pos < bk {
+            *x = 1.0;
+        } else if pos >= seq - bk {
+            *x = 0.0;
+        }
+    }
+
+    // Static classification must refuse a threshold mask...
+    let (root, info) = mask_root(&g);
+    assert!(matches!(info.kind, MaskKind::Threshold { .. }));
+    let score_shape = g.node(root).shape.clone();
+    let rank = score_shape.len();
+    assert!(
+        classify_block_mask(&g, &info, &score_shape, rank - 2, rank - 1, bq, bk, &inputs)
+            .is_none(),
+        "threshold masks have no static class grid"
+    );
+
+    // ...so any skipped tile below is decided at runtime, from data.
+    let tile = TileConfig {
+        block_q: bq,
+        block_k: bk,
+        ..Default::default()
+    };
+    let (dense_c, sparse_c) = dense_vs_sparse(&g, &inputs, tile, "rectified");
+    assert!(
+        sparse_c.tiles_skipped > 0,
+        "crafted dead k-tail must be pruned at runtime"
+    );
+    assert_eq!(dense_c.tiles_skipped, 0);
+    assert!(sparse_c.flops < dense_c.flops);
+}
+
+/// The kill switch semantics behind the overrides: `0`/`off` disable.
+#[test]
+fn kill_switch_parses() {
+    use flashlight::fusion::resolve_blockmask;
+    assert!(resolve_blockmask(None));
+    assert!(resolve_blockmask(Some("1")));
+    assert!(!resolve_blockmask(Some("0")));
+    assert!(!resolve_blockmask(Some("off")));
+}

@@ -1,10 +1,11 @@
 #!/usr/bin/env bash
 # Perf-regression driver: build release, gate the test suite under
-# THREE configurations (default SIMD dispatch, FLASHLIGHT_SIMD=0 scalar
-# tier, and FLASHLIGHT_TOPO=flat single-domain scheduling — the last
-# fails loudly if any bit-identity gate diverges between topology
-# modes), run the benches, and record two perf trajectories at the repo
-# root so future PRs have a baseline to compare against:
+# FOUR configurations (default SIMD dispatch, FLASHLIGHT_SIMD=0 scalar
+# tier, FLASHLIGHT_TOPO=flat single-domain scheduling, and
+# FLASHLIGHT_BLOCKMASK=0 dense execution — the last two fail loudly if
+# any bit-identity gate diverges between modes), run the benches, and
+# record two perf trajectories at the repo root so future PRs have a
+# baseline to compare against:
 #   BENCH_parallel_engine.json  sequential vs parallel executor wall
 #                               clock per variant, plus the GEMM/softmax
 #                               microkernel table (GFLOP/s, scalar tier
@@ -62,6 +63,20 @@ if ! FLASHLIGHT_TOPO=flat cargo test -q; then
   echo >&2
   echo "FATAL: test suite diverges under FLASHLIGHT_TOPO=flat —" >&2
   echo "       a bit-identity gate depends on the scheduling topology." >&2
+  exit 1
+fi
+
+echo
+echo "== cargo test -q (FLASHLIGHT_BLOCKMASK=0: dense, no tile skipping) =="
+# Fourth gate configuration: the whole suite must hold with the
+# block-sparse tile layer killed (every k-tile visited, masks evaluated
+# everywhere). A failure here means sparse execution leaked into
+# results somewhere the bit-identity contract forbids — or that dense
+# execution regressed while hiding behind the sparse fast path.
+if ! FLASHLIGHT_BLOCKMASK=0 cargo test -q; then
+  echo >&2
+  echo "FATAL: test suite diverges under FLASHLIGHT_BLOCKMASK=0 —" >&2
+  echo "       sparse vs dense execution is not equivalent." >&2
   exit 1
 fi
 
