@@ -1,0 +1,174 @@
+//! Diagnostic and certificate types for the static plan verifier.
+//!
+//! A [`Diagnostic`] names the check class that fired, the rewrite rule
+//! whose trail event most recently touched the offending node (so a bad
+//! rewrite is attributed to the pass that made it), and a rendered
+//! node path — enough to locate the violation in `plan.describe()`
+//! output without re-running anything. A [`Certificate`] is the
+//! positive counterpart: a summary of everything that was proved, kept
+//! cheap enough to log at plan birth.
+
+use std::fmt;
+
+use crate::fusion::{RewriteEvent, Rule};
+use crate::ir::{Graph, NodeId, Op};
+
+/// Which of the verifier's four checks produced a diagnostic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CheckClass {
+    /// Check 1: independent shape/broadcast re-inference disagrees with
+    /// a stored node shape, or a rewritten pipeline is structurally
+    /// malformed (roles missing, elimination bound exceeded).
+    ShapeInference,
+    /// Check 2: the write-set/alias analysis over the `LogicalGrid`
+    /// decomposition could not prove disjoint writes + immutable reads.
+    RaceFreedom,
+    /// Check 3: a rewrite reorders a non-associative f32 reduction
+    /// outside the blessed online-softmax contract.
+    Determinism,
+    /// Check 4: a `BlockMask` tile class is not justified by the mask
+    /// predicate (unsound skip or mask elision).
+    MaskSkip,
+}
+
+impl fmt::Display for CheckClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            CheckClass::ShapeInference => "shape-inference",
+            CheckClass::RaceFreedom => "race-freedom",
+            CheckClass::Determinism => "float-determinism",
+            CheckClass::MaskSkip => "mask-skip",
+        })
+    }
+}
+
+/// One verification failure, attributed to a node and (when the rewrite
+/// trail covers that node) to the rule that last touched it.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub check: CheckClass,
+    /// The last `RewriteEvent` logged at `node`, if any — the rewrite
+    /// most likely responsible for the violation.
+    pub rule: Option<Rule>,
+    pub node: Option<NodeId>,
+    /// Rendered node path, e.g. `n7 = Add(n3, n5) [2, 4, 64, 64]`.
+    pub path: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn new(check: CheckClass, message: impl Into<String>) -> Self {
+        Diagnostic {
+            check,
+            rule: None,
+            node: None,
+            path: String::new(),
+            message: message.into(),
+        }
+    }
+
+    /// Attach a node location: renders the node path and attributes the
+    /// diagnostic to the last rewrite event logged at that node.
+    pub fn with_node(mut self, g: &Graph, log: &[RewriteEvent], id: NodeId) -> Self {
+        self.node = Some(id);
+        self.rule = rule_at(log, id);
+        self.path = node_path(g, id);
+        self
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}]", self.check)?;
+        if let Some(n) = self.node {
+            write!(f, " n{}", n.0)?;
+        }
+        if let Some(r) = self.rule {
+            write!(f, " (rule {r:?})")?;
+        }
+        write!(f, ": {}", self.message)?;
+        if !self.path.is_empty() {
+            write!(f, "\n    at {}", self.path)?;
+        }
+        Ok(())
+    }
+}
+
+/// Everything a clean verification run proved, as counts: a cheap
+/// machine-checked summary to log at plan birth.
+#[derive(Debug, Clone, Default)]
+pub struct Certificate {
+    /// Name of the verified graph.
+    pub graph: String,
+    /// Nodes whose shapes were independently re-inferred (check 1).
+    pub nodes_checked: usize,
+    /// Kernel groups whose read sets were proved immutable (check 2).
+    pub groups_checked: usize,
+    /// Pipelines whose grid decomposition was re-derived (check 2).
+    pub pipelines_checked: usize,
+    /// Grid work items proved to write pairwise-disjoint output regions
+    /// that exactly cover the output (check 2).
+    pub blocks_proved_disjoint: usize,
+    /// Rewrite-trail events walked and accounted for (check 3).
+    pub rewrite_events_checked: usize,
+    /// Mask-predicate cells brute-force re-evaluated (check 4).
+    pub mask_cells_checked: usize,
+    /// Empty tiles whose skip was proved sound (check 4).
+    pub empty_tiles_proved: u64,
+    /// The exp kernel was observed to pin the -1e30 sentinel to exactly
+    /// 0.0 and exp(0) to exactly 1.0 (check 4's numeric premise).
+    pub exp_cutoff_proved: bool,
+}
+
+impl fmt::Display for Certificate {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} nodes, {} groups ({} pipelines, {} disjoint blocks), \
+             {} rewrite events, {} mask cells ({} empty tiles proved)",
+            self.nodes_checked,
+            self.groups_checked,
+            self.pipelines_checked,
+            self.blocks_proved_disjoint,
+            self.rewrite_events_checked,
+            self.mask_cells_checked,
+            self.empty_tiles_proved,
+        )
+    }
+}
+
+/// Render a one-line node path: id, op, operand ids, stored shape.
+pub fn node_path(g: &Graph, id: NodeId) -> String {
+    let node = g.node(id);
+    let name = match &node.op {
+        Op::Input { name } => format!("Input(\"{name}\")"),
+        Op::Const { value } => format!("Const({value})"),
+        Op::Iota { axis } => format!("Iota(axis={axis})"),
+        Op::Pointwise { op, .. } => format!("{op:?}"),
+        Op::Matmul { transpose_rhs, .. } => {
+            if *transpose_rhs {
+                "MatmulNT".to_string()
+            } else {
+                "Matmul".to_string()
+            }
+        }
+        Op::Reduce { op, axis, .. } => format!("Reduce{op:?}(axis={axis})"),
+        Op::Broadcast { .. } => "Broadcast".to_string(),
+        Op::Slice { axis, start, len, .. } => {
+            format!("Slice(axis={axis}, {start}..{})", start + len)
+        }
+    };
+    let args: Vec<String> = node
+        .op
+        .input_ids()
+        .iter()
+        .map(|n| format!("n{}", n.0))
+        .collect();
+    format!("n{} = {}({}) {:?}", id.0, name, args.join(", "), node.shape)
+}
+
+/// The last rewrite event logged at `id`, if any: attribution for "which
+/// pass introduced this".
+pub fn rule_at(log: &[RewriteEvent], id: NodeId) -> Option<Rule> {
+    log.iter().rev().find(|e| e.at == id).map(|e| e.rule)
+}

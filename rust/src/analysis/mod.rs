@@ -1,0 +1,228 @@
+//! Static plan verification: machine-checked proofs of fusion
+//! legality, determinism, and race-freedom before any kernel runs.
+//!
+//! The verifier ([`verify`]) re-derives, independently of the planner,
+//! everything the executor is about to trust: node shapes, the
+//! `LogicalGrid` write-set decomposition, the online-softmax
+//! determinism contract, and `BlockMask` skip legality. It runs at
+//! every plan birth on the `PlanCache` miss path (always in debug
+//! builds, behind `FLASHLIGHT_VERIFY` in release) so steady-state
+//! serving does zero verify work, and exhaustively via the
+//! `flashlight lint` CLI subcommand. See `analysis/README.md`.
+
+pub mod diagnostics;
+pub mod verify;
+
+pub use diagnostics::{node_path, rule_at, Certificate, CheckClass, Diagnostic};
+pub use verify::{verify_block_mask, verify_cached, verify_with};
+
+use std::cell::Cell;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// How much verification runs at plan birth (`FLASHLIGHT_VERIFY`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VerifyMode {
+    /// Skip verification entirely.
+    Off,
+    /// Verify and report diagnostics on stderr, but keep the plan.
+    Warn,
+    /// Verify and panic on any diagnostic.
+    Strict,
+}
+
+/// Resolve `FLASHLIGHT_VERIFY`: `strict` panics on any diagnostic,
+/// `0`/`off` disables, any other set value warns. Unset defaults to
+/// `Warn` in debug builds (verification always runs under `cargo
+/// test`) and `Off` in release (opt-in, since serving pays it on every
+/// cache miss).
+pub fn resolve_verify(env: Option<&str>) -> VerifyMode {
+    match env.map(str::trim) {
+        Some("strict") => VerifyMode::Strict,
+        Some("0") | Some("off") => VerifyMode::Off,
+        Some(_) => VerifyMode::Warn,
+        None => {
+            if cfg!(debug_assertions) {
+                VerifyMode::Warn
+            } else {
+                VerifyMode::Off
+            }
+        }
+    }
+}
+
+static MODE: OnceLock<VerifyMode> = OnceLock::new();
+
+thread_local! {
+    // 0 = follow env, otherwise a forced VerifyMode (tests).
+    static MODE_OVERRIDE: Cell<u8> = const { Cell::new(0) };
+}
+
+/// Force a verify mode on this thread (tests), or `None` to follow the
+/// environment again.
+pub fn set_verify_override(mode: Option<VerifyMode>) {
+    MODE_OVERRIDE.with(|c| {
+        c.set(match mode {
+            None => 0,
+            Some(VerifyMode::Off) => 1,
+            Some(VerifyMode::Warn) => 2,
+            Some(VerifyMode::Strict) => 3,
+        })
+    });
+}
+
+/// The effective verify mode for this thread.
+pub fn verify_mode() -> VerifyMode {
+    match MODE_OVERRIDE.with(|c| c.get()) {
+        1 => VerifyMode::Off,
+        2 => VerifyMode::Warn,
+        3 => VerifyMode::Strict,
+        _ => *MODE.get_or_init(|| resolve_verify(std::env::var("FLASHLIGHT_VERIFY").ok().as_deref())),
+    }
+}
+
+// Verification call counters, mirroring `sketch::analyze_call_count`:
+// the global counter feeds bench reports; the thread-local one lets
+// tests assert exact steady-state-zero-work without interference from
+// sibling tests on other harness threads.
+static VERIFY_CALLS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static VERIFY_CALLS_LOCAL: Cell<u64> = const { Cell::new(0) };
+}
+
+pub(crate) fn note_verify_call() {
+    VERIFY_CALLS.fetch_add(1, Ordering::Relaxed);
+    VERIFY_CALLS_LOCAL.with(|c| c.set(c.get() + 1));
+}
+
+/// Process-wide count of verification runs (any thread).
+pub fn verify_call_count() -> u64 {
+    VERIFY_CALLS.load(Ordering::Relaxed)
+}
+
+/// Verification runs performed by the calling thread — the counter to
+/// assert against in tests (the plan cache builds on its caller's
+/// thread, so steady-state decode must leave this flat).
+pub fn verify_calls_on_this_thread() -> u64 {
+    VERIFY_CALLS_LOCAL.with(|c| c.get())
+}
+
+/// Outcome of `flashlight lint`.
+pub struct LintReport {
+    /// Plans that verified clean.
+    pub passed: usize,
+    /// Plans with at least one diagnostic.
+    pub failed: usize,
+    /// Pretty-printed report (certificates and diagnostics).
+    pub report: String,
+}
+
+fn record(
+    label: &str,
+    res: Result<Certificate, Vec<Diagnostic>>,
+    out: &mut String,
+    passed: &mut usize,
+    failed: &mut usize,
+) {
+    match res {
+        Ok(cert) => {
+            *passed += 1;
+            let _ = writeln!(out, "  OK   {label}: {cert}");
+        }
+        Err(diags) => {
+            *failed += 1;
+            let _ = writeln!(out, "  FAIL {label}: {} diagnostic(s)", diags.len());
+            for d in &diags {
+                for line in d.to_string().lines() {
+                    let _ = writeln!(out, "         {line}");
+                }
+            }
+        }
+    }
+}
+
+/// Verify every built-in variant across the bucket ladder: paper
+/// variants at prefill shapes via `Plan::verify`, serving variants
+/// through a `PlanCache` (decode and chunked-prefill q shapes) via
+/// [`verify_cached`] — the exact entry point the cache uses at plan
+/// birth. Backs the `flashlight lint` CLI subcommand and the fifth
+/// `bench_regress.sh` gate.
+pub fn lint_builtin_variants() -> LintReport {
+    use crate::fusion::{bucket_len, plan, FusionMode, PlanCache, PlanKey};
+    use crate::variants::{build, build_serving, paper_variants, serving_variants, AttnShape};
+
+    let mut out = String::new();
+    let (mut passed, mut failed) = (0usize, 0usize);
+    let _ = writeln!(
+        out,
+        "flashlight lint: static plan verification \
+         (shape / race-freedom / determinism / mask-skip)"
+    );
+    for v in paper_variants() {
+        for seq in [64usize, 128, 256] {
+            let shape = AttnShape {
+                batch: 1,
+                rows: 1,
+                heads_q: 4,
+                heads_kv: 2,
+                seq,
+                head_dim: 64,
+            };
+            let g = build(v, &shape);
+            let p = plan(&g, FusionMode::Flashlight);
+            record(
+                &format!("{:<12} paper seq={seq:<4}", v.name()),
+                p.verify(&g),
+                &mut out,
+                &mut passed,
+                &mut failed,
+            );
+        }
+    }
+    // The cache would verify on the miss path too (mode permitting);
+    // force it off while building so strict mode reports here instead
+    // of panicking mid-lint, then verify each entry explicitly.
+    set_verify_override(Some(VerifyMode::Off));
+    for v in serving_variants() {
+        let mut cache = PlanCache::with_block_k(64, 64);
+        for kv_len in [64usize, 128, 192, 256] {
+            let kv_b = bucket_len(kv_len, 64);
+            for q_len in [1usize, 64] {
+                let shape = AttnShape {
+                    batch: 1,
+                    rows: 1,
+                    heads_q: 4,
+                    heads_kv: 2,
+                    seq: kv_b,
+                    head_dim: 64,
+                };
+                let key = PlanKey {
+                    tag: "lint",
+                    variant: v.name(),
+                    heads_q: 4,
+                    heads_kv: 2,
+                    head_dim: 64,
+                    q_len,
+                    kv_len: kv_b,
+                };
+                let entry = cache.get_or_build(key, || build_serving(v, &shape, q_len));
+                record(
+                    &format!("{:<12} serve kv={kv_b:<4} q={q_len:<3}", v.name()),
+                    verify_cached(&entry),
+                    &mut out,
+                    &mut passed,
+                    &mut failed,
+                );
+            }
+        }
+    }
+    set_verify_override(None);
+    let _ = writeln!(out, "lint: {passed} plan(s) clean, {failed} failed");
+    LintReport {
+        passed,
+        failed,
+        report: out,
+    }
+}

@@ -1,0 +1,1222 @@
+//! The static plan verifier: four machine-checked proofs over
+//! `ir::Graph` + `fusion::Plan` + `BlockMask`, run before any kernel
+//! does (see `analysis/README.md` for the contract each check
+//! certifies).
+//!
+//! 1. **Shape/broadcast re-inference** — every node's shape is
+//!    re-derived from scratch (independently of `GraphBuilder`, which
+//!    asserted the same rules at construction) and compared against the
+//!    stored shape; rewritten pipelines additionally get their roles
+//!    structurally validated.
+//! 2. **Write-set/alias analysis** — re-derives the `LogicalGrid`
+//!    decomposition exactly as `exec/tiled.rs::PipelineRun::new` will,
+//!    and proves every (batch, head, q-tile) work item writes a
+//!    disjoint output region while reading only immutable values;
+//!    across kernels, proves group write sets are disjoint and reads
+//!    come from earlier launches.
+//! 3. **Float-determinism lint** — walks the planner's `RewriteEvent`
+//!    trail and flags any rewrite that reorders a non-associative f32
+//!    reduction outside the blessed online-softmax contract.
+//! 4. **Mask-skip soundness** — re-derives `BlockMask` tile classes by
+//!    brute-force predicate evaluation (including the dead-row
+//!    demotion rule) instead of trusting construction, and checks the
+//!    exp-pins-to-zero cutoff on the actual kernel.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::exec::{simd, Tensor, NEG_INF};
+use crate::fusion::{
+    classify_block_mask, eval_index_expr, BlockMask, CachedPlan, GroupKind, MaskInfo, MaskKind,
+    Pipeline, Plan, Rule, SoftmaxRoles, TileClass, TileConfig, MAX_ELIM_DIM,
+};
+use crate::grid::{LogicalGrid, TiledDim};
+use crate::ir::{broadcast_shapes, numel, Graph, NodeId, Op, PwOp, ReduceOp, Shape};
+use crate::sketch::{analyze, DimAnalysis};
+
+use super::diagnostics::{node_path, Certificate, CheckClass, Diagnostic};
+
+/// Mirrors the mask classifier's own rank cap.
+const MAX_RANK: usize = 8;
+
+/// Brute-force budget for mask re-derivation, matching the classifier's
+/// `CLASSIFY_CELL_CAP`: anything the classifier was willing to build,
+/// the verifier is willing to re-check.
+const VERIFY_CELL_CAP: usize = 1 << 26;
+
+impl Plan {
+    /// Statically verify this plan against the graph it was derived
+    /// from. Returns a [`Certificate`] summarizing everything proved,
+    /// or every violation found (the verifier does not stop at the
+    /// first). Block masks for input-free index masks are re-classified
+    /// internally; callers holding a [`CachedPlan`] should prefer
+    /// [`verify_cached`], which reuses the cached analysis and masks.
+    pub fn verify(&self, g: &Graph) -> Result<Certificate, Vec<Diagnostic>> {
+        verify_with(g, self, TileConfig::default(), None, None)
+    }
+}
+
+/// Verify a cached plan exactly as the executor will run it: same tile
+/// config, same dimension analysis, same memoized block masks.
+pub fn verify_cached(entry: &CachedPlan) -> Result<Certificate, Vec<Diagnostic>> {
+    verify_with(
+        &entry.graph,
+        &entry.plan,
+        entry.tile,
+        Some(&entry.analysis),
+        Some(&entry.block_masks),
+    )
+}
+
+/// Full-control entry point: verify `plan` against `g` under `tile`.
+/// `analysis` and `masks` are reused when provided (the `PlanCache`
+/// path) and re-derived otherwise.
+pub fn verify_with(
+    g: &Graph,
+    plan: &Plan,
+    tile: TileConfig,
+    analysis: Option<&DimAnalysis>,
+    masks: Option<&[Option<Arc<BlockMask>>]>,
+) -> Result<Certificate, Vec<Diagnostic>> {
+    super::note_verify_call();
+    let owned;
+    let an = match analysis {
+        Some(a) => a,
+        None => {
+            owned = analyze(g);
+            &owned
+        }
+    };
+    let mut cert = Certificate {
+        graph: g.name.clone(),
+        ..Certificate::default()
+    };
+    let mut diags = Vec::new();
+    check_shapes(g, plan, &mut cert, &mut diags);
+    check_races(g, plan, an, tile, &mut cert, &mut diags);
+    check_determinism(g, plan, an, &mut cert, &mut diags);
+    check_masks(g, plan, an, tile, masks, &mut cert, &mut diags);
+    if diags.is_empty() {
+        Ok(cert)
+    } else {
+        Err(diags)
+    }
+}
+
+fn in_graph(g: &Graph, id: NodeId) -> bool {
+    (id.0 as usize) < g.nodes.len()
+}
+
+/// A value derivable without reading any materialized buffer: Const or
+/// Iota, possibly wrapped in view ops. Kernels regenerate these
+/// in-scratch instead of reading them, so they are race-free reads.
+fn generator_only(g: &Graph, id: NodeId) -> bool {
+    if !in_graph(g, id) {
+        return false;
+    }
+    match g.node(id).op {
+        Op::Const { .. } | Op::Iota { .. } => true,
+        Op::Broadcast { input } | Op::Slice { input, .. } => generator_only(g, input),
+        _ => false,
+    }
+}
+
+/// Strip `Broadcast` wrappers (local re-implementation — check 3 and 4
+/// deliberately do not share the planner's helper they are auditing).
+fn peel(g: &Graph, mut id: NodeId) -> NodeId {
+    while in_graph(g, id) {
+        match g.node(id).op {
+            Op::Broadcast { input } => id = input,
+            _ => break,
+        }
+    }
+    id
+}
+
+// ---------------------------------------------------------------------
+// Check 1: shape/broadcast re-inference
+// ---------------------------------------------------------------------
+
+fn check_shapes(g: &Graph, plan: &Plan, cert: &mut Certificate, diags: &mut Vec<Diagnostic>) {
+    for id in g.ids() {
+        let node = g.node(id);
+        let mut ssa_ok = true;
+        for src in node.op.input_ids() {
+            if src.0 >= id.0 {
+                diags.push(
+                    Diagnostic::new(
+                        CheckClass::ShapeInference,
+                        format!(
+                            "operand n{} is not defined before its use (graph is not in SSA order)",
+                            src.0
+                        ),
+                    )
+                    .with_node(g, &plan.log, id),
+                );
+                ssa_ok = false;
+            }
+        }
+        if !ssa_ok {
+            continue;
+        }
+        match infer_shape(g, id) {
+            Ok(shape) => {
+                if shape != node.shape {
+                    diags.push(
+                        Diagnostic::new(
+                            CheckClass::ShapeInference,
+                            format!(
+                                "re-inferred shape {:?} disagrees with the stored shape {:?}",
+                                shape, node.shape
+                            ),
+                        )
+                        .with_node(g, &plan.log, id),
+                    );
+                }
+            }
+            Err(msg) => {
+                diags.push(
+                    Diagnostic::new(CheckClass::ShapeInference, msg).with_node(g, &plan.log, id),
+                );
+            }
+        }
+        cert.nodes_checked += 1;
+    }
+    // Pipeline structural invariants ride with check 1: every role the
+    // rewrite introduced must still denote a node of the promised form.
+    for grp in &plan.groups {
+        let GroupKind::Pipeline(pipe) = &grp.kind else {
+            continue;
+        };
+        let mut roles_ok = true;
+        for (role, id) in [
+            ("m1", pipe.m1),
+            ("score_root", pipe.score_root),
+            ("m2", pipe.m2),
+            ("out", pipe.out),
+        ] {
+            if !in_graph(g, id) {
+                diags.push(Diagnostic::new(
+                    CheckClass::ShapeInference,
+                    format!("pipeline role `{role}` names nonexistent node n{}", id.0),
+                ));
+                roles_ok = false;
+            }
+        }
+        if !roles_ok {
+            continue;
+        }
+        for (role, id) in [("m1", pipe.m1), ("m2", pipe.m2)] {
+            if !matches!(g.node(id).op, Op::Matmul { .. }) {
+                diags.push(
+                    Diagnostic::new(
+                        CheckClass::ShapeInference,
+                        format!("pipeline role `{role}` is not a matmul"),
+                    )
+                    .with_node(g, &plan.log, id),
+                );
+            }
+        }
+        // §3.5 tiling-aware elimination collapses the output head-dim
+        // loop — legal only if one tile covers it.
+        if let Some(&d_out) = g.node(pipe.m2).shape.last() {
+            if d_out > MAX_ELIM_DIM {
+                diags.push(
+                    Diagnostic::new(
+                        CheckClass::ShapeInference,
+                        format!(
+                            "tiling-aware elimination requires one tile to cover the output \
+                             head dim: {d_out} > MAX_ELIM_DIM ({MAX_ELIM_DIM})"
+                        ),
+                    )
+                    .with_node(g, &plan.log, pipe.m2),
+                );
+            }
+        }
+        for (role, id) in [("score_root", pipe.score_root), ("out", pipe.out)] {
+            if !grp.nodes.contains(&id) {
+                diags.push(
+                    Diagnostic::new(
+                        CheckClass::ShapeInference,
+                        format!(
+                            "pipeline role `{role}` (n{}) is not a member of its own kernel group",
+                            id.0
+                        ),
+                    )
+                    .with_node(g, &plan.log, id),
+                );
+            }
+        }
+    }
+}
+
+/// Independently re-derive one node's shape from its operands — the
+/// same rules `GraphBuilder` asserts at construction, re-implemented so
+/// a graph mutated after building (or built by hand) is caught.
+fn infer_shape(g: &Graph, id: NodeId) -> Result<Shape, String> {
+    let node = g.node(id);
+    match &node.op {
+        Op::Input { .. } | Op::Const { .. } => Ok(node.shape.clone()),
+        Op::Iota { axis } => {
+            if *axis >= node.shape.len() {
+                return Err(format!(
+                    "iota axis {axis} out of range for rank {}",
+                    node.shape.len()
+                ));
+            }
+            Ok(node.shape.clone())
+        }
+        Op::Pointwise { op, inputs } => {
+            if op.arity() != inputs.len() {
+                return Err(format!(
+                    "{op:?} expects {} operand(s), has {}",
+                    op.arity(),
+                    inputs.len()
+                ));
+            }
+            let mut shape = g.node(inputs[0]).shape.clone();
+            for &x in &inputs[1..] {
+                let xs = &g.node(x).shape;
+                shape = broadcast_shapes(&shape, xs).ok_or_else(|| {
+                    format!("operand shapes {shape:?} and {xs:?} do not broadcast")
+                })?;
+            }
+            Ok(shape)
+        }
+        Op::Broadcast { input } => {
+            let xs = &g.node(*input).shape;
+            if xs.len() != node.shape.len() {
+                return Err(format!(
+                    "broadcast changes rank: {} -> {}",
+                    xs.len(),
+                    node.shape.len()
+                ));
+            }
+            for (ax, (&a, &b)) in xs.iter().zip(&node.shape).enumerate() {
+                if a != b && a != 1 {
+                    return Err(format!("broadcast axis {ax}: cannot stretch {a} to {b}"));
+                }
+            }
+            Ok(node.shape.clone())
+        }
+        Op::Matmul {
+            lhs,
+            rhs,
+            transpose_rhs,
+        } => {
+            let sa = &g.node(*lhs).shape;
+            let sb = &g.node(*rhs).shape;
+            if sa.len() != sb.len() {
+                return Err(format!(
+                    "matmul rank mismatch: lhs {sa:?} vs rhs {sb:?}"
+                ));
+            }
+            let r = sa.len();
+            if r < 2 {
+                return Err(format!("matmul needs rank >= 2, got {r}"));
+            }
+            let (m, ka) = (sa[r - 2], sa[r - 1]);
+            let (kb, n) = if *transpose_rhs {
+                (sb[r - 1], sb[r - 2])
+            } else {
+                (sb[r - 2], sb[r - 1])
+            };
+            if ka != kb {
+                return Err(format!("matmul contraction mismatch: {ka} vs {kb}"));
+            }
+            let mut shape = Vec::with_capacity(r);
+            for i in 0..r - 2 {
+                if sb[i] != sa[i] && sb[i] != 1 {
+                    return Err(format!(
+                        "matmul batch axis {i}: rhs {} does not broadcast to lhs {}",
+                        sb[i], sa[i]
+                    ));
+                }
+                shape.push(sa[i]);
+            }
+            shape.push(m);
+            shape.push(n);
+            Ok(shape)
+        }
+        Op::Reduce { input, axis, .. } => {
+            let mut shape = g.node(*input).shape.clone();
+            if *axis >= shape.len() {
+                return Err(format!(
+                    "reduce axis {axis} out of range for rank {}",
+                    shape.len()
+                ));
+            }
+            shape[*axis] = 1;
+            Ok(shape)
+        }
+        Op::Slice {
+            input,
+            axis,
+            start,
+            len,
+        } => {
+            let mut shape = g.node(*input).shape.clone();
+            if *axis >= shape.len() {
+                return Err(format!(
+                    "slice axis {axis} out of range for rank {}",
+                    shape.len()
+                ));
+            }
+            if start + len > shape[*axis] {
+                return Err(format!(
+                    "slice {start}..{} out of range for axis extent {}",
+                    start + len,
+                    shape[*axis]
+                ));
+            }
+            shape[*axis] = *len;
+            Ok(shape)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Check 2: write-set/alias analysis over the LogicalGrid decomposition
+// ---------------------------------------------------------------------
+
+fn check_races(
+    g: &Graph,
+    plan: &Plan,
+    an: &DimAnalysis,
+    tile: TileConfig,
+    cert: &mut Certificate,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let n = g.nodes.len();
+    // (a) Inter-kernel write sets: each materialized node is written by
+    // exactly one kernel group, and the assignment table agrees.
+    let mut owner: Vec<Option<usize>> = vec![None; n];
+    for (gi, grp) in plan.groups.iter().enumerate() {
+        for &m in &grp.nodes {
+            if !in_graph(g, m) {
+                diags.push(Diagnostic::new(
+                    CheckClass::RaceFreedom,
+                    format!("kernel group {gi} names nonexistent node n{}", m.0),
+                ));
+                continue;
+            }
+            let i = m.0 as usize;
+            match owner[i] {
+                Some(prev) => diags.push(
+                    Diagnostic::new(
+                        CheckClass::RaceFreedom,
+                        format!(
+                            "kernel groups {prev} and {gi} both write n{}: overlapping \
+                             write sets",
+                            m.0
+                        ),
+                    )
+                    .with_node(g, &plan.log, m),
+                ),
+                None => {
+                    owner[i] = Some(gi);
+                    let assigned = plan.assignment.get(i).copied().unwrap_or(usize::MAX);
+                    if assigned != gi {
+                        diags.push(
+                            Diagnostic::new(
+                                CheckClass::RaceFreedom,
+                                format!(
+                                    "assignment table maps n{} to group {assigned} but group \
+                                     {gi} claims it",
+                                    m.0
+                                ),
+                            )
+                            .with_node(g, &plan.log, m),
+                        );
+                    }
+                }
+            }
+        }
+    }
+    // (b) Read immutability: groups launch in index order, so every
+    // value a kernel reads must be a graph input, its own in-kernel
+    // scratch, or the output of an earlier-launched group.
+    for (gi, grp) in plan.groups.iter().enumerate() {
+        for &m in &grp.nodes {
+            if !in_graph(g, m) {
+                continue;
+            }
+            for src in g.node(m).op.input_ids() {
+                if !in_graph(g, src) {
+                    continue; // diagnosed by check 1
+                }
+                if matches!(g.node(src).op, Op::Input { .. }) {
+                    continue;
+                }
+                match owner[src.0 as usize] {
+                    Some(gj) if gj <= gi => {}
+                    Some(gj) => diags.push(
+                        Diagnostic::new(
+                            CheckClass::RaceFreedom,
+                            format!(
+                                "group {gi} reads n{} while later-launched group {gj} \
+                                 writes it",
+                                src.0
+                            ),
+                        )
+                        .with_node(g, &plan.log, m),
+                    ),
+                    // Pure generator chains (Const/Iota, possibly viewed)
+                    // are re-evaluated inside the kernel that reads them —
+                    // immutable by construction, never materialized.
+                    None if generator_only(g, src) => {}
+                    None => diags.push(
+                        Diagnostic::new(
+                            CheckClass::RaceFreedom,
+                            format!(
+                                "group {gi} reads n{}, which no kernel group materializes",
+                                src.0
+                            ),
+                        )
+                        .with_node(g, &plan.log, m),
+                    ),
+                }
+            }
+        }
+        cert.groups_checked += 1;
+    }
+    for &out in &g.outputs {
+        if in_graph(g, out)
+            && !matches!(g.node(out).op, Op::Input { .. })
+            && owner[out.0 as usize].is_none()
+        {
+            diags.push(
+                Diagnostic::new(
+                    CheckClass::RaceFreedom,
+                    format!("graph output n{} is not produced by any kernel group", out.0),
+                )
+                .with_node(g, &plan.log, out),
+            );
+        }
+    }
+    // (c) Intra-pipeline grid decomposition: re-derive the LogicalGrid
+    // exactly as exec/tiled.rs::PipelineRun::new will, and prove the
+    // per-block output regions are pairwise disjoint and exactly cover
+    // the output. (K/V tile staging and the online-softmax row state
+    // live in the block's own TilePool/WorkerScratch region by
+    // construction — never shared — so disjoint output regions plus the
+    // read-immutability proof above give race freedom for
+    // exec/parallel.rs and exec/runtime.rs. The debug-build touch-log
+    // cross-check in `merge` re-verifies this dynamically.)
+    for grp in &plan.groups {
+        let GroupKind::Pipeline(pipe) = &grp.kind else {
+            continue;
+        };
+        if !in_graph(g, pipe.out) || !in_graph(g, pipe.score_root) || !in_graph(g, pipe.m2) {
+            continue; // diagnosed by check 1
+        }
+        let out_shape = &g.node(pipe.out).shape;
+        let out_axes = &an.axes[pipe.out.0 as usize];
+        let rank = out_shape.len();
+        let Some(q_ax_out) = out_axes.iter().position(|c| *c == pipe.q_class) else {
+            diags.push(
+                Diagnostic::new(
+                    CheckClass::RaceFreedom,
+                    "pipeline output does not carry the q dimension: the executor cannot \
+                     cut disjoint q-tile regions",
+                )
+                .with_node(g, &plan.log, pipe.out),
+            );
+            continue;
+        };
+        if rank < 2 || q_ax_out == rank - 1 {
+            diags.push(
+                Diagnostic::new(
+                    CheckClass::RaceFreedom,
+                    format!(
+                        "q axis {q_ax_out} coincides with the kernel's contiguous output \
+                         axis (rank {rank}): the grid decomposition is degenerate"
+                    ),
+                )
+                .with_node(g, &plan.log, pipe.out),
+            );
+            continue;
+        }
+        let score_axes = &an.axes[pipe.score_root.0 as usize];
+        let Some(kv_ax_s) = score_axes.iter().rposition(|c| *c == pipe.kv_class) else {
+            diags.push(
+                Diagnostic::new(
+                    CheckClass::RaceFreedom,
+                    "score node does not carry the kv dimension",
+                )
+                .with_node(g, &plan.log, pipe.score_root),
+            );
+            continue;
+        };
+        if score_axes[..kv_ax_s]
+            .iter()
+            .rposition(|c| *c == pipe.q_class)
+            .is_none()
+        {
+            diags.push(
+                Diagnostic::new(
+                    CheckClass::RaceFreedom,
+                    "score node does not carry the q dimension left of kv",
+                )
+                .with_node(g, &plan.log, pipe.score_root),
+            );
+            continue;
+        }
+        if matches!(
+            g.node(pipe.m2).op,
+            Op::Matmul {
+                transpose_rhs: true,
+                ..
+            }
+        ) {
+            diags.push(
+                Diagnostic::new(
+                    CheckClass::RaceFreedom,
+                    "PV matmul with transposed V is unsupported by the tiled engine",
+                )
+                .with_node(g, &plan.log, pipe.m2),
+            );
+        }
+        let sq = out_shape[q_ax_out];
+        if sq == 0 {
+            diags.push(
+                Diagnostic::new(CheckClass::RaceFreedom, "empty q dimension")
+                    .with_node(g, &plan.log, pipe.out),
+            );
+            continue;
+        }
+        let bq = tile.block_q.max(1).min(sq);
+        let outer_axes: Vec<usize> = (0..rank)
+            .filter(|&ax| ax != q_ax_out && ax != rank - 1)
+            .collect();
+        let mut dims: Vec<TiledDim> = outer_axes
+            .iter()
+            .map(|&ax| TiledDim {
+                size: out_shape[ax],
+                tile: 1,
+            })
+            .collect();
+        dims.push(TiledDim { size: sq, tile: bq });
+        let grid = LogicalGrid::new(dims);
+        // q-tile ranges must partition [0, sq): contiguous, non-empty,
+        // exactly covering.
+        let q_dim = outer_axes.len();
+        let mut covered = 0usize;
+        let mut partitioned = true;
+        for qt in 0..grid.dims[q_dim].n_tiles() {
+            let (start, len) = grid.tile_range(q_dim, qt);
+            if start != covered || len == 0 {
+                partitioned = false;
+                break;
+            }
+            covered += len;
+        }
+        if !partitioned || covered != sq {
+            diags.push(
+                Diagnostic::new(
+                    CheckClass::RaceFreedom,
+                    format!("q-tiles do not partition the q axis: covered {covered} of {sq} rows"),
+                )
+                .with_node(g, &plan.log, pipe.out),
+            );
+            continue;
+        }
+        // Each block's output region pins every outer axis to a single
+        // coordinate and the q axis to that block's own q-tile range, so
+        // two distinct blocks differ in a pinned axis => pairwise
+        // disjoint. Region volumes summed against the output prove
+        // exact coverage (no element written twice or never).
+        let outer_elems: usize = outer_axes.iter().map(|&ax| out_shape[ax]).product();
+        let region_total = outer_elems
+            .saturating_mul(sq)
+            .saturating_mul(out_shape[rank - 1]);
+        if region_total != numel(out_shape) {
+            diags.push(
+                Diagnostic::new(
+                    CheckClass::RaceFreedom,
+                    format!(
+                        "grid block regions cover {region_total} elements but the output \
+                         has {}",
+                        numel(out_shape)
+                    ),
+                )
+                .with_node(g, &plan.log, pipe.out),
+            );
+            continue;
+        }
+        cert.blocks_proved_disjoint += grid.n_blocks();
+        cert.pipelines_checked += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Check 3: float-determinism lint over the RewriteEvent trail
+// ---------------------------------------------------------------------
+
+fn check_determinism(
+    g: &Graph,
+    plan: &Plan,
+    an: &DimAnalysis,
+    cert: &mut Certificate,
+    diags: &mut Vec<Diagnostic>,
+) {
+    let pipes: Vec<&Pipeline> = plan
+        .groups
+        .iter()
+        .filter_map(|grp| match &grp.kind {
+            GroupKind::Pipeline(p) => Some(p),
+            _ => None,
+        })
+        .collect();
+    for grp in &plan.groups {
+        let GroupKind::Pipeline(pipe) = &grp.kind else {
+            continue;
+        };
+        if let Some(roles) = &pipe.softmax {
+            check_softmax_contract(g, an, plan, pipe, roles, diags);
+        }
+        // Inside a tiled pipeline the only reductions whose k-chain may
+        // be re-blocked are the online-softmax max/sum (the executor
+        // keeps each row's combine a single sequential chain over
+        // k-tiles; within a tile the SIMD kernels use the fixed
+        // striped-8 tree, identical across tiers). Any other fused
+        // reduction — or a third matmul contraction — would be
+        // reordered with no such contract.
+        for &m in &grp.nodes {
+            if !in_graph(g, m) {
+                continue;
+            }
+            match &g.node(m).op {
+                Op::Reduce { op, .. } => {
+                    let blessed = pipe
+                        .softmax
+                        .as_ref()
+                        .map_or(false, |r| r.max == m || r.sum == m);
+                    if !blessed {
+                        diags.push(
+                            Diagnostic::new(
+                                CheckClass::Determinism,
+                                format!(
+                                    "{op:?} reduction fused into a tiled pipeline outside \
+                                     the online-softmax contract: tiling would reorder a \
+                                     non-associative f32 reduction"
+                                ),
+                            )
+                            .with_node(g, &plan.log, m),
+                        );
+                    }
+                }
+                Op::Matmul { .. } => {
+                    if m != pipe.m1 && m != pipe.m2 {
+                        diags.push(
+                            Diagnostic::new(
+                                CheckClass::Determinism,
+                                "matmul inside a pipeline that is neither the QK nor the PV \
+                                 matmul: its contraction chain would be re-blocked",
+                            )
+                            .with_node(g, &plan.log, m),
+                        );
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    // Every reduction-reordering event in the trail must be located at
+    // a pipeline role node that the checks above validated. (Prologue/
+    // epilogue/pointwise fusion preserve element-wise evaluation order
+    // and cannot reorder a reduction, so any location is fine — the
+    // planner even logs prologue events on abandoned pipeline
+    // attempts.)
+    for e in &plan.log {
+        cert.rewrite_events_checked += 1;
+        let accounted = match e.rule {
+            Rule::UnifiedReductionGemm => pipes.iter().any(|p| p.m1 == e.at),
+            Rule::StructuralDemotion => pipes.iter().any(|p| {
+                p.m2 == e.at || p.softmax.as_ref().map_or(false, |r| r.max == e.at)
+            }),
+            Rule::AlgebraicOnline => pipes
+                .iter()
+                .any(|p| p.softmax.as_ref().map_or(false, |r| r.sum == e.at)),
+            Rule::TilingElimination => pipes.iter().any(|p| p.m2 == e.at),
+            _ => true,
+        };
+        if !accounted {
+            let d = Diagnostic::new(
+                CheckClass::Determinism,
+                format!(
+                    "rewrite trail claims {:?} at n{} but no pipeline role accounts for \
+                     that reordering",
+                    e.rule, e.at.0
+                ),
+            );
+            diags.push(if in_graph(g, e.at) {
+                d.with_node(g, &plan.log, e.at)
+            } else {
+                d
+            });
+        }
+    }
+}
+
+/// The blessed online-softmax contract (§3.3/3.4): max is a Max
+/// reduction over the kv class, sum a Sum reduction of `exp` over the
+/// same class, `exp = exp(score - broadcast(max))` (the homomorphism
+/// that justifies blockwise rescaling) and `div = exp / broadcast(sum)`
+/// (deferred normalization). Anything else is a reordering the
+/// bit-exactness contract does not cover.
+fn check_softmax_contract(
+    g: &Graph,
+    an: &DimAnalysis,
+    plan: &Plan,
+    pipe: &Pipeline,
+    roles: &SoftmaxRoles,
+    diags: &mut Vec<Diagnostic>,
+) {
+    for id in [roles.max, roles.exp, roles.sum, roles.div] {
+        if !in_graph(g, id) {
+            diags.push(Diagnostic::new(
+                CheckClass::Determinism,
+                format!("softmax role names nonexistent node n{}", id.0),
+            ));
+            return;
+        }
+    }
+    let (x, am) = match g.node(roles.max).op {
+        Op::Reduce {
+            op: ReduceOp::Max,
+            input,
+            axis,
+        } => (input, axis),
+        _ => {
+            diags.push(
+                Diagnostic::new(
+                    CheckClass::Determinism,
+                    "softmax `max` role is not a Max reduction: the online rescale \
+                     exp(m - m') is not an identity",
+                )
+                .with_node(g, &plan.log, roles.max),
+            );
+            return;
+        }
+    };
+    let (sum_in, as_) = match g.node(roles.sum).op {
+        Op::Reduce {
+            op: ReduceOp::Sum,
+            input,
+            axis,
+        } => (input, axis),
+        _ => {
+            diags.push(
+                Diagnostic::new(
+                    CheckClass::Determinism,
+                    "softmax `sum` role is not a Sum reduction",
+                )
+                .with_node(g, &plan.log, roles.sum),
+            );
+            return;
+        }
+    };
+    if sum_in != roles.exp {
+        diags.push(
+            Diagnostic::new(
+                CheckClass::Determinism,
+                format!(
+                    "softmax `sum` must reduce the exp node (reduces n{} instead)",
+                    sum_in.0
+                ),
+            )
+            .with_node(g, &plan.log, roles.sum),
+        );
+        return;
+    }
+    let cm = an.axes[x.0 as usize].get(am).copied();
+    let cs = an.axes[roles.exp.0 as usize].get(as_).copied();
+    if cm != cs || cm != Some(pipe.kv_class) {
+        diags.push(
+            Diagnostic::new(
+                CheckClass::Determinism,
+                format!(
+                    "max and sum must reduce the pipeline's kv dimension \
+                     (classes {cm:?} vs {cs:?})"
+                ),
+            )
+            .with_node(g, &plan.log, roles.sum),
+        );
+    }
+    let exp_ok = match &g.node(roles.exp).op {
+        Op::Pointwise {
+            op: PwOp::Exp,
+            inputs,
+        } if inputs.len() == 1 && in_graph(g, inputs[0]) => match &g.node(inputs[0]).op {
+            Op::Pointwise {
+                op: PwOp::Sub,
+                inputs: si,
+            } if si.len() == 2 => si[0] == x && peel(g, si[1]) == roles.max,
+            _ => false,
+        },
+        _ => false,
+    };
+    if !exp_ok {
+        diags.push(
+            Diagnostic::new(
+                CheckClass::Determinism,
+                "softmax `exp` role is not exp(score - max): blockwise max-rescaling \
+                 would change the result",
+            )
+            .with_node(g, &plan.log, roles.exp),
+        );
+    }
+    let div_ok = match &g.node(roles.div).op {
+        Op::Pointwise {
+            op: PwOp::Div,
+            inputs,
+        } if inputs.len() == 2 => inputs[0] == roles.exp && peel(g, inputs[1]) == roles.sum,
+        _ => false,
+    };
+    if !div_ok {
+        diags.push(
+            Diagnostic::new(
+                CheckClass::Determinism,
+                "softmax `div` role is not exp / sum: deferred normalization would \
+                 change the result",
+            )
+            .with_node(g, &plan.log, roles.div),
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Check 4: mask-skip soundness
+// ---------------------------------------------------------------------
+
+fn check_masks(
+    g: &Graph,
+    plan: &Plan,
+    an: &DimAnalysis,
+    tile: TileConfig,
+    provided: Option<&[Option<Arc<BlockMask>>]>,
+    cert: &mut Certificate,
+    diags: &mut Vec<Diagnostic>,
+) {
+    // One numeric fact underwrites every skip: the shared exp kernel
+    // pins exp(NEG_INF - m') to exactly 0.0 for any live running max m'
+    // (NEG_INF - m' is far below the kernel's underflow cutoff), and
+    // exp(0) to exactly 1.0 (so the rescale alpha of an all-sentinel
+    // prefix is the identity). Observe it on the actual kernel rather
+    // than trusting the constants.
+    cert.exp_cutoff_proved = simd::exp_f32(NEG_INF) == 0.0
+        && simd::exp_f32(NEG_INF - 100.0) == 0.0
+        && simd::exp_f32(NEG_INF + 1e25) == 0.0
+        && simd::exp_f32(0.0) == 1.0;
+    if !cert.exp_cutoff_proved {
+        diags.push(Diagnostic::new(
+            CheckClass::MaskSkip,
+            "exp kernel does not pin the -1e30 mask sentinel to exactly 0.0 (or exp(0) \
+             to 1.0): empty-tile skipping is not bit-identical",
+        ));
+    }
+    for (gi, grp) in plan.groups.iter().enumerate() {
+        let GroupKind::Pipeline(pipe) = &grp.kind else {
+            continue;
+        };
+        let Some(info) = &pipe.mask else {
+            continue;
+        };
+        if !in_graph(g, pipe.score_root) || !in_graph(g, info.cond) || !in_graph(g, info.value) {
+            continue; // diagnosed by check 1
+        }
+        if pipe.softmax.is_none() {
+            diags.push(
+                Diagnostic::new(
+                    CheckClass::MaskSkip,
+                    "mask on a pipeline without online softmax: a skipped tile would \
+                     silently drop sentinel contributions",
+                )
+                .with_node(g, &plan.log, pipe.score_root),
+            );
+            continue;
+        }
+        // Re-derive the fill independently: the score root must be
+        // Where(cond, value, -1e30) for the skip algebra to apply.
+        match &g.node(pipe.score_root).op {
+            Op::Pointwise {
+                op: PwOp::Where,
+                inputs,
+            } if inputs.len() == 3 => {
+                if inputs[0] != info.cond || inputs[1] != info.value {
+                    diags.push(
+                        Diagnostic::new(
+                            CheckClass::MaskSkip,
+                            "MaskInfo cond/value do not match the score root's Where operands",
+                        )
+                        .with_node(g, &plan.log, pipe.score_root),
+                    );
+                }
+                let fill = peel(g, inputs[2]);
+                let fill_ok = in_graph(g, fill)
+                    && matches!(g.node(fill).op, Op::Const { value } if value == NEG_INF);
+                if !fill_ok {
+                    diags.push(
+                        Diagnostic::new(
+                            CheckClass::MaskSkip,
+                            format!(
+                                "mask fill is not the {NEG_INF:e} sentinel: the \
+                                 exp-pins-to-zero proof does not apply"
+                            ),
+                        )
+                        .with_node(g, &plan.log, pipe.score_root),
+                    );
+                }
+            }
+            _ => {
+                diags.push(
+                    Diagnostic::new(
+                        CheckClass::MaskSkip,
+                        "masked pipeline's score root is not a Where(keep, score, fill)",
+                    )
+                    .with_node(g, &plan.log, pipe.score_root),
+                );
+                continue;
+            }
+        }
+        match &info.kind {
+            MaskKind::Threshold { .. } => {
+                // Data-dependent: tiles are pruned at runtime from a
+                // coarse score pass, so there is no static class table
+                // to certify; the fill re-derivation above is the
+                // static part of that contract.
+            }
+            MaskKind::Index { .. } => {
+                let score_shape = &g.node(pipe.score_root).shape;
+                let score_axes = &an.axes[pipe.score_root.0 as usize];
+                let Some(kv_ax) = score_axes.iter().rposition(|c| *c == pipe.kv_class) else {
+                    continue; // diagnosed by check 2
+                };
+                let Some(q_ax) = score_axes[..kv_ax]
+                    .iter()
+                    .rposition(|c| *c == pipe.q_class)
+                else {
+                    continue; // diagnosed by check 2
+                };
+                let cached = provided.and_then(|v| v.get(gi)).and_then(|o| o.as_deref());
+                let owned;
+                let bm: Option<&BlockMask> = match cached {
+                    Some(bm) => Some(bm),
+                    None if info.is_input_free() => {
+                        owned = classify_block_mask(
+                            g,
+                            info,
+                            score_shape,
+                            q_ax,
+                            kv_ax,
+                            tile.block_q.min(score_shape[q_ax].max(1)),
+                            tile.block_k.min(score_shape[kv_ax].max(1)),
+                            &HashMap::new(),
+                        );
+                        owned.as_ref()
+                    }
+                    None => None, // input-dependent: classified per launch
+                };
+                if let Some(bm) = bm {
+                    let found =
+                        verify_block_mask(g, info, bm, score_shape, q_ax, kv_ax, &HashMap::new());
+                    diags.extend(found);
+                    cert.mask_cells_checked = cert.mask_cells_checked.saturating_add(
+                        bm.n_deps().saturating_mul(bm.sq).saturating_mul(bm.sk),
+                    );
+                    cert.empty_tiles_proved += bm.skipped_tiles() as u64;
+                }
+            }
+        }
+    }
+}
+
+/// Independently re-derive a [`BlockMask`]'s skip legality from the
+/// mask predicate itself — brute-force evaluation of every (dep, q, k)
+/// cell — instead of trusting the classifier's construction. Checks:
+/// geometry agrees with the score grid, the dependency axes match an
+/// independent varies-walk, `Full` tiles are fully live (mask elision
+/// is sound), `Empty` tiles are fully dead (the skip drops nothing),
+/// and no `Empty` tile sits in a q-tile with a fully-dead row (the
+/// dead-row demotion rule: such tiles must be `Partial` so the dense
+/// path's garbage-cancellation arithmetic is reproduced exactly).
+pub fn verify_block_mask(
+    g: &Graph,
+    info: &MaskInfo,
+    bm: &BlockMask,
+    score_shape: &[usize],
+    q_ax: usize,
+    kv_ax: usize,
+    inputs: &HashMap<String, Tensor>,
+) -> Vec<Diagnostic> {
+    let mut diags = Vec::new();
+    let path = if in_graph(g, info.cond) {
+        node_path(g, info.cond)
+    } else {
+        String::new()
+    };
+    let mk = |msg: String| Diagnostic {
+        check: CheckClass::MaskSkip,
+        rule: None,
+        node: Some(info.cond),
+        path: path.clone(),
+        message: msg,
+    };
+    let MaskKind::Index { input_deps } = &info.kind else {
+        diags.push(mk(
+            "only index masks carry static tile classes to verify".to_string(),
+        ));
+        return diags;
+    };
+    if !input_deps.iter().all(|n| inputs.contains_key(n)) {
+        diags.push(mk(format!(
+            "mask inputs {input_deps:?} not supplied: cannot re-derive tile classes"
+        )));
+        return diags;
+    }
+    let rank = score_shape.len();
+    if rank > MAX_RANK || q_ax >= rank || kv_ax >= rank || q_ax == kv_ax {
+        diags.push(mk(format!(
+            "degenerate mask geometry: rank {rank}, q_ax {q_ax}, kv_ax {kv_ax}"
+        )));
+        return diags;
+    }
+    let (sq, sk) = (score_shape[q_ax], score_shape[kv_ax]);
+    if bm.sq != sq || bm.sk != sk {
+        diags.push(mk(format!(
+            "BlockMask geometry {}x{} does not match the score grid {sq}x{sk}",
+            bm.sq, bm.sk
+        )));
+        return diags;
+    }
+    let (bq, bk) = (bm.block_q, bm.block_k);
+    if bq == 0 || bk == 0 || bm.n_q_tiles != sq.div_ceil(bq) || bm.n_k_tiles != sk.div_ceil(bk) {
+        diags.push(mk(format!(
+            "tile counts ({}, {}) disagree with block sizes ({bq}, {bk})",
+            bm.n_q_tiles, bm.n_k_tiles
+        )));
+        return diags;
+    }
+    // Independent varies-walk: which score axes (besides q/kv) does the
+    // predicate actually depend on?
+    let mut varies = [false; MAX_RANK];
+    predicate_varies_along(g, info.cond, &mut varies[..rank]);
+    let mut dep_axes = Vec::new();
+    let mut dep_sizes = Vec::new();
+    for (ax, &sz) in score_shape.iter().enumerate() {
+        if ax != q_ax && ax != kv_ax && varies[ax] && sz > 1 {
+            dep_axes.push(ax);
+            dep_sizes.push(sz);
+        }
+    }
+    if dep_axes != bm.dep_axes {
+        diags.push(mk(format!(
+            "predicate varies along axes {:?} but the mask classified {:?}",
+            dep_axes, bm.dep_axes
+        )));
+        return diags;
+    }
+    let n_dep = dep_sizes.iter().product::<usize>().max(1);
+    if n_dep != bm.n_deps() {
+        diags.push(mk(format!(
+            "dep combination count {n_dep} disagrees with the mask's {}",
+            bm.n_deps()
+        )));
+        return diags;
+    }
+    if n_dep.saturating_mul(sq).saturating_mul(sk) > VERIFY_CELL_CAP {
+        // Too large to brute-force — the classifier refuses the same
+        // budget, so a mask this big should not exist; skip quietly.
+        return diags;
+    }
+    let (n_q, n_k) = (bm.n_q_tiles, bm.n_k_tiles);
+    let mut kept = vec![0u32; n_q * n_k];
+    let mut row_live = vec![false; sq];
+    let mut coords = [0usize; MAX_RANK];
+    for dep in 0..n_dep {
+        // Mixed-radix decompose, most-significant axis first — the
+        // classifier's own dep_index layout.
+        let mut rem = dep;
+        for i in (0..dep_axes.len()).rev() {
+            coords[dep_axes[i]] = rem % dep_sizes[i];
+            rem /= dep_sizes[i];
+        }
+        kept.fill(0);
+        row_live.fill(false);
+        for qi in 0..sq {
+            coords[q_ax] = qi;
+            for ki in 0..sk {
+                coords[kv_ax] = ki;
+                if eval_index_expr(g, info.cond, &coords[..rank], inputs) != 0.0 {
+                    kept[(qi / bq) * n_k + ki / bk] += 1;
+                    row_live[qi] = true;
+                }
+            }
+        }
+        for qt in 0..n_q {
+            let cq = bq.min(sq - qt * bq);
+            let has_dead_row = (qt * bq..qt * bq + cq).any(|q| !row_live[q]);
+            for kt in 0..n_k {
+                let ck = bk.min(sk - kt * bk);
+                let n_kept = kept[qt * n_k + kt];
+                match bm.class(dep, qt, kt) {
+                    TileClass::Full if n_kept != (cq * ck) as u32 => diags.push(mk(format!(
+                        "Full tile (dep {dep}, q-tile {qt}, k-tile {kt}) elides the mask \
+                         but only {n_kept}/{} positions are live",
+                        cq * ck
+                    ))),
+                    TileClass::Empty if n_kept != 0 => diags.push(mk(format!(
+                        "Empty tile (dep {dep}, q-tile {qt}, k-tile {kt}) would be \
+                         skipped but {n_kept} positions are live"
+                    ))),
+                    TileClass::Empty if has_dead_row => diags.push(mk(format!(
+                        "undemoted dead-row Empty tile (dep {dep}, q-tile {qt}, k-tile \
+                         {kt}): the q-tile contains a fully-dead row, whose dense \
+                         sentinel arithmetic a skip cannot reproduce bit-identically"
+                    ))),
+                    _ => {}
+                }
+            }
+        }
+    }
+    diags
+}
+
+/// Conservative data-flow walk: mark every score axis the predicate's
+/// value can vary along (local re-implementation of the classifier's
+/// private helper — check 4 must not trust the code it audits).
+fn predicate_varies_along(g: &Graph, id: NodeId, axes: &mut [bool]) {
+    if !in_graph(g, id) {
+        return;
+    }
+    let node = g.node(id);
+    match &node.op {
+        Op::Const { .. } => {}
+        Op::Iota { axis } => {
+            if *axis < axes.len() {
+                axes[*axis] = true;
+            }
+        }
+        Op::Input { .. } => {
+            for (ax, &sz) in node.shape.iter().enumerate() {
+                if sz > 1 && ax < axes.len() {
+                    axes[ax] = true;
+                }
+            }
+        }
+        Op::Broadcast { input } | Op::Slice { input, .. } => {
+            predicate_varies_along(g, *input, axes)
+        }
+        Op::Pointwise { inputs, .. } => {
+            for &i in inputs {
+                predicate_varies_along(g, i, axes);
+            }
+        }
+        Op::Matmul { .. } | Op::Reduce { .. } => {
+            for a in axes.iter_mut() {
+                *a = true;
+            }
+        }
+    }
+}

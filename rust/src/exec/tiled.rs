@@ -673,18 +673,22 @@ impl<'a> PipelineRun<'a> {
         let rank = out_shape.len();
 
         // Locate the q axis on the output and the kv axis on the scores.
+        // These three are structural preconditions on every Pipeline the
+        // planner emits; `analysis::verify` (check 2) re-derives them at
+        // plan birth, so a failure here means an unverified hand-built
+        // plan reached the executor.
         let q_ax_out = out_axes
             .iter()
             .position(|c| *c == pipe.q_class)
-            .expect("pipeline output must carry the q dimension");
+            .expect("pipeline output must carry the q dimension (caught by analysis::verify)");
         let kv_ax_s = score_axes
             .iter()
             .rposition(|c| *c == pipe.kv_class)
-            .expect("score node must carry the kv dimension");
+            .expect("score node must carry the kv dimension (caught by analysis::verify)");
         let q_ax_s = score_axes[..kv_ax_s]
             .iter()
             .rposition(|c| *c == pipe.q_class)
-            .expect("score node must carry the q dimension");
+            .expect("score node must carry the q dimension (caught by analysis::verify)");
         let sq = out_shape[q_ax_out];
         let sk = score_shape[kv_ax_s];
         let d_out = out_shape[rank - 1];
@@ -868,6 +872,28 @@ impl<'a> PipelineRun<'a> {
     /// a fresh per-kernel seen-set (L2 is not assumed warm across
     /// kernels). Returns the materialized value of `pipe.out`.
     fn merge(&self, blocks: Vec<BlockOut>, counters: &mut Counters) -> Tensor {
+        // Debug cross-check of the verifier's race-freedom certificate
+        // (`analysis::verify` check 2): the blocks actually produced
+        // must write pairwise-disjoint regions that exactly cover the
+        // output — the dynamic counterpart of the static proof.
+        #[cfg(debug_assertions)]
+        {
+            let mut written: HashSet<&Region> = HashSet::new();
+            let mut elems = 0usize;
+            for b in &blocks {
+                debug_assert!(
+                    written.insert(&b.out_region),
+                    "two grid blocks write output region {:?}",
+                    b.out_region
+                );
+                elems += b.out_region.iter().map(|&(_, len)| len).product::<usize>();
+            }
+            debug_assert_eq!(
+                elems,
+                self.meta.out_shape.iter().product::<usize>(),
+                "grid blocks must cover the output exactly"
+            );
+        }
         let mut seen: HashSet<(u32, Region)> = HashSet::new();
         let mut out = Tensor::zeros(&self.meta.out_shape);
         for b in blocks {
@@ -1012,7 +1038,11 @@ fn run_single_group(
                 let t = eval_node_pooled(&g.node(oid).op, &g.node(oid).shape, &[], pool);
                 scratch.insert(oid, t);
             } else {
-                panic!("operand {oid:?} not available");
+                // Every non-input, non-generator operand must be
+                // materialized by an earlier group — a read-immutability
+                // invariant `analysis::verify` (check 2) proves at plan
+                // birth, so this is unreachable for verified plans.
+                panic!("operand {oid:?} not available (caught by analysis::verify)");
             }
         }
         let operand_refs: Vec<&Tensor> = operand_ids
@@ -1023,7 +1053,7 @@ fn run_single_group(
                     .or_else(|| values.get(oid))
                     .unwrap_or_else(|| {
                         let Op::Input { name } = &g.node(*oid).op else {
-                            panic!("operand {oid:?} not available")
+                            panic!("operand {oid:?} not available (caught by analysis::verify)")
                         };
                         &inputs[name]
                     })
@@ -1167,7 +1197,10 @@ pub fn execute_plans_batched(
     let analyses: Vec<&DimAnalysis> = jobs
         .iter()
         .zip(&owned_analyses)
-        .map(|(j, o)| j.analysis.unwrap_or_else(|| o.as_ref().unwrap()))
+        .map(|(j, o)| {
+            j.analysis
+                .unwrap_or_else(|| o.as_ref().expect("owned_analyses filled for jobs without one"))
+        })
         .collect();
     let owned_cons: Vec<Option<Vec<Vec<NodeId>>>> = jobs
         .iter()
@@ -1176,7 +1209,10 @@ pub fn execute_plans_batched(
     let cons: Vec<&[Vec<NodeId>]> = jobs
         .iter()
         .zip(&owned_cons)
-        .map(|(j, o)| j.consumers.unwrap_or_else(|| o.as_deref().unwrap()))
+        .map(|(j, o)| {
+            j.consumers
+                .unwrap_or_else(|| o.as_deref().expect("owned_cons filled for jobs without one"))
+        })
         .collect();
     let outputs: Vec<HashSet<NodeId>> = jobs
         .iter()

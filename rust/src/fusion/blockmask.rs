@@ -125,6 +125,14 @@ impl BlockMask {
         self.classes[(dep * self.n_q_tiles + qt) * self.n_k_tiles + kt]
     }
 
+    /// Overwrite one tile class. Test/fault-injection hook for the
+    /// static verifier (`analysis::verify_block_mask`) — never called
+    /// by the planner or executor.
+    #[doc(hidden)]
+    pub fn override_class(&mut self, dep: usize, qt: usize, kt: usize, class: TileClass) {
+        self.classes[(dep * self.n_q_tiles + qt) * self.n_k_tiles + kt] = class;
+    }
+
     /// Dep-combination index of a block whose score-space region starts
     /// are `region[ax].0` (grid outer axes carry tile size 1, so the
     /// start *is* the coordinate).

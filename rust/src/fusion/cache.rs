@@ -255,6 +255,26 @@ impl PlanCache {
             consumers,
             block_masks,
         });
+        // Static verification at plan birth: only here, on the miss
+        // path, so steady-state serving (all hits) does zero verify
+        // work — the cost is amortized per shape bucket exactly like
+        // planning itself.
+        match crate::analysis::verify_mode() {
+            crate::analysis::VerifyMode::Off => {}
+            mode => {
+                if let Err(diags) = crate::analysis::verify_cached(&entry) {
+                    let mut report = String::new();
+                    for d in &diags {
+                        report.push_str(&d.to_string());
+                        report.push('\n');
+                    }
+                    if mode == crate::analysis::VerifyMode::Strict {
+                        panic!("plan verification failed for {key:?}:\n{report}");
+                    }
+                    eprintln!("flashlight: plan verification failed for {key:?}:\n{report}");
+                }
+            }
+        }
         if self.map.len() >= self.capacity {
             // Evict the least-recently-used entry.
             let victim: Option<PlanKey> = self

@@ -15,6 +15,7 @@ pub use blockmask::{
     resolve as resolve_blockmask, set_mode_override as set_blockmask_override, BlockMask,
     MaskInfo, MaskKind, TileClass,
 };
+pub(crate) use blockmask::eval_index_expr;
 pub use cache::{
     autotune_tile, autotune_tile_with, bucket_len, CacheStats, CachedPlan, PlanCache, PlanKey,
 };

@@ -591,7 +591,9 @@ fn inductor_partition(
             Some(gi) => {
                 groups[gi].nodes.push(id);
                 assigned[id.0 as usize] = Some(gi);
-                let st = states.get_mut(&gi).unwrap();
+                let st = states
+                    .get_mut(&gi)
+                    .expect("fusion target chosen from `states` keys above");
                 if is_reduce {
                     st.has_reduce = true;
                     st.p = my_p;

@@ -19,6 +19,7 @@
 //!
 //! Python never runs on the request path: `make artifacts` is build-time.
 
+pub mod analysis;
 pub mod baselines;
 pub mod bench;
 pub mod cost;

@@ -54,6 +54,10 @@ fn usage() -> ! {
          \x20     deadline storms) and fail loudly unless every request\n\
          \x20     reaches exactly one terminal state, no KV pages leak,\n\
          \x20     and survivors' tokens match the fault-free run\n\
+         \x20 lint\n\
+         \x20     statically verify every built-in variant x bucket shape\n\
+         \x20     (shape inference, race-freedom, float determinism,\n\
+         \x20     mask-skip soundness); exit 1 on any diagnostic\n\
          \x20 selftest\n\
          \x20     load + execute every AOT artifact and cross-check"
     );
@@ -89,6 +93,14 @@ fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else { usage() };
     match cmd.as_str() {
+        "lint" => {
+            let r = flashlight::analysis::lint_builtin_variants();
+            print!("{}", r.report);
+            if r.failed > 0 {
+                eprintln!("flashlight lint: {} plan(s) failed verification", r.failed);
+                std::process::exit(1);
+            }
+        }
         "inspect" => {
             let v = parse_variant(args.get(1).map(String::as_str).unwrap_or("vanilla"));
             let mode = match flag(&args, "--mode").as_deref() {

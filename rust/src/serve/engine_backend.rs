@@ -1654,6 +1654,44 @@ mod tests {
     }
 
     #[test]
+    fn steady_state_decode_does_zero_verify_work() {
+        use crate::analysis::{set_verify_override, verify_calls_on_this_thread, VerifyMode};
+        // Static plan verification is amortized through the PlanCache:
+        // every plan born at warmup is verified exactly once (strict
+        // mode — a diagnostic would panic right here), and the serving
+        // steady state never verifies again. Mirrors the zero-analyze /
+        // zero-plan-build gates above.
+        set_verify_override(Some(VerifyMode::Strict));
+        let mut b = EngineBackend::new(EngineModel::tiny_deep(2), 4, 512, Parallelism::sequential());
+        b.set_chunk_tokens(64);
+        let before = verify_calls_on_this_thread();
+        let warmed = b.warmup_plans(512);
+        let built = verify_calls_on_this_thread();
+        assert_eq!(
+            built - before,
+            warmed,
+            "every plan built at warmup is verified exactly once"
+        );
+        for (i, plen) in [40usize, 70].into_iter().enumerate() {
+            let r = req(i, plen);
+            let toks = prompt_tokens(&r, b.model.vocab);
+            b.begin_prefill(i, &r, &toks).unwrap();
+            while b.staged_rows(i) > 0 {
+                b.mixed_step(&[(i, 64)], &[]).unwrap();
+            }
+        }
+        for _ in 0..10 {
+            b.decode(&[0, 1]).unwrap();
+        }
+        assert_eq!(
+            verify_calls_on_this_thread(),
+            built,
+            "steady-state serving must do zero verify work (amortized through PlanCache)"
+        );
+        set_verify_override(None);
+    }
+
+    #[test]
     fn engine_backend_completes_a_generated_trace() {
         let trace = generate(&TraceConfig {
             n_requests: 8,

@@ -1,0 +1,416 @@
+//! Static plan verifier: clean-pass property over every built-in
+//! variant at odd shapes, plus adversarial graphs/plans/masks crafted
+//! so each of the four check classes demonstrably catches its
+//! violation, and the PlanCache amortization gate (steady-state decode
+//! does zero verify work).
+
+use std::collections::HashMap;
+
+use flashlight::analysis::{
+    resolve_verify, set_verify_override, verify_block_mask, verify_calls_on_this_thread,
+    CheckClass, VerifyMode,
+};
+use flashlight::exec::Tensor;
+use flashlight::fusion::{
+    classify_block_mask, plan, FusionMode, GroupKind, KernelGroup, Pipeline, Plan, PlanCache,
+    PlanKey, RewriteEvent, Rule, TileClass,
+};
+use flashlight::ir::GraphBuilder;
+use flashlight::sketch::analyze;
+use flashlight::variants::{
+    build, build_serving, paper_variants, serving_variants, AttnShape, Variant,
+};
+
+fn odd_shape(seq: usize) -> AttnShape {
+    AttnShape {
+        batch: 1,
+        rows: 1,
+        heads_q: 2,
+        heads_kv: 1,
+        seq,
+        head_dim: 16,
+    }
+}
+
+fn render(diags: &[flashlight::analysis::Diagnostic]) -> String {
+    diags
+        .iter()
+        .map(|d| d.to_string())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+// ---------------------------------------------------------------------
+// Clean pass: every built-in variant x odd shapes x fusion modes
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_builtin_variant_verifies_clean_at_odd_shapes() {
+    for v in paper_variants() {
+        // Shrink the windows so the masks have teeth at tiny seq.
+        let v = match v {
+            Variant::SlidingWindow { .. } => Variant::SlidingWindow { window: 5 },
+            Variant::PrefixLm { .. } => Variant::PrefixLm { prefix: 7 },
+            other => other,
+        };
+        for seq in [17usize, 23, 48] {
+            let g = build(v, &odd_shape(seq));
+            for mode in [FusionMode::Eager, FusionMode::TorchCompile, FusionMode::Flashlight] {
+                let p = plan(&g, mode);
+                if let Err(diags) = p.verify(&g) {
+                    panic!(
+                        "{} seq={seq} {mode:?}: {} diagnostic(s):\n{}",
+                        v.name(),
+                        diags.len(),
+                        render(&diags)
+                    );
+                }
+            }
+        }
+    }
+    for v in serving_variants() {
+        for kv in [48usize, 65] {
+            let shape = odd_shape(kv);
+            for q_len in [1usize, 7] {
+                let g = build_serving(v, &shape, q_len);
+                let p = plan(&g, FusionMode::Flashlight);
+                if let Err(diags) = p.verify(&g) {
+                    panic!(
+                        "{} serve kv={kv} q={q_len}: {} diagnostic(s):\n{}",
+                        v.name(),
+                        diags.len(),
+                        render(&diags)
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Check 1: shape/broadcast re-inference
+// ---------------------------------------------------------------------
+
+#[test]
+fn mutated_shape_is_caught_by_reinference() {
+    let mut b = GraphBuilder::new("adversarial_shapes");
+    let x = b.input("x", &[4, 8]);
+    let y0 = b.input("y", &[4, 8]);
+    let y = b.add(x, y0);
+    let mut g = b.finish(&[y]);
+    let p = plan(&g, FusionMode::Eager);
+    assert!(p.verify(&g).is_ok(), "untampered graph must verify clean");
+    // Corrupt the stored shape after planning — as a buggy rewrite that
+    // forgot to re-infer would.
+    g.nodes[y.0 as usize].shape = vec![4, 9];
+    let diags = p.verify(&g).unwrap_err();
+    assert!(
+        diags
+            .iter()
+            .any(|d| d.check == CheckClass::ShapeInference && d.node == Some(y)),
+        "expected a shape-inference diagnostic at the corrupted node:\n{}",
+        render(&diags)
+    );
+}
+
+// ---------------------------------------------------------------------
+// Check 2: race freedom (overlapping grid write regions)
+// ---------------------------------------------------------------------
+
+#[test]
+fn overlapping_group_write_sets_are_caught() {
+    let g = build(Variant::Vanilla, &odd_shape(48));
+    let mut p = plan(&g, FusionMode::Flashlight);
+    assert!(p.verify(&g).is_ok());
+    // Forge a second kernel group that writes a node the pipeline
+    // already owns: two launches racing on one output buffer.
+    let stolen = p.groups[0].nodes[0];
+    p.groups.push(KernelGroup {
+        nodes: vec![stolen],
+        kind: GroupKind::Elementwise,
+    });
+    let diags = p.verify(&g).unwrap_err();
+    assert!(
+        diags
+            .iter()
+            .any(|d| d.check == CheckClass::RaceFreedom && d.message.contains("both write")),
+        "expected an overlapping-write-set diagnostic:\n{}",
+        render(&diags)
+    );
+}
+
+// ---------------------------------------------------------------------
+// Check 3: float determinism
+// ---------------------------------------------------------------------
+
+#[test]
+fn swapped_softmax_roles_break_the_determinism_contract() {
+    let g = build(Variant::Vanilla, &odd_shape(48));
+    let mut p = plan(&g, FusionMode::Flashlight);
+    assert!(p.verify(&g).is_ok());
+    let mut swapped = false;
+    for grp in &mut p.groups {
+        if let GroupKind::Pipeline(pipe) = &mut grp.kind {
+            if let Some(roles) = &mut pipe.softmax {
+                std::mem::swap(&mut roles.max, &mut roles.sum);
+                swapped = true;
+            }
+        }
+    }
+    assert!(swapped, "vanilla flashlight plan must contain an online-softmax pipeline");
+    let diags = p.verify(&g).unwrap_err();
+    assert!(
+        diags.iter().any(|d| d.check == CheckClass::Determinism),
+        "expected a float-determinism diagnostic for swapped max/sum roles:\n{}",
+        render(&diags)
+    );
+}
+
+#[test]
+fn hand_built_pipeline_with_reordered_reduction_is_flagged() {
+    // A plain (non-online) normalization fused into a tiled pipeline:
+    // sum over k runs *before* tiling re-blocks the k loop, so fusing it
+    // reorders a non-associative f32 reduction with no contract.
+    let mut b = GraphBuilder::new("reordered_reduction");
+    let q = b.input("q", &[1, 1, 8, 4]);
+    let k = b.input("k", &[1, 1, 16, 4]);
+    let v = b.input("v", &[1, 1, 16, 4]);
+    let s = b.matmul_nt(q, k); // [1,1,8,16]
+    let w = b.sum_reduce(s, 3); // [1,1,8,1]
+    let wb = b.broadcast(w, &[1, 1, 8, 16]);
+    let sn = b.div(s, wb);
+    let o = b.matmul(sn, v); // [1,1,8,4]
+    let g = b.finish(&[o]);
+    let an = analyze(&g);
+    let q_class = an.axes[s.0 as usize][2];
+    let kv_class = an.axes[s.0 as usize][3];
+    let members = vec![s, w, wb, sn, o];
+    let mut assignment = vec![usize::MAX; g.nodes.len()];
+    for m in &members {
+        assignment[m.0 as usize] = 0;
+    }
+    let p = Plan {
+        mode: FusionMode::Flashlight,
+        groups: vec![KernelGroup {
+            nodes: members,
+            kind: GroupKind::Pipeline(Pipeline {
+                m1: s,
+                score_root: sn,
+                softmax: None,
+                m2: o,
+                out: o,
+                q_class,
+                kv_class,
+                mask: None,
+            }),
+        }],
+        assignment,
+        log: vec![RewriteEvent {
+            rule: Rule::AlgebraicOnline,
+            at: w,
+        }],
+    };
+    let diags = p.verify(&g).unwrap_err();
+    assert!(
+        diags
+            .iter()
+            .any(|d| d.check == CheckClass::Determinism && d.node == Some(w)),
+        "expected a determinism diagnostic at the fused sum reduction:\n{}",
+        render(&diags)
+    );
+    // The trail event claiming an online-softmax rewrite at the sum is
+    // unaccounted too (there are no softmax roles to bless it).
+    assert!(
+        diags
+            .iter()
+            .filter(|d| d.check == CheckClass::Determinism)
+            .count()
+            >= 2,
+        "expected both the member scan and the trail walk to fire:\n{}",
+        render(&diags)
+    );
+}
+
+// ---------------------------------------------------------------------
+// Check 4: mask-skip soundness
+// ---------------------------------------------------------------------
+
+fn masked_pipeline(g: &flashlight::ir::Graph, p: &Plan) -> Pipeline {
+    p.groups
+        .iter()
+        .find_map(|grp| match &grp.kind {
+            GroupKind::Pipeline(pipe) if pipe.mask.is_some() => Some(pipe.clone()),
+            _ => None,
+        })
+        .unwrap_or_else(|| panic!("{}: plan has no masked pipeline", g.name))
+}
+
+#[test]
+fn undemoted_dead_row_empty_tile_is_caught() {
+    let seq = 16usize;
+    let shape = AttnShape {
+        batch: 1,
+        rows: 1,
+        heads_q: 2,
+        heads_kv: 1,
+        seq,
+        head_dim: 8,
+    };
+    let g = build(Variant::DocumentMask, &shape);
+    let p = plan(&g, FusionMode::Flashlight);
+    let pipe = masked_pipeline(&g, &p);
+    let info = pipe.mask.as_ref().unwrap();
+    let score_shape = g.node(pipe.score_root).shape.clone();
+    let rank = score_shape.len();
+    let (q_ax, kv_ax) = (rank - 2, rank - 1);
+    // Two-document halves: block-diagonal mask, off-diagonal tiles Empty.
+    let halves: Vec<f32> = (0..seq).map(|i| (i * 2 / seq) as f32).collect();
+    let mut live = HashMap::new();
+    live.insert(
+        "doc_q".to_string(),
+        Tensor::from_vec(&[1, 1, 1, seq, 1], halves.clone()),
+    );
+    live.insert(
+        "doc_k".to_string(),
+        Tensor::from_vec(&[1, 1, 1, 1, seq], halves.clone()),
+    );
+    let bm = classify_block_mask(&g, info, &score_shape, q_ax, kv_ax, 4, 4, &live)
+        .expect("document mask is classifiable with doc inputs supplied");
+    assert!(bm.skipped_tiles() > 0, "block-diagonal mask must skip tiles");
+    assert!(
+        verify_block_mask(&g, info, &bm, &score_shape, q_ax, kv_ax, &live).is_empty(),
+        "classes re-derived from the same inputs must verify clean"
+    );
+    // Adversarial inputs: the first q-tile's rows get a doc id matching
+    // no key at all — those rows are fully dead, so the Empty tiles in
+    // that q-tile may no longer be skipped (dead-row demotion rule).
+    let mut dead = halves.clone();
+    for r in dead.iter_mut().take(4) {
+        *r = 777.0;
+    }
+    let mut adv = HashMap::new();
+    adv.insert(
+        "doc_q".to_string(),
+        Tensor::from_vec(&[1, 1, 1, seq, 1], dead),
+    );
+    adv.insert(
+        "doc_k".to_string(),
+        Tensor::from_vec(&[1, 1, 1, 1, seq], halves),
+    );
+    let diags = verify_block_mask(&g, info, &bm, &score_shape, q_ax, kv_ax, &adv);
+    assert!(
+        diags.iter().any(|d| d.message.contains("undemoted dead-row")),
+        "expected the dead-row demotion violation:\n{}",
+        render(&diags)
+    );
+    assert!(diags.iter().all(|d| d.check == CheckClass::MaskSkip));
+}
+
+#[test]
+fn forged_tile_classes_are_caught() {
+    let shape = AttnShape {
+        batch: 1,
+        rows: 1,
+        heads_q: 2,
+        heads_kv: 1,
+        seq: 32,
+        head_dim: 8,
+    };
+    let g = build(Variant::Causal, &shape);
+    let p = plan(&g, FusionMode::Flashlight);
+    let pipe = masked_pipeline(&g, &p);
+    let info = pipe.mask.as_ref().unwrap();
+    assert!(info.is_input_free(), "causal mask is an input-free index mask");
+    let score_shape = g.node(pipe.score_root).shape.clone();
+    let rank = score_shape.len();
+    let (q_ax, kv_ax) = (rank - 2, rank - 1);
+    let none = HashMap::new();
+    let bm = classify_block_mask(&g, info, &score_shape, q_ax, kv_ax, 8, 8, &none)
+        .expect("causal mask is classifiable");
+    assert!(
+        verify_block_mask(&g, info, &bm, &score_shape, q_ax, kv_ax, &none).is_empty(),
+        "honest causal classification must verify clean"
+    );
+    // Forge 1: claim the fully-dead upper-right corner tile Full — the
+    // executor would elide the mask over dead positions.
+    let mut forged = bm.clone();
+    forged.override_class(0, 0, forged.n_k_tiles - 1, TileClass::Full);
+    let diags = verify_block_mask(&g, info, &forged, &score_shape, q_ax, kv_ax, &none);
+    assert!(
+        diags.iter().any(|d| d.message.contains("Full tile")),
+        "expected the unsound mask-elision diagnostic:\n{}",
+        render(&diags)
+    );
+    // Forge 2: claim the fully-live lower-left tile Empty — the skip
+    // would silently drop live attention weight.
+    let mut forged = bm.clone();
+    forged.override_class(0, forged.n_q_tiles - 1, 0, TileClass::Empty);
+    let diags = verify_block_mask(&g, info, &forged, &score_shape, q_ax, kv_ax, &none);
+    assert!(
+        diags.iter().any(|d| d.message.contains("Empty tile")),
+        "expected the unsound skip diagnostic:\n{}",
+        render(&diags)
+    );
+}
+
+// ---------------------------------------------------------------------
+// Amortization: verification runs once per shape bucket, on the miss
+// path only (mirrors the analyze_call_count gate).
+// ---------------------------------------------------------------------
+
+#[test]
+fn plan_cache_verifies_once_per_shape_bucket() {
+    set_verify_override(Some(VerifyMode::Strict));
+    let before = verify_calls_on_this_thread();
+    let mut cache = PlanCache::with_block_k(8, 64);
+    let shape = AttnShape {
+        batch: 1,
+        rows: 1,
+        heads_q: 2,
+        heads_kv: 1,
+        seq: 128,
+        head_dim: 16,
+    };
+    let key = PlanKey {
+        tag: "verify-test",
+        variant: Variant::Causal.name(),
+        heads_q: 2,
+        heads_kv: 1,
+        head_dim: 16,
+        q_len: 1,
+        kv_len: 128,
+    };
+    let _ = cache.get_or_build(key.clone(), || build_serving(Variant::Causal, &shape, 1));
+    assert_eq!(
+        verify_calls_on_this_thread(),
+        before + 1,
+        "one miss = exactly one verification"
+    );
+    for _ in 0..100 {
+        let _ = cache.get_or_build(key.clone(), || unreachable!("cache hit must not rebuild"));
+    }
+    assert_eq!(
+        verify_calls_on_this_thread(),
+        before + 1,
+        "steady-state hits must do zero verify work"
+    );
+    set_verify_override(None);
+}
+
+// ---------------------------------------------------------------------
+// Mode resolution
+// ---------------------------------------------------------------------
+
+#[test]
+fn verify_mode_resolution() {
+    assert_eq!(resolve_verify(Some("strict")), VerifyMode::Strict);
+    assert_eq!(resolve_verify(Some("0")), VerifyMode::Off);
+    assert_eq!(resolve_verify(Some("off")), VerifyMode::Off);
+    assert_eq!(resolve_verify(Some("1")), VerifyMode::Warn);
+    let unset_default = if cfg!(debug_assertions) {
+        VerifyMode::Warn
+    } else {
+        VerifyMode::Off
+    };
+    assert_eq!(resolve_verify(None), unset_default);
+}

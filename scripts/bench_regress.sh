@@ -3,7 +3,9 @@
 # FOUR configurations (default SIMD dispatch, FLASHLIGHT_SIMD=0 scalar
 # tier, FLASHLIGHT_TOPO=flat single-domain scheduling, and
 # FLASHLIGHT_BLOCKMASK=0 dense execution — the last two fail loudly if
-# any bit-identity gate diverges between modes), run the benches, and
+# any bit-identity gate diverges between modes), run `flashlight lint`
+# as a fifth gate (static plan verification over every built-in
+# variant x bucket shape), run the benches, and
 # record two perf trajectories at the repo root so future PRs have a
 # baseline to compare against:
 #   BENCH_parallel_engine.json  sequential vs parallel executor wall
@@ -77,6 +79,20 @@ if ! FLASHLIGHT_BLOCKMASK=0 cargo test -q; then
   echo >&2
   echo "FATAL: test suite diverges under FLASHLIGHT_BLOCKMASK=0 —" >&2
   echo "       sparse vs dense execution is not equivalent." >&2
+  exit 1
+fi
+
+echo
+echo "== flashlight lint (fifth gate: static plan verification) =="
+# Fifth gate: the static verifier must prove every built-in variant x
+# bucket-ladder shape clean — shape re-inference, grid write-set
+# disjointness, the online-softmax determinism contract, and
+# block-mask skip soundness. Any diagnostic is a planner bug.
+if ! cargo run --release -- lint; then
+  echo >&2
+  echo "FATAL: static plan verification failed — a generated plan" >&2
+  echo "       violates a fusion legality / determinism / race-freedom" >&2
+  echo "       invariant; see the diagnostics above." >&2
   exit 1
 fi
 
