@@ -13,14 +13,18 @@
 //! Writes `BENCH_serve_engine.json` (via `scripts/bench_regress.sh`) so
 //! the perf trajectory covers the serve side: tokens/s and TTFT
 //! p50/p99 per (layers, chunked, threads) cell, plus plan-cache and
-//! prefix-cache stats.
+//! prefix-cache stats — and, for the live half, a goodput-vs-offered-
+//! load curve (Poisson-retimed open-loop arrivals reduced to
+//! completed/shed/goodput/SLO-attainment per rate).
 
 use crate::bench::harness::{json_f64, json_str, JsonArray};
 use crate::exec::Parallelism;
 use crate::serve::{
-    engine_trace, run_lifecycle, run_trace, summarize, Backend, ClockMode, EngineBackend,
-    EngineModel, FaultPlan, LifecycleConfig, Outcome, SchedulerConfig,
+    engine_trace, load_point, run_lifecycle, run_lifecycle_ext, run_trace, summarize, Backend,
+    ClockMode, EngineBackend, EngineModel, FaultPlan, Ingress, LifecycleConfig, Outcome,
+    SchedulerConfig, StreamHub,
 };
+use crate::tracegen::{retime_arrivals, ArrivalModel};
 
 /// Default entry point (`flashlight bench serve_engine`).
 pub fn run(out_path: &str) -> anyhow::Result<()> {
@@ -267,6 +271,80 @@ pub fn run_with(out_path: &str, n_requests: usize) -> anyhow::Result<()> {
             ("requests", n_requests.to_string()),
         ]);
     }
+    // Goodput-vs-offered-load curve (the live half): retime the same
+    // trace with Poisson interarrivals at increasing offered rates and
+    // replay it open-loop on the round clock — arrivals do not wait for
+    // server capacity, so overload sheds work (bounded queue, backoff
+    // resubmission, default deadline) instead of silently stretching
+    // the run. Each rate reduces to one completed/shed/goodput/SLO row.
+    const SLO_TTFT_ROUNDS: f64 = 48.0;
+    println!(
+        "-- goodput under offered load (open loop, rounds clock) --\n\
+         {:>9} {:>9} {:>6} {:>9} {:>11} {:>9}",
+        "rate(r/r)", "completed", "shed", "goodput", "SLO attain", "requeues"
+    );
+    for rate in [0.25f64, 0.5, 1.0, 2.0] {
+        let open = retime_arrivals(&trace, ArrivalModel::Poisson { rate }, 7);
+        let par = Parallelism::with_threads(2);
+        let cfg = SchedulerConfig {
+            parallelism: par,
+            prefill_chunk_tokens: 64,
+            prefill_round_tokens: 256,
+            ..Default::default()
+        };
+        let lc = LifecycleConfig {
+            clock: ClockMode::Rounds,
+            queue_cap: 8,
+            resubmit_max: 3,
+            default_deadline_s: 96.0,
+            ..Default::default()
+        };
+        let mut b = EngineBackend::new(EngineModel::tiny_deep(1), 8, 1024, par);
+        b.set_page_cap(20);
+        let vocab = b.model.vocab;
+        let rep = run_lifecycle_ext(
+            &mut b,
+            Ingress::OpenLoop { trace: &open, time_scale: 1.0 },
+            cfg,
+            lc,
+            &FaultPlan::none(),
+            vocab,
+            &mut StreamHub::disabled(),
+            None,
+        )?;
+        anyhow::ensure!(
+            rep.summary.total() == open.len(),
+            "open-loop terminal accounting broken at rate {rate}"
+        );
+        let (alloc, free) = b.kv_pages();
+        let parked = b.prefix_stats().parked_pages;
+        anyhow::ensure!(
+            alloc == free + parked,
+            "open-loop run leaked pages at rate {rate}: {alloc} vs {free}+{parked}"
+        );
+        let lp = load_point(&rep.outcomes, rate, SLO_TTFT_ROUNDS);
+        println!(
+            "{:>9.2} {:>9} {:>6} {:>9.1} {:>11.2} {:>9}",
+            lp.offered_rps,
+            lp.completed,
+            lp.shed,
+            lp.goodput_tokens_per_s,
+            lp.slo_attainment,
+            rep.stats.backoff_requeues,
+        );
+        json.push_obj(&[
+            ("cell", json_str("goodput_load")),
+            ("offered_rps", json_f64(lp.offered_rps)),
+            ("completed", lp.completed.to_string()),
+            ("shed", lp.shed.to_string()),
+            ("goodput_tokens_per_round", json_f64(lp.goodput_tokens_per_s)),
+            ("slo_attainment", json_f64(lp.slo_attainment)),
+            ("slo_ttft_rounds", json_f64(SLO_TTFT_ROUNDS)),
+            ("backoff_requeues", rep.stats.backoff_requeues.to_string()),
+            ("rounds", rep.stats.rounds.to_string()),
+            ("requests", n_requests.to_string()),
+        ]);
+    }
     let p = json.finish()?;
     println!("wrote {}", p.display());
     Ok(())
@@ -295,5 +373,9 @@ mod tests {
         assert!(s.contains("\"cell\": \"lifecycle_chaos\""));
         assert!(s.contains("\"goodput_tokens_per_round\""));
         assert!(s.contains("\"survivors_bit_identical\": true"));
+        // The goodput-vs-offered-load curve records one row per rate.
+        assert!(s.contains("\"cell\": \"goodput_load\""));
+        assert!(s.contains("\"slo_attainment\""));
+        assert!(s.contains("\"offered_rps\""));
     }
 }

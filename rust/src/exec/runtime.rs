@@ -106,6 +106,61 @@ fn in_launch() -> bool {
 }
 
 // ---------------------------------------------------------------------
+// Liveness instrumentation (the supervisor's watchdog protocol)
+// ---------------------------------------------------------------------
+
+/// Monotone per-item completion counter: every work item that finishes
+/// under [`map_with_topology`] ticks it once. A watchdog that sees
+/// launches in flight but no heartbeat progress for a full stall budget
+/// concludes the remaining item(s) are stuck.
+static HEARTBEAT: AtomicU64 = AtomicU64::new(0);
+
+/// Launches currently executing (entered `map_with_topology`, not yet
+/// returned). Guard-decremented so panics unwind it correctly.
+static LAUNCHES_IN_FLIGHT: AtomicUsize = AtomicUsize::new(0);
+
+/// Bumped by [`kill_stalled_launch`]. Cooperative stall points (the
+/// injected [`Fault::StalledLaunch`](crate::serve::Fault) wait loop)
+/// poll it and panic — attributed to their work item — when it moves.
+static STALL_KILL_EPOCH: AtomicU64 = AtomicU64::new(0);
+
+/// Total work items completed, process-wide. Monotone; only progress
+/// (deltas) is meaningful.
+pub fn heartbeat() -> u64 {
+    HEARTBEAT.load(Ordering::Relaxed)
+}
+
+/// Launches currently inside the runtime (0 = quiescent).
+pub fn launches_in_flight() -> usize {
+    LAUNCHES_IN_FLIGHT.load(Ordering::SeqCst)
+}
+
+/// Kill any launch currently blocked on a cooperative stall point: the
+/// stalled item panics with an attributed payload, the launch unwinds
+/// through the normal panic protocol ([`AttributedPanic`] →
+/// `BatchPanic`), and the pool stays usable. Items that are merely slow
+/// (still heartbeating) are unaffected — only code that explicitly
+/// polls the stall-kill epoch reacts.
+pub fn kill_stalled_launch() {
+    STALL_KILL_EPOCH.fetch_add(1, Ordering::SeqCst);
+}
+
+struct LaunchGuard;
+
+impl LaunchGuard {
+    fn enter() -> Self {
+        LAUNCHES_IN_FLIGHT.fetch_add(1, Ordering::SeqCst);
+        LaunchGuard
+    }
+}
+
+impl Drop for LaunchGuard {
+    fn drop(&mut self) {
+        LAUNCHES_IN_FLIGHT.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+// ---------------------------------------------------------------------
 // Scoped panic attribution + deterministic fault injection
 // ---------------------------------------------------------------------
 
@@ -165,9 +220,57 @@ pub fn clear_injected_panic() {
     INJECT_PANIC.with(|c| c.take());
 }
 
+thread_local! {
+    /// Deterministic stall injection: when armed, the next map launched
+    /// from this thread parks the given work item (clamped to the
+    /// launch size) at a cooperative stall point — no heartbeat, no
+    /// completion — until [`kill_stalled_launch`] fires (or a hard cap
+    /// expires so an unsupervised test cannot hang forever). One-shot
+    /// and thread-local like [`INJECT_PANIC`].
+    static INJECT_STALL: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// Arm the stall injector: the next launch issued from this thread
+/// stalls at work item `item.min(n - 1)` until the watchdog kills it.
+pub fn inject_stall_next_launch(item: usize) {
+    INJECT_STALL.with(|c| c.set(Some(item)));
+}
+
+/// Disarm a pending injected stall (end-of-run hygiene).
+pub fn clear_injected_stall() {
+    INJECT_STALL.with(|c| c.take());
+}
+
+/// Hard cap on an injected stall with no watchdog: panic anyway so a
+/// misconfigured test fails loudly instead of hanging.
+const STALL_HARD_CAP: std::time::Duration = std::time::Duration::from_secs(5);
+
+/// Park at the cooperative stall point until the stall-kill epoch moves
+/// (watchdog) or the hard cap expires. Always panics.
+fn stall_until_killed() -> ! {
+    let epoch0 = STALL_KILL_EPOCH.load(Ordering::SeqCst);
+    let start = std::time::Instant::now();
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        if STALL_KILL_EPOCH.load(Ordering::SeqCst) != epoch0 {
+            panic!("launch stalled: killed by watchdog after exceeding its stall budget");
+        }
+        if start.elapsed() >= STALL_HARD_CAP {
+            panic!("launch stalled: hard cap expired with no watchdog running");
+        }
+    }
+}
+
 /// Run one work item under attribution: any panic (organic or injected)
 /// is re-raised wrapped in [`AttributedPanic`] carrying the item index.
-fn run_attributed<S, T, F>(f: &F, s: &mut S, i: usize, poison: Option<usize>) -> T
+/// Completed items tick the process heartbeat (watchdog liveness).
+fn run_attributed<S, T, F>(
+    f: &F,
+    s: &mut S,
+    i: usize,
+    poison: Option<usize>,
+    stall: Option<usize>,
+) -> T
 where
     F: Fn(&mut S, usize) -> T,
 {
@@ -175,7 +278,12 @@ where
         if poison == Some(i) {
             panic!("injected worker fault");
         }
-        f(s, i)
+        if stall == Some(i) {
+            stall_until_killed();
+        }
+        let v = f(s, i);
+        HEARTBEAT.fetch_add(1, Ordering::Relaxed);
+        v
     })) {
         Ok(v) => v,
         Err(payload) => {
@@ -608,10 +716,12 @@ where
     if n == 0 {
         return Vec::new();
     }
-    // One-shot injected fault for this launch, clamped so it always
-    // lands on a real item regardless of launch size. Taken here (not
-    // per worker) so the injection is consumed exactly once.
+    // One-shot injected faults for this launch, clamped so they always
+    // land on a real item regardless of launch size. Taken here (not
+    // per worker) so each injection is consumed exactly once.
     let poison = INJECT_PANIC.with(|c| c.take()).map(|p| p.min(n - 1));
+    let stall = INJECT_STALL.with(|c| c.take()).map(|p| p.min(n - 1));
+    let _in_flight = LaunchGuard::enter();
     // A map issued from inside a launch (nested use) runs sequentially
     // on this worker — the launch protocol is not reentrant.
     let workers = if in_launch() {
@@ -621,7 +731,9 @@ where
     };
     if workers == 1 {
         return with_scratch(&init, |s| {
-            (0..n).map(|i| run_attributed(&f, s, i, poison)).collect()
+            (0..n)
+                .map(|i| run_attributed(&f, s, i, poison, stall))
+                .collect()
         });
     }
 
@@ -642,7 +754,7 @@ where
     let task = |ordinal: usize| {
         with_scratch(&init, |s| {
             drive(&shards, home[ordinal], |i| {
-                let v = run_attributed(&f, s, i, poison);
+                let v = run_attributed(&f, s, i, poison, stall);
                 // Each index is claimed exactly once; the slot is None.
                 unsafe { out_ptr.0.add(i).write(Some(v)) };
             });
@@ -833,6 +945,53 @@ mod tests {
         clear_injected_panic();
         let ok = map_with(&Parallelism::with_threads(2), 4, || (), |_, i| i);
         assert_eq!(ok, (0..4).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn injected_stall_is_killed_attributed_and_disarms() {
+        use std::sync::atomic::AtomicBool;
+        // A side watchdog: once a launch is in flight, give it a short
+        // stall budget and kill it. (The real supervisor watches the
+        // heartbeat too; for a 4-item launch with one stalled item the
+        // kill is what matters.)
+        let stop = Arc::new(AtomicBool::new(false));
+        let killer = {
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    if launches_in_flight() > 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                        kill_stalled_launch();
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                }
+            })
+        };
+        inject_stall_next_launch(1000); // clamped to n - 1
+        let res = std::panic::catch_unwind(|| {
+            map_with(&Parallelism::with_threads(2), 4, || (), |_, i| i)
+        });
+        let payload = res.expect_err("stalled launch must be killed");
+        assert_eq!(panic_item(payload.as_ref()), Some(3));
+        assert!(
+            panic_message(payload.as_ref()).contains("launch stalled"),
+            "got {:?}",
+            panic_message(payload.as_ref())
+        );
+        // One-shot: the next launch is clean and completes items.
+        let hb0 = heartbeat();
+        let ok = map_with(&Parallelism::with_threads(2), 8, || (), |_, i| i);
+        assert_eq!(ok, (0..8).collect::<Vec<_>>());
+        assert!(heartbeat() >= hb0 + 8, "completed items must tick the heartbeat");
+        // (No launches_in_flight() == 0 assert: the counter is global
+        // and the test harness runs other launches concurrently.)
+        // clear_injected_stall disarms a never-fired injection.
+        inject_stall_next_launch(0);
+        clear_injected_stall();
+        let ok = map_with(&Parallelism::with_threads(2), 4, || (), |_, i| i);
+        assert_eq!(ok, (0..4).collect::<Vec<_>>());
+        stop.store(true, Ordering::SeqCst);
+        killer.join().unwrap();
     }
 
     #[test]

@@ -33,7 +33,7 @@ fn usage() -> ! {
          \x20     at 1/2/all threads with the bit-identity gate\n\
          \x20 serve [--requests N] [--backend sim|engine|pjrt] [--threads N]\n\
          \x20       [--layers L] [--chunk N] [--prefill-budget N]\n\
-         \x20       [--deadline-ms MS] [--queue-cap N]\n\
+         \x20       [--deadline-ms MS] [--queue-cap N] [--live]\n\
          \x20     run the serving coordinator on a Mooncake-like trace;\n\
          \x20     `engine` executes requests on the real tiled engine\n\
          \x20     (slot-paged KV, pre-warmed plan cache, chunked prefill\n\
@@ -46,14 +46,21 @@ fn usage() -> ! {
          \x20     row through one layer, so tokens x L per full row);\n\
          \x20     --deadline-ms applies a default completion SLO,\n\
          \x20     --queue-cap bounds the ingress queue (0 = unbounded),\n\
-         \x20     --kv-pages caps the KV page pool (0 = uncapped)\n\
+         \x20     --kv-pages caps the KV page pool (0 = uncapped);\n\
+         \x20     --live serves the trace through a real ingress thread\n\
+         \x20     with per-request token streaming under a watchdog\n\
+         \x20     supervisor (FLASHLIGHT_STALL_MS, FLASHLIGHT_STREAM_BUF)\n\
          \x20 chaos [--requests N] [--threads N] [--layers L] [--chunk N]\n\
          \x20       [--prefill-budget N] [--kv-pages N] [--plans SPEC[,SPEC..]]\n\
+         \x20       [--live]\n\
          \x20     replay the engine trace under deterministic fault\n\
          \x20     plans (pressure windows, worker panics, cancels,\n\
-         \x20     deadline storms) and fail loudly unless every request\n\
-         \x20     reaches exactly one terminal state, no KV pages leak,\n\
-         \x20     and survivors' tokens match the fault-free run\n\
+         \x20     deadline storms, stalled launches) and fail loudly\n\
+         \x20     unless every request reaches exactly one terminal\n\
+         \x20     state, no KV pages leak, and survivors' tokens match\n\
+         \x20     the fault-free run; --live re-runs the gates with token\n\
+         \x20     streams attached (open-loop arrivals, backoff requeues,\n\
+         \x20     watchdog kills) plus a threaded wall-clock drain smoke\n\
          \x20 lint\n\
          \x20     statically verify every built-in variant x bucket shape\n\
          \x20     (shape inference, race-freedom, float determinism,\n\
@@ -224,6 +231,7 @@ fn main() -> anyhow::Result<()> {
                 kv_page_cap: flag(&args, "--kv-pages")
                     .map(|s| s.parse().unwrap())
                     .unwrap_or(defaults.kv_page_cap),
+                live: args.iter().any(|a| a == "--live"),
             };
             flashlight::serve::cli_serve(n, &backend, Parallelism::with_threads(threads), opts)?;
         }
@@ -248,6 +256,7 @@ fn main() -> anyhow::Result<()> {
                 kv_page_cap: flag(&args, "--kv-pages")
                     .map(|s| s.parse().unwrap())
                     .unwrap_or(defaults.kv_page_cap),
+                live: args.iter().any(|a| a == "--live"),
                 ..defaults
             };
             // Plans are comma-separated; events inside one plan are

@@ -269,6 +269,9 @@ pub struct EngineBackend {
     prefix_tick: u64,
     prefix_hits: u64,
     prefix_tokens_reused: u64,
+    /// Mid-prefill releases that parked a partial (whole-page) prefix
+    /// instead of freeing it — preemption/kill work a retry reuses.
+    partial_parks: u64,
     scratch: Vec<GatherScratch>,
     gather_reallocs: u64,
     log_tokens: bool,
@@ -342,6 +345,7 @@ impl EngineBackend {
             prefix_tick: 0,
             prefix_hits: 0,
             prefix_tokens_reused: 0,
+            partial_parks: 0,
             scratch,
             gather_reallocs: 0,
             log_tokens: false,
@@ -406,6 +410,12 @@ impl EngineBackend {
             entries: self.prefix_cache.len(),
             parked_pages: self.parked_pages(),
         }
+    }
+
+    /// Mid-prefill releases that parked a partial prefix (whole pages
+    /// every layer had appended) for the request's retry to adopt.
+    pub fn partial_parks(&self) -> u64 {
+        self.partial_parks
     }
 
     fn parked_pages(&self) -> usize {
@@ -1301,11 +1311,36 @@ impl Backend for EngineBackend {
     }
 
     fn release(&mut self, slot: usize) {
-        self.staged[slot] = None;
         self.scratch[slot].valid_for = None;
         let parkable = self.prefix_caching && self.model.variant.causal_serving();
-        match (parkable, self.slot_meta[slot].take()) {
-            (true, Some(meta)) => self.park_slot(slot, meta),
+        // A mid-prefill release (preemption, cancellation, watchdog
+        // kill) still parks the prompt rows that *every* layer has
+        // fully appended — whole pages only, truncated to the minimum
+        // KV length across layers so the parked page lists stay
+        // layer-consistent. The retry regenerates the same prompt
+        // (prompt_tokens is conversation-pure), adopts the partial
+        // prefix, and prefills only the remainder.
+        let partial = match (parkable, &self.staged[slot]) {
+            (true, Some(st)) => {
+                let min_len = (0..self.model.layers)
+                    .map(|l| self.kv.len(self.seq(slot, l)))
+                    .min()
+                    .unwrap_or(0)
+                    .min(st.prompt.len());
+                (min_len >= self.kv.block_tokens()).then(|| SlotMeta {
+                    conversation: st.conversation,
+                    prompt: st.prompt[..min_len].to_vec(),
+                })
+            }
+            _ => None,
+        };
+        self.staged[slot] = None;
+        match (parkable, self.slot_meta[slot].take(), partial) {
+            (true, Some(meta), _) => self.park_slot(slot, meta),
+            (true, None, Some(meta)) => {
+                self.partial_parks += 1;
+                self.park_slot(slot, meta);
+            }
             _ => {
                 for l in 0..self.model.layers {
                     let s = self.seq(slot, l);
@@ -1785,6 +1820,64 @@ mod tests {
         b.clear_prefix_cache();
         let (alloc3, free3) = b.kv_pages();
         assert_eq!(alloc3, free3);
+    }
+
+    #[test]
+    fn mid_prefill_release_parks_partial_prefix_the_retry_adopts() {
+        // 160-token prompt, 2 layers, 32-row chunks: count the mixed
+        // rounds a full prefill takes, then kill an identical prefill
+        // one round short of finishing. Every layer has appended all
+        // prompt rows by then, so release parks the whole-page prefix
+        // (2 pages x 2 layers) and the retry adopts it — emitting the
+        // same first token as an unharmed prefill.
+        let mk = || {
+            EngineBackend::new(EngineModel::tiny_deep(2), 2, 1024, Parallelism::sequential())
+        };
+        let r = req(0, 160);
+        let full_rounds = {
+            let mut b = mk();
+            let toks = prompt_tokens(&r, b.model.vocab);
+            b.begin_prefill(0, &r, &toks).unwrap();
+            let mut n = 0usize;
+            loop {
+                let (_dt, fin, _toks) = b.mixed_step(&[(0, 32)], &[]).unwrap();
+                n += 1;
+                if !fin.is_empty() {
+                    break (n, fin[0].1);
+                }
+            }
+        };
+        let (rounds, tok_fresh) = full_rounds;
+        assert!(rounds > 2, "the chunked prefill must span rounds");
+
+        let mut b = mk();
+        let toks = prompt_tokens(&r, b.model.vocab);
+        b.begin_prefill(0, &r, &toks).unwrap();
+        for _ in 0..rounds - 1 {
+            b.mixed_step(&[(0, 32)], &[]).unwrap();
+        }
+        b.release(0); // preemption mid-prefill
+        assert_eq!(b.partial_parks(), 1, "mid-prefill release must park");
+        let ps = b.prefix_stats();
+        assert_eq!(ps.parked_pages, 4, "2 whole pages x 2 layers");
+        let (alloc, free) = b.kv_pages();
+        assert_eq!(alloc, free + ps.parked_pages, "no leak past the park");
+
+        // The retry adopts the partial prefix and matches bit-for-bit.
+        b.begin_prefill(0, &r, &toks).unwrap();
+        assert_eq!(b.prefix_stats().hits, 1, "retry must adopt the park");
+        assert_eq!(b.prefix_stats().tokens_reused, 128);
+        let tok_retry = loop {
+            let (_dt, fin, _toks) = b.mixed_step(&[(0, 32)], &[]).unwrap();
+            if let Some(&(_, t)) = fin.first() {
+                break t;
+            }
+        };
+        assert_eq!(tok_retry, tok_fresh, "adopted retry must be bit-identical");
+        b.release(0);
+        b.clear_prefix_cache();
+        let (alloc, free) = b.kv_pages();
+        assert_eq!(alloc, free, "pages leaked after the retry");
     }
 
     #[test]

@@ -46,6 +46,12 @@ pub enum Fault {
     /// Deadline storm: every `every`-th in-flight request's deadline
     /// collapses to "now" at the top of the round.
     DeadlineStorm { round: u64, every: usize },
+    /// Stall grid item `item` of the round's first engine launch: the
+    /// worker stops making progress (heartbeats cease) until the
+    /// supervisor's watchdog kills the launch, which attributes the
+    /// stall like a panic — exactly one request fails and the
+    /// surviving batch re-executes bit-identically.
+    StalledLaunch { round: u64, item: usize },
 }
 
 impl Fault {
@@ -55,7 +61,8 @@ impl Fault {
             Fault::PagePressure { round, .. }
             | Fault::WorkerPanic { round, .. }
             | Fault::Cancel { round, .. }
-            | Fault::DeadlineStorm { round, .. } => round,
+            | Fault::DeadlineStorm { round, .. }
+            | Fault::StalledLaunch { round, .. } => round,
         }
     }
 }
@@ -71,6 +78,7 @@ impl std::fmt::Display for Fault {
             Fault::WorkerPanic { round, item } => write!(f, "panic@{round}:{item}"),
             Fault::Cancel { round, id } => write!(f, "cancel@{round}:{id}"),
             Fault::DeadlineStorm { round, every } => write!(f, "storm@{round}:{every}"),
+            Fault::StalledLaunch { round, item } => write!(f, "stall@{round}:{item}"),
         }
     }
 }
@@ -114,6 +122,8 @@ impl FaultPlan {
     /// * `cancel@R:ID`    — cancel request `ID` at round `R`
     /// * `storm@R[:H]`    — collapse every `H`-th (default every)
     ///   in-flight deadline at round `R`
+    /// * `stall@R[:I]`    — stall grid item `I` (default 0) at `R`
+    ///   until the watchdog kills the launch
     ///
     /// The empty string parses to the empty plan.
     pub fn parse(spec: &str) -> anyhow::Result<Self> {
@@ -196,6 +206,15 @@ impl FaultPlan {
                         None => 1,
                     },
                 },
+                "stall" => Fault::StalledLaunch {
+                    round,
+                    item: match args {
+                        Some(a) => a
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("bad item in {part:?}: {e}"))?,
+                        None => 0,
+                    },
+                },
                 other => anyhow::bail!("unknown fault kind {other:?} in {part:?}"),
             };
             events.push(ev);
@@ -226,7 +245,7 @@ impl FaultPlan {
         let mut events = Vec::with_capacity(n);
         for _ in 0..n {
             let round = rng.next_u64() % horizon;
-            events.push(match rng.next_u64() % 4 {
+            events.push(match rng.next_u64() % 5 {
                 0 => Fault::PagePressure {
                     round,
                     pages: 1 + (rng.next_u64() % 4) as usize,
@@ -240,9 +259,13 @@ impl FaultPlan {
                     round,
                     id: (rng.next_u64() % 16) as usize,
                 },
-                _ => Fault::DeadlineStorm {
+                3 => Fault::DeadlineStorm {
                     round,
                     every: 1 + (rng.next_u64() % 3) as usize,
+                },
+                _ => Fault::StalledLaunch {
+                    round,
+                    item: (rng.next_u64() % 8) as usize,
                 },
             });
         }
@@ -275,6 +298,16 @@ impl FaultPlan {
             .sum()
     }
 
+    /// Whether the plan contains any [`Fault::StalledLaunch`] event.
+    /// The lifecycle auto-starts a watchdog supervisor for such plans
+    /// so a stalled launch is always killed rather than blocking the
+    /// round loop forever.
+    pub fn has_stalls(&self) -> bool {
+        self.events
+            .iter()
+            .any(|e| matches!(e, Fault::StalledLaunch { .. }))
+    }
+
     /// The last round any event in the plan touches (0 for an empty
     /// plan) — runners keep stepping at least this far so late faults
     /// are not silently skipped on short traces.
@@ -298,8 +331,10 @@ mod tests {
 
     #[test]
     fn parse_round_trips_every_event_kind() {
-        let plan =
-            FaultPlan::parse("pressure@3:2x4; panic@5:1; cancel@7:2; storm@9:2;").unwrap();
+        let plan = FaultPlan::parse(
+            "pressure@3:2x4; panic@5:1; cancel@7:2; storm@9:2; stall@11:3;",
+        )
+        .unwrap();
         assert_eq!(
             plan.events,
             vec![
@@ -311,6 +346,7 @@ mod tests {
                 Fault::WorkerPanic { round: 5, item: 1 },
                 Fault::Cancel { round: 7, id: 2 },
                 Fault::DeadlineStorm { round: 9, every: 2 },
+                Fault::StalledLaunch { round: 11, item: 3 },
             ]
         );
         // Display form re-parses to the same plan.
@@ -329,7 +365,11 @@ mod tests {
             FaultPlan::parse("storm@2").unwrap().events,
             vec![Fault::DeadlineStorm { round: 2, every: 1 }]
         );
-        for bad in ["pressure@1", "cancel@1", "blorp@3", "panic", "panic@x"] {
+        assert_eq!(
+            FaultPlan::parse("stall@6").unwrap().events,
+            vec![Fault::StalledLaunch { round: 6, item: 0 }]
+        );
+        for bad in ["pressure@1", "cancel@1", "blorp@3", "panic", "panic@x", "stall@x"] {
             assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must not parse");
         }
     }

@@ -9,42 +9,69 @@
 //! schedule (any anomaly aborts the whole run), this runner degrades:
 //!
 //! 1. **Bounded ingress** — clients submitting past `queue_cap` get an
-//!    explicit `Rejected { retry_after }` instead of unbounded queue
-//!    growth (saturating replay: the whole trace submits as fast as
-//!    the queue drains).
+//!    explicit `Rejected { retry_after }`, or — with
+//!    [`LifecycleConfig::resubmit_max`] > 0 — re-enter through seeded
+//!    exponential backoff with jitter that *honors* the computed
+//!    `retry_after` instead of hammering the full queue every round.
 //! 2. **Admission control** — requests that could *never* complete
 //!    (context window, worst-case lifetime KV pages vs the page cap)
 //!    are rejected up front with a precise reason
-//!    ([`Backend::admit_check`]).
+//!    ([`Backend::admit_check`]). Admission is **priority-aware with
+//!    aging**: the queue entry with the highest
+//!    `priority + waited_rounds / aging_rounds` admits first (FIFO
+//!    within a class, so uniform-priority traces behave exactly as
+//!    before), and aging guarantees low-priority requests cannot
+//!    starve.
 //! 3. **Deadlines & cancellation** — per-request SLO budgets and
 //!    cancel times (trace-driven or fault-injected) are swept between
 //!    engine rounds; a dead request's pages and slot free immediately,
-//!    even mid-prefill.
+//!    even mid-prefill. A streaming consumer that disconnects or falls
+//!    past its backlog bound cancels its request the same way (the
+//!    slow-consumer policy — see [`super::live::StreamHub`]).
 //! 4. **KV-pressure degradation ladder** — when the next round's page
 //!    preflight cannot be satisfied: first evict parked conversation
 //!    prefixes, then *preempt* the lowest-priority in-flight request
-//!    (release its slot, requeue it at the front; completed-prefill
-//!    victims park their prefix so the retry adopts it), and finally
-//!    throttle admission until pressure lifts. Nothing panics on an
-//!    exhausted pool.
-//! 5. **Worker-panic isolation** — an attributed panic inside a
-//!    batched launch ([`EngineBackend::step`]) fails only the poisoned
-//!    request; the pool and the rest of the batch continue.
+//!    (release its slot, requeue it; victims park their whole-page
+//!    prefill rows so the retry adopts them), and finally throttle
+//!    admission until pressure lifts. Nothing panics on an exhausted
+//!    pool.
+//! 5. **Worker-panic and stall isolation** — an attributed panic
+//!    inside a batched launch ([`EngineBackend::step`]) fails only the
+//!    poisoned request; a launch that stops heartbeating past the
+//!    watchdog's stall budget ([`super::supervisor::Supervisor`]) is
+//!    killed, attributed, and failed the same way. The pool and the
+//!    rest of the batch continue, re-executed bit-identically.
+//!
+//! The loop is fed by an [`Ingress`]: the legacy saturating replay, an
+//! open-loop arrival schedule (requests submit when the clock reaches
+//! their arrival time, whether or not the server has capacity), or a
+//! **live** bounded MPSC channel fed by real threads
+//! ([`super::live::spawn_ingress`]) — channel disconnect is the
+//! graceful-drain signal: stop admitting, finish in-flight work, and
+//! exit with the no-leak invariant (`allocated == free + parked`)
+//! checked on the way out.
 //!
 //! Faults come from a [`FaultPlan`] consulted at the top of every
 //! round, so a (trace, config, plan) triple replays deterministically —
-//! the chaos harness's whole premise.
+//! the chaos harness's whole premise. Backoff jitter draws from its own
+//! seeded RNG in submission order, so `ClockMode::Rounds` chaos runs
+//! stay bit-reproducible at any thread count even with requeues in
+//! flight.
 
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::time::{Duration, Instant};
 
-use crate::tracegen::Request;
+use crate::tracegen::{Request, Rng};
 
 use super::engine::{prompt_tokens, Backend, SchedulerConfig};
 use super::engine_backend::EngineBackend;
 use super::faults::{Fault, FaultPlan};
+use super::live::{LiveSubmission, StreamHub};
 use super::metrics::{
     summarize_outcomes, LifecycleSummary, Outcome, RequestMetrics, RequestOutcome,
 };
+use super::supervisor::Supervisor;
 
 /// How deadlines and cancel budgets are measured.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -57,6 +84,12 @@ pub enum ClockMode {
     /// budgets count rounds, bit-for-bit reproducible anywhere.
     Rounds,
 }
+
+/// Stall budget for the supervisor [`run_lifecycle_ext`] auto-starts
+/// when a fault plan contains stall events but the caller passed no
+/// supervisor of its own — stall plans are self-supervising, so a
+/// generated chaos plan can never hang a run.
+const AUTO_STALL_MS: u64 = 150;
 
 /// Lifecycle policy knobs, layered on top of [`SchedulerConfig`].
 #[derive(Debug, Clone, Copy)]
@@ -72,6 +105,16 @@ pub struct LifecycleConfig {
     /// anything (e.g. a pressure window with an empty batch) before it
     /// drains the queue as `Rejected` instead of livelocking.
     pub max_stall_rounds: u32,
+    /// Times a queue-full rejection re-enters through exponential
+    /// backoff before it becomes terminal. 0 = legacy single-shot
+    /// rejection (the default: replay benchmarks count every overflow).
+    pub resubmit_max: u32,
+    /// Seed for the backoff jitter stream (deterministic; consumed in
+    /// submission order on the single round-loop thread).
+    pub backoff_seed: u64,
+    /// Rounds of queue wait per +1 effective admission priority
+    /// (aging). 0 disables aging (pure priority, starvation possible).
+    pub aging_rounds: u64,
 }
 
 impl Default for LifecycleConfig {
@@ -81,6 +124,9 @@ impl Default for LifecycleConfig {
             default_deadline_s: f64::INFINITY,
             clock: ClockMode::Wall,
             max_stall_rounds: 64,
+            resubmit_max: 0,
+            backoff_seed: 0x0b0f,
+            aging_rounds: 4,
         }
     }
 }
@@ -95,15 +141,43 @@ pub struct LifecycleStats {
     pub throttled_rounds: u64,
     pub rejected_queue_full: u64,
     pub rejected_inadmissible: u64,
+    /// Queue-full submissions that re-entered through backoff instead
+    /// of terminating.
+    pub backoff_requeues: u64,
+    /// Stalled launches the watchdog killed during this run.
+    pub watchdog_kills: u64,
+    /// Requests cancelled because their stream consumer disconnected
+    /// or fell past the backlog bound.
+    pub slow_consumer_cancels: u64,
 }
 
 /// Everything a lifecycle run produced.
 #[derive(Debug, Clone)]
 pub struct LifecycleReport {
-    /// One terminal record per trace request, sorted by id.
+    /// One terminal record per submitted request, sorted by id.
     pub outcomes: Vec<RequestOutcome>,
     pub summary: LifecycleSummary,
     pub stats: LifecycleStats,
+}
+
+/// Where the lifecycle's requests come from.
+pub enum Ingress<'a> {
+    /// Legacy replay: the whole trace is offered as fast as the queue
+    /// drains (every not-yet-submitted client submits every round).
+    Saturating(&'a [Request]),
+    /// Open-loop replay: each request submits when the lifecycle clock
+    /// reaches `arrival_s * time_scale` — arrivals do not wait for
+    /// server capacity, which is what makes goodput-under-load curves
+    /// honest. Under `ClockMode::Rounds` the scaled arrival time is in
+    /// rounds (deterministic).
+    OpenLoop {
+        trace: &'a [Request],
+        time_scale: f64,
+    },
+    /// Live serving: submissions arrive over a bounded channel from
+    /// other threads (see [`super::live::spawn_ingress`]). Sender
+    /// disconnect = graceful drain.
+    Live(Receiver<LiveSubmission>),
 }
 
 /// A submitted-but-not-yet-running request, with its lifecycle budgets
@@ -114,6 +188,18 @@ struct Queued {
     deadline_at: f64,
     cancel_at: f64,
     preemptions: u32,
+    /// Monotone submission sequence — FIFO tie-break within a priority
+    /// class (preserved across preemption requeues).
+    seq: u64,
+    /// Round the request entered the queue (aging reference point).
+    submitted_round: u64,
+}
+
+/// A request waiting out its backoff window before resubmission.
+struct BackoffEntry {
+    req: Request,
+    attempts: u32,
+    not_before: f64,
 }
 
 /// A request occupying a slot (mid-prefill or decoding).
@@ -127,7 +213,8 @@ struct InFlight {
     itls: Vec<f64>,
 }
 
-fn record(outcomes: &mut HashMap<usize, RequestOutcome>, o: RequestOutcome) {
+fn record(outcomes: &mut HashMap<usize, RequestOutcome>, hub: &mut StreamHub, o: RequestOutcome) {
+    hub.finish(o.id, o.outcome, &o.reason);
     let id = o.id;
     let prev = outcomes.insert(id, o);
     debug_assert!(
@@ -171,7 +258,8 @@ impl InFlight {
     }
 }
 
-/// Drive `trace` through `backend` under the fault-tolerant lifecycle.
+/// Drive `trace` through `backend` under the fault-tolerant lifecycle
+/// (legacy saturating replay, no streaming, no external supervisor).
 /// See the module docs for the state machine; `faults` may be
 /// [`FaultPlan::none`] for a healthy run.
 pub fn run_lifecycle(
@@ -182,10 +270,62 @@ pub fn run_lifecycle(
     faults: &FaultPlan,
     vocab: usize,
 ) -> anyhow::Result<LifecycleReport> {
+    let mut hub = StreamHub::disabled();
+    run_lifecycle_ext(
+        backend,
+        Ingress::Saturating(trace),
+        sched,
+        lc,
+        faults,
+        vocab,
+        &mut hub,
+        None,
+    )
+}
+
+/// The full lifecycle entry point: any [`Ingress`], per-request token
+/// streaming through `hub`, and optional watchdog supervision. When
+/// `supervisor` is `None` but the fault plan schedules stall events,
+/// a private supervisor is auto-started so stall plans can never hang
+/// the loop.
+#[allow(clippy::too_many_arguments)]
+pub fn run_lifecycle_ext(
+    backend: &mut EngineBackend,
+    ingress: Ingress<'_>,
+    sched: SchedulerConfig,
+    lc: LifecycleConfig,
+    faults: &FaultPlan,
+    vocab: usize,
+    hub: &mut StreamHub,
+    supervisor: Option<&Supervisor>,
+) -> anyhow::Result<LifecycleReport> {
     backend.configure(&sched);
     let n_slots = backend.n_slots();
-    let mut pending: VecDeque<Request> = trace.to_vec().into();
+
+    // Ingress state. Replay modes know their terminal count up front;
+    // live mode counts what it receives.
+    let (mut replay, open_scale, live_rx): (VecDeque<Request>, Option<f64>, Option<Receiver<LiveSubmission>>) =
+        match ingress {
+            Ingress::Saturating(tr) => (tr.to_vec().into(), None, None),
+            Ingress::OpenLoop { trace, time_scale } => {
+                (trace.to_vec().into(), Some(time_scale), None)
+            }
+            Ingress::Live(rx) => (VecDeque::new(), None, Some(rx)),
+        };
+    let mut live_open = live_rx.is_some();
+    let mut expected: usize = replay.len();
+
+    let auto_sup = if supervisor.is_none() && faults.has_stalls() {
+        Some(Supervisor::start(AUTO_STALL_MS))
+    } else {
+        None
+    };
+    let sup: Option<&Supervisor> = supervisor.or(auto_sup.as_ref());
+    let kills0 = sup.map_or(0, Supervisor::kills);
+
     let mut queue: VecDeque<Queued> = VecDeque::new();
+    let mut backoff: Vec<BackoffEntry> = Vec::new();
+    let mut brng = Rng::new(lc.backoff_seed | 1);
     let mut slots: Vec<Option<InFlight>> = (0..n_slots).map(|_| None).collect();
     let mut prefill_order: Vec<usize> = Vec::new();
     let mut outcomes: HashMap<usize, RequestOutcome> = HashMap::new();
@@ -195,18 +335,28 @@ pub fn run_lifecycle(
     let mut round: u64 = 0;
     let mut stall = 0u32;
     let mut last_dt = 1e-3f64;
+    let mut next_seq: u64 = 0;
 
     loop {
-        if pending.is_empty() && queue.is_empty() && slots.iter().all(Option::is_none) {
+        let ingress_done = replay.is_empty() && !live_open;
+        if ingress_done
+            && backoff.is_empty()
+            && queue.is_empty()
+            && slots.iter().all(Option::is_none)
+        {
             break;
         }
         stats.rounds = round + 1;
+        if let Some(s) = sup {
+            s.beat();
+        }
 
         // 1. Fault-plan pressure for this round (0 lifts it).
         backend.set_kv_pressure(faults.pressure_at(round));
 
         // 2. Point faults: cancels persist (a client cancel also kills
-        //    a not-yet-submitted request), storms and panics fire now.
+        //    a not-yet-submitted request), storms, panics, and stalls
+        //    fire now.
         for ev in faults.events_at(round) {
             match *ev {
                 Fault::Cancel { id, .. } => {
@@ -224,15 +374,115 @@ pub fn run_lifecycle(
                 Fault::WorkerPanic { item, .. } => {
                     crate::exec::runtime::inject_panic_next_launch(item);
                 }
+                Fault::StalledLaunch { item, .. } => {
+                    crate::exec::runtime::inject_stall_next_launch(item);
+                }
                 Fault::PagePressure { .. } => {}
             }
         }
 
-        // 3. Bounded ingress (saturating replay: every not-yet-
-        //    submitted client submits now; past the cap they get an
-        //    explicit rejection with a backoff hint).
-        while let Some(r) = pending.pop_front() {
+        // 3. Ingress. Matured backoff entries re-offer FIRST (their
+        //    retry_after has been honored; oldest deadline first), then
+        //    this round's arrivals.
+        let mut offers: Vec<(Request, u32)> = Vec::new();
+        if !backoff.is_empty() {
+            let (mut matured, rest): (Vec<BackoffEntry>, Vec<BackoffEntry>) = backoff
+                .drain(..)
+                .partition(|e| e.not_before <= clock);
+            backoff = rest;
+            matured.sort_by(|a, b| {
+                a.not_before
+                    .partial_cmp(&b.not_before)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.req.id.cmp(&b.req.id))
+            });
+            offers.extend(matured.into_iter().map(|e| (e.req, e.attempts)));
+        }
+        match (&live_rx, open_scale) {
+            (Some(rx), _) => {
+                if live_open {
+                    loop {
+                        match rx.try_recv() {
+                            Ok(sub) => {
+                                expected += 1;
+                                if let Some(tx) = sub.stream {
+                                    hub.attach(sub.req.id, tx);
+                                }
+                                offers.push((sub.req, 0));
+                            }
+                            Err(TryRecvError::Empty) => break,
+                            Err(TryRecvError::Disconnected) => {
+                                live_open = false;
+                                break;
+                            }
+                        }
+                    }
+                    // Idle server: park briefly on the channel instead
+                    // of spinning; the wait still counts as wall time.
+                    if live_open
+                        && offers.is_empty()
+                        && queue.is_empty()
+                        && backoff.is_empty()
+                        && slots.iter().all(Option::is_none)
+                    {
+                        let t0 = Instant::now();
+                        match rx.recv_timeout(Duration::from_millis(1)) {
+                            Ok(sub) => {
+                                expected += 1;
+                                if let Some(tx) = sub.stream {
+                                    hub.attach(sub.req.id, tx);
+                                }
+                                offers.push((sub.req, 0));
+                            }
+                            Err(RecvTimeoutError::Timeout) => {}
+                            Err(RecvTimeoutError::Disconnected) => live_open = false,
+                        }
+                        if lc.clock == ClockMode::Wall {
+                            clock += t0.elapsed().as_secs_f64();
+                        }
+                    }
+                }
+            }
+            (None, Some(scale)) => {
+                while replay
+                    .front()
+                    .is_some_and(|r| r.arrival_s * scale <= clock)
+                {
+                    offers.push((replay.pop_front().unwrap(), 0));
+                }
+            }
+            (None, None) => {
+                while let Some(r) = replay.pop_front() {
+                    offers.push((r, 0));
+                }
+            }
+        }
+
+        // Bounded admission of the offers: past the cap, a submission
+        // either re-enters through exponential backoff with jitter
+        // (honoring its retry hint — the full queue is NOT re-offered
+        // every round) or, once its attempts are spent, terminates as
+        // Rejected with the hint attached.
+        for (r, attempts) in offers {
             if lc.queue_cap > 0 && queue.len() >= lc.queue_cap {
+                if lc.resubmit_max > attempts {
+                    let unit = match lc.clock {
+                        ClockMode::Rounds => 1.0,
+                        ClockMode::Wall => last_dt.max(1e-3),
+                    };
+                    let jitter = 1.0 + brng.f64(); // [1, 2)
+                    let delay = unit
+                        * (queue.len().max(1) as f64)
+                        * (1u64 << attempts.min(16)) as f64
+                        * jitter;
+                    stats.backoff_requeues += 1;
+                    backoff.push(BackoffEntry {
+                        req: r,
+                        attempts: attempts + 1,
+                        not_before: clock + delay,
+                    });
+                    continue;
+                }
                 stats.rejected_queue_full += 1;
                 let retry = (queue.len() as f64) * last_dt.max(1e-3);
                 let q = Queued {
@@ -241,13 +491,24 @@ pub fn run_lifecycle(
                     deadline_at: f64::INFINITY,
                     cancel_at: f64::INFINITY,
                     preemptions: 0,
+                    seq: next_seq,
+                    submitted_round: round,
                 };
+                next_seq += 1;
                 record(
                     &mut outcomes,
+                    hub,
                     terminal(
                         &q,
                         Outcome::Rejected,
-                        format!("ingress queue full ({} queued)", queue.len()),
+                        if attempts == 0 {
+                            format!("ingress queue full ({} queued)", queue.len())
+                        } else {
+                            format!(
+                                "ingress queue full ({} queued) after {attempts} backoff retries",
+                                queue.len()
+                            )
+                        },
                         retry,
                     ),
                 );
@@ -263,8 +524,11 @@ pub fn run_lifecycle(
                 cancel_at: clock + r.cancel_s,
                 submitted_s: clock,
                 preemptions: 0,
+                seq: next_seq,
+                submitted_round: round,
                 req: r,
             });
+            next_seq += 1;
         }
 
         // 4. Sweeps: cancelled / past-deadline requests terminate now,
@@ -275,11 +539,13 @@ pub fn run_lifecycle(
             if cancelled_ids.contains(&q.req.id) || clock >= q.cancel_at {
                 record(
                     &mut outcomes,
+                    hub,
                     terminal(&q, Outcome::Cancelled, "cancelled while queued".into(), 0.0),
                 );
             } else if clock >= q.deadline_at {
                 record(
                     &mut outcomes,
+                    hub,
                     terminal(
                         &q,
                         Outcome::DeadlineExceeded,
@@ -306,32 +572,52 @@ pub fn run_lifecycle(
                 } else {
                     (Outcome::DeadlineExceeded, format!("deadline expired mid-{phase}"))
                 };
-                record(&mut outcomes, fl.into_terminal(outcome, why, clock));
+                record(&mut outcomes, hub, fl.into_terminal(outcome, why, clock));
             }
         }
 
-        // 5. Admission: free slots pull from the queue head. Requests
-        //    that can never complete are rejected; if the prompt's
-        //    pages aren't available even after evicting parked
-        //    prefixes, admission throttles (the request waits).
+        // 5. Admission: free slots pull the highest effective-priority
+        //    queue entry (priority + aging, FIFO within a class).
+        //    Requests that can never complete are rejected; if the
+        //    winner's pages aren't available even after evicting parked
+        //    prefixes, admission throttles (everyone waits — a smaller
+        //    lower-priority request must not starve the winner).
         let mut free: VecDeque<usize> = (0..n_slots).filter(|&i| slots[i].is_none()).collect();
         let mut admitted = 0usize;
-        while admitted < sched.max_prefills_per_step && !free.is_empty() {
-            let Some(q) = queue.pop_front() else { break };
-            if let Err(why) = backend.admit_check(&q.req) {
+        while admitted < sched.max_prefills_per_step && !free.is_empty() && !queue.is_empty() {
+            let bi = {
+                let mut best: Option<(usize, (u64, std::cmp::Reverse<u64>))> = None;
+                for (i, q) in queue.iter().enumerate() {
+                    let waited = round.saturating_sub(q.submitted_round);
+                    let aged = if lc.aging_rounds > 0 {
+                        waited / lc.aging_rounds
+                    } else {
+                        0
+                    };
+                    let key = (u64::from(q.req.priority) + aged, std::cmp::Reverse(q.seq));
+                    if best.as_ref().map_or(true, |&(_, bk)| key > bk) {
+                        best = Some((i, key));
+                    }
+                }
+                let Some((i, _)) = best else { break };
+                i
+            };
+            if let Err(why) = backend.admit_check(&queue[bi].req) {
+                let q = queue.remove(bi).unwrap();
                 stats.rejected_inadmissible += 1;
                 record(
                     &mut outcomes,
+                    hub,
                     terminal(&q, Outcome::Rejected, why, f64::INFINITY),
                 );
                 continue;
             }
-            let need = backend.admit_pages_needed(q.req.input_tokens);
+            let need = backend.admit_pages_needed(queue[bi].req.input_tokens);
             if need > backend.available_kv_pages() && backend.evict_prefixes_for(need) < need {
                 stats.throttled_rounds += 1;
-                queue.push_front(q);
                 break;
             }
+            let q = queue.remove(bi).unwrap();
             let slot = free.pop_front().unwrap();
             let tokens = prompt_tokens(&q.req, vocab);
             backend.begin_prefill(slot, &q.req, &tokens)?;
@@ -351,8 +637,9 @@ pub fn run_lifecycle(
         // 6. Build the round's work and walk the degradation ladder
         //    until its page preflight fits: evict parked prefixes,
         //    then preempt the lowest-priority / latest-admitted
-        //    in-flight request (requeued at the front; a completed
-        //    prefill parks so the retry adopts it).
+        //    in-flight request (requeued with its original sequence, so
+        //    it re-admits ahead of its class; a prefill parks its
+        //    whole-page rows so the retry adopts them).
         let mut budget = if sched.prefill_round_tokens == 0 {
             usize::MAX
         } else {
@@ -407,9 +694,26 @@ pub fn run_lifecycle(
             queue.push_front(fl.q);
         }
 
+        // Idle wall clock: with nothing runnable and nothing queued,
+        // jump to the next scheduled event (open-loop arrival or
+        // backoff maturity) instead of spinning on a frozen clock.
+        if work.is_empty() && active.is_empty() && queue.is_empty() && lc.clock == ClockMode::Wall
+        {
+            let mut next = f64::INFINITY;
+            if let (Some(scale), Some(r)) = (open_scale, replay.front()) {
+                next = next.min(r.arrival_s * scale);
+            }
+            for e in &backoff {
+                next = next.min(e.not_before);
+            }
+            if next.is_finite() && next > clock {
+                clock = next;
+            }
+        }
+
         // 7. One engine round (if there is anything to run).
         if work.is_empty() && active.is_empty() {
-            if !queue.is_empty() || !pending.is_empty() {
+            if !queue.is_empty() {
                 stall += 1;
                 if stall > lc.max_stall_rounds {
                     // Livelock guard: pressure (or ping-pong) has kept
@@ -420,6 +724,7 @@ pub fn run_lifecycle(
                         stats.rejected_queue_full += 1;
                         record(
                             &mut outcomes,
+                            hub,
                             terminal(
                                 &q,
                                 Outcome::Rejected,
@@ -427,25 +732,6 @@ pub fn run_lifecycle(
                                     "admission stalled for {} rounds (KV pressure)",
                                     lc.max_stall_rounds
                                 ),
-                                last_dt.max(1e-3) * 16.0,
-                            ),
-                        );
-                    }
-                    for r in pending.drain(..) {
-                        let q = Queued {
-                            req: r,
-                            submitted_s: clock,
-                            deadline_at: f64::INFINITY,
-                            cancel_at: f64::INFINITY,
-                            preemptions: 0,
-                        };
-                        stats.rejected_queue_full += 1;
-                        record(
-                            &mut outcomes,
-                            terminal(
-                                &q,
-                                Outcome::Rejected,
-                                "server stalled before submission".into(),
                                 last_dt.max(1e-3) * 16.0,
                             ),
                         );
@@ -465,6 +751,9 @@ pub fn run_lifecycle(
                 clock
             };
 
+            // Consumers whose stream went away (disconnect or slow past
+            // the backlog bound) — their requests cancel after the fold.
+            let mut gone_streams: HashSet<usize> = HashSet::new();
             for (slot, tok) in rep.finished {
                 prefill_order.retain(|&s| s != slot);
                 let fl = slots[slot].as_mut().expect("finished an empty slot");
@@ -472,10 +761,17 @@ pub fn run_lifecycle(
                 fl.first_token_s = now;
                 fl.last_token_s = now;
                 fl.tokens.push(tok);
+                if !hub.push_token(fl.q.req.id, tok) {
+                    gone_streams.insert(fl.q.req.id);
+                }
                 if fl.q.req.output_tokens <= 1 {
                     let fl = slots[slot].take().unwrap();
                     backend.release(slot);
-                    record(&mut outcomes, fl.into_terminal(Outcome::Completed, String::new(), now));
+                    record(
+                        &mut outcomes,
+                        hub,
+                        fl.into_terminal(Outcome::Completed, String::new(), now),
+                    );
                 }
             }
             for (slot, tok) in rep.tokens {
@@ -483,17 +779,49 @@ pub fn run_lifecycle(
                 fl.itls.push(now - fl.last_token_s);
                 fl.last_token_s = now;
                 fl.tokens.push(tok);
+                if !hub.push_token(fl.q.req.id, tok) {
+                    gone_streams.insert(fl.q.req.id);
+                }
                 if fl.tokens.len() >= fl.q.req.output_tokens.max(1) {
                     let fl = slots[slot].take().unwrap();
                     backend.release(slot);
-                    record(&mut outcomes, fl.into_terminal(Outcome::Completed, String::new(), now));
+                    record(
+                        &mut outcomes,
+                        hub,
+                        fl.into_terminal(Outcome::Completed, String::new(), now),
+                    );
                 }
             }
             for (slot, reason) in rep.failed {
                 prefill_order.retain(|&s| s != slot);
                 let fl = slots[slot].take().expect("failure on an empty slot");
                 backend.release(slot);
-                record(&mut outcomes, fl.into_terminal(Outcome::Failed, reason, now));
+                record(&mut outcomes, hub, fl.into_terminal(Outcome::Failed, reason, now));
+            }
+            // Slow-consumer policy: a request whose stream is gone (and
+            // which didn't already reach a terminal above) cancels now,
+            // freeing its pages — the engine never generates for a
+            // client that stopped listening.
+            if !gone_streams.is_empty() {
+                for slot in 0..n_slots {
+                    let Some(fl) = &slots[slot] else { continue };
+                    if !gone_streams.contains(&fl.q.req.id) {
+                        continue;
+                    }
+                    let fl = slots[slot].take().unwrap();
+                    backend.release(slot);
+                    prefill_order.retain(|&s| s != slot);
+                    stats.slow_consumer_cancels += 1;
+                    record(
+                        &mut outcomes,
+                        hub,
+                        fl.into_terminal(
+                            Outcome::Cancelled,
+                            "client token stream closed (slow consumer or disconnect)".into(),
+                            now,
+                        ),
+                    );
+                }
             }
         }
 
@@ -503,16 +831,27 @@ pub fn run_lifecycle(
         }
     }
 
-    // Leave the backend clean for the next run: no synthetic pressure,
-    // no armed faults.
+    // Graceful drain is complete: leave the backend clean for the next
+    // run (no synthetic pressure, no armed faults) and enforce the
+    // no-leak invariant — every page is either free or parked under a
+    // conversation prefix.
     backend.set_kv_pressure(0);
     crate::exec::runtime::clear_injected_panic();
+    crate::exec::runtime::clear_injected_stall();
+    stats.watchdog_kills = sup.map_or(0, Supervisor::kills).saturating_sub(kills0);
+    drop(auto_sup);
 
+    let (alloc, free_pages) = backend.kv_pages();
+    let parked = backend.prefix_stats().parked_pages;
     anyhow::ensure!(
-        outcomes.len() == trace.len(),
-        "terminal-state invariant violated: {} outcomes for {} requests",
+        alloc == free_pages + parked,
+        "no-leak invariant violated on drain: {alloc} allocated vs {free_pages} free + {parked} parked"
+    );
+    anyhow::ensure!(
+        outcomes.len() == expected,
+        "terminal-state invariant violated: {} outcomes for {} submitted requests",
         outcomes.len(),
-        trace.len()
+        expected
     );
     let mut outcomes: Vec<RequestOutcome> = outcomes.into_values().collect();
     outcomes.sort_by_key(|o| o.id);
@@ -633,6 +972,118 @@ mod tests {
             assert!(o.reason.contains("queue full"), "{}", o.reason);
         }
         assert_eq!(rep.stats.rejected_queue_full as usize, rep.summary.rejected);
+        assert_eq!(rep.stats.backoff_requeues, 0, "resubmit_max=0 is single-shot");
+        assert_no_leak(&mut b);
+    }
+
+    #[test]
+    fn backoff_resubmission_honors_retry_after_and_recovers_overflow() {
+        let tr = trace(8);
+        let run = |resubmit_max: u32| {
+            let mut b = backend(1);
+            let vocab = b.model.vocab;
+            let rep = run_lifecycle(
+                &mut b,
+                &tr,
+                sched(),
+                LifecycleConfig {
+                    queue_cap: 2,
+                    resubmit_max,
+                    clock: ClockMode::Rounds,
+                    ..Default::default()
+                },
+                &FaultPlan::none(),
+                vocab,
+            )
+            .unwrap();
+            assert_eq!(rep.summary.total(), tr.len());
+            assert_no_leak(&mut b);
+            rep
+        };
+        let single = run(0);
+        let retried = run(4);
+        assert!(retried.stats.backoff_requeues > 0, "backoff must engage");
+        // Each overflowed request waits out its window instead of being
+        // re-offered every round: requeues are bounded by attempts.
+        assert!(
+            retried.stats.backoff_requeues <= tr.len() as u64 * 4,
+            "full queue must not be hammered every round ({} requeues)",
+            retried.stats.backoff_requeues
+        );
+        // Honoring retry_after converts rejections into completions.
+        assert!(
+            retried.summary.completed > single.summary.completed,
+            "backoff must recover overflow ({} vs {})",
+            retried.summary.completed,
+            single.summary.completed
+        );
+        for o in retried
+            .outcomes
+            .iter()
+            .filter(|o| o.outcome == Outcome::Rejected)
+        {
+            assert!(
+                o.reason.contains("backoff retries"),
+                "terminal rejection must only happen after retries: {}",
+                o.reason
+            );
+        }
+        // Deterministic: the jitter stream is seeded.
+        let again = run(4);
+        assert_eq!(
+            retried
+                .outcomes
+                .iter()
+                .map(|o| (o.id, o.outcome, o.tokens.clone()))
+                .collect::<Vec<_>>(),
+            again
+                .outcomes
+                .iter()
+                .map(|o| (o.id, o.outcome, o.tokens.clone()))
+                .collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn priority_admission_orders_by_priority_and_ages_out_starvation() {
+        // Three same-arrival requests, priorities 0/1/2, one slot: the
+        // highest priority must reach its first token first, the lowest
+        // last — and still complete (aging forbids starvation).
+        let mut tr = trace(3);
+        for (i, r) in tr.iter_mut().enumerate() {
+            r.priority = i as u8; // ids 0,1,2 -> priorities 0,1,2
+            r.arrival_s = 0.0;
+        }
+        let mut b = EngineBackend::new(
+            EngineModel::tiny(),
+            1,
+            1024,
+            Parallelism::with_threads(1),
+        );
+        let vocab = b.model.vocab;
+        let rep = run_lifecycle(
+            &mut b,
+            &tr,
+            sched(),
+            LifecycleConfig {
+                clock: ClockMode::Rounds,
+                aging_rounds: 1000, // effectively pure priority here
+                ..Default::default()
+            },
+            &FaultPlan::none(),
+            vocab,
+        )
+        .unwrap();
+        assert_eq!(rep.summary.completed, 3, "aging must prevent starvation");
+        let ttft = |id: usize| {
+            rep.outcomes[id]
+                .metrics
+                .as_ref()
+                .expect("completed request has metrics")
+                .first_token_s
+        };
+        assert!(ttft(2) < ttft(1), "priority 2 admits before 1");
+        assert!(ttft(1) < ttft(0), "priority 1 admits before 0");
         assert_no_leak(&mut b);
     }
 
@@ -668,5 +1119,123 @@ mod tests {
         };
         // Rounds-mode deadlines are thread-count independent.
         assert_eq!(run(1), run(2));
+    }
+
+    #[test]
+    fn open_loop_ingress_completes_and_matches_across_threads() {
+        let tr = trace(8);
+        let run = |threads: usize| {
+            let mut b = backend(threads);
+            let vocab = b.model.vocab;
+            let mut hub = StreamHub::disabled();
+            let rep = run_lifecycle_ext(
+                &mut b,
+                // Spread arrivals over the first ~12 rounds.
+                Ingress::OpenLoop {
+                    trace: &tr,
+                    time_scale: 12.0 / tr.last().unwrap().arrival_s.max(1e-9),
+                },
+                sched(),
+                LifecycleConfig {
+                    clock: ClockMode::Rounds,
+                    ..Default::default()
+                },
+                &FaultPlan::none(),
+                vocab,
+                &mut hub,
+                None,
+            )
+            .unwrap();
+            assert_eq!(rep.summary.completed, tr.len());
+            assert_no_leak(&mut b);
+            rep.outcomes
+                .into_iter()
+                .map(|o| (o.id, o.tokens))
+                .collect::<Vec<_>>()
+        };
+        let one = run(1);
+        assert_eq!(one, run(2));
+        assert_eq!(one, run(4));
+    }
+
+    #[test]
+    fn streaming_delivers_every_token_and_cancels_slow_consumers() {
+        use crate::serve::live::StreamEvent;
+        let tr = trace(6);
+        let mut b = backend(1);
+        let vocab = b.model.vocab;
+        let mut hub = StreamHub::new(0); // zero backlog tolerance
+        // Request 0 gets a 1-slot channel nobody reads (slow consumer);
+        // the others get roomy channels read after the run.
+        let mut rxs = Vec::new();
+        for r in &tr {
+            let cap = if r.id == 0 { 1 } else { 64 };
+            rxs.push(hub.open(r.id, cap));
+        }
+        let rep = run_lifecycle_ext(
+            &mut b,
+            Ingress::Saturating(&tr),
+            sched(),
+            LifecycleConfig {
+                clock: ClockMode::Rounds,
+                ..Default::default()
+            },
+            &FaultPlan::none(),
+            vocab,
+            &mut hub,
+            None,
+        )
+        .unwrap();
+        assert_eq!(rep.summary.total(), tr.len());
+        let slow = &rep.outcomes[0];
+        if tr[0].output_tokens > 2 {
+            assert_eq!(slow.outcome, Outcome::Cancelled, "{}", slow.reason);
+            assert!(slow.reason.contains("stream"), "{}", slow.reason);
+            assert!(rep.stats.slow_consumer_cancels >= 1);
+        }
+        for (o, rx) in rep.outcomes.iter().zip(rxs).skip(1) {
+            let events: Vec<StreamEvent> = rx.try_iter().collect();
+            let toks: Vec<u32> = events
+                .iter()
+                .filter_map(|e| match e {
+                    StreamEvent::Token(t) => Some(*t),
+                    StreamEvent::Done { .. } => None,
+                })
+                .collect();
+            assert_eq!(toks, o.tokens, "stream must carry the outcome's tokens");
+            assert!(
+                matches!(events.last(), Some(StreamEvent::Done { outcome, .. }) if *outcome == o.outcome),
+                "stream must end with the terminal outcome"
+            );
+        }
+        assert_no_leak(&mut b);
+    }
+
+    #[test]
+    fn live_ingress_serves_submissions_and_drains_gracefully() {
+        use crate::serve::live::spawn_ingress;
+        let tr = trace(6);
+        let mut b = backend(2);
+        let vocab = b.model.vocab;
+        let mut hub = StreamHub::new(256);
+        let subs = tr.iter().map(|r| (r.clone(), None)).collect();
+        // Compress arrivals hard so the test is fast; the channel bound
+        // of 2 exercises ingress backpressure.
+        let (rx, handle) = spawn_ingress(subs, 1e-3, 2);
+        let rep = run_lifecycle_ext(
+            &mut b,
+            Ingress::Live(rx),
+            sched(),
+            LifecycleConfig::default(), // Wall clock: a real server
+            &FaultPlan::none(),
+            vocab,
+            &mut hub,
+            None,
+        )
+        .unwrap();
+        assert_eq!(handle.join().unwrap(), tr.len());
+        assert_eq!(rep.summary.total(), tr.len(), "every submission terminal");
+        assert_eq!(rep.summary.completed, tr.len());
+        assert_no_leak(&mut b);
     }
 }

@@ -1,0 +1,331 @@
+//! Live-serving plumbing: per-request token streams and the threaded
+//! ingress that turns the lifecycle's replay loop into a real server.
+//!
+//! Three pieces (modeled on tgimagik's router `infer.rs` split between
+//! an ingress queue and per-request response channels):
+//!
+//! * [`LiveSubmission`] — what a client hands the server: the request
+//!   plus an optional per-token stream sender. Submissions travel over
+//!   a **bounded** MPSC channel, so a flooding client blocks in `send`
+//!   (backpressure) instead of growing server memory. Dropping the
+//!   sender is the drain signal: the lifecycle stops admitting, finishes
+//!   in-flight work, and exits with the no-leak invariant intact.
+//! * [`StreamHub`] — the server side of every open token stream. Each
+//!   emitted token is `try_send`-ed to the request's bounded channel;
+//!   tokens a slow consumer can't take queue in a per-request backlog
+//!   (flushed ahead of later tokens). A backlog past `max_backlog`, or
+//!   a dropped receiver, marks the consumer gone — the lifecycle then
+//!   cancels the request (`slow consumer` / mid-stream disconnect) and
+//!   frees its pages. The round loop never blocks on a client.
+//! * [`spawn_ingress`] — a detached thread that paces a trace's
+//!   arrivals in wall time and submits each request through the bounded
+//!   channel, then disconnects (graceful drain).
+//!
+//! Every event a consumer sees ends with [`StreamEvent::Done`] carrying
+//! the request's terminal [`Outcome`], so a client can always
+//! distinguish "stream over" from "server died".
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::tracegen::Request;
+
+use super::metrics::Outcome;
+
+/// Environment variable the CLI reads the per-request stream channel
+/// capacity from (tokens buffered in the channel itself; the hub
+/// backlogs up to 4x more before declaring the consumer slow).
+pub const STREAM_BUF_ENV: &str = "FLASHLIGHT_STREAM_BUF";
+
+/// Default per-request stream capacity: larger than any single
+/// response in the engine trace, so a consumer that reads at all never
+/// loses tokens.
+pub const DEFAULT_STREAM_BUF: usize = 32;
+
+/// Stream channel capacity from `FLASHLIGHT_STREAM_BUF` (CLI entry
+/// points only). Unset or unparsable → [`DEFAULT_STREAM_BUF`].
+pub fn stream_buf_from_env() -> usize {
+    std::env::var(STREAM_BUF_ENV)
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&v| v > 0)
+        .unwrap_or(DEFAULT_STREAM_BUF)
+}
+
+/// One event on a per-request token stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StreamEvent {
+    /// The next generated token.
+    Token(u32),
+    /// The stream's terminal event — always the last one delivered.
+    Done { outcome: Outcome, reason: String },
+}
+
+/// What a client submits to the live server: the request plus an
+/// optional sender for its token stream (None = fire-and-forget; the
+/// outcome is still recorded in the lifecycle report).
+pub struct LiveSubmission {
+    pub req: Request,
+    pub stream: Option<SyncSender<StreamEvent>>,
+}
+
+struct Sink {
+    tx: SyncSender<StreamEvent>,
+    /// Tokens the bounded channel couldn't take yet, oldest first.
+    backlog: VecDeque<StreamEvent>,
+}
+
+/// The server side of all open token streams. Not a channel itself —
+/// a registry the round loop pushes into between engine steps, so
+/// stream delivery never blocks a launch.
+pub struct StreamHub {
+    enabled: bool,
+    /// Backlogged events past which a consumer is declared slow and its
+    /// stream dropped (the request is then cancelled by the lifecycle).
+    max_backlog: usize,
+    sinks: HashMap<usize, Sink>,
+    slow_drops: u64,
+    disconnects: u64,
+}
+
+impl StreamHub {
+    /// A hub with the given slow-consumer backlog bound (events queued
+    /// *beyond* each stream channel's own capacity).
+    pub fn new(max_backlog: usize) -> Self {
+        StreamHub {
+            enabled: true,
+            max_backlog,
+            sinks: HashMap::new(),
+            slow_drops: 0,
+            disconnects: 0,
+        }
+    }
+
+    /// The no-op hub for replay runs with no streaming consumers:
+    /// `push_token` always succeeds, `finish` does nothing.
+    pub fn disabled() -> Self {
+        StreamHub {
+            enabled: false,
+            max_backlog: 0,
+            sinks: HashMap::new(),
+            slow_drops: 0,
+            disconnects: 0,
+        }
+    }
+
+    /// Register a consumer-supplied sender for request `id`.
+    pub fn attach(&mut self, id: usize, tx: SyncSender<StreamEvent>) {
+        if self.enabled {
+            self.sinks.insert(id, Sink { tx, backlog: VecDeque::new() });
+        }
+    }
+
+    /// Create a bounded stream for request `id` and return the consumer
+    /// end (test / in-process convenience).
+    pub fn open(&mut self, id: usize, capacity: usize) -> Receiver<StreamEvent> {
+        let (tx, rx) = sync_channel(capacity.max(1));
+        self.attach(id, tx);
+        rx
+    }
+
+    /// Streams currently open.
+    pub fn open_streams(&self) -> usize {
+        self.sinks.len()
+    }
+
+    /// Consumers dropped for exceeding the backlog bound.
+    pub fn slow_drops(&self) -> u64 {
+        self.slow_drops
+    }
+
+    /// Consumers that disconnected (dropped their receiver) mid-stream.
+    pub fn disconnects(&self) -> u64 {
+        self.disconnects
+    }
+
+    /// Deliver one token to request `id`'s stream. Returns `false` when
+    /// the consumer is gone — disconnected, or so far behind that its
+    /// backlog passed the bound — in which case the sink is dropped and
+    /// the caller should cancel the request. Requests with no stream
+    /// registered always return `true`.
+    pub fn push_token(&mut self, id: usize, tok: u32) -> bool {
+        if !self.enabled {
+            return true;
+        }
+        let Some(sink) = self.sinks.get_mut(&id) else {
+            return true;
+        };
+        sink.backlog.push_back(StreamEvent::Token(tok));
+        let gone = loop {
+            let Some(ev) = sink.backlog.pop_front() else {
+                break false;
+            };
+            match sink.tx.try_send(ev) {
+                Ok(()) => {}
+                Err(TrySendError::Full(ev)) => {
+                    sink.backlog.push_front(ev);
+                    break sink.backlog.len() > self.max_backlog;
+                }
+                Err(TrySendError::Disconnected(_)) => break true,
+            }
+        };
+        if gone {
+            let sink = self.sinks.remove(&id).unwrap();
+            if sink.backlog.len() > self.max_backlog {
+                self.slow_drops += 1;
+            } else {
+                self.disconnects += 1;
+            }
+            return false;
+        }
+        true
+    }
+
+    /// Close request `id`'s stream with its terminal event, flushing
+    /// any backlog first (best-effort: a consumer that keeps reading
+    /// sees every token and then `Done`; one that stopped reading may
+    /// miss trailing events but its channel still disconnects).
+    pub fn finish(&mut self, id: usize, outcome: Outcome, reason: &str) {
+        if !self.enabled {
+            return;
+        }
+        let Some(mut sink) = self.sinks.remove(&id) else {
+            return;
+        };
+        sink.backlog.push_back(StreamEvent::Done {
+            outcome,
+            reason: reason.to_string(),
+        });
+        while let Some(ev) = sink.backlog.pop_front() {
+            if sink.tx.try_send(ev).is_err() {
+                break;
+            }
+        }
+    }
+}
+
+/// Spawn the ingress thread: submit each `(request, stream)` pair at
+/// `arrival_s * time_scale` seconds of wall time after spawn, through a
+/// bounded channel of `channel_cap` submissions (a full channel blocks
+/// the ingress — backpressure — rather than growing memory). The thread
+/// drops its sender when the trace is exhausted; the lifecycle sees the
+/// disconnect and drains gracefully.
+pub fn spawn_ingress(
+    trace: Vec<(Request, Option<SyncSender<StreamEvent>>)>,
+    time_scale: f64,
+    channel_cap: usize,
+) -> (Receiver<LiveSubmission>, JoinHandle<usize>) {
+    let (tx, rx) = sync_channel(channel_cap.max(1));
+    let handle = std::thread::Builder::new()
+        .name("flashlight-ingress".to_string())
+        .spawn(move || {
+            let start = Instant::now();
+            let mut sent = 0usize;
+            for (req, stream) in trace {
+                let due = Duration::from_secs_f64((req.arrival_s * time_scale).max(0.0));
+                if let Some(wait) = due.checked_sub(start.elapsed()) {
+                    std::thread::sleep(wait);
+                }
+                if tx.send(LiveSubmission { req, stream }).is_err() {
+                    break; // server went away; stop submitting
+                }
+                sent += 1;
+            }
+            sent
+        })
+        .expect("spawn flashlight ingress");
+    (rx, handle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hub_delivers_tokens_then_done_in_order() {
+        let mut hub = StreamHub::new(8);
+        let rx = hub.open(7, 4);
+        for t in [10u32, 11, 12] {
+            assert!(hub.push_token(7, t));
+        }
+        hub.finish(7, Outcome::Completed, "");
+        let got: Vec<StreamEvent> = rx.try_iter().collect();
+        assert_eq!(
+            got,
+            vec![
+                StreamEvent::Token(10),
+                StreamEvent::Token(11),
+                StreamEvent::Token(12),
+                StreamEvent::Done { outcome: Outcome::Completed, reason: String::new() },
+            ]
+        );
+        assert_eq!(hub.open_streams(), 0);
+    }
+
+    #[test]
+    fn slow_consumer_backlogs_then_drops() {
+        // Channel holds 1 event, hub backlogs up to 2 more: the 4th
+        // undelivered token exceeds the bound and drops the consumer.
+        let mut hub = StreamHub::new(2);
+        let rx = hub.open(3, 1);
+        assert!(hub.push_token(3, 0)); // -> channel
+        assert!(hub.push_token(3, 1)); // backlog: 1
+        assert!(hub.push_token(3, 2)); // backlog: 2 (== bound, still ok)
+        assert!(!hub.push_token(3, 3), "backlog past the bound must drop");
+        assert_eq!(hub.slow_drops(), 1);
+        assert_eq!(hub.open_streams(), 0);
+        // finish() after the drop is a no-op.
+        hub.finish(3, Outcome::Cancelled, "slow");
+        // The consumer still sees what the channel took.
+        assert_eq!(rx.try_iter().count(), 1);
+    }
+
+    #[test]
+    fn disconnected_consumer_reports_gone() {
+        let mut hub = StreamHub::new(8);
+        let rx = hub.open(1, 4);
+        assert!(hub.push_token(1, 5));
+        drop(rx);
+        assert!(!hub.push_token(1, 6), "dropped receiver must report gone");
+        assert_eq!(hub.disconnects(), 1);
+    }
+
+    #[test]
+    fn a_consumer_that_drains_mid_push_recovers_its_backlog() {
+        let mut hub = StreamHub::new(8);
+        let rx = hub.open(2, 1);
+        assert!(hub.push_token(2, 0));
+        assert!(hub.push_token(2, 1)); // backlogged
+        assert_eq!(rx.recv().unwrap(), StreamEvent::Token(0));
+        // Next push flushes the backlog first, keeping order.
+        assert!(hub.push_token(2, 2));
+        assert_eq!(rx.recv().unwrap(), StreamEvent::Token(1));
+        hub.finish(2, Outcome::Completed, "");
+        assert_eq!(rx.recv().unwrap(), StreamEvent::Token(2));
+        assert_eq!(
+            rx.recv().unwrap(),
+            StreamEvent::Done { outcome: Outcome::Completed, reason: String::new() }
+        );
+    }
+
+    #[test]
+    fn ingress_thread_paces_submits_and_disconnects() {
+        let reqs: Vec<(Request, Option<SyncSender<StreamEvent>>)> = (0..5)
+            .map(|i| {
+                let mut r = Request::default();
+                r.id = i;
+                r.arrival_s = i as f64 * 1e-3;
+                (r, None)
+            })
+            .collect();
+        let (rx, handle) = spawn_ingress(reqs, 1.0, 2);
+        let mut got = Vec::new();
+        while let Ok(sub) = rx.recv() {
+            got.push(sub.req.id);
+        }
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+        assert_eq!(handle.join().unwrap(), 5);
+    }
+}

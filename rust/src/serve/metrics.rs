@@ -180,6 +180,49 @@ pub fn summarize_outcomes(outcomes: &[RequestOutcome]) -> LifecycleSummary {
     s
 }
 
+/// One point on a goodput-vs-offered-load curve: a full lifecycle run
+/// at a fixed offered load, reduced to the numbers the serve bench
+/// records per load point.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadPoint {
+    /// Offered load for the run (requests per second — or per round
+    /// under `ClockMode::Rounds`).
+    pub offered_rps: f64,
+    pub completed: usize,
+    /// Requests that ended in any non-completed terminal.
+    pub shed: usize,
+    pub goodput_tokens_per_s: f64,
+    /// Fraction of *all* submitted requests that completed within
+    /// `slo_ttft_s` of submission (non-completed requests count as
+    /// misses), so attainment degrades honestly as load sheds work.
+    pub slo_attainment: f64,
+}
+
+/// Reduce one run's outcomes to a [`LoadPoint`] at `offered_rps`,
+/// judging SLO attainment by TTFT against `slo_ttft_s` (pass
+/// `f64::INFINITY` to make attainment = completion rate).
+pub fn load_point(outcomes: &[RequestOutcome], offered_rps: f64, slo_ttft_s: f64) -> LoadPoint {
+    let s = summarize_outcomes(outcomes);
+    let within = outcomes
+        .iter()
+        .filter(|o| {
+            o.outcome == Outcome::Completed
+                && o.metrics.as_ref().is_some_and(|m| m.ttft() <= slo_ttft_s)
+        })
+        .count();
+    LoadPoint {
+        offered_rps,
+        completed: s.completed,
+        shed: s.total() - s.completed,
+        goodput_tokens_per_s: s.goodput_tokens_per_s,
+        slo_attainment: if outcomes.is_empty() {
+            0.0
+        } else {
+            within as f64 / outcomes.len() as f64
+        },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -252,5 +295,19 @@ mod tests {
         // makespan: 6 tokens / 2.0 s.
         assert!((s.goodput_tokens_per_s - 3.0).abs() < 1e-9);
         assert_eq!(s.completed_summary.unwrap().n_requests, 2);
+
+        // The load-point reduction: TTFT here is 0.1 for every request
+        // with metrics, so a 0.2s SLO admits both completions (2 of 6
+        // requests), and a tighter-than-TTFT SLO admits none.
+        let lp = load_point(&outcomes, 4.0, 0.2);
+        assert_eq!(lp.offered_rps, 4.0);
+        assert_eq!((lp.completed, lp.shed), (2, 4));
+        assert!((lp.slo_attainment - 2.0 / 6.0).abs() < 1e-12);
+        let tight = load_point(&outcomes, 4.0, 0.05);
+        assert_eq!(tight.slo_attainment, 0.0);
+        assert!((load_point(&outcomes, 4.0, f64::INFINITY).slo_attainment
+            - 2.0 / 6.0)
+            .abs()
+            < 1e-12);
     }
 }

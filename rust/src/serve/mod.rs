@@ -9,20 +9,30 @@ pub mod engine_backend;
 pub mod faults;
 pub mod kv;
 pub mod lifecycle;
+pub mod live;
 pub mod metrics;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod sim;
+pub mod supervisor;
 
 pub use engine::{run_trace, Backend, SchedulerConfig};
 pub use engine_backend::{EngineBackend, EngineModel, PrefixStats};
-pub use faults::{FaultPlan, FAULTS_ENV};
+pub use faults::{Fault, FaultPlan, FAULTS_ENV};
 pub use kv::{KvError, PagedKv};
-pub use lifecycle::{run_lifecycle, ClockMode, LifecycleConfig, LifecycleReport};
-pub use metrics::{
-    summarize, summarize_outcomes, LifecycleSummary, Outcome, RequestMetrics, RequestOutcome,
-    Summary,
+pub use lifecycle::{
+    run_lifecycle, run_lifecycle_ext, ClockMode, Ingress, LifecycleConfig, LifecycleReport,
+    LifecycleStats,
 };
+pub use live::{
+    spawn_ingress, stream_buf_from_env, LiveSubmission, StreamEvent, StreamHub,
+    DEFAULT_STREAM_BUF, STREAM_BUF_ENV,
+};
+pub use metrics::{
+    load_point, summarize, summarize_outcomes, LifecycleSummary, LoadPoint, Outcome,
+    RequestMetrics, RequestOutcome, Summary,
+};
+pub use supervisor::{stall_budget_from_env, Supervisor, DEFAULT_STALL_MS, STALL_MS_ENV};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 pub use sim::{llama_3_2_1b, ModelShape, SimBackend};
@@ -180,6 +190,10 @@ pub struct EngineServeOpts {
     /// KV page-pool cap (`--kv-pages`; 0 = uncapped). Pressure faults
     /// and the preemption ladder only bind against a finite cap.
     pub kv_page_cap: usize,
+    /// `--live`: serve through the threaded ingress + per-request token
+    /// streams under a watchdog instead of replaying the trace inline
+    /// (serve); run the live chaos gates (chaos).
+    pub live: bool,
 }
 
 impl Default for EngineServeOpts {
@@ -191,6 +205,7 @@ impl Default for EngineServeOpts {
             deadline_ms: 0,
             queue_cap: 0,
             kv_page_cap: 0,
+            live: false,
         }
     }
 }
@@ -230,6 +245,9 @@ fn serve_engine(
     par: crate::exec::Parallelism,
     opts: EngineServeOpts,
 ) -> anyhow::Result<()> {
+    if opts.live {
+        return serve_engine_live(n_requests, par, opts);
+    }
     let trace = engine_trace(n_requests);
     let mut b = EngineBackend::new(EngineModel::tiny_deep(opts.layers), 8, 1024, par);
     if opts.kv_page_cap > 0 {
@@ -325,6 +343,150 @@ fn serve_engine(
     Ok(())
 }
 
+/// `flashlight serve --backend engine --live`: the same engine run as
+/// [`serve_engine`], but as a *real server* — a dedicated ingress
+/// thread paces the trace's arrivals in wall time through a bounded
+/// channel, every request streams its tokens to a consumer thread over
+/// a bounded per-request channel (slow consumers are cancelled, not
+/// buffered without bound), and a watchdog supervises launch liveness
+/// (`FLASHLIGHT_STALL_MS`). Dropping the ingress sender drains the
+/// server gracefully; the no-leak invariant is checked on exit.
+fn serve_engine_live(
+    n_requests: usize,
+    par: crate::exec::Parallelism,
+    opts: EngineServeOpts,
+) -> anyhow::Result<()> {
+    let trace = engine_trace(n_requests);
+    let mut b = EngineBackend::new(EngineModel::tiny_deep(opts.layers), 8, 1024, par);
+    if opts.kv_page_cap > 0 {
+        b.set_page_cap(opts.kv_page_cap);
+    }
+    let vocab = b.model.vocab;
+    let cfg = SchedulerConfig {
+        parallelism: par,
+        prefill_chunk_tokens: opts.chunk_tokens,
+        prefill_round_tokens: opts.round_tokens,
+        ..Default::default()
+    };
+    let lc = LifecycleConfig {
+        queue_cap: opts.queue_cap,
+        default_deadline_s: if opts.deadline_ms == 0 {
+            f64::INFINITY
+        } else {
+            opts.deadline_ms as f64 / 1e3
+        },
+        clock: ClockMode::Wall,
+        resubmit_max: 3,
+        ..Default::default()
+    };
+    let plan = FaultPlan::from_env()?;
+    if !plan.is_empty() {
+        println!("fault plan ({} events): {plan}", plan.events.len());
+    }
+    b.configure(&cfg);
+    let warmed = b.warmup_plans(1024);
+
+    // Per-request bounded token streams; one consumer thread drains
+    // them all (a real deployment would hold one socket per client).
+    let buf = stream_buf_from_env();
+    let mut hub = StreamHub::new(buf * 4);
+    let mut subs = Vec::with_capacity(trace.len());
+    let mut rxs = Vec::with_capacity(trace.len());
+    for r in &trace {
+        let (tx, rx) = std::sync::mpsc::sync_channel(buf.max(1));
+        rxs.push(rx);
+        subs.push((r.clone(), Some(tx)));
+    }
+    let consumer = std::thread::Builder::new()
+        .name("flashlight-consumer".to_string())
+        .spawn(move || {
+            let mut tokens = 0u64;
+            let mut done = 0usize;
+            let mut open: Vec<_> = rxs.into_iter().map(Some).collect();
+            while open.iter().any(Option::is_some) {
+                let mut progressed = false;
+                for slot in open.iter_mut() {
+                    let mut finished = false;
+                    if let Some(rx) = slot.as_ref() {
+                        loop {
+                            match rx.try_recv() {
+                                Ok(StreamEvent::Token(_)) => {
+                                    tokens += 1;
+                                    progressed = true;
+                                }
+                                Ok(StreamEvent::Done { .. }) => {
+                                    done += 1;
+                                    finished = true;
+                                    progressed = true;
+                                    break;
+                                }
+                                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                                    finished = true;
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    if finished {
+                        *slot = None;
+                    }
+                }
+                if !progressed {
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                }
+            }
+            (tokens, done)
+        })
+        .expect("spawn flashlight consumer");
+
+    let sup = Supervisor::start(stall_budget_from_env());
+    let (ingress_rx, ingress) = spawn_ingress(subs, 1.0, 64);
+    let t0 = std::time::Instant::now();
+    let rep = run_lifecycle_ext(
+        &mut b,
+        Ingress::Live(ingress_rx),
+        cfg,
+        lc,
+        &plan,
+        vocab,
+        &mut hub,
+        Some(&sup),
+    )?;
+    let wall = t0.elapsed().as_secs_f64();
+    let submitted = ingress.join().expect("ingress thread");
+    drop(hub); // close any surviving stream senders before joining
+    let (streamed_tokens, streamed_done) = consumer.join().expect("consumer thread");
+    let kills = sup.stop();
+    let sum = &rep.summary;
+    println!(
+        "live engine backend: {submitted} submitted over {wall:.2}s wall | \
+         {} completed, {} rejected, {} cancelled, {} deadline_exceeded, {} failed | \
+         goodput {:.1} tok/s | {} rounds",
+        sum.completed,
+        sum.rejected,
+        sum.cancelled,
+        sum.deadline_exceeded,
+        sum.failed,
+        sum.goodput_tokens_per_s,
+        rep.stats.rounds,
+    );
+    println!(
+        "supervision: {kills} watchdog kills | {} backoff requeues | \
+         {} slow-consumer cancels | streams: {streamed_tokens} tokens to \
+         {streamed_done} consumers | plans warmed: {warmed}",
+        rep.stats.backoff_requeues,
+        rep.stats.slow_consumer_cancels,
+    );
+    let (pages_alloc, pages_free) = b.kv_pages();
+    let parked = b.prefix_stats().parked_pages;
+    println!(
+        "drain: kv pages {} allocated, {} free, {} parked (no-leak invariant held)",
+        pages_alloc, pages_free, parked,
+    );
+    Ok(())
+}
+
 /// `flashlight chaos`: replay the engine trace under deterministic
 /// fault plans and enforce the lifecycle's three invariants, loudly.
 ///
@@ -348,6 +510,9 @@ pub fn chaos(
     opts: EngineServeOpts,
     specs: &[String],
 ) -> anyhow::Result<()> {
+    if opts.live {
+        return chaos_live(n_requests, opts, specs);
+    }
     let trace = engine_trace(n_requests);
     // A tight page cap makes pressure windows and the preemption
     // ladder actually bind (the trace's worst request needs ~4 pages
@@ -448,6 +613,253 @@ pub fn chaos(
         );
     }
     println!("chaos: all {} plans passed", specs.len());
+    Ok(())
+}
+
+/// `flashlight chaos --live`: the live-serving chaos gates.
+///
+/// **Deterministic half** (`ClockMode::Rounds`, open-loop ingress with
+/// every arrival compressed to round 0 so the bounded queue *must*
+/// overflow into backoff): each fault plan runs at 1, 2, and 4 threads
+/// with per-request token streams attached, and the gates require
+///
+/// 1. exactly one terminal per request, at every thread count;
+/// 2. zero leaked pages (`allocated == free + parked`, and
+///    `allocated == free` after the prefix cache clears);
+/// 3. the **entire outcome vector** — terminal state and token stream
+///    per request, with backoff requeues and (for stall plans)
+///    watchdog-killed launches in flight — bit-identical across
+///    1/2/4 threads, and completed streams identical to the fault-free
+///    reference;
+/// 4. every attached stream carries exactly the tokens its outcome
+///    recorded, ending in `Done` with the matching terminal;
+/// 5. stall plans actually exercise the watchdog (`kills >= 1`) and
+///    the run requeues through backoff (`backoff_requeues >= 1`).
+///
+/// **Wall-clock half**: one real live run — ingress thread, bounded
+/// submission channel, graceful drain — gated on terminal accounting
+/// and the no-leak invariant.
+pub fn chaos_live(
+    n_requests: usize,
+    opts: EngineServeOpts,
+    specs: &[String],
+) -> anyhow::Result<()> {
+    use std::collections::HashMap;
+
+    let trace = engine_trace(n_requests);
+    let cap = if opts.kv_page_cap > 0 {
+        opts.kv_page_cap
+    } else {
+        20 * opts.layers
+    };
+    let mk = |par: crate::exec::Parallelism| {
+        let mut b = EngineBackend::new(EngineModel::tiny_deep(opts.layers), 8, 1024, par);
+        b.set_page_cap(cap);
+        b
+    };
+    let cfg_for = |par: crate::exec::Parallelism| SchedulerConfig {
+        parallelism: par,
+        prefill_chunk_tokens: opts.chunk_tokens,
+        prefill_round_tokens: opts.round_tokens,
+        ..Default::default()
+    };
+    // Small queue + compressed arrivals force the backoff path; three
+    // retries with exponential windows let everyone land eventually.
+    let lc = LifecycleConfig {
+        clock: ClockMode::Rounds,
+        queue_cap: 4,
+        resubmit_max: 3,
+        ..Default::default()
+    };
+    let vocab = EngineModel::tiny().vocab;
+
+    // Fault-free reference (1 thread; determinism across threads is
+    // itself a gate below).
+    let reference: HashMap<usize, Vec<u32>> = {
+        let par = crate::exec::Parallelism::with_threads(1);
+        let mut b = mk(par);
+        let mut hub = StreamHub::disabled();
+        let rep = run_lifecycle_ext(
+            &mut b,
+            Ingress::OpenLoop { trace: &trace, time_scale: 0.0 },
+            cfg_for(par),
+            lc,
+            &FaultPlan::none(),
+            vocab,
+            &mut hub,
+            None,
+        )?;
+        rep.outcomes
+            .into_iter()
+            .filter(|o| o.outcome == Outcome::Completed)
+            .map(|o| (o.id, o.tokens))
+            .collect()
+    };
+    anyhow::ensure!(
+        !reference.is_empty(),
+        "live chaos reference run completed nothing"
+    );
+    println!(
+        "chaos --live: {} requests, {} plans, queue_cap {}, resubmit_max {}, page cap {}",
+        trace.len(),
+        specs.len(),
+        lc.queue_cap,
+        lc.resubmit_max,
+        cap
+    );
+
+    for spec in specs {
+        let plan = FaultPlan::parse(spec)?;
+        let mut runs: Vec<Vec<(usize, Outcome, Vec<u32>)>> = Vec::new();
+        for threads in [1usize, 2, 4] {
+            let par = crate::exec::Parallelism::with_threads(threads);
+            let mut b = mk(par);
+            let mut hub = StreamHub::new(256);
+            let rxs: Vec<_> = trace.iter().map(|r| hub.open(r.id, 64)).collect();
+            let rep = run_lifecycle_ext(
+                &mut b,
+                Ingress::OpenLoop { trace: &trace, time_scale: 0.0 },
+                cfg_for(par),
+                lc,
+                &plan,
+                vocab,
+                &mut hub,
+                None,
+            )?;
+            let sum = &rep.summary;
+            anyhow::ensure!(
+                sum.total() == trace.len(),
+                "plan `{spec}` @{threads}t: {} terminals for {} requests",
+                sum.total(),
+                trace.len()
+            );
+            anyhow::ensure!(
+                rep.stats.backoff_requeues >= 1,
+                "plan `{spec}` @{threads}t: compressed arrivals never hit the backoff path"
+            );
+            if plan.has_stalls() {
+                anyhow::ensure!(
+                    rep.stats.watchdog_kills >= 1,
+                    "plan `{spec}` @{threads}t: stall plan ran with no watchdog kill"
+                );
+                anyhow::ensure!(
+                    sum.failed >= 1,
+                    "plan `{spec}` @{threads}t: a killed stalled launch must fail its request"
+                );
+            }
+            let (alloc, free) = b.kv_pages();
+            let parked = b.prefix_stats().parked_pages;
+            anyhow::ensure!(
+                alloc == free + parked,
+                "plan `{spec}` @{threads}t: page leak — {alloc} allocated vs {free} free + {parked} parked"
+            );
+            b.clear_prefix_cache();
+            let (alloc, free) = b.kv_pages();
+            anyhow::ensure!(
+                alloc == free,
+                "plan `{spec}` @{threads}t: page leak after prefix-cache clear"
+            );
+            // Streams must carry exactly the recorded tokens and end
+            // with the matching terminal event.
+            for (o, rx) in rep.outcomes.iter().zip(rxs) {
+                let events: Vec<StreamEvent> = rx.try_iter().collect();
+                let toks: Vec<u32> = events
+                    .iter()
+                    .filter_map(|e| match e {
+                        StreamEvent::Token(t) => Some(*t),
+                        StreamEvent::Done { .. } => None,
+                    })
+                    .collect();
+                anyhow::ensure!(
+                    toks == o.tokens,
+                    "plan `{spec}` @{threads}t: request {} streamed {} tokens but recorded {}",
+                    o.id,
+                    toks.len(),
+                    o.tokens.len()
+                );
+                anyhow::ensure!(
+                    matches!(events.last(), Some(StreamEvent::Done { outcome, .. }) if *outcome == o.outcome),
+                    "plan `{spec}` @{threads}t: request {} stream did not end in its terminal",
+                    o.id
+                );
+            }
+            for o in rep.outcomes.iter().filter(|o| o.outcome == Outcome::Completed) {
+                if let Some(want) = reference.get(&o.id) {
+                    anyhow::ensure!(
+                        &o.tokens == want,
+                        "plan `{spec}` @{threads}t: request {} diverged from the fault-free run",
+                        o.id
+                    );
+                }
+            }
+            println!(
+                "  plan `{spec}` @{threads}t: {} completed, {} rejected, {} failed | \
+                 {} backoff requeues, {} watchdog kills, {} preemptions | {} rounds",
+                sum.completed,
+                sum.rejected,
+                sum.failed,
+                rep.stats.backoff_requeues,
+                rep.stats.watchdog_kills,
+                rep.stats.preemptions,
+                rep.stats.rounds,
+            );
+            runs.push(
+                rep.outcomes
+                    .into_iter()
+                    .map(|o| (o.id, o.outcome, o.tokens))
+                    .collect(),
+            );
+        }
+        anyhow::ensure!(
+            runs[0] == runs[1] && runs[0] == runs[2],
+            "plan `{spec}`: outcome vector diverged across 1/2/4 threads"
+        );
+        println!("  plan `{spec}` OK: bit-identical across 1/2/4 threads, no leaks");
+    }
+
+    // Wall-clock half: a real threaded ingress with graceful drain.
+    {
+        let par = crate::exec::Parallelism::with_threads(2);
+        let mut b = mk(par);
+        let mut hub = StreamHub::new(256);
+        let subs: Vec<_> = trace.iter().map(|r| (r.clone(), None)).collect();
+        let (rx, ingress) = spawn_ingress(subs, 1e-4, 8);
+        let sup = Supervisor::start(500);
+        let rep = run_lifecycle_ext(
+            &mut b,
+            Ingress::Live(rx),
+            cfg_for(par),
+            LifecycleConfig {
+                clock: ClockMode::Wall,
+                queue_cap: 4,
+                resubmit_max: 3,
+                ..Default::default()
+            },
+            &FaultPlan::none(),
+            vocab,
+            &mut hub,
+            Some(&sup),
+        )?;
+        let submitted = ingress.join().expect("ingress thread");
+        sup.stop();
+        anyhow::ensure!(
+            submitted == trace.len() && rep.summary.total() == submitted,
+            "live wall run: {} submitted, {} terminals",
+            submitted,
+            rep.summary.total()
+        );
+        let (alloc, free) = b.kv_pages();
+        let parked = b.prefix_stats().parked_pages;
+        anyhow::ensure!(
+            alloc == free + parked,
+            "live wall run: page leak — {alloc} allocated vs {free} free + {parked} parked"
+        );
+        println!(
+            "  live wall run OK: {} submitted, {} completed, {} rejected | graceful drain, no leaks",
+            submitted, rep.summary.completed, rep.summary.rejected,
+        );
+    }
+    println!("chaos --live: all {} plans passed", specs.len());
     Ok(())
 }
 

@@ -1,0 +1,189 @@
+//! Watchdog supervision for the live serving loop.
+//!
+//! A [`Supervisor`] owns one background watchdog thread that monitors
+//! two liveness signals:
+//!
+//! * the **runtime heartbeat** ([`crate::exec::runtime::heartbeat`]) —
+//!   a monotone counter every completed work item ticks; and
+//! * the **round beat** ([`Supervisor::beat`]) — ticked by the
+//!   lifecycle round loop once per round, so a healthy-but-idle server
+//!   (no launches in flight) still reads as alive.
+//!
+//! While a launch is in flight
+//! ([`crate::exec::runtime::launches_in_flight`] `> 0`) and the
+//! combined signal has not moved for a full **stall budget**, the
+//! watchdog concludes the launch is stuck and calls
+//! [`crate::exec::runtime::kill_stalled_launch`]. The stalled item
+//! panics at its cooperative stall point, the panic is attributed
+//! (`AttributedPanic` → `BatchPanic`), the owning request's slot is
+//! Failed by the lifecycle, and the surviving batch re-executes
+//! bit-identically — the same isolation path a worker panic takes.
+//!
+//! The stall budget comes from the caller (tests use a few tens of
+//! milliseconds); CLI entry points read `FLASHLIGHT_STALL_MS` via
+//! [`stall_budget_from_env`]. Library code never reads the
+//! environment.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::exec::runtime;
+
+/// Environment variable the CLI reads the watchdog stall budget from
+/// (milliseconds; `0` disables supervision).
+pub const STALL_MS_ENV: &str = "FLASHLIGHT_STALL_MS";
+
+/// Default stall budget for CLI entry points: generous enough that a
+/// slow-but-progressing launch on a loaded box is never killed (every
+/// completed tile ticks the heartbeat, resetting the clock), short
+/// enough that an injected stall resolves quickly.
+pub const DEFAULT_STALL_MS: u64 = 500;
+
+/// Watchdog stall budget from `FLASHLIGHT_STALL_MS` (CLI entry points
+/// only). Unset or unparsable → [`DEFAULT_STALL_MS`].
+pub fn stall_budget_from_env() -> u64 {
+    std::env::var(STALL_MS_ENV)
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .unwrap_or(DEFAULT_STALL_MS)
+}
+
+struct Shared {
+    stop: AtomicBool,
+    /// Round-loop liveness ticks, added to the runtime heartbeat.
+    round_beats: AtomicU64,
+    /// Stalled launches the watchdog has killed.
+    kills: AtomicU64,
+}
+
+/// A running watchdog. Dropping it (or calling [`Supervisor::stop`])
+/// stops the thread; the supervisor never outlives the scope that
+/// started it.
+pub struct Supervisor {
+    shared: Arc<Shared>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Supervisor {
+    /// Start a watchdog with the given stall budget in milliseconds.
+    /// A budget of `0` starts a no-op supervisor (never kills).
+    pub fn start(stall_ms: u64) -> Self {
+        let shared = Arc::new(Shared {
+            stop: AtomicBool::new(false),
+            round_beats: AtomicU64::new(0),
+            kills: AtomicU64::new(0),
+        });
+        let handle = if stall_ms == 0 {
+            None
+        } else {
+            let sh = shared.clone();
+            Some(
+                std::thread::Builder::new()
+                    .name("flashlight-watchdog".to_string())
+                    .spawn(move || watchdog_loop(&sh, stall_ms))
+                    .expect("spawn flashlight watchdog"),
+            )
+        };
+        Supervisor {
+            shared,
+            handle,
+        }
+    }
+
+    /// Round-loop liveness tick: call once per lifecycle round. Resets
+    /// the watchdog's stall clock even when no launch completed items
+    /// that round (e.g. an empty admission round).
+    pub fn beat(&self) {
+        self.shared.round_beats.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Stalled launches killed so far.
+    pub fn kills(&self) -> u64 {
+        self.shared.kills.load(Ordering::Relaxed)
+    }
+
+    /// Stop the watchdog thread and return the total kill count.
+    pub fn stop(mut self) -> u64 {
+        self.halt();
+        self.kills()
+    }
+
+    fn halt(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+fn watchdog_loop(sh: &Shared, stall_ms: u64) {
+    // Poll several times per budget so a kill lands within ~1.25x the
+    // budget of the actual stall onset.
+    let poll = Duration::from_millis((stall_ms / 8).max(1));
+    let budget = Duration::from_millis(stall_ms);
+    let mut last_signal = runtime::heartbeat() + sh.round_beats.load(Ordering::Relaxed);
+    let mut stalled_for = Duration::ZERO;
+    while !sh.stop.load(Ordering::SeqCst) {
+        std::thread::sleep(poll);
+        let signal = runtime::heartbeat() + sh.round_beats.load(Ordering::Relaxed);
+        if signal != last_signal || runtime::launches_in_flight() == 0 {
+            // Progress (or nothing running): reset the stall clock.
+            last_signal = signal;
+            stalled_for = Duration::ZERO;
+            continue;
+        }
+        stalled_for += poll;
+        if stalled_for >= budget {
+            runtime::kill_stalled_launch();
+            sh.kills.fetch_add(1, Ordering::Relaxed);
+            stalled_for = Duration::ZERO;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::runtime::{clear_injected_stall, inject_stall_next_launch};
+    use crate::exec::{parallel_map_with, Parallelism};
+
+    #[test]
+    fn watchdog_kills_an_injected_stall_and_spares_healthy_launches() {
+        let sup = Supervisor::start(30);
+        // Healthy launches complete untouched.
+        let ok = parallel_map_with(&Parallelism::with_threads(2), 16, || (), |_, i| i + 1);
+        assert_eq!(ok, (1..=16).collect::<Vec<_>>());
+        // A stalled launch is killed and attributed.
+        inject_stall_next_launch(2);
+        let res = std::panic::catch_unwind(|| {
+            parallel_map_with(&Parallelism::with_threads(2), 8, || (), |_, i| i)
+        });
+        let payload = res.expect_err("watchdog must kill the stalled launch");
+        assert_eq!(crate::exec::runtime::panic_item(payload.as_ref()), Some(2));
+        assert!(crate::exec::runtime::panic_message(payload.as_ref())
+            .contains("launch stalled"));
+        assert!(sup.kills() >= 1);
+        // The pool survives; subsequent launches are clean.
+        let ok = parallel_map_with(&Parallelism::with_threads(2), 8, || (), |_, i| i);
+        assert_eq!(ok, (0..8).collect::<Vec<_>>());
+        clear_injected_stall();
+        let kills = sup.stop();
+        assert!(kills >= 1);
+    }
+
+    #[test]
+    fn zero_budget_supervisor_is_a_no_op() {
+        let sup = Supervisor::start(0);
+        sup.beat();
+        assert_eq!(sup.kills(), 0);
+        assert_eq!(sup.stop(), 0);
+    }
+}

@@ -202,6 +202,44 @@ pub fn generate(cfg: &TraceConfig) -> Vec<Request> {
     out
 }
 
+/// How a trace's arrival times are re-timed for open-loop replay (the
+/// load axis of goodput-vs-offered-load curves: same requests, same
+/// lengths, different interarrival process).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalModel {
+    /// Fresh Poisson-process arrivals at `rate` requests per second
+    /// (seeded, independent of the trace's own arrival stream).
+    Poisson { rate: f64 },
+    /// Keep the trace's own interarrival structure, compressed or
+    /// stretched by `scale` (0.5 = twice the offered load).
+    Replay { scale: f64 },
+}
+
+/// Re-time `trace` under `model`, deterministically from `seed`,
+/// leaving every non-arrival field byte-identical. The request order
+/// (and hence ids, conversations, prompts, outcomes under
+/// `ClockMode::Rounds`) is untouched — only `arrival_s` changes, so
+/// sweeping offered load never perturbs the workload itself.
+pub fn retime_arrivals(trace: &[Request], model: ArrivalModel, seed: u64) -> Vec<Request> {
+    let mut out = trace.to_vec();
+    match model {
+        ArrivalModel::Replay { scale } => {
+            for r in &mut out {
+                r.arrival_s *= scale;
+            }
+        }
+        ArrivalModel::Poisson { rate } => {
+            let mut rng = Rng::new(seed ^ 0xA5A5_1234_5678_9ABC);
+            let mut t = 0.0f64;
+            for r in &mut out {
+                t += rng.exp(1.0 / rate.max(1e-9));
+                r.arrival_s = t;
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -275,6 +313,34 @@ mod tests {
         assert!(spiced.iter().any(|r| r.deadline_s.is_finite()));
         assert!(spiced.iter().any(|r| r.cancel_s.is_finite()));
         assert!(spiced.iter().any(|r| r.priority != spiced[0].priority));
+    }
+
+    #[test]
+    fn retiming_changes_only_arrivals_and_is_deterministic() {
+        let base = generate(&TraceConfig::default());
+        let strip = |t: &[Request]| {
+            t.iter()
+                .map(|r| (r.id, r.input_tokens, r.output_tokens, r.conversation, r.turn))
+                .collect::<Vec<_>>()
+        };
+        let replay = retime_arrivals(&base, ArrivalModel::Replay { scale: 0.25 }, 0);
+        assert_eq!(strip(&base), strip(&replay));
+        for (b, r) in base.iter().zip(&replay) {
+            assert_eq!(r.arrival_s, b.arrival_s * 0.25);
+        }
+        let poisson = retime_arrivals(&base, ArrivalModel::Poisson { rate: 32.0 }, 9);
+        assert_eq!(strip(&base), strip(&poisson));
+        assert!(poisson.windows(2).all(|w| w[1].arrival_s >= w[0].arrival_s));
+        let span = poisson.last().unwrap().arrival_s;
+        let rate = poisson.len() as f64 / span;
+        assert!(rate > 32.0 * 0.6 && rate < 32.0 * 1.6, "rate {rate}");
+        let again = retime_arrivals(&base, ArrivalModel::Poisson { rate: 32.0 }, 9);
+        for (p, q) in poisson.iter().zip(&again) {
+            assert_eq!(p.arrival_s, q.arrival_s);
+        }
+        // A different seed produces a different arrival stream.
+        let other = retime_arrivals(&base, ArrivalModel::Poisson { rate: 32.0 }, 10);
+        assert!(poisson.iter().zip(&other).any(|(p, q)| p.arrival_s != q.arrival_s));
     }
 
     #[test]

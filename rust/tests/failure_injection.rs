@@ -6,8 +6,9 @@ use flashlight::runtime::Engine;
 use flashlight::exec::Parallelism;
 use flashlight::runtime::{Manifest, TensorMeta};
 use flashlight::serve::{
-    run_lifecycle, run_trace, Backend, ClockMode, EngineBackend, EngineModel, FaultPlan,
-    LifecycleConfig, LifecycleReport, Outcome, SchedulerConfig,
+    run_lifecycle, run_lifecycle_ext, run_trace, spawn_ingress, Backend, ClockMode,
+    EngineBackend, EngineModel, FaultPlan, Ingress, LifecycleConfig, LifecycleReport, Outcome,
+    SchedulerConfig, StreamEvent, StreamHub,
 };
 use flashlight::tracegen::{generate, Request, TraceConfig};
 
@@ -388,6 +389,222 @@ fn generated_fault_plans_preserve_every_invariant() {
         let rep = assert_lifecycle_gates(&tr, 16, &plan, rounds_lc());
         assert_eq!(rep.summary.total(), tr.len(), "seed {seed}");
     }
+}
+
+// ---------------------------------------------------------------------
+// Live serving: token streams, watchdog supervision, graceful drain,
+// and deterministic backoff resubmission.
+// ---------------------------------------------------------------------
+
+fn live_sched() -> SchedulerConfig {
+    SchedulerConfig {
+        prefill_chunk_tokens: 64,
+        prefill_round_tokens: 128,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn mid_stream_cancel_closes_the_token_channel_with_the_terminal() {
+    let mut tr = lifecycle_trace(5);
+    tr[0].input_tokens = 40; // prefill completes in the admission round
+    tr[0].output_tokens = 10;
+    tr[0].deadline_s = f64::INFINITY; // only the injected cancel may kill it
+    tr[0].cancel_s = f64::INFINITY;
+    let plan = FaultPlan::parse("cancel@4:0").unwrap();
+    let mut b = EngineBackend::new(
+        EngineModel::tiny(),
+        4,
+        1024,
+        Parallelism::with_threads(2),
+    );
+    let vocab = b.model.vocab;
+    let mut hub = StreamHub::new(64);
+    let rx = hub.open(0, 64);
+    let rep = run_lifecycle_ext(
+        &mut b,
+        Ingress::Saturating(&tr),
+        live_sched(),
+        rounds_lc(),
+        &plan,
+        vocab,
+        &mut hub,
+        None,
+    )
+    .unwrap();
+    let o0 = rep.outcomes.iter().find(|o| o.id == 0).unwrap();
+    assert_eq!(o0.outcome, Outcome::Cancelled);
+    assert!(
+        !o0.tokens.is_empty() && o0.tokens.len() < 10,
+        "cancelled mid-stream, got {} tokens",
+        o0.tokens.len()
+    );
+    // The consumer's channel carries exactly the emitted tokens, then
+    // the terminal event — a client can always tell how the stream died.
+    let evs: Vec<StreamEvent> = rx.try_iter().collect();
+    let toks: Vec<u32> = evs
+        .iter()
+        .filter_map(|e| match e {
+            StreamEvent::Token(t) => Some(*t),
+            StreamEvent::Done { .. } => None,
+        })
+        .collect();
+    assert_eq!(toks, o0.tokens, "stream tokens must match the outcome's");
+    assert_eq!(
+        evs.last(),
+        Some(&StreamEvent::Done {
+            outcome: Outcome::Cancelled,
+            reason: o0.reason.clone()
+        }),
+        "the last stream event is the terminal"
+    );
+    let (alloc, free) = b.kv_pages();
+    assert_eq!(alloc, free + b.prefix_stats().parked_pages);
+}
+
+#[test]
+fn watchdog_kills_a_stalled_launch_and_survivors_stay_bit_identical() {
+    let tr = lifecycle_trace(6);
+    // stall@3: grid item 0 of round 3's launch stops heartbeating. The
+    // lifecycle auto-starts a supervisor for stall plans; the kill is
+    // attributed like a worker panic, so the full gate suite (terminal
+    // accounting, no leaks, survivor bit-identity at 1/2/4 threads)
+    // must hold with the watchdog in the loop.
+    let plan = FaultPlan::parse("stall@3").unwrap();
+    let rep = assert_lifecycle_gates(&tr, 0, &plan, rounds_lc());
+    assert!(
+        rep.stats.watchdog_kills >= 1,
+        "the auto-supervisor must kill the stalled launch"
+    );
+    assert_eq!(rep.summary.failed, 1, "exactly the stalled request fails");
+    assert_eq!(rep.summary.completed, tr.len() - 1);
+    let f = rep
+        .outcomes
+        .iter()
+        .find(|o| o.outcome == Outcome::Failed)
+        .unwrap();
+    assert!(f.reason.contains("stalled"), "{}", f.reason);
+}
+
+#[test]
+fn live_ingress_drains_under_pressure_without_leaking_pages() {
+    let tr = lifecycle_trace(8);
+    let plan = FaultPlan::parse("pressure@2:8x6").unwrap();
+    let mut b = EngineBackend::new(
+        EngineModel::tiny(),
+        4,
+        1024,
+        Parallelism::with_threads(2),
+    );
+    b.set_page_cap(16);
+    let vocab = b.model.vocab;
+    let mut hub = StreamHub::new(64);
+    let mut rxs = Vec::new();
+    let subs: Vec<_> = tr
+        .iter()
+        .map(|r| {
+            let (tx, rx) = std::sync::mpsc::sync_channel::<StreamEvent>(64);
+            rxs.push(rx);
+            (r.clone(), Some(tx))
+        })
+        .collect();
+    let (ingress, handle) = spawn_ingress(subs, 1e-4, 4);
+    let lc = LifecycleConfig {
+        queue_cap: 4,
+        resubmit_max: 2,
+        ..Default::default()
+    };
+    let rep = run_lifecycle_ext(
+        &mut b,
+        Ingress::Live(ingress),
+        live_sched(),
+        lc,
+        &plan,
+        vocab,
+        &mut hub,
+        None,
+    )
+    .unwrap();
+    assert_eq!(
+        handle.join().unwrap(),
+        tr.len(),
+        "the ingress thread submits the whole trace before disconnecting"
+    );
+    assert_eq!(
+        rep.summary.total(),
+        tr.len(),
+        "every live submission reaches exactly one terminal"
+    );
+    for rx in rxs {
+        let evs: Vec<StreamEvent> = rx.try_iter().collect();
+        assert!(
+            matches!(evs.last(), Some(StreamEvent::Done { .. })),
+            "every stream ends with its terminal event, got {evs:?}"
+        );
+    }
+    let (alloc, free) = b.kv_pages();
+    assert_eq!(
+        alloc,
+        free + b.prefix_stats().parked_pages,
+        "pages leaked after drain"
+    );
+    b.clear_prefix_cache();
+    let (alloc, free) = b.kv_pages();
+    assert_eq!(alloc, free, "pages leaked after cache clear");
+}
+
+#[test]
+fn open_loop_backoff_is_deterministic_across_threads() {
+    // All ten requests arrive at round 0 against a 3-deep queue: the
+    // overflow must re-enter through seeded exponential backoff, and the
+    // whole schedule — requeue count, round count, every outcome and
+    // token — must be bit-identical at 1, 2, and 4 worker threads.
+    let tr = lifecycle_trace(10);
+    let mut runs = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let mut b = EngineBackend::new(
+            EngineModel::tiny(),
+            4,
+            1024,
+            Parallelism::with_threads(threads),
+        );
+        let vocab = b.model.vocab;
+        let lc = LifecycleConfig {
+            clock: ClockMode::Rounds,
+            queue_cap: 3,
+            resubmit_max: 3,
+            ..Default::default()
+        };
+        let mut hub = StreamHub::disabled();
+        let rep = run_lifecycle_ext(
+            &mut b,
+            Ingress::OpenLoop { trace: &tr, time_scale: 0.0 },
+            live_sched(),
+            lc,
+            &FaultPlan::none(),
+            vocab,
+            &mut hub,
+            None,
+        )
+        .unwrap();
+        assert_eq!(rep.summary.total(), tr.len());
+        assert!(
+            rep.stats.backoff_requeues >= 1,
+            "queue overflow must requeue through backoff"
+        );
+        let (alloc, free) = b.kv_pages();
+        assert_eq!(alloc, free + b.prefix_stats().parked_pages);
+        runs.push((
+            rep.stats.backoff_requeues,
+            rep.stats.rounds,
+            rep.outcomes
+                .iter()
+                .map(|o| (o.id, o.outcome, o.tokens.clone()))
+                .collect::<Vec<_>>(),
+        ));
+    }
+    assert_eq!(runs[0], runs[1], "backoff schedule diverged 1 vs 2 threads");
+    assert_eq!(runs[0], runs[2], "backoff schedule diverged 1 vs 4 threads");
 }
 
 #[test]

@@ -5,7 +5,10 @@
 # FLASHLIGHT_BLOCKMASK=0 dense execution — the last two fail loudly if
 # any bit-identity gate diverges between modes), run `flashlight lint`
 # as a fifth gate (static plan verification over every built-in
-# variant x bucket shape), run the benches, and
+# variant x bucket shape), run `flashlight chaos --live` as a sixth
+# gate (live serving: open-loop arrivals, backoff resubmission, token
+# streams, watchdog-killed stalls — FATAL on any leak, missing
+# terminal, or survivor-stream divergence), run the benches, and
 # record two perf trajectories at the repo root so future PRs have a
 # baseline to compare against:
 #   BENCH_parallel_engine.json  sequential vs parallel executor wall
@@ -16,9 +19,11 @@
 #                               TTFT p50/p99 for chunked prefill on/off
 #                               x L in {1,4} layers, each at 1/2/all
 #                               threads with the bit-identity gate,
-#                               plan-cache warmup stats, and the
+#                               plan-cache warmup stats, the
 #                               zero-gather-alloc / zero-post-warmup-
-#                               plan-build gates
+#                               plan-build gates, and goodput-vs-
+#                               offered-load rows (open-loop Poisson
+#                               arrivals reduced per rate)
 #
 # Usage: scripts/bench_regress.sh [--quick] [--chaos] [THREADS]
 #   --quick  engine + serve benches only: skip the criterion-style
@@ -93,6 +98,26 @@ if ! cargo run --release -- lint; then
   echo "FATAL: static plan verification failed — a generated plan" >&2
   echo "       violates a fusion legality / determinism / race-freedom" >&2
   echo "       invariant; see the diagnostics above." >&2
+  exit 1
+fi
+
+echo
+echo "== flashlight chaos --live (sixth gate: live serving invariants) =="
+# Sixth gate: the live serving path — open-loop arrivals into a bounded
+# queue, seeded exponential-backoff resubmission, per-request token
+# streams, and watchdog-supervised stalled launches — must hold every
+# lifecycle invariant at 1/2/4 threads on the round clock (plus a
+# threaded wall-clock ingress/drain smoke). `chaos --live` exits
+# non-zero on a leaked page, a missing terminal state, a token stream
+# that disagrees with its outcome, or a survivor stream that diverges
+# across thread counts or from the fault-free reference.
+if ! cargo run --release -- chaos --live --requests 20 \
+    --plans 'seed=4,stall@3,pressure@2:6x8;panic@4;cancel@6:1'; then
+  echo >&2
+  echo "FATAL: live serving invariant violated — a page leaked, a" >&2
+  echo "       request missed its terminal state, or a survivor's" >&2
+  echo "       token stream diverged; reproduce with" >&2
+  echo "       cargo run --release -- chaos --live --plans '<spec>'" >&2
   exit 1
 fi
 
