@@ -345,6 +345,151 @@ pub fn run_with(out_path: &str, n_requests: usize) -> anyhow::Result<()> {
             ("requests", n_requests.to_string()),
         ]);
     }
+    // Sharded-serving cells (tentpole): the same trace behind the
+    // conversation-sticky router over 1/2/4 engine instances, with the
+    // determinism gate (sharding must be invisible in the per-request
+    // streams), then a shard-kill cell exercising failover — every
+    // request still reaches exactly one terminal, survivors match the
+    // unsharded streams, and surviving pools do not leak.
+    {
+        use crate::serve::{run_sharded, RouterConfig};
+        let par = Parallelism::with_threads(2);
+        let cfg = SchedulerConfig {
+            parallelism: par,
+            prefill_chunk_tokens: 64,
+            prefill_round_tokens: 256,
+            ..Default::default()
+        };
+        let lc = LifecycleConfig {
+            clock: ClockMode::Rounds,
+            ..Default::default()
+        };
+        let vocab = EngineModel::tiny().vocab;
+        let mk = || {
+            move |_i: usize| {
+                let mut b = EngineBackend::new(EngineModel::tiny_deep(1), 8, 1024, par);
+                b.set_page_cap(20);
+                b
+            }
+        };
+        println!(
+            "-- sharded serving (router + fault domains) --\n\
+             {:>6} {:>9} {:>8} {:>7} {:>9} {:>9}  {}",
+            "shards", "completed", "wall(s)", "steals", "goodput", "rounds", "topology"
+        );
+        let mut reference: Option<Vec<(usize, Vec<u32>)>> = None;
+        for n_shards in [1usize, 2, 4] {
+            let t0 = std::time::Instant::now();
+            let rep = run_sharded(
+                &trace,
+                cfg,
+                lc,
+                &FaultPlan::none(),
+                vocab,
+                n_shards,
+                RouterConfig::default(),
+                mk(),
+            )?;
+            let wall = t0.elapsed().as_secs_f64();
+            anyhow::ensure!(
+                rep.summary.completed == trace.len(),
+                "sharded run @{n_shards} completed {} of {}",
+                rep.summary.completed,
+                trace.len()
+            );
+            for h in &rep.shards {
+                anyhow::ensure!(h.leak_free(), "shard {} leaked pages", h.id);
+            }
+            let streams: Vec<(usize, Vec<u32>)> = rep
+                .outcomes
+                .iter()
+                .map(|o| (o.id, o.tokens.clone()))
+                .collect();
+            match &reference {
+                None => reference = Some(streams),
+                Some(base) => anyhow::ensure!(
+                    base == &streams,
+                    "token streams diverged at {n_shards} shards"
+                ),
+            }
+            let rounds: u64 = rep.shards.iter().map(|h| h.rounds).max().unwrap_or(0);
+            println!(
+                "{:>6} {:>9} {:>8.2} {:>7} {:>9.1} {:>9}  {}",
+                n_shards,
+                rep.summary.completed,
+                wall,
+                rep.steals,
+                rep.summary.goodput_tokens_per_s,
+                rounds,
+                rep.topology,
+            );
+            json.push_obj(&[
+                ("cell", json_str("shard_scaling")),
+                ("shards", n_shards.to_string()),
+                ("completed", rep.summary.completed.to_string()),
+                ("wall_s", json_f64(wall)),
+                ("steals", rep.steals.to_string()),
+                ("goodput_tokens_per_round", json_f64(rep.summary.goodput_tokens_per_s)),
+                ("max_shard_rounds", rounds.to_string()),
+                ("topology", json_str(&rep.topology)),
+                ("bit_identical", "true".to_string()),
+                ("requests", n_requests.to_string()),
+            ]);
+        }
+        // Shard-kill failover cell: doom shard 0 mid-trace on a 2-way
+        // split and gate exact terminal accounting + survivor identity.
+        let plan = FaultPlan::parse("kill@3:shard=0")?;
+        let rep = run_sharded(
+            &trace,
+            cfg,
+            lc,
+            &plan,
+            vocab,
+            2,
+            RouterConfig::default(),
+            mk(),
+        )?;
+        anyhow::ensure!(
+            rep.outcomes.len() == trace.len(),
+            "shard-kill run: {} terminals for {} requests",
+            rep.outcomes.len(),
+            trace.len()
+        );
+        let want: std::collections::HashMap<usize, &Vec<u32>> = reference
+            .as_ref()
+            .unwrap()
+            .iter()
+            .map(|(id, toks)| (*id, toks))
+            .collect();
+        for o in rep.outcomes.iter().filter(|o| o.outcome == Outcome::Completed) {
+            anyhow::ensure!(
+                Some(&&o.tokens) == want.get(&o.id),
+                "shard-kill survivor {} diverged from the fault-free streams",
+                o.id
+            );
+        }
+        for h in rep.shards.iter().filter(|h| h.alive) {
+            anyhow::ensure!(h.leak_free(), "surviving shard {} leaked pages", h.id);
+        }
+        println!(
+            "-- shard kill `{plan}`: killed {:?}, {} failovers, {} completed, \
+             survivors bit-identical, no survivor leaks --",
+            rep.killed,
+            rep.failovers,
+            rep.summary.completed,
+        );
+        json.push_obj(&[
+            ("cell", json_str("shard_kill")),
+            ("fault_plan", json_str(&plan.to_string())),
+            ("shards", "2".to_string()),
+            ("killed_shards", rep.killed.len().to_string()),
+            ("failovers", rep.failovers.to_string()),
+            ("completed", rep.summary.completed.to_string()),
+            ("failed", rep.summary.failed.to_string()),
+            ("survivors_bit_identical", "true".to_string()),
+            ("requests", n_requests.to_string()),
+        ]);
+    }
     let p = json.finish()?;
     println!("wrote {}", p.display());
     Ok(())
@@ -377,5 +522,11 @@ mod tests {
         assert!(s.contains("\"cell\": \"goodput_load\""));
         assert!(s.contains("\"slo_attainment\""));
         assert!(s.contains("\"offered_rps\""));
+        // Sharded cells: scaling rows at 1/2/4 shards plus the
+        // shard-kill failover row.
+        assert!(s.contains("\"cell\": \"shard_scaling\""));
+        assert!(s.contains("\"shards\": 4"));
+        assert!(s.contains("\"cell\": \"shard_kill\""));
+        assert!(s.contains("\"failovers\""));
     }
 }

@@ -36,5 +36,6 @@ pub use reference::{eager_counters, eval, eval_node, eval_pw, node_flops};
 pub use simd::SimdLevel;
 pub use tensor::{flat_index, for_each_index, for_each_row, strides_of, Tensor, NEG_INF};
 pub use tiled::{
-    batch_panic_job, execute_plan, execute_plan_par, execute_plans_batched, BatchPanic, PlanJob,
+    batch_panic_job, execute_plan, execute_plan_par, execute_plans_batched, BatchPanic, CpuRunner,
+    PlanJob, PlanRunner,
 };

@@ -1406,6 +1406,63 @@ pub fn execute_plan_par(
         .expect("one job in, one result out")
 }
 
+/// Who runs a fused plan — the executor half of the
+/// LaunchPlanExecutor/TraceRunner split. A [`crate::fusion::CachedPlan`]
+/// describes *what* a plan computes (graph, schedule, tile, masks —
+/// pure data, no execution machinery); a `PlanRunner` is *how* a batch
+/// of such plans gets executed. The serving engine holds one runner per
+/// instance, which is what makes an engine instance a self-contained
+/// unit of (runner + plan cache + paged KV + lifecycle) that a
+/// multi-shard router can replicate and kill independently.
+///
+/// Contract every implementation must honor:
+///
+/// - **Bit-identity:** `run_batch` returns, per job, the identical
+///   `(outputs, Counters)` that [`execute_plan`] would produce for that
+///   job alone — at any internal parallelism, on any scheduling
+///   topology. This is what makes shard placement invisible in token
+///   streams.
+/// - **Panic attribution:** a panic inside one job's grid unwinds as a
+///   [`BatchPanic`] naming that job where attribution is possible, and
+///   leaves the runner reusable (no poisoned shared state) so the
+///   caller can fail one request and re-run the survivors.
+///
+/// The CPU tiers implement it today ([`CpuRunner`]); a PJRT/accelerator
+/// path can implement it later without the plan cache or the serving
+/// lifecycle changing shape.
+pub trait PlanRunner {
+    /// Execute `jobs` as one batch, preserving per-job result order.
+    fn run_batch(&self, jobs: &[PlanJob]) -> Vec<(Vec<Tensor>, Counters)>;
+
+    /// Short human-readable identity for logs / bench JSON.
+    fn describe(&self) -> String;
+}
+
+/// The in-process CPU runner: batched grid execution over the
+/// persistent topology-aware worker pool via [`execute_plans_batched`].
+/// `Copy`, so callers can lift it out of a backend before a
+/// borrow-heavy scheduling loop the same way they copy `Parallelism`.
+#[derive(Clone, Copy, Debug)]
+pub struct CpuRunner {
+    pub par: Parallelism,
+}
+
+impl CpuRunner {
+    pub fn new(par: Parallelism) -> Self {
+        CpuRunner { par }
+    }
+}
+
+impl PlanRunner for CpuRunner {
+    fn run_batch(&self, jobs: &[PlanJob]) -> Vec<(Vec<Tensor>, Counters)> {
+        execute_plans_batched(jobs, &self.par)
+    }
+
+    fn describe(&self) -> String {
+        format!("cpu:{}t", self.par.num_threads)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -54,6 +54,16 @@ pub struct PlanKey {
 /// [`crate::exec::execute_plans_batched`] would otherwise recompute for
 /// every job of every call. Shared by `Arc` so concurrent decode steps
 /// of many requests reuse one plan without copies.
+///
+/// A `CachedPlan` is **runner-agnostic**: pure data describing *what*
+/// the fused plan computes — no execution machinery, no thread pool, no
+/// device handles. *Who* runs it is a [`crate::exec::PlanRunner`]
+/// ([`crate::exec::CpuRunner`] today, a PJRT path later); building a
+/// plan needs no runner at all (autotune scores candidate tiles with
+/// the analytical cost model, it never executes), which is why one
+/// plan cache can be rebuilt identically inside every shard of a
+/// multi-instance deployment and why a shard's cache dies with its
+/// instance without invalidating anything anywhere else.
 pub struct CachedPlan {
     pub graph: Graph,
     pub plan: Plan,

@@ -33,7 +33,7 @@ fn usage() -> ! {
          \x20     at 1/2/all threads with the bit-identity gate\n\
          \x20 serve [--requests N] [--backend sim|engine|pjrt] [--threads N]\n\
          \x20       [--layers L] [--chunk N] [--prefill-budget N]\n\
-         \x20       [--deadline-ms MS] [--queue-cap N] [--live]\n\
+         \x20       [--deadline-ms MS] [--queue-cap N] [--live] [--shards N]\n\
          \x20     run the serving coordinator on a Mooncake-like trace;\n\
          \x20     `engine` executes requests on the real tiled engine\n\
          \x20     (slot-paged KV, pre-warmed plan cache, chunked prefill\n\
@@ -49,10 +49,13 @@ fn usage() -> ! {
          \x20     --kv-pages caps the KV page pool (0 = uncapped);\n\
          \x20     --live serves the trace through a real ingress thread\n\
          \x20     with per-request token streaming under a watchdog\n\
-         \x20     supervisor (FLASHLIGHT_STALL_MS, FLASHLIGHT_STREAM_BUF)\n\
+         \x20     supervisor (FLASHLIGHT_STALL_MS, FLASHLIGHT_STREAM_BUF);\n\
+         \x20     --shards N serves over N engine instances behind the\n\
+         \x20     conversation-sticky router (topology-pinned fault\n\
+         \x20     domains, work-stealing admission, shard failover)\n\
          \x20 chaos [--requests N] [--threads N] [--layers L] [--chunk N]\n\
          \x20       [--prefill-budget N] [--kv-pages N] [--plans SPEC[,SPEC..]]\n\
-         \x20       [--live]\n\
+         \x20       [--live] [--shards N]\n\
          \x20     replay the engine trace under deterministic fault\n\
          \x20     plans (pressure windows, worker panics, cancels,\n\
          \x20     deadline storms, stalled launches) and fail loudly\n\
@@ -60,7 +63,11 @@ fn usage() -> ! {
          \x20     state, no KV pages leak, and survivors' tokens match\n\
          \x20     the fault-free run; --live re-runs the gates with token\n\
          \x20     streams attached (open-loop arrivals, backoff requeues,\n\
-         \x20     watchdog kills) plus a threaded wall-clock drain smoke\n\
+         \x20     watchdog kills) plus a threaded wall-clock drain smoke;\n\
+         \x20     --shards N runs the sharded gates instead: sharding\n\
+         \x20     1/2/4-way x 1/2/4 threads must be bit-identical, and\n\
+         \x20     kill@R:shard=S plans must fail over with exact terminal\n\
+         \x20     accounting and no leaks on surviving shards\n\
          \x20 lint\n\
          \x20     statically verify every built-in variant x bucket shape\n\
          \x20     (shape inference, race-freedom, float determinism,\n\
@@ -232,6 +239,9 @@ fn main() -> anyhow::Result<()> {
                     .map(|s| s.parse().unwrap())
                     .unwrap_or(defaults.kv_page_cap),
                 live: args.iter().any(|a| a == "--live"),
+                shards: flag(&args, "--shards")
+                    .map(|s| s.parse().unwrap())
+                    .unwrap_or(defaults.shards),
             };
             flashlight::serve::cli_serve(n, &backend, Parallelism::with_threads(threads), opts)?;
         }
@@ -257,6 +267,9 @@ fn main() -> anyhow::Result<()> {
                     .map(|s| s.parse().unwrap())
                     .unwrap_or(defaults.kv_page_cap),
                 live: args.iter().any(|a| a == "--live"),
+                shards: flag(&args, "--shards")
+                    .map(|s| s.parse().unwrap())
+                    .unwrap_or(defaults.shards),
                 ..defaults
             };
             // Plans are comma-separated; events inside one plan are

@@ -53,7 +53,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::exec::{execute_plans_batched, Parallelism, PlanJob, Tensor};
+use crate::exec::{CpuRunner, Parallelism, PlanJob, PlanRunner, Tensor};
 use crate::fusion::{bucket_len, CacheStats, CachedPlan, PlanCache, PlanKey};
 use crate::tracegen::{Request, Rng};
 use crate::variants::{build_serving, AttnShape, Variant};
@@ -248,6 +248,11 @@ pub struct EngineBackend {
     last_token: Vec<u32>,
     plans: PlanCache,
     par: Parallelism,
+    /// Who executes the fused plans this instance schedules. The CPU
+    /// runner today; the [`crate::exec::PlanRunner`] seam is what lets
+    /// a future accelerator path slot in per instance without the
+    /// scheduler or plan cache changing shape.
+    runner: CpuRunner,
     /// Prefill chunk size in q rows (page-granule multiple); 0 = the
     /// whole prompt in one chunk.
     chunk_tokens: usize,
@@ -333,6 +338,7 @@ impl EngineBackend {
             // never evicts what it just built.
             plans: PlanCache::with_block_k(plan_capacity, DEFAULT_BLOCK_TOKENS),
             par,
+            runner: CpuRunner::new(par),
             chunk_tokens: 0,
             prefix_caching: true,
             prefix_cache_pages: 256,
@@ -436,6 +442,13 @@ impl EngineBackend {
     /// The execution parallelism in effect (set via [`Backend::configure`]).
     pub fn parallelism(&self) -> Parallelism {
         self.par
+    }
+
+    /// The plan runner this instance launches through — the executor
+    /// half of the instance (copyable, so schedulers can lift it out
+    /// before borrow-heavy loops).
+    pub fn runner(&self) -> CpuRunner {
+        self.runner
     }
 
     /// Pre-build (plan + autotune) the serving bucket ladder up to
@@ -798,7 +811,10 @@ impl EngineBackend {
         let w = hq * d;
         let block = self.kv.block_tokens();
         let stride = self.kv.token_stride();
-        let par = self.par;
+        // Copy the runner out before the borrow-heavy loop (it is the
+        // same trick as copying `Parallelism`): launches below go
+        // through the `PlanRunner` seam, not a hardwired executor.
+        let runner = self.runner;
 
         // --- KV preflight: fail before any append, not mid-round.
         let mut need = 0usize;
@@ -948,7 +964,7 @@ impl EngineBackend {
                         .iter()
                         .map(|(_, e, inp)| PlanJob::from_cached(e.as_ref(), inp))
                         .collect();
-                    catch_unwind(AssertUnwindSafe(|| execute_plans_batched(&jobs, &par)))
+                    catch_unwind(AssertUnwindSafe(|| runner.run_batch(&jobs)))
                 };
                 let payload = match exec {
                     Ok(r) => break r,
@@ -1108,6 +1124,7 @@ impl Backend for EngineBackend {
 
     fn configure(&mut self, cfg: &SchedulerConfig) {
         self.par = cfg.parallelism;
+        self.runner = CpuRunner::new(self.par);
         // Thread-count changes re-warm the pool so the serving loop
         // itself never spawns (gated in `bench serve_engine`).
         crate::exec::runtime::warm(&self.par);
@@ -1359,6 +1376,7 @@ impl Backend for EngineBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::execute_plans_batched;
     use crate::serve::engine::{prompt_tokens, run_trace};
     use crate::tracegen::{generate, TraceConfig};
 

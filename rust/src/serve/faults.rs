@@ -52,6 +52,14 @@ pub enum Fault {
     /// stall like a panic — exactly one request fails and the
     /// surviving batch re-executes bit-identically.
     StalledLaunch { round: u64, item: usize },
+    /// Kill engine shard `shard` outright at the top of round `round`:
+    /// its page pool, plan cache, and parked prefixes are gone; every
+    /// request in flight on it must be attributed and re-sharded onto
+    /// the survivors. A *router-level* event — the per-shard lifecycle
+    /// never sees it ([`FaultPlan::events_at`] filters it out, like
+    /// pressure windows); [`crate::serve::run_sharded`] consumes it via
+    /// [`FaultPlan::shard_kills`].
+    ShardKill { round: u64, shard: usize },
 }
 
 impl Fault {
@@ -62,7 +70,8 @@ impl Fault {
             | Fault::WorkerPanic { round, .. }
             | Fault::Cancel { round, .. }
             | Fault::DeadlineStorm { round, .. }
-            | Fault::StalledLaunch { round, .. } => round,
+            | Fault::StalledLaunch { round, .. }
+            | Fault::ShardKill { round, .. } => round,
         }
     }
 }
@@ -79,6 +88,7 @@ impl std::fmt::Display for Fault {
             Fault::Cancel { round, id } => write!(f, "cancel@{round}:{id}"),
             Fault::DeadlineStorm { round, every } => write!(f, "storm@{round}:{every}"),
             Fault::StalledLaunch { round, item } => write!(f, "stall@{round}:{item}"),
+            Fault::ShardKill { round, shard } => write!(f, "kill@{round}:shard={shard}"),
         }
     }
 }
@@ -124,6 +134,8 @@ impl FaultPlan {
     ///   in-flight deadline at round `R`
     /// * `stall@R[:I]`    — stall grid item `I` (default 0) at `R`
     ///   until the watchdog kills the launch
+    /// * `kill@R:shard=S` — kill engine shard `S` at round `R`
+    ///   (sharded serving only; the router fails it over)
     ///
     /// The empty string parses to the empty plan.
     pub fn parse(spec: &str) -> anyhow::Result<Self> {
@@ -215,6 +227,15 @@ impl FaultPlan {
                         None => 0,
                     },
                 },
+                "kill" => Fault::ShardKill {
+                    round,
+                    shard: args
+                        .ok_or_else(|| anyhow::anyhow!("kill needs ':shard=S' ({part:?})"))?
+                        .strip_prefix("shard=")
+                        .ok_or_else(|| anyhow::anyhow!("kill needs ':shard=S' ({part:?})"))?
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad shard in {part:?}: {e}"))?,
+                },
                 other => anyhow::bail!("unknown fault kind {other:?} in {part:?}"),
             };
             events.push(ev);
@@ -273,13 +294,50 @@ impl FaultPlan {
         FaultPlan { events }
     }
 
-    /// The point events (panic / cancel / storm) firing exactly at
-    /// `round`, in plan order. Pressure windows are queried separately
-    /// via [`FaultPlan::pressure_at`] because they span rounds.
+    /// A seeded schedule for *sharded* chaos: the [`FaultPlan::generate`]
+    /// event mix plus one or two [`Fault::ShardKill`] events targeting
+    /// shards `< n_shards`, placed in the middle half of the horizon so
+    /// the kill lands while requests are genuinely in flight. A separate
+    /// generator (rather than a sixth kind inside `generate`) so every
+    /// existing seeded single-instance plan replays byte-identically.
+    pub fn generate_sharded(seed: u64, rounds: u64, n_shards: usize) -> Self {
+        let mut plan = FaultPlan::generate(seed, rounds);
+        let horizon = rounds.max(4);
+        let mut rng = Rng::new((seed | 1).rotate_left(17) ^ 0x5bd1e995);
+        let kills = 1 + (rng.next_u64() % 2) as usize;
+        for _ in 0..kills.min(n_shards.saturating_sub(1)) {
+            plan.events.push(Fault::ShardKill {
+                round: horizon / 4 + rng.next_u64() % (horizon / 2).max(1),
+                shard: (rng.next_u64() % n_shards.max(1) as u64) as usize,
+            });
+        }
+        plan.events.sort_by_key(|e| e.round());
+        plan
+    }
+
+    /// The point events (panic / cancel / storm / stall) firing exactly
+    /// at `round`, in plan order. Pressure windows are queried
+    /// separately via [`FaultPlan::pressure_at`] because they span
+    /// rounds, and shard kills via [`FaultPlan::shard_kills`] because
+    /// they are handled by the router, not the per-shard lifecycle.
     pub fn events_at(&self, round: u64) -> impl Iterator<Item = &Fault> {
         self.events.iter().filter(move |e| {
-            e.round() == round && !matches!(e, Fault::PagePressure { .. })
+            e.round() == round
+                && !matches!(e, Fault::PagePressure { .. } | Fault::ShardKill { .. })
         })
+    }
+
+    /// Every scheduled shard kill, as `(round, shard)` in plan order.
+    /// Consumed by the sharded router ([`crate::serve::run_sharded`]);
+    /// the single-instance lifecycle ignores these events entirely.
+    pub fn shard_kills(&self) -> Vec<(u64, usize)> {
+        self.events
+            .iter()
+            .filter_map(|e| match *e {
+                Fault::ShardKill { round, shard } => Some((round, shard)),
+                _ => None,
+            })
+            .collect()
     }
 
     /// Total KV pages withheld at `round`: the sum of all pressure
@@ -332,7 +390,7 @@ mod tests {
     #[test]
     fn parse_round_trips_every_event_kind() {
         let plan = FaultPlan::parse(
-            "pressure@3:2x4; panic@5:1; cancel@7:2; storm@9:2; stall@11:3;",
+            "pressure@3:2x4; panic@5:1; cancel@7:2; storm@9:2; stall@11:3; kill@13:shard=1;",
         )
         .unwrap();
         assert_eq!(
@@ -347,6 +405,7 @@ mod tests {
                 Fault::Cancel { round: 7, id: 2 },
                 Fault::DeadlineStorm { round: 9, every: 2 },
                 Fault::StalledLaunch { round: 11, item: 3 },
+                Fault::ShardKill { round: 13, shard: 1 },
             ]
         );
         // Display form re-parses to the same plan.
@@ -369,9 +428,34 @@ mod tests {
             FaultPlan::parse("stall@6").unwrap().events,
             vec![Fault::StalledLaunch { round: 6, item: 0 }]
         );
-        for bad in ["pressure@1", "cancel@1", "blorp@3", "panic", "panic@x", "stall@x"] {
+        for bad in [
+            "pressure@1",
+            "cancel@1",
+            "blorp@3",
+            "panic",
+            "panic@x",
+            "stall@x",
+            "kill@2",
+            "kill@2:1",
+            "kill@2:shard=x",
+        ] {
             assert!(FaultPlan::parse(bad).is_err(), "{bad:?} must not parse");
         }
+    }
+
+    #[test]
+    fn shard_kills_are_router_level_events() {
+        let plan = FaultPlan::parse("kill@4:shard=2;panic@4;kill@9:shard=0").unwrap();
+        assert_eq!(plan.shard_kills(), vec![(4, 2), (9, 0)]);
+        // The per-shard lifecycle never sees them as point events...
+        assert_eq!(
+            plan.events_at(4).collect::<Vec<_>>(),
+            vec![&Fault::WorkerPanic { round: 4, item: 0 }]
+        );
+        assert_eq!(plan.events_at(9).count(), 0);
+        // ...but they do extend the horizon so short traces still reach
+        // the kill round.
+        assert_eq!(plan.horizon(), 9);
     }
 
     #[test]
@@ -400,5 +484,89 @@ mod tests {
         // The seed= spec form reaches the same generator.
         assert_eq!(FaultPlan::parse("seed=42@64").unwrap(), a);
         assert_eq!(FaultPlan::parse("seed=42").unwrap(), a);
+    }
+
+    #[test]
+    fn sharded_generator_adds_kills_without_touching_the_base_plan() {
+        for seed in 0..32u64 {
+            let base = FaultPlan::generate(seed, 64);
+            let sharded = FaultPlan::generate_sharded(seed, 64, 4);
+            let kills = sharded.shard_kills();
+            assert!(!kills.is_empty(), "seed {seed} generated no shard kill");
+            assert!(kills.len() < 4, "must leave at least one survivor");
+            assert!(kills.iter().all(|&(r, s)| r < 64 && s < 4));
+            // Removing the kills recovers exactly the base schedule —
+            // sharded chaos replays the same single-instance faults.
+            let mut stripped = sharded.clone();
+            stripped
+                .events
+                .retain(|e| !matches!(e, Fault::ShardKill { .. }));
+            assert_eq!(stripped, base, "seed {seed} perturbed the base plan");
+        }
+    }
+
+    /// Satellite: the Display↔parse round-trip holds for *generated*
+    /// multi-event plans, not only the hand-written cases above. Plans
+    /// are drawn from the repo's own deterministic RNG: all six event
+    /// kinds with randomized parameters, plus every seeded generator
+    /// output.
+    #[test]
+    fn display_parse_round_trip_property() {
+        let mut rng = Rng::new(0xfa_17_5);
+        for case in 0..256 {
+            let n = 1 + (rng.next_u64() % 8) as usize;
+            let mut events = Vec::with_capacity(n);
+            for _ in 0..n {
+                let round = rng.next_u64() % 100;
+                events.push(match rng.next_u64() % 6 {
+                    0 => Fault::PagePressure {
+                        round,
+                        pages: (rng.next_u64() % 100) as usize,
+                        rounds: rng.next_u64() % 100,
+                    },
+                    1 => Fault::WorkerPanic {
+                        round,
+                        item: (rng.next_u64() % 100) as usize,
+                    },
+                    2 => Fault::Cancel {
+                        round,
+                        id: (rng.next_u64() % 1000) as usize,
+                    },
+                    3 => Fault::DeadlineStorm {
+                        round,
+                        every: 1 + (rng.next_u64() % 9) as usize,
+                    },
+                    4 => Fault::StalledLaunch {
+                        round,
+                        item: (rng.next_u64() % 100) as usize,
+                    },
+                    _ => Fault::ShardKill {
+                        round,
+                        shard: (rng.next_u64() % 8) as usize,
+                    },
+                });
+            }
+            // parse() sorts by round (stably), so compare against the
+            // sorted form — which Display then preserves verbatim.
+            events.sort_by_key(|e| e.round());
+            let plan = FaultPlan { events };
+            let spec = plan.to_string();
+            let reparsed = FaultPlan::parse(&spec)
+                .unwrap_or_else(|e| panic!("case {case}: {spec:?} failed to parse: {e}"));
+            assert_eq!(reparsed, plan, "case {case}: {spec:?} did not round-trip");
+        }
+        // Seeded generator outputs round-trip too (both generators).
+        for seed in 0..64u64 {
+            for plan in [
+                FaultPlan::generate(seed, 48),
+                FaultPlan::generate_sharded(seed, 48, 4),
+            ] {
+                assert_eq!(
+                    FaultPlan::parse(&plan.to_string()).unwrap(),
+                    plan,
+                    "seed {seed} did not round-trip"
+                );
+            }
+        }
     }
 }

@@ -45,13 +45,29 @@ pub const STREAM_BUF_ENV: &str = "FLASHLIGHT_STREAM_BUF";
 pub const DEFAULT_STREAM_BUF: usize = 32;
 
 /// Stream channel capacity from `FLASHLIGHT_STREAM_BUF` (CLI entry
-/// points only). Unset or unparsable → [`DEFAULT_STREAM_BUF`].
+/// points only). Unset → [`DEFAULT_STREAM_BUF`]; anything set but not
+/// an integer ≥ 1 is **rejected with a warning** rather than silently
+/// falling back (the `FLASHLIGHT_THREADS` fix, applied here): a typo'd
+/// capacity would otherwise quietly change the slow-consumer policy.
 pub fn stream_buf_from_env() -> usize {
-    std::env::var(STREAM_BUF_ENV)
-        .ok()
-        .and_then(|v| v.trim().parse::<usize>().ok())
-        .filter(|&v| v > 0)
-        .unwrap_or(DEFAULT_STREAM_BUF)
+    stream_buf_from_env_value(std::env::var(STREAM_BUF_ENV).ok().as_deref())
+}
+
+/// Testable core of [`stream_buf_from_env`].
+pub fn stream_buf_from_env_value(env: Option<&str>) -> usize {
+    match env {
+        None => DEFAULT_STREAM_BUF,
+        Some(s) => match s.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                eprintln!(
+                    "flashlight: ignoring invalid {STREAM_BUF_ENV}={s:?} \
+                     (want an integer >= 1); using the default of {DEFAULT_STREAM_BUF}"
+                );
+                DEFAULT_STREAM_BUF
+            }
+        },
+    }
 }
 
 /// One event on a per-request token stream.
@@ -308,6 +324,23 @@ mod tests {
             rx.recv().unwrap(),
             StreamEvent::Done { outcome: Outcome::Completed, reason: String::new() }
         );
+    }
+
+    #[test]
+    fn stream_buf_env_rejects_zero_and_garbage() {
+        assert_eq!(stream_buf_from_env_value(None), DEFAULT_STREAM_BUF);
+        assert_eq!(stream_buf_from_env_value(Some("8")), 8);
+        assert_eq!(stream_buf_from_env_value(Some(" 64 ")), 64);
+        // Invalid values are rejected (loudly), never treated as "tiny
+        // buffer" or "unset": a zero-capacity stream channel cannot
+        // exist and garbage is always a typo.
+        for bad in ["0", "-3", "lots", "", "4.5"] {
+            assert_eq!(
+                stream_buf_from_env_value(Some(bad)),
+                DEFAULT_STREAM_BUF,
+                "{bad:?} must fall back to the default"
+            );
+        }
     }
 
     #[test]

@@ -13,6 +13,8 @@ pub mod live;
 pub mod metrics;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod router;
+pub mod shard;
 pub mod sim;
 pub mod supervisor;
 
@@ -32,6 +34,8 @@ pub use metrics::{
     load_point, summarize, summarize_outcomes, LifecycleSummary, LoadPoint, Outcome,
     RequestMetrics, RequestOutcome, Summary,
 };
+pub use router::{run_sharded, Router, RouterConfig, ShardedReport};
+pub use shard::{shard_domains, Shard, ShardHealth};
 pub use supervisor::{stall_budget_from_env, Supervisor, DEFAULT_STALL_MS, STALL_MS_ENV};
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
@@ -194,6 +198,10 @@ pub struct EngineServeOpts {
     /// streams under a watchdog instead of replaying the trace inline
     /// (serve); run the live chaos gates (chaos).
     pub live: bool,
+    /// `--shards N`: run N engine instances behind the conversation-
+    /// sticky router (see [`router`]) instead of a single backend.
+    /// 1 = unsharded (the default). Takes precedence over `--live`.
+    pub shards: usize,
 }
 
 impl Default for EngineServeOpts {
@@ -206,6 +214,7 @@ impl Default for EngineServeOpts {
             queue_cap: 0,
             kv_page_cap: 0,
             live: false,
+            shards: 1,
         }
     }
 }
@@ -245,6 +254,9 @@ fn serve_engine(
     par: crate::exec::Parallelism,
     opts: EngineServeOpts,
 ) -> anyhow::Result<()> {
+    if opts.shards > 1 {
+        return serve_engine_sharded(n_requests, par, opts);
+    }
     if opts.live {
         return serve_engine_live(n_requests, par, opts);
     }
@@ -510,6 +522,9 @@ pub fn chaos(
     opts: EngineServeOpts,
     specs: &[String],
 ) -> anyhow::Result<()> {
+    if opts.shards > 1 {
+        return chaos_sharded(n_requests, par, opts, specs);
+    }
     if opts.live {
         return chaos_live(n_requests, opts, specs);
     }
@@ -860,6 +875,304 @@ pub fn chaos_live(
         );
     }
     println!("chaos --live: all {} plans passed", specs.len());
+    Ok(())
+}
+
+/// `flashlight serve --backend engine --shards N`: serve the trace
+/// over N self-contained engine instances behind the conversation-
+/// sticky router, each pinned to a topology domain, with per-shard
+/// health reported on exit. Fault plans (including `kill@R:shard=S`)
+/// come from `FLASHLIGHT_FAULTS`.
+fn serve_engine_sharded(
+    n_requests: usize,
+    par: crate::exec::Parallelism,
+    opts: EngineServeOpts,
+) -> anyhow::Result<()> {
+    let trace = engine_trace(n_requests);
+    let vocab = EngineModel::tiny().vocab;
+    let cfg = SchedulerConfig {
+        parallelism: par,
+        prefill_chunk_tokens: opts.chunk_tokens,
+        prefill_round_tokens: opts.round_tokens,
+        ..Default::default()
+    };
+    let lc = LifecycleConfig {
+        queue_cap: opts.queue_cap,
+        default_deadline_s: if opts.deadline_ms == 0 {
+            f64::INFINITY
+        } else {
+            opts.deadline_ms as f64 / 1e3
+        },
+        clock: ClockMode::Wall,
+        ..Default::default()
+    };
+    let plan = FaultPlan::from_env()?;
+    if !plan.is_empty() {
+        println!("fault plan ({} events): {plan}", plan.events.len());
+    }
+    let mk = |_i: usize| {
+        let mut b = EngineBackend::new(EngineModel::tiny_deep(opts.layers), 8, 1024, par);
+        if opts.kv_page_cap > 0 {
+            b.set_page_cap(opts.kv_page_cap);
+        }
+        b
+    };
+    let t0 = std::time::Instant::now();
+    let rep = run_sharded(
+        &trace,
+        cfg,
+        lc,
+        &plan,
+        vocab,
+        opts.shards,
+        RouterConfig::default(),
+        mk,
+    )?;
+    let sum = &rep.summary;
+    println!(
+        "sharded engine: {} reqs over {} shards in {:.2}s wall | topology {} | \
+         {} steals, {} failovers{}",
+        trace.len(),
+        opts.shards,
+        t0.elapsed().as_secs_f64(),
+        rep.topology,
+        rep.steals,
+        rep.failovers,
+        if rep.killed.is_empty() {
+            String::new()
+        } else {
+            format!(" | killed shards {:?}", rep.killed)
+        },
+    );
+    println!(
+        "lifecycle: {} completed, {} rejected, {} cancelled, {} deadline_exceeded, \
+         {} failed | {} preemptions | goodput {:.1} tok/s",
+        sum.completed,
+        sum.rejected,
+        sum.cancelled,
+        sum.deadline_exceeded,
+        sum.failed,
+        sum.preemptions,
+        sum.goodput_tokens_per_s,
+    );
+    print_shard_table(&rep.shards);
+    Ok(())
+}
+
+fn print_shard_table(shards: &[ShardHealth]) {
+    println!(
+        "{:<7} {:<12} {:<6} {:>9} {:>10} {:>7} {:>22}",
+        "shard", "runner", "alive", "assigned", "terminals", "rounds", "pages a/f/parked"
+    );
+    for h in shards {
+        println!(
+            "{:<7} {:<12} {:<6} {:>9} {:>10} {:>7} {:>22}",
+            h.id,
+            h.runner,
+            if h.alive { "yes" } else { "KILLED" },
+            h.assigned,
+            h.terminals,
+            h.rounds,
+            format!("{}/{}/{}", h.pages_allocated, h.pages_free, h.pages_parked),
+        );
+    }
+}
+
+/// `flashlight chaos --shards N`: the sharded-serving gates.
+///
+/// **Determinism gate** (fault-free): the same trace sharded 1, 2,
+/// and 4 ways (plus `--shards N` if different), each at 1, 2, and 4
+/// threads per shard, must complete every request with per-request
+/// token streams bit-identical to the unsharded single-thread
+/// reference — sharding and parallelism are invisible in the output.
+///
+/// **Failover gate** (per fault plan): under a plan with
+/// `kill@R:shard=S` events (spec form `seed=N[@R]` generates one via
+/// [`FaultPlan::generate_sharded`]), every admitted request reaches
+/// exactly one terminal state, completed survivors' streams match the
+/// fault-free reference bit-for-bit, and every *surviving* shard's
+/// page pool satisfies `allocated == free + parked`.
+pub fn chaos_sharded(
+    n_requests: usize,
+    par: crate::exec::Parallelism,
+    opts: EngineServeOpts,
+    specs: &[String],
+) -> anyhow::Result<()> {
+    use std::collections::HashMap;
+
+    let n_shards = opts.shards.max(2);
+    let trace = engine_trace(n_requests);
+    let cap = if opts.kv_page_cap > 0 {
+        opts.kv_page_cap
+    } else {
+        20 * opts.layers
+    };
+    let vocab = EngineModel::tiny().vocab;
+    let cfg_for = |p: crate::exec::Parallelism| SchedulerConfig {
+        parallelism: p,
+        prefill_chunk_tokens: opts.chunk_tokens,
+        prefill_round_tokens: opts.round_tokens,
+        ..Default::default()
+    };
+    // Deterministic rounds, unbounded queue, no deadlines: every
+    // request must complete in the fault-free shardings, which is what
+    // makes the bit-identity gate total.
+    let lc = LifecycleConfig {
+        clock: ClockMode::Rounds,
+        ..Default::default()
+    };
+    let mk = |p: crate::exec::Parallelism| {
+        move |_i: usize| {
+            let mut b =
+                EngineBackend::new(EngineModel::tiny_deep(opts.layers), 8, 1024, p);
+            b.set_page_cap(cap);
+            b
+        }
+    };
+
+    let one_thread = crate::exec::Parallelism::with_threads(1);
+    let reference: HashMap<usize, Vec<u32>> = {
+        let rep = run_sharded(
+            &trace,
+            cfg_for(one_thread),
+            lc,
+            &FaultPlan::none(),
+            vocab,
+            1,
+            RouterConfig::default(),
+            mk(one_thread),
+        )?;
+        anyhow::ensure!(
+            rep.summary.completed == trace.len(),
+            "unsharded fault-free reference must complete all {} requests (completed {})",
+            trace.len(),
+            rep.summary.completed
+        );
+        rep.outcomes.into_iter().map(|o| (o.id, o.tokens)).collect()
+    };
+    println!(
+        "chaos --shards: {} requests, {} shards, {} plans, page cap {}/shard",
+        trace.len(),
+        n_shards,
+        specs.len(),
+        cap
+    );
+
+    // Determinism gate: sharding and per-shard threads are invisible.
+    let mut shard_counts = vec![1usize, 2, 4];
+    if !shard_counts.contains(&n_shards) {
+        shard_counts.push(n_shards);
+    }
+    for threads in [1usize, 2, 4] {
+        let p = crate::exec::Parallelism::with_threads(threads);
+        for &ns in &shard_counts {
+            let rep = run_sharded(
+                &trace,
+                cfg_for(p),
+                lc,
+                &FaultPlan::none(),
+                vocab,
+                ns,
+                RouterConfig::default(),
+                mk(p),
+            )?;
+            anyhow::ensure!(
+                rep.summary.completed == trace.len(),
+                "@{ns} shards x {threads}t: completed {} of {}",
+                rep.summary.completed,
+                trace.len()
+            );
+            for o in &rep.outcomes {
+                anyhow::ensure!(
+                    Some(&o.tokens) == reference.get(&o.id),
+                    "@{ns} shards x {threads}t: request {} diverged from the \
+                     unsharded reference",
+                    o.id
+                );
+            }
+            for h in &rep.shards {
+                anyhow::ensure!(
+                    h.leak_free(),
+                    "@{ns} shards x {threads}t: shard {} leaked pages",
+                    h.id
+                );
+            }
+            println!(
+                "  determinism @{ns} shards x {threads}t OK ({} steals, topology {})",
+                rep.steals, rep.topology
+            );
+        }
+    }
+
+    // Failover gate, per plan.
+    for spec in specs {
+        let plan = if let Some(rest) = spec.strip_prefix("seed=") {
+            let (seed, rounds) = match rest.split_once('@') {
+                Some((s, r)) => (s.parse::<u64>()?, r.parse::<u64>()?),
+                None => (rest.parse::<u64>()?, 64),
+            };
+            FaultPlan::generate_sharded(seed, rounds, n_shards)
+        } else {
+            FaultPlan::parse(spec)?
+        };
+        let rep = run_sharded(
+            &trace,
+            cfg_for(par),
+            lc,
+            &plan,
+            vocab,
+            n_shards,
+            RouterConfig::default(),
+            mk(par),
+        )?;
+        anyhow::ensure!(
+            rep.outcomes.len() == trace.len(),
+            "plan `{spec}`: terminal accounting broken — {} terminals for {} requests",
+            rep.outcomes.len(),
+            trace.len()
+        );
+        for o in rep.outcomes.iter().filter(|o| o.outcome == Outcome::Completed) {
+            let want = reference.get(&o.id).ok_or_else(|| {
+                anyhow::anyhow!("plan `{spec}`: request {} has no reference", o.id)
+            })?;
+            anyhow::ensure!(
+                &o.tokens == want,
+                "plan `{spec}`: request {} diverged from the fault-free reference \
+                 ({} tokens vs {}, {} failovers in run)",
+                o.id,
+                o.tokens.len(),
+                want.len(),
+                rep.failovers
+            );
+        }
+        for h in rep.shards.iter().filter(|h| h.alive) {
+            anyhow::ensure!(
+                h.leak_free(),
+                "plan `{spec}`: surviving shard {} leaked pages \
+                 ({} allocated vs {} free + {} parked)",
+                h.id,
+                h.pages_allocated,
+                h.pages_free,
+                h.pages_parked
+            );
+        }
+        if !plan.shard_kills().is_empty() && rep.killed.is_empty() {
+            println!(
+                "  plan `{spec}` note: kill landed after its shard drained (no-op)"
+            );
+        }
+        println!(
+            "  plan `{spec}` OK: {} completed, {} failed | killed {:?}, \
+             {} failovers, {} steals | survivors bit-identical, no leaks",
+            rep.summary.completed,
+            rep.summary.failed,
+            rep.killed,
+            rep.failovers,
+            rep.steals,
+        );
+        print_shard_table(&rep.shards);
+    }
+    println!("chaos --shards: all gates passed");
     Ok(())
 }
 

@@ -1,0 +1,481 @@
+//! Sharded multi-instance serving: a deterministic request router over
+//! N engine [`Shard`]s, with shard fault domains and failover.
+//!
+//! ## Routing
+//!
+//! Requests are sharded by **conversation**: a conversation's first
+//! request picks its shard, every later turn follows it there
+//! (sticky), because the prefix cache — and therefore prefix adoption
+//! — is shard-local. The primary placement is `conversation mod
+//! n_shards`; when the primary has backed up past twice the
+//! least-loaded shard's outstanding work (estimated in prompt +
+//! completion tokens, plus a slack floor), admission **work-steals**
+//! the conversation to the least-loaded shard instead (lowest id
+//! breaks ties). Everything is integer arithmetic over the trace in
+//! arrival order, so a placement is a pure function of (trace,
+//! config) — reproducible anywhere.
+//!
+//! ## Failover
+//!
+//! A `kill@R:shard=S` fault (see [`super::faults`]) dooms shard `S`:
+//! its lifecycle halts at round `R` as if the instance died — no
+//! drain, no terminals for whatever it still held. The router then
+//! *attributes* the loss (assigned minus terminals is exactly the
+//! in-flight + queued remainder), re-shards those requests over the
+//! survivors in arrival order, and runs a failover wave. Surviving
+//! shards keep their backends between waves, so re-routed multi-turn
+//! conversations adopt parked partial prefixes where the page pool
+//! survived; conversations that lived on the dead shard re-prefill
+//! from scratch. Every admitted request reaches **exactly one**
+//! terminal state, and because token streams are bit-identical at any
+//! placement, survivors match the fault-free reference exactly.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::tracegen::Request;
+
+use super::engine::SchedulerConfig;
+use super::engine_backend::EngineBackend;
+use super::faults::FaultPlan;
+use super::lifecycle::LifecycleConfig;
+use super::metrics::{summarize_outcomes, LifecycleSummary, RequestOutcome};
+use super::shard::{shard_domains, Shard, ShardHealth};
+
+/// Router tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct RouterConfig {
+    /// Work-stealing threshold slack: steal a new conversation away
+    /// from its primary shard only when the primary's outstanding
+    /// token estimate exceeds `2 * least_loaded + slack`. The slack
+    /// keeps tiny imbalances (a single short request) from defeating
+    /// modulo placement.
+    pub steal_slack_tokens: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            steal_slack_tokens: 64,
+        }
+    }
+}
+
+/// Deterministic conversation-sticky router state.
+pub struct Router {
+    cfg: RouterConfig,
+    /// conversation -> shard home.
+    placement: HashMap<usize, usize>,
+    /// Estimated tokens assigned per shard (all waves).
+    loads: Vec<usize>,
+    /// Conversations admission stole away from their primary shard.
+    pub steals: u64,
+}
+
+impl Router {
+    pub fn new(n_shards: usize, cfg: RouterConfig) -> Self {
+        Router {
+            cfg,
+            placement: HashMap::new(),
+            loads: vec![0; n_shards],
+            steals: 0,
+        }
+    }
+
+    /// Assign `reqs` (in arrival order) onto the `eligible` shards.
+    /// Returns one queue per shard (ineligible shards get empty
+    /// queues). Sticky homes that are no longer eligible (the shard
+    /// died) are re-placed as if the conversation were new.
+    pub fn assign(&mut self, reqs: &[Request], eligible: &[usize]) -> Vec<Vec<Request>> {
+        assert!(!eligible.is_empty(), "router needs at least one eligible shard");
+        let mut queues = vec![Vec::new(); self.loads.len()];
+        for r in reqs {
+            let s = self.place(r, eligible);
+            self.loads[s] += r.input_tokens + r.output_tokens;
+            queues[s].push(r.clone());
+        }
+        queues
+    }
+
+    fn place(&mut self, r: &Request, eligible: &[usize]) -> usize {
+        if let Some(&home) = self.placement.get(&r.conversation) {
+            if eligible.contains(&home) {
+                return home;
+            }
+        }
+        let primary = eligible[r.conversation % eligible.len()];
+        let least = *eligible
+            .iter()
+            .min_by_key(|&&s| (self.loads[s], s))
+            .expect("eligible is non-empty");
+        let shard = if self.loads[primary]
+            > 2 * self.loads[least] + self.cfg.steal_slack_tokens
+        {
+            self.steals += 1;
+            least
+        } else {
+            primary
+        };
+        self.placement.insert(r.conversation, shard);
+        shard
+    }
+}
+
+/// Everything a sharded run produced, merged back together.
+#[derive(Debug, Clone)]
+pub struct ShardedReport {
+    /// One terminal record per admitted request, sorted by id —
+    /// regardless of which shard (or how many, after failover)
+    /// touched it.
+    pub outcomes: Vec<RequestOutcome>,
+    pub summary: LifecycleSummary,
+    /// Final health row per shard, including the dead ones.
+    pub shards: Vec<ShardHealth>,
+    /// Conversations stolen from their primary at admission.
+    pub steals: u64,
+    /// Requests re-sharded onto survivors after kills.
+    pub failovers: u64,
+    /// Shards that kill faults actually took down (a kill landing
+    /// after a shard drained is a no-op and does not appear here).
+    pub killed: Vec<usize>,
+    /// Topology pin, e.g. `numa:8,8 -> [0, 0, 1, 1]`.
+    pub topology: String,
+}
+
+/// Run `trace` over `n_shards` engine instances. See the module docs
+/// for the routing and failover semantics. `make_backend(i)` builds
+/// shard `i`'s private engine (callers pick model depth, page caps,
+/// and per-shard parallelism there).
+///
+/// Non-kill fault events are applied to every shard's wave
+/// identically (each instance experiences the same adverse schedule);
+/// kill events are router-level and consumed here. The failover wave
+/// runs fault-free: the plan's schedule already fired in wave one,
+/// and replaying it against resubmitted work would double-apply it.
+pub fn run_sharded(
+    trace: &[Request],
+    sched: SchedulerConfig,
+    lc: LifecycleConfig,
+    faults: &FaultPlan,
+    vocab: usize,
+    n_shards: usize,
+    router_cfg: RouterConfig,
+    mut make_backend: impl FnMut(usize) -> EngineBackend,
+) -> anyhow::Result<ShardedReport> {
+    anyhow::ensure!(n_shards >= 1, "need at least one shard");
+    let topo = crate::exec::runtime::topology();
+    let domains = shard_domains(&topo, n_shards);
+
+    // Kill schedule: earliest kill per shard wins; later kills of the
+    // same shard are no-ops (it is already dead). `kill@0` halts at
+    // round 1 — the lifecycle treats 0 as "never".
+    let mut kill_at: BTreeMap<usize, u64> = BTreeMap::new();
+    for (round, shard) in faults.shard_kills() {
+        anyhow::ensure!(
+            shard < n_shards,
+            "kill@{round}:shard={shard} targets a shard that does not exist \
+             (running {n_shards})"
+        );
+        let r = round.max(1);
+        kill_at
+            .entry(shard)
+            .and_modify(|cur| *cur = (*cur).min(r))
+            .or_insert(r);
+    }
+    anyhow::ensure!(
+        kill_at.len() < n_shards,
+        "fault plan kills all {n_shards} shards; at least one must survive"
+    );
+
+    let mut shards: Vec<Shard> = (0..n_shards)
+        .map(|i| {
+            let mut sh = Shard::new(i, domains[i], make_backend(i));
+            if let Some(&r) = kill_at.get(&i) {
+                sh.kill_at = r;
+            }
+            sh
+        })
+        .collect();
+
+    let mut router = Router::new(n_shards, router_cfg);
+    let all: Vec<usize> = (0..n_shards).collect();
+    for (sh, queue) in shards.iter_mut().zip(router.assign(trace, &all)) {
+        sh.queue = queue;
+    }
+
+    let mut outcomes: BTreeMap<usize, RequestOutcome> = BTreeMap::new();
+    let record = |outcomes: &mut BTreeMap<usize, RequestOutcome>,
+                      rep_outcomes: Vec<RequestOutcome>|
+     -> anyhow::Result<()> {
+        for o in rep_outcomes {
+            let id = o.id;
+            anyhow::ensure!(
+                outcomes.insert(id, o).is_none(),
+                "request {id} reached two terminal states"
+            );
+        }
+        Ok(())
+    };
+
+    // Wave 1: every shard runs its queue; doomed shards halt at their
+    // kill round and hand their unfinished remainder back.
+    let mut stranded: Vec<Request> = Vec::new();
+    for sh in shards.iter_mut() {
+        let (rep, unfinished) = sh.run_wave(sched, lc, faults, vocab)?;
+        record(&mut outcomes, rep.outcomes)?;
+        stranded.extend(unfinished);
+    }
+
+    let killed: Vec<usize> = shards.iter().filter(|s| !s.alive).map(|s| s.id).collect();
+    let failovers = stranded.len() as u64;
+    if !stranded.is_empty() {
+        let survivors: Vec<usize> =
+            shards.iter().filter(|s| s.alive).map(|s| s.id).collect();
+        anyhow::ensure!(
+            !survivors.is_empty(),
+            "every shard died with work in flight; nothing to fail over to"
+        );
+        // Re-shard in arrival order (ids are monotone in arrival) so
+        // the failover placement is as deterministic as admission.
+        stranded.sort_by_key(|r| r.id);
+        for (sh, queue) in shards.iter_mut().zip(router.assign(&stranded, &survivors)) {
+            if !queue.is_empty() {
+                sh.queue = queue;
+            }
+        }
+        for sh in shards.iter_mut() {
+            if !sh.alive || sh.queue.is_empty() {
+                continue;
+            }
+            let (rep, unfinished) =
+                sh.run_wave(sched, lc, &FaultPlan::none(), vocab)?;
+            anyhow::ensure!(
+                unfinished.is_empty(),
+                "failover wave stranded work on surviving shard {}",
+                sh.id
+            );
+            record(&mut outcomes, rep.outcomes)?;
+        }
+    }
+
+    anyhow::ensure!(
+        outcomes.len() == trace.len(),
+        "sharded run lost requests: {} terminals for {} admitted",
+        outcomes.len(),
+        trace.len()
+    );
+    let outcomes: Vec<RequestOutcome> = outcomes.into_values().collect();
+    let summary = summarize_outcomes(&outcomes);
+    Ok(ShardedReport {
+        summary,
+        outcomes,
+        shards: shards.iter().map(Shard::health).collect(),
+        steals: router.steals,
+        failovers,
+        killed,
+        topology: format!("{} -> {:?}", topo.describe(), domains),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Parallelism;
+    use crate::serve::engine_backend::{EngineBackend, EngineModel};
+    use crate::serve::lifecycle::ClockMode;
+    use crate::serve::metrics::Outcome;
+
+    fn req(id: usize, conversation: usize, cost: usize) -> Request {
+        Request {
+            id,
+            conversation,
+            input_tokens: cost,
+            output_tokens: cost / 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn routing_is_conversation_sticky_and_deterministic() {
+        let trace: Vec<Request> =
+            (0..24).map(|i| req(i, i % 7, 32 + (i % 5) * 16)).collect();
+        let mut a = Router::new(4, RouterConfig::default());
+        let mut b = Router::new(4, RouterConfig::default());
+        let all = vec![0, 1, 2, 3];
+        let qa = a.assign(&trace, &all);
+        let qb = b.assign(&trace, &all);
+        let ids = |qs: &[Vec<Request>]| -> Vec<Vec<usize>> {
+            qs.iter()
+                .map(|q| q.iter().map(|r| r.id).collect())
+                .collect()
+        };
+        assert_eq!(ids(&qa), ids(&qb), "identical inputs must route identically");
+        // Sticky: every conversation lands on exactly one shard.
+        let mut home: HashMap<usize, usize> = HashMap::new();
+        for (s, q) in qa.iter().enumerate() {
+            for r in q {
+                assert_eq!(
+                    *home.entry(r.conversation).or_insert(s),
+                    s,
+                    "conversation {} split across shards",
+                    r.conversation
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn admission_steals_from_a_backed_up_primary() {
+        // Every conversation hashes to shard 0; once it backs up past
+        // the threshold, new conversations spill to the idle shard.
+        let trace: Vec<Request> = (0..8).map(|i| req(i, i * 2, 256)).collect();
+        let mut r = Router::new(2, RouterConfig {
+            steal_slack_tokens: 64,
+        });
+        let q = r.assign(&trace, &[0, 1]);
+        assert!(r.steals >= 1, "backed-up primary must shed work");
+        assert!(
+            !q[1].is_empty(),
+            "stolen conversations must land on the idle shard"
+        );
+        // Re-offered turns of a stolen conversation follow it.
+        let follow = r.assign(&[req(100, trace[q[1][0].id].conversation, 8)], &[0, 1]);
+        assert!(follow[0].is_empty() && !follow[1].is_empty());
+    }
+
+    #[test]
+    fn dead_homes_are_replaced_only_for_survivors() {
+        let mut r = Router::new(2, RouterConfig::default());
+        let first = r.assign(&[req(0, 5, 64)], &[0, 1]);
+        let home = if first[1].is_empty() { 0 } else { 1 };
+        let survivor = 1 - home;
+        let re = r.assign(&[req(1, 5, 64)], &[survivor]);
+        assert!(!re[survivor].is_empty(), "failover must re-place the conversation");
+        // And stickiness now points at the survivor.
+        let again = r.assign(&[req(2, 5, 64)], &[0, 1]);
+        assert!(!again[survivor].is_empty());
+    }
+
+    fn mk_backend(par_threads: usize) -> impl FnMut(usize) -> EngineBackend {
+        move |_i| {
+            EngineBackend::new(
+                EngineModel::tiny(),
+                4,
+                512,
+                Parallelism::with_threads(par_threads),
+            )
+        }
+    }
+
+    fn rounds_lc() -> LifecycleConfig {
+        LifecycleConfig {
+            clock: ClockMode::Rounds,
+            ..Default::default()
+        }
+    }
+
+    /// The determinism gate in miniature: the same trace sharded
+    /// 1/2/4 ways completes everything with bit-identical per-request
+    /// token streams.
+    #[test]
+    fn sharding_is_invisible_in_the_token_streams() {
+        let trace = crate::serve::engine_trace(10);
+        let mut streams: Vec<Vec<(usize, Vec<u32>)>> = Vec::new();
+        for n_shards in [1usize, 2, 4] {
+            let rep = run_sharded(
+                &trace,
+                SchedulerConfig::default(),
+                rounds_lc(),
+                &FaultPlan::none(),
+                EngineModel::tiny().vocab,
+                n_shards,
+                RouterConfig::default(),
+                mk_backend(1),
+            )
+            .unwrap();
+            assert_eq!(rep.summary.completed, trace.len());
+            assert!(rep.shards.iter().all(|h| h.alive && h.leak_free()));
+            streams.push(
+                rep.outcomes
+                    .into_iter()
+                    .map(|o| (o.id, o.tokens))
+                    .collect(),
+            );
+        }
+        assert_eq!(streams[0], streams[1], "2-way sharding changed a stream");
+        assert_eq!(streams[0], streams[2], "4-way sharding changed a stream");
+    }
+
+    /// The failover gate in miniature: kill a shard mid-trace; every
+    /// request still reaches exactly one terminal, survivors match
+    /// the fault-free reference, and surviving pools do not leak.
+    #[test]
+    fn shard_kill_fails_over_with_exact_terminal_accounting() {
+        let trace = crate::serve::engine_trace(12);
+        let vocab = EngineModel::tiny().vocab;
+        let reference = run_sharded(
+            &trace,
+            SchedulerConfig::default(),
+            rounds_lc(),
+            &FaultPlan::none(),
+            vocab,
+            2,
+            RouterConfig::default(),
+            mk_backend(1),
+        )
+        .unwrap();
+        let plan = FaultPlan::parse("kill@2:shard=0").unwrap();
+        let rep = run_sharded(
+            &trace,
+            SchedulerConfig::default(),
+            rounds_lc(),
+            &plan,
+            vocab,
+            2,
+            RouterConfig::default(),
+            mk_backend(1),
+        )
+        .unwrap();
+        assert_eq!(rep.killed, vec![0], "the kill must land mid-trace");
+        assert!(rep.failovers >= 1);
+        assert_eq!(rep.outcomes.len(), trace.len());
+        assert_eq!(
+            rep.summary.completed,
+            trace.len(),
+            "failover must finish the dead shard's work"
+        );
+        let want: HashMap<usize, Vec<u32>> = reference
+            .outcomes
+            .into_iter()
+            .map(|o| (o.id, o.tokens))
+            .collect();
+        for o in &rep.outcomes {
+            assert_eq!(o.outcome, Outcome::Completed);
+            assert_eq!(
+                &o.tokens, &want[&o.id],
+                "request {} diverged after failover",
+                o.id
+            );
+        }
+        for h in rep.shards.iter().filter(|h| h.alive) {
+            assert!(h.leak_free(), "surviving shard {} leaked pages", h.id);
+        }
+    }
+
+    #[test]
+    fn killing_every_shard_is_rejected_loudly() {
+        let trace = crate::serve::engine_trace(4);
+        let plan = FaultPlan::parse("kill@1:shard=0;kill@2:shard=1").unwrap();
+        let err = run_sharded(
+            &trace,
+            SchedulerConfig::default(),
+            rounds_lc(),
+            &plan,
+            EngineModel::tiny().vocab,
+            2,
+            RouterConfig::default(),
+            mk_backend(1),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("at least one must survive"));
+    }
+}

@@ -1,0 +1,278 @@
+//! One serving shard: a self-contained engine instance.
+//!
+//! A [`Shard`] owns everything a single engine needs to serve requests
+//! — a [`PlanRunner`]-backed [`EngineBackend`] (its own plan cache and
+//! slot-paged KV pool), the queue of requests the router assigned to
+//! it, and its lifecycle health. Shards share *nothing*: a shard's
+//! plan cache is rebuilt per instance from the same deterministic
+//! autotune cost model (see `fusion::cache`), its KV pool is private,
+//! and its prefix cache is shard-local (which is why the router keeps
+//! conversations sticky). That isolation is the fault domain: a
+//! `kill@R:shard=S` fault destroys one shard's state and nothing else.
+//!
+//! Execution is **wave-based**: the router routes a batch of requests
+//! onto shards, every shard runs one [`run_lifecycle`] pass over its
+//! queue ([`Shard::run_wave`]), and requests a killed shard never
+//! finished come back to the router for re-sharding onto the
+//! survivors in the next wave. Between waves a surviving shard keeps
+//! its backend — parked conversation prefixes survive, so re-routed
+//! multi-turn conversations adopt partial prefixes where the page pool
+//! survived and re-prefill where it died with the shard.
+//!
+//! Shards run their waves sequentially on the shared worker pool
+//! (one process stands in for N instances); because every shard's
+//! stream is bit-identical at any parallelism, this is
+//! indistinguishable from truly concurrent instances.
+
+use std::collections::HashSet;
+
+use crate::exec::topology::{proportional_split, Topology};
+use crate::exec::PlanRunner;
+use crate::tracegen::Request;
+
+use super::engine::SchedulerConfig;
+use super::engine_backend::EngineBackend;
+use super::faults::FaultPlan;
+use super::lifecycle::{run_lifecycle, LifecycleConfig, LifecycleReport};
+
+/// Pin `n_shards` instances to topology domains, proportional to each
+/// domain's worker weight (largest remainder, deterministic): on a
+/// `numa:8,8` box, 4 shards land 2+2; on `flat:N` everything is domain
+/// 0. Returns one domain index per shard. The pin is advisory (this
+/// runtime has no thread-affinity syscalls) but it is carried through
+/// health rows and bench output so placement is observable.
+pub fn shard_domains(topo: &Topology, n_shards: usize) -> Vec<usize> {
+    let counts = proportional_split(topo.weights(), n_shards);
+    let mut domains = Vec::with_capacity(n_shards);
+    for (domain, &count) in counts.iter().enumerate() {
+        for _ in 0..count {
+            domains.push(domain);
+        }
+    }
+    domains
+}
+
+/// A point-in-time health row for one shard, as the router reports it.
+#[derive(Debug, Clone)]
+pub struct ShardHealth {
+    pub id: usize,
+    /// Topology domain the instance is pinned to.
+    pub domain: usize,
+    /// `false` once a kill fault took the instance down.
+    pub alive: bool,
+    /// Lifecycle rounds executed across all waves.
+    pub rounds: u64,
+    /// Stalled launches the shard's watchdog killed.
+    pub watchdog_kills: u64,
+    /// Requests the router assigned to this shard (all waves).
+    pub assigned: usize,
+    /// Terminal states this shard produced.
+    pub terminals: usize,
+    /// KV pages ever allocated from this shard's pool.
+    pub pages_allocated: usize,
+    /// KV pages back on this shard's free list.
+    pub pages_free: usize,
+    /// KV pages held by this shard's parked conversation prefixes.
+    pub pages_parked: usize,
+    /// Runner + domain label, e.g. `cpu:4t@numa0`.
+    pub runner: String,
+}
+
+impl ShardHealth {
+    /// The shard-local no-leak invariant: every page ever allocated is
+    /// either free or parked behind a prefix. Only meaningful for
+    /// surviving shards — a killed shard's pool died mid-flight.
+    pub fn leak_free(&self) -> bool {
+        self.pages_allocated == self.pages_free + self.pages_parked
+    }
+}
+
+/// One engine instance plus its routing state. See the module docs.
+pub struct Shard {
+    pub id: usize,
+    /// Topology domain this instance is pinned to (advisory).
+    pub domain: usize,
+    pub backend: EngineBackend,
+    /// Requests routed here for the next wave, in arrival order.
+    pub queue: Vec<Request>,
+    /// Round a `kill@R:shard=S` fault dooms this instance at
+    /// (0 = healthy). Consumed by the next wave.
+    pub kill_at: u64,
+    pub alive: bool,
+    rounds: u64,
+    watchdog_kills: u64,
+    assigned_total: usize,
+    terminals: usize,
+}
+
+impl Shard {
+    pub fn new(id: usize, domain: usize, backend: EngineBackend) -> Self {
+        Shard {
+            id,
+            domain,
+            backend,
+            queue: Vec::new(),
+            kill_at: 0,
+            alive: true,
+            rounds: 0,
+            watchdog_kills: 0,
+            assigned_total: 0,
+            terminals: 0,
+        }
+    }
+
+    /// Run one lifecycle wave over this shard's queue. Returns the
+    /// wave's report plus the requests that never reached a terminal
+    /// state — non-empty only when a pending kill halted the instance
+    /// mid-wave, in which case the shard is marked dead and the router
+    /// must re-shard the leftovers onto survivors.
+    ///
+    /// A kill round the wave never reached (the shard drained first)
+    /// is a no-op: the instance shut down cleanly before the fault
+    /// landed. Either way the kill is consumed — a dead shard is not
+    /// re-killed, and a survivor does not halt in a later wave.
+    pub fn run_wave(
+        &mut self,
+        sched: SchedulerConfig,
+        lc: LifecycleConfig,
+        faults: &FaultPlan,
+        vocab: usize,
+    ) -> anyhow::Result<(LifecycleReport, Vec<Request>)> {
+        let wave = std::mem::take(&mut self.queue);
+        let lc = LifecycleConfig {
+            halt_at_round: self.kill_at,
+            ..lc
+        };
+        self.kill_at = 0;
+        let rep = run_lifecycle(&mut self.backend, &wave, sched, lc, faults, vocab)?;
+        self.rounds += rep.stats.rounds;
+        self.watchdog_kills += rep.stats.watchdog_kills;
+        self.assigned_total += wave.len();
+        self.terminals += rep.outcomes.len();
+        // The lifecycle guarantees a terminal per request unless it was
+        // halted, so leftovers are exactly the kill's in-flight victims
+        // (plus whatever was still queued behind them).
+        let done: HashSet<usize> = rep.outcomes.iter().map(|o| o.id).collect();
+        let unfinished: Vec<Request> =
+            wave.into_iter().filter(|r| !done.contains(&r.id)).collect();
+        if !unfinished.is_empty() {
+            self.alive = false;
+        }
+        Ok((rep, unfinished))
+    }
+
+    /// Outstanding work estimate for the router's load balancing:
+    /// total tokens (prompt + completion) queued on this shard.
+    pub fn queued_cost(&self) -> usize {
+        self.queue
+            .iter()
+            .map(|r| r.input_tokens + r.output_tokens)
+            .sum()
+    }
+
+    pub fn health(&self) -> ShardHealth {
+        let (pages_allocated, pages_free) = self.backend.kv_pages();
+        ShardHealth {
+            id: self.id,
+            domain: self.domain,
+            alive: self.alive,
+            rounds: self.rounds,
+            watchdog_kills: self.watchdog_kills,
+            assigned: self.assigned_total,
+            terminals: self.terminals,
+            pages_allocated,
+            pages_free,
+            pages_parked: self.backend.prefix_stats().parked_pages,
+            runner: format!("{}@dom{}", self.backend.runner().describe(), self.domain),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Parallelism;
+    use crate::serve::engine_backend::EngineModel;
+    use crate::serve::lifecycle::ClockMode;
+
+    fn backend() -> EngineBackend {
+        EngineBackend::new(
+            EngineModel::tiny(),
+            4,
+            512,
+            Parallelism::with_threads(1),
+        )
+    }
+
+    #[test]
+    fn domains_split_proportionally_and_cover_every_shard() {
+        let topo = Topology::from_domains(vec![8, 8], "test");
+        assert_eq!(shard_domains(&topo, 4), vec![0, 0, 1, 1]);
+        assert_eq!(shard_domains(&topo, 3), vec![0, 0, 1]);
+        let flat = Topology::flat(4);
+        assert_eq!(shard_domains(&flat, 2), vec![0, 0]);
+        let skew = Topology::from_domains(vec![12, 4], "test");
+        assert_eq!(shard_domains(&skew, 4), vec![0, 0, 0, 1]);
+    }
+
+    #[test]
+    fn healthy_wave_terminates_everything_and_stays_alive() {
+        let trace = crate::serve::engine_trace(6);
+        let mut s = Shard::new(0, 0, backend());
+        let vocab = s.backend.model.vocab;
+        s.queue = trace.clone();
+        let lc = LifecycleConfig {
+            clock: ClockMode::Rounds,
+            ..Default::default()
+        };
+        let (rep, unfinished) = s
+            .run_wave(
+                SchedulerConfig::default(),
+                lc,
+                &FaultPlan::none(),
+                vocab,
+            )
+            .unwrap();
+        assert!(unfinished.is_empty());
+        assert!(s.alive);
+        assert_eq!(rep.outcomes.len(), trace.len());
+        let h = s.health();
+        assert!(h.leak_free(), "healthy shard must not leak pages");
+        assert_eq!((h.assigned, h.terminals), (trace.len(), trace.len()));
+    }
+
+    #[test]
+    fn killed_wave_returns_the_unfinished_remainder_exactly_once() {
+        let trace = crate::serve::engine_trace(8);
+        let mut s = Shard::new(1, 0, backend());
+        let vocab = s.backend.model.vocab;
+        s.queue = trace.clone();
+        s.kill_at = 2;
+        let lc = LifecycleConfig {
+            clock: ClockMode::Rounds,
+            ..Default::default()
+        };
+        let (rep, unfinished) = s
+            .run_wave(
+                SchedulerConfig::default(),
+                lc,
+                &FaultPlan::none(),
+                vocab,
+            )
+            .unwrap();
+        assert!(!s.alive, "a kill that strands work must mark the shard dead");
+        assert!(!unfinished.is_empty());
+        assert_eq!(s.kill_at, 0, "the kill is consumed by the wave");
+        // Terminal + unfinished ids partition the wave exactly.
+        let mut ids: Vec<usize> = rep
+            .outcomes
+            .iter()
+            .map(|o| o.id)
+            .chain(unfinished.iter().map(|r| r.id))
+            .collect();
+        ids.sort_unstable();
+        let mut want: Vec<usize> = trace.iter().map(|r| r.id).collect();
+        want.sort_unstable();
+        assert_eq!(ids, want);
+    }
+}

@@ -42,12 +42,31 @@ pub const STALL_MS_ENV: &str = "FLASHLIGHT_STALL_MS";
 pub const DEFAULT_STALL_MS: u64 = 500;
 
 /// Watchdog stall budget from `FLASHLIGHT_STALL_MS` (CLI entry points
-/// only). Unset or unparsable → [`DEFAULT_STALL_MS`].
+/// only). Unset → [`DEFAULT_STALL_MS`]; `0` is a *valid* value
+/// (disables supervision). Anything set but not a non-negative integer
+/// is **rejected with a warning** rather than silently falling back
+/// (the `FLASHLIGHT_THREADS` fix, applied here): a typo'd budget would
+/// otherwise quietly change when stalled launches get killed.
 pub fn stall_budget_from_env() -> u64 {
-    std::env::var(STALL_MS_ENV)
-        .ok()
-        .and_then(|v| v.trim().parse::<u64>().ok())
-        .unwrap_or(DEFAULT_STALL_MS)
+    stall_budget_from_env_value(std::env::var(STALL_MS_ENV).ok().as_deref())
+}
+
+/// Testable core of [`stall_budget_from_env`].
+pub fn stall_budget_from_env_value(env: Option<&str>) -> u64 {
+    match env {
+        None => DEFAULT_STALL_MS,
+        Some(s) => match s.trim().parse::<u64>() {
+            Ok(ms) => ms,
+            Err(_) => {
+                eprintln!(
+                    "flashlight: ignoring invalid {STALL_MS_ENV}={s:?} \
+                     (want milliseconds as an integer >= 0, 0 = no watchdog); \
+                     using the default of {DEFAULT_STALL_MS}"
+                );
+                DEFAULT_STALL_MS
+            }
+        },
+    }
 }
 
 struct Shared {
@@ -177,6 +196,24 @@ mod tests {
         clear_injected_stall();
         let kills = sup.stop();
         assert!(kills >= 1);
+    }
+
+    #[test]
+    fn stall_budget_env_accepts_zero_but_rejects_garbage() {
+        assert_eq!(stall_budget_from_env_value(None), DEFAULT_STALL_MS);
+        assert_eq!(stall_budget_from_env_value(Some("250")), 250);
+        assert_eq!(stall_budget_from_env_value(Some(" 1000 ")), 1000);
+        // 0 is a deliberate "no watchdog", not an error.
+        assert_eq!(stall_budget_from_env_value(Some("0")), 0);
+        // Garbage is rejected (loudly), never treated as 0/disabled: a
+        // typo must not silently turn the watchdog off.
+        for bad in ["-1", "fast", "", "0.5s", "500ms"] {
+            assert_eq!(
+                stall_budget_from_env_value(Some(bad)),
+                DEFAULT_STALL_MS,
+                "{bad:?} must fall back to the default"
+            );
+        }
     }
 
     #[test]

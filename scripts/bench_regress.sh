@@ -2,164 +2,208 @@
 # Perf-regression driver: build release, gate the test suite under
 # FOUR configurations (default SIMD dispatch, FLASHLIGHT_SIMD=0 scalar
 # tier, FLASHLIGHT_TOPO=flat single-domain scheduling, and
-# FLASHLIGHT_BLOCKMASK=0 dense execution — the last two fail loudly if
-# any bit-identity gate diverges between modes), run `flashlight lint`
-# as a fifth gate (static plan verification over every built-in
-# variant x bucket shape), run `flashlight chaos --live` as a sixth
-# gate (live serving: open-loop arrivals, backoff resubmission, token
-# streams, watchdog-killed stalls — FATAL on any leak, missing
-# terminal, or survivor-stream divergence), run the benches, and
-# record two perf trajectories at the repo root so future PRs have a
-# baseline to compare against:
+# FLASHLIGHT_BLOCKMASK=0 dense execution), run `flashlight lint`
+# (static plan verification), `flashlight chaos --live` (live serving
+# invariants), and `flashlight chaos --shards` (sharded serving:
+# 1/2/4-way sharding x threads must be bit-identical; kill@R:shard=S
+# plans must fail over with exact terminal accounting and no leaks on
+# surviving shards), then run the benches and record two perf
+# trajectories at the repo root so future PRs have a baseline:
 #   BENCH_parallel_engine.json  sequential vs parallel executor wall
 #                               clock per variant, plus the GEMM/softmax
-#                               microkernel table (GFLOP/s, scalar tier
-#                               vs dispatched tier)
-#   BENCH_serve_engine.json     engine-backend serve matrix: tok/s and
-#                               TTFT p50/p99 for chunked prefill on/off
-#                               x L in {1,4} layers, each at 1/2/all
-#                               threads with the bit-identity gate,
-#                               plan-cache warmup stats, the
-#                               zero-gather-alloc / zero-post-warmup-
-#                               plan-build gates, and goodput-vs-
-#                               offered-load rows (open-loop Poisson
-#                               arrivals reduced per rate)
+#                               microkernel table
+#   BENCH_serve_engine.json     engine-backend serve matrix (tok/s,
+#                               TTFT p50/p99, cache + gather gates),
+#                               lifecycle-chaos and goodput-load rows,
+#                               and the sharded cells (shard_scaling,
+#                               shard_kill)
 #
-# Usage: scripts/bench_regress.sh [--quick] [--chaos] [THREADS]
-#   --quick  engine + serve benches only: skip the criterion-style
-#            figure benches (compiler_micro, fig2/fig3) — the CI loop
-#   --chaos  also replay the serving lifecycle under three seeded
-#            fault plans (pool exhaustion, worker panics, cancels,
-#            deadline storms); fails loudly on a leaked page, a missing
-#            terminal state, or a survivor token stream that diverges
-#            from the fault-free run
-#   THREADS  worker threads for the parallel runs (default: all cores)
+# NOTE: seeding the BENCH_*.json trajectories requires the rust
+# toolchain. On hosts without cargo this script fails fast with a
+# clear message instead of silently writing nothing.
+#
+# Usage: scripts/bench_regress.sh [--quick] [--chaos] [--gate NAME] [THREADS]
+#   --quick      engine + serve benches only: skip the criterion-style
+#                figure benches (compiler_micro, fig2/fig3) — the CI loop
+#   --chaos      also replay the serving lifecycle under three seeded
+#                fault plans (pool exhaustion, worker panics, cancels,
+#                deadline storms)
+#   --gate NAME  run exactly one named gate and its summary row; names:
+#                build test_default test_scalar test_flat_topo
+#                test_dense lint chaos_live chaos_shards bench_engine
+#                bench_serve bench_figures chaos_replay
+#   THREADS      worker threads for the parallel runs (default: all cores)
+#
+# Every run ends with a PASS/FAIL summary table; exit status is
+# non-zero if any executed gate failed.
 
-set -euo pipefail
+set -uo pipefail
 cd "$(dirname "$0")/.."
 
 QUICK=0
 CHAOS=0
 THREADS=0 # 0 = all available cores
-for arg in "$@"; do
-  case "$arg" in
+ONLY_GATE=""
+while [ $# -gt 0 ]; do
+  case "$1" in
     --quick) QUICK=1 ;;
     --chaos) CHAOS=1 ;;
-    *) THREADS="$arg" ;;
+    --gate)
+      shift
+      ONLY_GATE="${1:?--gate needs a name}"
+      ;;
+    *) THREADS="$1" ;;
   esac
+  shift
 done
 
-echo "== cargo build --release =="
-cargo build --release
-
-echo
-echo "== cargo test -q (default SIMD dispatch) =="
-cargo test -q
-
-echo
-echo "== cargo test -q (FLASHLIGHT_SIMD=0: scalar tier) =="
-FLASHLIGHT_SIMD=0 cargo test -q
-
-echo
-echo "== cargo test -q (FLASHLIGHT_TOPO=flat: single-domain scheduling) =="
-# Third gate configuration: the whole suite — including every
-# bit-identity gate — must hold with topology-aware sharding collapsed
-# to one flat domain. A failure here means scheduling topology leaked
-# into numerics, which the runtime's determinism contract forbids.
-if ! FLASHLIGHT_TOPO=flat cargo test -q; then
-  echo >&2
-  echo "FATAL: test suite diverges under FLASHLIGHT_TOPO=flat —" >&2
-  echo "       a bit-identity gate depends on the scheduling topology." >&2
+if ! command -v cargo >/dev/null 2>&1; then
+  echo "FATAL: no rust toolchain (cargo) on PATH — cannot run any gate" >&2
+  echo "       or seed the BENCH_*.json perf trajectories." >&2
   exit 1
 fi
 
-echo
-echo "== cargo test -q (FLASHLIGHT_BLOCKMASK=0: dense, no tile skipping) =="
-# Fourth gate configuration: the whole suite must hold with the
-# block-sparse tile layer killed (every k-tile visited, masks evaluated
-# everywhere). A failure here means sparse execution leaked into
-# results somewhere the bit-identity contract forbids — or that dense
-# execution regressed while hiding behind the sparse fast path.
-if ! FLASHLIGHT_BLOCKMASK=0 cargo test -q; then
-  echo >&2
-  echo "FATAL: test suite diverges under FLASHLIGHT_BLOCKMASK=0 —" >&2
-  echo "       sparse vs dense execution is not equivalent." >&2
-  exit 1
-fi
+GATE_NAMES=()
+GATE_RESULTS=()
+FAILED=0
 
-echo
-echo "== flashlight lint (fifth gate: static plan verification) =="
-# Fifth gate: the static verifier must prove every built-in variant x
-# bucket-ladder shape clean — shape re-inference, grid write-set
-# disjointness, the online-softmax determinism contract, and
-# block-mask skip soundness. Any diagnostic is a planner bug.
-if ! cargo run --release -- lint; then
-  echo >&2
-  echo "FATAL: static plan verification failed — a generated plan" >&2
-  echo "       violates a fusion legality / determinism / race-freedom" >&2
-  echo "       invariant; see the diagnostics above." >&2
-  exit 1
-fi
-
-echo
-echo "== flashlight chaos --live (sixth gate: live serving invariants) =="
-# Sixth gate: the live serving path — open-loop arrivals into a bounded
-# queue, seeded exponential-backoff resubmission, per-request token
-# streams, and watchdog-supervised stalled launches — must hold every
-# lifecycle invariant at 1/2/4 threads on the round clock (plus a
-# threaded wall-clock ingress/drain smoke). `chaos --live` exits
-# non-zero on a leaked page, a missing terminal state, a token stream
-# that disagrees with its outcome, or a survivor stream that diverges
-# across thread counts or from the fault-free reference.
-if ! cargo run --release -- chaos --live --requests 20 \
-    --plans 'seed=4,stall@3,pressure@2:6x8;panic@4;cancel@6:1'; then
-  echo >&2
-  echo "FATAL: live serving invariant violated — a page leaked, a" >&2
-  echo "       request missed its terminal state, or a survivor's" >&2
-  echo "       token stream diverged; reproduce with" >&2
-  echo "       cargo run --release -- chaos --live --plans '<spec>'" >&2
-  exit 1
-fi
-
-if [ "$QUICK" -eq 0 ]; then
-  echo
-  echo "== compiler-micro bench =="
-  cargo bench --bench compiler_micro
-
-  echo
-  echo "== fig2/fig3 variants bench (cost-model series + measured executor) =="
-  cargo bench --bench fig2_fig3_variants
-fi
-
-echo
-echo "== parallel engine: seq vs par per variant + microkernels -> BENCH_parallel_engine.json =="
-cargo run --release -- bench engine --threads "$THREADS"
-
-echo
-echo "== serve throughput: engine backend, chunking x layers matrix -> BENCH_serve_engine.json =="
-cargo run --release -- bench serve_engine
-
-if [ "$CHAOS" -eq 1 ]; then
-  echo
-  echo "== chaos: lifecycle invariants under seeded fault plans =="
-  # Three deterministic plans: two seeded schedules plus an explicit
-  # worst-case (pressure window + worker panic + cancel + deadline
-  # storm). `chaos` exits non-zero if any request misses its single
-  # terminal state, any KV page leaks, or any survivor's token stream
-  # diverges from the fault-free run.
-  if ! cargo run --release -- chaos --requests 24 --threads 2 \
-      --plans 'seed=1,seed=2,pressure@2:6x8;panic@3;cancel@5:1;storm@9:2'; then
-    echo >&2
-    echo "FATAL: lifecycle invariant violated under fault injection —" >&2
-    echo "       see the failing plan above; reproduce with" >&2
-    echo "       cargo run --release -- chaos --plans '<spec>'" >&2
-    exit 1
+# run_gate NAME DESCRIPTION... — runs gate_NAME, records PASS/FAIL.
+# With --gate set, every other gate is skipped silently.
+run_gate() {
+  local name="$1"
+  shift
+  if [ -n "$ONLY_GATE" ] && [ "$name" != "$ONLY_GATE" ]; then
+    return 0
   fi
+  echo
+  echo "== gate $name: $* =="
+  if "gate_$name"; then
+    GATE_NAMES+=("$name")
+    GATE_RESULTS+=("PASS")
+  else
+    GATE_NAMES+=("$name")
+    GATE_RESULTS+=("FAIL")
+    FAILED=1
+  fi
+}
+
+print_summary() {
+  echo
+  echo "== gate summary =="
+  printf '%-16s %s\n' "gate" "result"
+  if [ "${#GATE_NAMES[@]}" -gt 0 ]; then
+    local i
+    for i in "${!GATE_NAMES[@]}"; do
+      printf '%-16s %s\n' "${GATE_NAMES[$i]}" "${GATE_RESULTS[$i]}"
+    done
+  else
+    echo "(no gates ran — unknown --gate name?)"
+    FAILED=1
+  fi
+  if [ "$FAILED" -eq 1 ]; then
+    echo "RESULT: FAIL"
+  else
+    echo "RESULT: PASS"
+  fi
+}
+
+gate_build() { cargo build --release; }
+
+gate_test_default() { cargo test -q; }
+
+gate_test_scalar() { FLASHLIGHT_SIMD=0 cargo test -q; }
+
+# The whole suite — including every bit-identity gate — must hold with
+# topology-aware sharding collapsed to one flat domain. A failure here
+# means scheduling topology leaked into numerics, which the runtime's
+# determinism contract forbids.
+gate_test_flat_topo() { FLASHLIGHT_TOPO=flat cargo test -q; }
+
+# The suite must hold with the block-sparse tile layer killed (every
+# k-tile visited, masks evaluated everywhere). A failure means sparse
+# vs dense execution is not equivalent — or dense execution regressed
+# while hiding behind the sparse fast path.
+gate_test_dense() { FLASHLIGHT_BLOCKMASK=0 cargo test -q; }
+
+# The static verifier must prove every built-in variant x bucket-ladder
+# shape clean — shape re-inference, grid write-set disjointness, the
+# online-softmax determinism contract, and block-mask skip soundness.
+gate_lint() { cargo run --release -- lint; }
+
+# Live serving: open-loop arrivals into a bounded queue, seeded
+# exponential-backoff resubmission, per-request token streams, and
+# watchdog-supervised stalled launches must hold every lifecycle
+# invariant at 1/2/4 threads on the round clock (plus a threaded
+# wall-clock ingress/drain smoke).
+gate_chaos_live() {
+  cargo run --release -- chaos --live --requests 20 \
+    --plans 'seed=4,stall@3,pressure@2:6x8;panic@4;cancel@6:1'
+}
+
+# Sharded serving (seventh gate): the determinism half requires the
+# same trace sharded 1/2/4 ways, at 1/2/4 threads per shard, to emit
+# bit-identical per-request token streams; the failover half kills a
+# shard mid-trace (explicitly and via seeded generated plans) and
+# requires exactly one terminal per admitted request, survivors
+# bit-identical to the fault-free reference, and
+# allocated == free + parked on every surviving shard.
+gate_chaos_shards() {
+  cargo run --release -- chaos --shards 2 --requests 12 --threads 2 \
+    --plans 'kill@3:shard=0,seed=5,pressure@2:6x6;kill@4:shard=1'
+}
+
+gate_bench_engine() {
+  cargo run --release -- bench engine --threads "$THREADS"
+}
+
+gate_bench_serve() {
+  cargo run --release -- bench serve_engine
+}
+
+gate_bench_figures() {
+  cargo bench --bench compiler_micro && cargo bench --bench fig2_fig3_variants
+}
+
+# Three deterministic plans: two seeded schedules plus an explicit
+# worst case (pressure window + worker panic + cancel + deadline
+# storm). `chaos` exits non-zero if any request misses its single
+# terminal state, any KV page leaks, or any survivor's token stream
+# diverges from the fault-free run.
+gate_chaos_replay() {
+  cargo run --release -- chaos --requests 24 --threads 2 \
+    --plans 'seed=1,seed=2,pressure@2:6x8;panic@3;cancel@5:1;storm@9:2'
+}
+
+run_gate build "cargo build --release"
+if [ "$FAILED" -eq 1 ]; then
+  print_summary
+  exit 1
+fi
+run_gate test_default "cargo test -q (default SIMD dispatch)"
+run_gate test_scalar "cargo test -q (FLASHLIGHT_SIMD=0: scalar tier)"
+run_gate test_flat_topo "cargo test -q (FLASHLIGHT_TOPO=flat: single-domain scheduling)"
+run_gate test_dense "cargo test -q (FLASHLIGHT_BLOCKMASK=0: dense, no tile skipping)"
+run_gate lint "static plan verification"
+run_gate chaos_live "live serving invariants"
+run_gate chaos_shards "sharded serving: determinism + shard failover"
+if [ "$QUICK" -eq 0 ] || [ "$ONLY_GATE" = "bench_figures" ]; then
+  run_gate bench_figures "criterion figure benches (compiler_micro, fig2/fig3)"
+fi
+run_gate bench_engine "seq vs par per variant + microkernels -> BENCH_parallel_engine.json"
+run_gate bench_serve "engine serve matrix + sharded cells -> BENCH_serve_engine.json"
+if [ "$CHAOS" -eq 1 ] || [ "$ONLY_GATE" = "chaos_replay" ]; then
+  run_gate chaos_replay "lifecycle invariants under seeded fault plans"
 fi
 
-echo
-echo "wrote $(pwd)/BENCH_parallel_engine.json:"
-cat BENCH_parallel_engine.json
-echo
-echo "wrote $(pwd)/BENCH_serve_engine.json:"
-cat BENCH_serve_engine.json
+if [ -z "$ONLY_GATE" ] && [ "$FAILED" -eq 0 ]; then
+  for f in BENCH_parallel_engine.json BENCH_serve_engine.json; do
+    if [ -f "$f" ]; then
+      echo
+      echo "wrote $(pwd)/$f:"
+      cat "$f"
+    fi
+  done
+fi
+
+print_summary
+[ "$FAILED" -eq 0 ]
